@@ -1,0 +1,10 @@
+// probe: compile times per artifact
+use metis::runtime::Engine;
+fn main() {
+    let eng = Engine::new("artifacts").unwrap();
+    for name in std::env::args().skip(1) {
+        let t = std::time::Instant::now();
+        eng.load(&name).unwrap();
+        println!("{name}: {:.1}s", t.elapsed().as_secs_f64());
+    }
+}

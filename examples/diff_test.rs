@@ -1,0 +1,28 @@
+//! Dev tool: deterministic 12-step cross-language differential trace.
+use metis::runtime::{Engine, HostValue};
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new("artifacts")?;
+    let name = "train_step__nano__nvfp4_metis__b8";
+    let params = eng.load_params("nano__nvfp4_metis")?;
+    let n = params.len();
+    let zeros: Vec<HostValue> = params.iter().map(|p| HostValue::F32{shape:p.shape().to_vec(), data:vec![0.0;p.shape().iter().product()]}).collect();
+    let mut state: Vec<HostValue> = params.iter().chain(zeros.iter()).chain(zeros.iter()).cloned().collect();
+    let (batch, seq, vocab) = (8usize, 32usize, 128i32);
+    for step in 0..12 {
+        let mut toks = Vec::new();
+        for b in 0..batch {
+            let start = ((b as i32)*17 + step*31) % vocab;
+            for t in 0..=seq as i32 { toks.push((start + 3*t).rem_euclid(vocab)); }
+        }
+        let tok = HostValue::I32{shape:vec![batch,seq+1], data:toks};
+        let st = HostValue::scalar_i32(step);
+        let sd = HostValue::scalar_i32(42);
+        let lr = HostValue::scalar_f32(1e-2*((step as f32)/5.0).min(1.0));
+        let mut inputs: Vec<&HostValue> = state.iter().collect();
+        inputs.push(&tok); inputs.push(&st); inputs.push(&sd); inputs.push(&lr);
+        let outs = eng.run(name, &inputs)?;
+        println!("step {step} loss {:.6} gnorm {:.4}", outs[3*n].scalar()?, outs[3*n+1].scalar()?);
+        state = outs; state.truncate(3*n);
+    }
+    Ok(())
+}

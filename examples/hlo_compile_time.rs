@@ -1,0 +1,12 @@
+//! Measure PJRT compile time of an arbitrary HLO text file.
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for path in std::env::args().skip(1) {
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _exe = client.compile(&comp)?;
+        println!("{path}: {:.1}s", t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! §2.3 interactive demo: how block-wise quantization is biased against
+//! small magnitudes, and how the Metis spectral split removes the bias.
+//!
+//! Pure Rust (no artifacts needed): builds an anisotropic matrix with a
+//! planted power-law spectrum, quantizes it directly vs via the split
+//! W = U_k S_k V_kᵀ + W_R, and prints the §2.3 bias metrics for both.
+//!
+//! Run: `cargo run --release --example quant_bias_demo [-- --fmt mxfp4]`
+
+use anyhow::Result;
+use metis::cli::Args;
+use metis::formats::{self, blockq::quant_stats, Format};
+use metis::linalg::{householder_qr, jacobi_svd, rsvd::spectral_split};
+use metis::spectral;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let fmt = Format::from_name(&args.str("fmt", "mxfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+    let n = args.usize("n", 128)?;
+    let power = args.f64("power", 1.4)?;
+
+    let mut rng = Rng::new(0);
+    let spectrum: Vec<f64> = (1..=n).map(|i| 10.0 * (i as f64).powf(-power)).collect();
+    let q1 = householder_qr(&Matrix::gaussian(&mut rng, n, n, 1.0)).q;
+    let q2 = householder_qr(&Matrix::gaussian(&mut rng, n, n, 1.0)).q;
+    let w = q1.scale_cols(&spectrum).matmul(&q2.transpose());
+
+    println!("anisotropic {n}x{n}, σᵢ ∝ i^-{power}, format {}", fmt.name());
+    let (_, elbow) = spectral::elbow_fraction(&spectrum);
+    println!("  elbow fraction {:.1}%  (paper Fig.1: 1.9–2.4%)", 100.0 * elbow);
+
+    // --- direct block quantization ------------------------------------------
+    let qd = formats::quantize_matrix_along(fmt, &w, 0);
+    let sd = quant_stats(&w, &qd);
+    println!("\n-- direct {} --", fmt.name());
+    println!("  rel Frobenius error   {:.4}", sd.rel_frob_err);
+    println!("  underflow (clip to 0) {:.2}%", 100.0 * sd.underflow_frac);
+    println!(
+        "  rel err small-decile {:.3} vs large-decile {:.3}  ({}x bias)",
+        sd.decile_rel_err[0],
+        sd.decile_rel_err[9],
+        (sd.decile_rel_err[0] / sd.decile_rel_err[9].max(1e-9)) as i64
+    );
+    let sv_d = jacobi_svd(&qd).s;
+    let errs_d = spectral::sigma_rel_errors(&spectrum, &sv_d);
+
+    // --- Metis split: quantize U, Vᵀ, W_R; keep S exact ----------------------
+    let k = (n as f64 * 0.1).ceil() as usize;
+    let split = spectral_split(&w, k, &mut rng);
+    let uq = formats::quantize_matrix_along(fmt, &split.svd.u, 0);
+    let vq = formats::quantize_matrix_along(fmt, &split.svd.v, 0);
+    let rq = formats::quantize_matrix_along(fmt, &split.residual, 0);
+    let rec = uq
+        .scale_cols(&split.svd.s)
+        .matmul(&vq.transpose())
+        .add(&rq);
+    let sm = quant_stats(&w, &rec);
+    println!("\n-- Metis split (k = {k}) + {} on factors --", fmt.name());
+    println!("  rel Frobenius error   {:.4}", sm.rel_frob_err);
+    println!("  underflow (clip to 0) {:.2}%", 100.0 * sm.underflow_frac);
+    println!(
+        "  factor ranges: |U|max {:.3}, |V|max {:.3} vs |W|max {:.3} (Fig. 5)",
+        split.svd.u.abs_max(),
+        split.svd.v.abs_max(),
+        w.abs_max()
+    );
+    let sv_m = jacobi_svd(&rec).s;
+    let errs_m = spectral::sigma_rel_errors(&spectrum, &sv_m);
+
+    println!("\n-- σ relative error by rank (Fig. 4B shape) --");
+    println!("  rank      direct    metis");
+    for r in [0usize, 2, 8, n / 4, n / 2, n - 2] {
+        println!("  {:>4}    {:>7.4}   {:>7.4}", r, errs_d[r], errs_m[r]);
+    }
+    println!(
+        "\n  tail-half mean: direct {:.4} vs metis {:.4}",
+        errs_d[n / 2..].iter().sum::<f64>() / (n / 2) as f64,
+        errs_m[n / 2..].iter().sum::<f64>() / (n / 2) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. open the artifact store (built once by `make artifacts`),
+//! 2. run the L1 Pallas quantizer artifact from Rust and cross-check it
+//!    against the native Rust codecs,
+//! 3. train a nano model for a handful of steps through the AOT
+//!    train_step artifact,
+//! 4. run a spectral analysis on one of its weight matrices.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use metis::bench::artifacts_dir;
+use metis::coordinator::{ExperimentConfig, Trainer};
+use metis::formats::{self, Format};
+use metis::linalg::jacobi_svd;
+use metis::runtime::{Engine, HostValue};
+use metis::spectral;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    println!(
+        "engine up: platform={}, {} artifacts",
+        engine.client.platform_name(),
+        engine.manifest.artifacts.len()
+    );
+
+    // --- 1. Pallas kernel from Rust + cross-language check ---------------
+    let mut rng = Rng::new(1);
+    let data: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let out = engine.run(
+        "quantize__nvfp4__256x256",
+        &[HostValue::F32 {
+            shape: vec![256, 256],
+            data: data.clone(),
+        }],
+    )?;
+    let q_pallas = out[0].f32s()?;
+    let q_rust: Vec<f32> = data
+        .chunks(256)
+        .flat_map(|row| formats::quantize_block(Format::Nvfp4, row))
+        .collect();
+    let max_err = q_pallas
+        .iter()
+        .zip(&q_rust)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("pallas-vs-rust NVFP4 quantizer: max |Δ| = {max_err:.2e}");
+
+    // --- 2. Train a nano model through the coordinator --------------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "nano".into();
+    cfg.mode = "nvfp4_metis".into();
+    cfg.steps = 40;
+    cfg.lr = 1e-2;
+    cfg.warmup = 5;
+    cfg.name = "quickstart".into();
+    cfg.out_dir = std::env::temp_dir()
+        .join("metis_quickstart")
+        .to_string_lossy()
+        .into_owned();
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    println!("\ntraining nano/nvfp4_metis for 40 steps (first step compiles)...");
+    let res = trainer.train()?;
+    println!(
+        "loss {:.3} -> {:.3}; held-out {:.3}; {:.0} ms/step",
+        res.losses[0],
+        res.final_train_loss(),
+        res.test_loss,
+        res.step_ms_mean
+    );
+
+    // --- 3. Spectral analysis of a trained factor -------------------------
+    // The Metis parameterization stores U_k S_k V_kᵀ + W_R; inspect W_R of
+    // the first-layer FFN input projection.
+    let idx = trainer
+        .param_names
+        .iter()
+        .position(|n| n == "layers.wfc.wr")
+        .expect("decomposed layout exposes layers.wfc.wr");
+    let hv = &trainer.params()[idx];
+    let shape = hv.shape(); // (L, d, h) stacked — take layer 0
+    let (d, h) = (shape[1], shape[2]);
+    let slice = &hv.f32s()?[..d * h];
+    let w = Matrix::from_f32(d, h, slice);
+    let svd = jacobi_svd(&w);
+    let (k, frac) = spectral::elbow_fraction(&svd.s);
+    println!(
+        "\nresidual W_R of layer-0 wfc: {d}x{h}, σ₁={:.4}, elbow k*={k} ({:.1}% of rank)",
+        svd.s[0],
+        100.0 * frac
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! End-to-end driver (DESIGN.md deliverable (b) / EXPERIMENTS.md §E2E):
+//! trains the "small" GPT-2 stand-in (~1M params) for a couple hundred
+//! steps under full W4A4G4 NVFP4 + Metis via the AOT artifacts, with the
+//! fp32 and direct-FP4 baselines, then probes the six GLUE-shaped tasks.
+//!
+//! Uses the shared run store, so results line up with (and are reused by)
+//! the bench suite; pass --fresh to force retraining here.
+//!
+//! Run: `cargo run --release --example train_fp4_e2e [-- --steps N]
+//!       [--model small] [--modes fp32,nvfp4_direct,nvfp4_metis] [--fresh]`
+
+use anyhow::Result;
+use metis::bench::{artifacts_dir, fmt_f, fmt_pct, reports_dir, Table};
+use metis::cli::Args;
+use metis::coordinator::runstore::{bench_config, canonical_steps};
+use metis::coordinator::RunStore;
+use metis::runtime::Engine;
+
+const TASKS: [&str; 6] = ["CoLA", "SST-2", "MRPC", "MNLI", "QNLI", "RTE"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let model = args.str("model", "small");
+    let steps = args.usize("steps", canonical_steps(&model))?;
+    let modes = args.str("modes", "fp32,nvfp4_direct,nvfp4_metis");
+    let engine = Engine::new(artifacts_dir())?;
+    let store = if args.switch("fresh") {
+        RunStore::open(std::env::temp_dir().join("metis_e2e_fresh"))?
+    } else {
+        RunStore::default_store()?
+    };
+
+    let mut table = Table::new(
+        &format!("E2E: {model} / {steps} steps (paper headline: Metis-FP4 tracks FP32)"),
+        &["mode", "first loss", "final loss", "test loss", "ms/step", "avg probe acc"],
+    );
+
+    for mode in modes.split(',') {
+        println!("\n=== {model}/{mode} ===");
+        let cfg = bench_config(&model, mode, steps);
+        let rec = store.get_or_run(&engine, &cfg, true)?;
+        println!(
+            "  final {:.4}  test {:.4}  {:.0} ms/step (compile {:.0}s){}",
+            rec.final_train_loss(),
+            rec.test_loss,
+            rec.step_ms_mean,
+            rec.compile_ms / 1e3,
+            if rec.diverged { "  [DIVERGED]" } else { "" }
+        );
+        for t in TASKS {
+            if let Some(a) = rec.probes.get(t) {
+                println!("  {t:<6} {:.1}%", 100.0 * a);
+            }
+        }
+        table.row(vec![
+            mode.to_string(),
+            fmt_f(rec.losses.first().copied().unwrap_or(f32::NAN) as f64, 4),
+            if rec.diverged {
+                "NaN".into()
+            } else {
+                fmt_f(rec.final_train_loss() as f64, 4)
+            },
+            fmt_f(rec.test_loss as f64, 4),
+            fmt_f(rec.step_ms_mean, 0),
+            fmt_pct(rec.avg_probe_acc(&TASKS)),
+        ]);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("e2e_fp4.csv").to_str().unwrap())?;
+    println!("\nreport: reports/e2e_fp4.csv");
+    Ok(())
+}

@@ -1,0 +1,304 @@
+"""AOT export: lower jitted Metis functions to HLO *text* artifacts.
+
+This is the only Python that ever runs for the system — `make artifacts`
+invokes it once; afterwards the Rust coordinator is self-contained.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the runtime embedded by the `xla` crate) rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Per (model-config × quant-mode × batch) we export:
+
+* ``train_step``  — flat(params) + flat(m) + flat(v) + tokens(B,T+1) +
+                    step + seed  →  flat(params') + flat(m') + flat(v') +
+                    loss + gnorm
+* ``eval_loss``   — flat(params) + tokens(B,T+1) → loss
+* ``features``    — flat(params) + tokens(B,T)   → (B, d) pooled hidden
+* ``analysis``    — (fp32 only) flat(params) + tokens → W/X/G probe tensors
+
+plus standalone kernel artifacts (``qgemm``, ``quantize_*``,
+``dual_range``) used by the Rust runtime for cross-language bit-exactness
+tests and the L1 perf bench.  Everything is described in
+``artifacts/manifest.json`` (names, dtypes, shapes, in canonical flatten
+order) — the contract the Rust side parses.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--force]
+        [--models tiny,small] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import formats, initpack, metis, model
+from .kernels import qgemm as kqgemm
+from .kernels import quant as kquant
+from .kernels import reg as kreg
+from .metis import MODES
+from .model import MODEL_CONFIGS, ModelConfig, OptConfig
+
+BATCH = 8
+
+# Which modes get train_step artifacts per model config (DESIGN.md §6).
+TRAIN_MODES = {
+    # paper 130M stand-in: everything incl. Table-5 ablations runs here.
+    "tiny": [
+        "fp32", "fp8_direct", "fp8_metis", "fp8_metis_full",
+        "nvfp4_direct", "mxfp4_direct", "nvfp4_metis", "mxfp4_metis",
+        "abl_no_fwd_decomp", "abl_no_bwd_decomp", "abl_no_adaptive_lr",
+        "abl_no_dual_range",
+    ],
+    # paper 1.1B stand-in: the headline FP8/FP4 comparisons.
+    "small": [
+        "fp32", "fp8_direct", "fp8_metis", "fp8_metis_full",
+        "nvfp4_direct", "mxfp4_direct", "nvfp4_metis", "mxfp4_metis",
+    ],
+    # nano: fast CI-style smoke config for rust integration tests.
+    "nano": ["fp32", "nvfp4_metis", "nvfp4_direct"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "bfloat16": "bf16", "float64": "f64"}[np.dtype(dt).name]
+
+
+def _iospec(named):
+    return [{"name": n, "dtype": _dtype_tag(a.dtype), "shape": list(a.shape)}
+            for n, a in named]
+
+
+class Exporter:
+    def __init__(self, outdir: str, force: bool):
+        self.outdir = outdir
+        self.force = force
+        self.manifest = {"artifacts": [], "params": {}, "models": {},
+                         "opt": {}, "modes": {}}
+        os.makedirs(outdir, exist_ok=True)
+
+    def export(self, name: str, fn, example_inputs: list, meta: dict,
+               out_names: list[str]):
+        """Lower fn at the example inputs and write <name>.hlo.txt."""
+        path = os.path.join(self.outdir, name + ".hlo.txt")
+        in_named = [(n, a) for n, a in example_inputs]
+        rec = dict(meta)
+        rec.update({
+            "name": name, "file": name + ".hlo.txt",
+            "inputs": _iospec(in_named), "output_names": out_names,
+        })
+        if self.force or not os.path.exists(path):
+            t0 = time.time()
+            args = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in in_named]
+            # keep_unused: the manifest promises *every* listed input is a
+            # real HLO parameter (features/eval graphs don't use all params,
+            # e.g. the LM head — without this jax would DCE them away and
+            # the Rust engine's buffer count would mismatch).
+            lowered = jax.jit(fn, keep_unused=True).lower(*args)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  [{time.time()-t0:6.1f}s] {name}  "
+                  f"({len(text)/1e6:.2f} MB, {len(in_named)} inputs)")
+        else:
+            print(f"  [cached ] {name}")
+        self.manifest["artifacts"].append(rec)
+
+
+def flat_wrapper(fn_tree, treedefs, n_leaves, extra_specs):
+    """Wrap a pytree-taking fn into a flat-argument fn for export."""
+
+    def flat_fn(*args):
+        trees = []
+        off = 0
+        for td, n in zip(treedefs, n_leaves):
+            trees.append(jax.tree_util.tree_unflatten(td, args[off:off + n]))
+            off += n
+        extras = args[off:]
+        outs = fn_tree(*trees, *extras)
+        flat_out = []
+        for o in outs:
+            flat_out.extend(jax.tree_util.tree_leaves(o))
+        return tuple(flat_out)
+
+    return flat_fn
+
+
+def export_model_artifacts(ex: Exporter, mc: ModelConfig, mode: str,
+                           oc: OptConfig, seed: int = 0):
+    cfg = MODES[mode]
+    params_np = initpack.init_params(cfg, mc, seed=seed)
+    named = initpack.flatten_named(params_np)
+    pnames = [n for n, _ in named]
+    pleaves = [a for _, a in named]
+    # Sanity: canonical order must equal jax's flatten order.
+    jleaves, treedef = jax.tree_util.tree_flatten(params_np)
+    assert len(jleaves) == len(pleaves)
+    for a, b in zip(jleaves, pleaves):
+        assert a.shape == b.shape, "flatten order mismatch"
+
+    pdir_rel = f"params/{mc.name}__{mode}"
+    pdir = os.path.join(ex.outdir, pdir_rel)
+    if ex.force or not os.path.isdir(pdir):
+        initpack.write_npy_tree(params_np, pdir)
+    ex.manifest["params"][f"{mc.name}__{mode}"] = {
+        "dir": pdir_rel, "names": pnames,
+        "shapes": [list(a.shape) for a in pleaves],
+    }
+
+    n = len(pleaves)
+    tokens = np.zeros((BATCH, mc.seq_len + 1), np.int32)
+    step = np.zeros((), np.int32)
+    seed_a = np.zeros((), np.int32)
+
+    def ts_tree(p, m, v, tok, st, sd, lr):
+        return model.train_step(cfg, mc, oc, p, m, v, tok, st, sd, lr)
+
+    ts_flat = flat_wrapper(ts_tree, [treedef] * 3, [n] * 3, None)
+    lr_in = np.zeros((), np.float32)
+    ins = ([(f"p.{nm}", a) for nm, a in named]
+           + [(f"m.{nm}", a) for nm, a in named]
+           + [(f"v.{nm}", a) for nm, a in named]
+           + [("tokens", tokens), ("step", step), ("seed", seed_a),
+              ("lr", lr_in)])
+    out_names = ([f"p.{nm}" for nm in pnames] + [f"m.{nm}" for nm in pnames]
+                 + [f"v.{nm}" for nm in pnames] + ["loss", "gnorm"])
+    base = f"{mc.name}__{mode}__b{BATCH}"
+    meta = {"kind": "train_step", "model": mc.name, "mode": mode,
+            "batch": BATCH, "params_key": f"{mc.name}__{mode}"}
+    ex.export(f"train_step__{base}", ts_flat, ins, meta, out_names)
+
+    def ev_tree(p, tok):
+        return (model.eval_loss(cfg, mc, p, tok),)
+
+    ev_flat = flat_wrapper(ev_tree, [treedef], [n], None)
+    ins_ev = [(f"p.{nm}", a) for nm, a in named] + [("tokens", tokens)]
+    ex.export(f"eval_loss__{base}", ev_flat, ins_ev,
+              {"kind": "eval_loss", "model": mc.name, "mode": mode,
+               "batch": BATCH, "params_key": f"{mc.name}__{mode}"},
+              ["loss"])
+
+    tok_x = np.zeros((BATCH, mc.seq_len), np.int32)
+
+    def ft_tree(p, tok):
+        return (model.features(cfg, mc, p, tok),)
+
+    ft_flat = flat_wrapper(ft_tree, [treedef], [n], None)
+    ins_ft = [(f"p.{nm}", a) for nm, a in named] + [("tokens", tok_x)]
+    ex.export(f"features__{base}", ft_flat, ins_ft,
+              {"kind": "features", "model": mc.name, "mode": mode,
+               "batch": BATCH, "params_key": f"{mc.name}__{mode}"},
+              ["features"])
+
+    if mode == "fp32":
+        def an_tree(p, tok):
+            out = model.analysis_tensors(mc, p, tok)
+            return [out[k] for k in ("w_fc", "g_fc", "x_fc", "w_key", "g_key")]
+
+        an_flat = flat_wrapper(an_tree, [treedef], [n], None)
+        ex.export(f"analysis__{base}", an_flat, ins_ev,
+                  {"kind": "analysis", "model": mc.name, "mode": mode,
+                   "batch": BATCH, "params_key": f"{mc.name}__{mode}"},
+                  ["w_fc", "g_fc", "x_fc", "w_key", "g_key"])
+
+
+def export_kernel_artifacts(ex: Exporter):
+    """Standalone L1 kernel artifacts for Rust cross-validation + L1 bench."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, (256, 256)).astype(np.float32)
+    w = rng.normal(0, 0.1, (256, 256)).astype(np.float32)
+
+    for fname in ("mxfp4", "nvfp4", "fp8"):
+        fmt = {"mxfp4": formats.MXFP4, "nvfp4": formats.NVFP4,
+               "fp8": formats.FP8_BLOCK}[fname]
+
+        def qfn(a, fmt=fmt):
+            return (kquant.quantize_blockwise_pallas(a, fmt),)
+
+        ex.export(f"quantize__{fname}__256x256", qfn, [("x", x)],
+                  {"kind": "quantize", "fmt": fname}, ["q"])
+
+        def gfn(a, b, fmt=fmt):
+            return (kqgemm.qgemm_pallas(a, b, fmt, tm=128, tn=128, tk=128),)
+
+        ex.export(f"qgemm__{fname}__256", gfn, [("x", x), ("w", w)],
+                  {"kind": "qgemm", "fmt": fname}, ["y"])
+
+    def rfn(a):
+        return (kreg.dual_range_pallas(a, 1e-6, 1e-12, 1e-4),)
+
+    ex.export("dual_range__256x256", rfn, [("x", x)],
+              {"kind": "dual_range"}, ["r"])
+
+    # Cross-language regression guard for the in-graph spectral
+    # decomposition (caught the xla_extension-0.5.1 while-loop
+    # miscompilation — see linalg.jacobi_eigh docstring).  The Rust
+    # integration test checks its exact invariants.
+    from . import spectral
+
+    d = rng.normal(size=(256, 96)).astype(np.float32)
+    om = rng.normal(size=(96, 10)).astype(np.float32)
+
+    def dfn(d, om):
+        dec = spectral.decompose_gradient(d, om, power_iters=1, adaptive=True)
+        return (dec.p, dec.t, dec.qt, dec.resid, dec.t_adapt)
+
+    ex.export("decompose__256x96", dfn, [("d", d), ("om", om)],
+              {"kind": "decompose"}, ["p", "t", "qt", "resid", "t_adapt"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", default="nano,tiny,small")
+    ap.add_argument("--quick", action="store_true",
+                    help="nano-only smoke export")
+    args = ap.parse_args(argv)
+
+    ex = Exporter(args.out, args.force)
+    oc = OptConfig()
+    ex.manifest["opt"] = oc.__dict__
+    for name, mc in MODEL_CONFIGS.items():
+        ex.manifest["models"][name] = {
+            "vocab": mc.vocab, "d_model": mc.d_model, "n_layer": mc.n_layer,
+            "n_head": mc.n_head, "seq_len": mc.seq_len,
+            "params": mc.param_count()}
+    for name, cfg in MODES.items():
+        ex.manifest["modes"][name] = {
+            "fmt": cfg.fmt, "fwd_decomp": cfg.fwd_decomp,
+            "bwd_decomp": cfg.bwd_decomp, "adaptive_lr": cfg.adaptive_lr,
+            "dual_range": cfg.dual_range, "rho_fwd": cfg.rho_fwd,
+            "rho_bwd": cfg.rho_bwd, "j_cap": cfg.j_cap}
+
+    export_kernel_artifacts(ex)
+    models = ["nano"] if args.quick else args.models.split(",")
+    for mname in models:
+        mc = MODEL_CONFIGS[mname]
+        print(f"== model {mname} ({mc.param_count()/1e3:.0f}k params) ==")
+        for mode in TRAIN_MODES.get(mname, []):
+            export_model_artifacts(ex, mc, mode, oc)
+
+    with open(os.path.join(ex.outdir, "manifest.json"), "w") as f:
+        json.dump(ex.manifest, f, indent=1)
+    print(f"manifest: {len(ex.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

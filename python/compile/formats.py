@@ -1,0 +1,231 @@
+"""Low-bit floating-point formats, implemented with plain jnp arithmetic.
+
+Every function here must lower to vanilla HLO (clamp / floor / log2 / round /
+select) so that graphs containing them can be AOT-exported as HLO text and
+executed by the standalone PJRT CPU runtime from Rust.  In particular:
+**no jnp.linalg, no custom calls, no host callbacks.**
+
+Formats implemented (all "fake quant": values are snapped onto the target
+grid but carried in f32, exactly like the paper's H100 simulation):
+
+* FP4 E2M1   — 1 sign, 2 exponent (bias 1), 1 mantissa.
+               Representable magnitudes: {0, 0.5, 1, 1.5, 2, 3, 4, 6}.
+* FP8 E4M3   — 1/4/3, bias 7, finite-only (max 448, no inf; 1111.111=NaN
+               is excluded from the grid).
+* E8M0       — power-of-two scale with 8 exponent bits (MX block scale).
+* BF16       — 8-bit mantissa truncation-to-nearest-even via int bit twiddle
+               is not HLO-friendly; we snap with the same exponent/step trick.
+
+Block-wise quantizers:
+
+* MXFP4  — block 32, E8M0 (power-of-two) scale, per OCP Microscaling:
+           scale exponent = floor(log2(amax)) - emax_elem, emax_elem = 2.
+* NVFP4  — block 16, E4M3 scale: s = Q_e4m3(amax / 6).
+* FP8    — block `fp8_block` (default 128), f32 scale s = amax / 448.
+* "paper" scale rule — s = amax / (2^(b-1) - 1), the int-flavoured formula
+           quoted in §2.3 of the paper; provided for the bias analysis.
+
+All rounding is round-to-nearest-even (jnp.round semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+# Smallest positive normal magnitude guard used before log2.
+_TINY = 1e-30
+
+# ---------------------------------------------------------------------------
+# Scalar (element-wise) codecs
+# ---------------------------------------------------------------------------
+
+
+def fp4_e2m1(x: jnp.ndarray) -> jnp.ndarray:
+    """Snap each element of ``x`` onto the FP4 E2M1 grid (RNE, saturating).
+
+    Grid: ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}.  For |x| in binade ``e`` the
+    quantization step is ``2^(e-1)`` (one mantissa bit); the subnormal
+    region below 1.0 shares the 0.5 step of the e=0 binade.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.minimum(jnp.abs(x), 6.0)
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(ax, _TINY))), 0.0, 2.0)
+    step = jnp.exp2(e - 1.0)
+    q = jnp.round(ax / step) * step
+    q = jnp.minimum(q, 6.0)
+    return sign * q
+
+
+def fp8_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+    """Snap each element of ``x`` onto the FP8 E4M3 (finite) grid.
+
+    Bias 7; exponents of normals span [-6, 8]; 3 mantissa bits; max finite
+    magnitude 448; subnormal step 2^-9.  Saturating (no inf/NaN encodings).
+    """
+    sign = jnp.sign(x)
+    ax = jnp.minimum(jnp.abs(x), 448.0)
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(ax, _TINY))), -6.0, 8.0)
+    step = jnp.exp2(e - 3.0)
+    q = jnp.round(ax / step) * step
+    q = jnp.minimum(q, 448.0)
+    return sign * q
+
+
+def bf16_snap(x: jnp.ndarray) -> jnp.ndarray:
+    """Round f32 to the bfloat16 grid (via dtype round-trip: plain converts)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def e8m0_scale(amax: jnp.ndarray, emax_elem: int = 2) -> jnp.ndarray:
+    """Power-of-two shared scale (OCP MX): 2^(floor(log2(amax)) - emax_elem).
+
+    ``emax_elem`` is the largest exponent representable by the element
+    format (2 for E2M1 whose max magnitude is 6 = 1.5 * 2^2).  Exponent is
+    clamped to the E8M0 range [-127, 127]; an all-zero block gets scale 1.
+    """
+    e = jnp.floor(jnp.log2(jnp.maximum(amax, _TINY))) - float(emax_elem)
+    e = jnp.clip(e, -127.0, 127.0)
+    s = jnp.exp2(e)
+    return jnp.where(amax > 0.0, s, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise quantization
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockFormat:
+    """A block-scaled low-bit format: element codec + scale rule + block size."""
+
+    name: str
+    block: int
+    # element grid max magnitude (6 for E2M1, 448 for E4M3)
+    elem_max: float
+
+    def elem(self, x):
+        raise NotImplementedError
+
+    def scale(self, amax):
+        raise NotImplementedError
+
+
+class _MXFP4(BlockFormat):
+    def __init__(self):
+        super().__init__(name="mxfp4", block=32, elem_max=6.0)
+
+    def elem(self, x):
+        return fp4_e2m1(x)
+
+    def scale(self, amax):
+        return e8m0_scale(amax, emax_elem=2)
+
+
+class _NVFP4(BlockFormat):
+    def __init__(self):
+        super().__init__(name="nvfp4", block=16, elem_max=6.0)
+
+    def elem(self, x):
+        return fp4_e2m1(x)
+
+    def scale(self, amax):
+        # NV rule: FP8 E4M3 encoding of amax / elem_max.
+        s = fp8_e4m3(amax / 6.0)
+        return jnp.where(s > 0.0, s, 1.0)
+
+
+class _FP8Block(BlockFormat):
+    def __init__(self, block: int = 128):
+        super().__init__(name="fp8", block=block, elem_max=448.0)
+
+    def elem(self, x):
+        return fp8_e4m3(x)
+
+    def scale(self, amax):
+        s = amax / 448.0
+        return jnp.where(amax > 0.0, s, 1.0)
+
+
+class _PaperFP4(BlockFormat):
+    """FP4 with the paper's §2.3 int-style scale s = amax / (2^(b-1)-1)."""
+
+    def __init__(self):
+        super().__init__(name="paper_fp4", block=32, elem_max=6.0)
+
+    def elem(self, x):
+        return fp4_e2m1(x)
+
+    def scale(self, amax):
+        s = amax / 7.0
+        return jnp.where(amax > 0.0, s, 1.0)
+
+
+MXFP4 = _MXFP4()
+NVFP4 = _NVFP4()
+FP8_BLOCK = _FP8Block()
+PAPER_FP4 = _PaperFP4()
+
+FORMATS = {f.name: f for f in (MXFP4, NVFP4, FP8_BLOCK, PAPER_FP4)}
+
+
+def _blockify(x: jnp.ndarray, block: int, axis: int):
+    """Move ``axis`` last, pad it to a multiple of ``block`` and reshape to
+    (..., nblocks, block).  Returns (blocks, orig_len, moved_shape)."""
+    xm = jnp.moveaxis(x, axis, -1)
+    n = xm.shape[-1]
+    pad = (-n) % block
+    if pad:
+        xm = jnp.pad(xm, [(0, 0)] * (xm.ndim - 1) + [(0, pad)])
+    nb = xm.shape[-1] // block
+    return xm.reshape(xm.shape[:-1] + (nb, block)), n, xm.shape
+
+
+def _unblockify(xb: jnp.ndarray, n: int, axis: int, out_ndim: int):
+    xm = xb.reshape(xb.shape[:-2] + (-1,))[..., :n]
+    return jnp.moveaxis(xm, -1, axis if axis >= 0 else out_ndim + axis)
+
+
+def quantize_blockwise(
+    x: jnp.ndarray, fmt: BlockFormat, axis: int = -1
+) -> jnp.ndarray:
+    """Fake block-wise quantization of ``x`` along ``axis``.
+
+    Each contiguous group of ``fmt.block`` elements shares one scale; the
+    scaled elements are snapped onto the element grid and rescaled.  This is
+    the pure-jnp reference; the Pallas kernel in ``kernels/quant.py``
+    implements the same contract tile-wise.
+    """
+    xb, n, _ = _blockify(x, fmt.block, axis)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = fmt.scale(amax)
+    q = fmt.elem(xb / s) * s
+    return _unblockify(q, n, axis, x.ndim)
+
+
+def quantize_for_gemm(x, w, fmt: BlockFormat):
+    """Quantize GEMM operands along the contraction axis (x: (..., m) row
+    blocks over m; w: (m, n) column blocks over m), mirroring microscaling
+    hardware which attaches scales along K."""
+    xq = quantize_blockwise(x, fmt, axis=-1)
+    wq = quantize_blockwise(w, fmt, axis=0)
+    return xq, wq
+
+
+# ---------------------------------------------------------------------------
+# Error statistics helpers (used by tests and the bias analysis)
+# ---------------------------------------------------------------------------
+
+
+def quant_abs_error(x, fmt: BlockFormat, axis: int = -1):
+    return jnp.abs(quantize_blockwise(x, fmt, axis) - x)
+
+
+def underflow_fraction(x, fmt: BlockFormat, axis: int = -1):
+    """Fraction of non-zero inputs clipped to exactly zero by quantization —
+    the small-value information loss of Fig. 4(A)."""
+    q = quantize_blockwise(x, fmt, axis)
+    nz = jnp.abs(x) > 0
+    return jnp.sum((q == 0) & nz) / jnp.maximum(jnp.sum(nz), 1)

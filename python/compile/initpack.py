@@ -1,0 +1,131 @@
+"""Build-time parameter initialization + one-time spectral weight split.
+
+The paper performs the decomposition W = U_k S_k V_kᵀ + W_R "once for each
+weight matrix immediately after initialization" (§3.1).  That is build
+time, so full numpy SVD is allowed here (this module is never lowered).
+
+All modes of one experiment share the *same* base initialization (same
+numpy seed) so loss curves are comparable (paper Figs. 6–7); the Metis
+modes then re-parameterize each linear into factors.
+
+Outputs: a params pytree (numpy arrays) matching model.py's layout, plus
+helpers to flatten it in the canonical manifest order and to write .npy
+blobs for the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from .metis import QuantConfig
+from .model import BLOCK_LINEARS, ModelConfig
+
+
+def _split_weight(w: np.ndarray, rho: float):
+    """One-time randomized/exact SVD split (Eq. 3): returns (u, s, v, wr).
+
+    k = ⌈rho · min(m,n)⌉.  Exact SVD (numpy) — the paper's randomized
+    embedding matters for *scalability*; at build time on small matrices
+    exact is simpler and strictly more accurate. rho=1 ⇒ wr = 0.
+    """
+    m, n = w.shape
+    r = min(m, n)
+    k = max(1, min(r, math.ceil(rho * r)))
+    uu, ss, vvt = np.linalg.svd(w.astype(np.float64), full_matrices=False)
+    u = uu[:, :k].astype(np.float32)
+    s = ss[:k].astype(np.float32)
+    v = vvt[:k].T.astype(np.float32)
+    wr = (w - (u * s[None, :]) @ v.T).astype(np.float32)
+    return u, s, v, wr
+
+
+def _linear_params(rng: np.random.Generator, m: int, n: int, std: float,
+                   cfg: QuantConfig):
+    w = rng.normal(0.0, std, size=(m, n)).astype(np.float32)
+    b = np.zeros((n,), np.float32)
+    if cfg.fwd_decomp:
+        u, s, v, wr = _split_weight(w, cfg.rho_fwd)
+        return {"u": u, "s": s, "v": v, "wr": wr, "b": b}
+    return {"w": w, "b": b}
+
+
+def init_params(cfg: QuantConfig, mc: ModelConfig, seed: int = 0) -> dict:
+    """GPT-2 init (N(0, 0.02), residual projections scaled by 1/√(2L)),
+    identical across modes for a given seed; then per-mode layout."""
+    rng = np.random.default_rng(seed)
+    d, h, vsz = mc.d_model, mc.d_mlp, mc.vocab
+    std = 0.02
+    resid_std = std / math.sqrt(2.0 * mc.n_layer)
+    params = {
+        "wte": rng.normal(0, std, (vsz, d)).astype(np.float32),
+        "wpe": rng.normal(0, std, (mc.seq_len, d)).astype(np.float32),
+        "layers": None,
+        "lnf_g": np.ones((d,), np.float32),
+        "lnf_b": np.zeros((d,), np.float32),
+    }
+    per_layer = []
+    for _ in range(mc.n_layer):
+        lay = {
+            "ln1_g": np.ones((d,), np.float32),
+            "ln1_b": np.zeros((d,), np.float32),
+            "ln2_g": np.ones((d,), np.float32),
+            "ln2_b": np.zeros((d,), np.float32),
+            "wqkv": _linear_params(rng, d, 3 * d, std, cfg),
+            "wo": _linear_params(rng, d, d, resid_std, cfg),
+            "wfc": _linear_params(rng, d, h, std, cfg),
+            "wproj": _linear_params(rng, h, d, resid_std, cfg),
+        }
+        per_layer.append(lay)
+    # Stack per-layer trees on a leading L axis (the model scans over it).
+    params["layers"] = _stack_trees(per_layer)
+    params["head"] = _linear_params(rng, d, vsz, std, cfg)
+    return params
+
+
+def _stack_trees(trees: list):
+    """Stack a list of identical nested dicts of arrays along axis 0."""
+    first = trees[0]
+    if isinstance(first, dict):
+        return {k: _stack_trees([t[k] for t in trees]) for k in first}
+    return np.stack(trees, axis=0)
+
+
+def zeros_like_tree(tree):
+    if isinstance(tree, dict):
+        return {k: zeros_like_tree(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [zeros_like_tree(v) for v in tree]
+    return np.zeros_like(tree)
+
+
+def flatten_named(tree, prefix=""):
+    """Flatten a nested dict/list pytree into (name, array) pairs in a
+    canonical (sorted-key / list-index) order — the manifest order that the
+    Rust coordinator relies on.  Must match jax's tree_flatten order:
+    jax sorts dict keys and preserves list order, both depth-first."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out += flatten_named(tree[k], f"{prefix}{k}." if prefix or True else k)
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            out += flatten_named(v, f"{prefix}{i}.")
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def write_npy_tree(tree, outdir: str):
+    """Write each leaf as <outdir>/<dotted-name>.npy (numpy v1 format)."""
+    os.makedirs(outdir, exist_ok=True)
+    names = []
+    for name, arr in flatten_named(tree):
+        path = os.path.join(outdir, name + ".npy")
+        # C-order always: transposed SVD factors are fortran-order views,
+        # which the Rust npy reader (deliberately) rejects.
+        np.save(path, np.ascontiguousarray(arr))
+        names.append(name)
+    return names

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (interpret=True; see DESIGN.md §Hardware-Adaptation).
+
+Public entry points:
+
+* :func:`quant.quantize_blockwise_pallas` — block-scaled fake quantization.
+* :func:`qgemm.qgemm_pallas`              — quantize-dequantize tiled GEMM.
+* :func:`reg.dual_range_pallas`           — fused dual-range regularizer.
+
+Each kernel has a pure-jnp oracle in :mod:`ref` used by pytest.
+"""
+
+from . import quant, qgemm, ref, reg  # noqa: F401

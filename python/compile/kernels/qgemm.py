@@ -1,0 +1,71 @@
+"""Pallas quantized GEMM: Y = Q(X) @ Q(W) with K-axis microscaling blocks.
+
+The classic three-axis tiled matmul: grid (M/tm, N/tn, K/tk), accumulator
+initialised on the first K step.  Both operand tiles are fake-quantized
+*inside* the kernel (scale blocks along K, so ``tk`` must be a multiple of
+``fmt.block``), mirroring how a Blackwell/MXU pipeline would dequantise
+into the systolic array.  Accumulation stays in f32.
+
+TPU sizing note (DESIGN.md §Perf): target tiles are (128, 128, 128) — one
+MXU pass per step, VMEM footprint 3·128·128·4 B ≈ 192 KiB ≪ 16 MiB.  Under
+interpret=True the tile sizes only affect trace size, not speed, so tests
+use small tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+from .quant import _quant_tile
+
+
+def _kernel(x_ref, w_ref, o_ref, *, fmt, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _quant_tile(x_ref[...], fmt)
+    # W tile is (tk, tn); its scale blocks run along K (axis 0) → transpose
+    # into lane-major, quantize, transpose back.
+    wq = _quant_tile(w_ref[...].T, fmt).T
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def qgemm_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    fmt: formats.BlockFormat,
+    *,
+    tm: int = 128,
+    tn: int = 128,
+    tk: int = 128,
+) -> jnp.ndarray:
+    """Quantized GEMM for 2-D ``x (l×m)`` @ ``w (m×n)``.
+
+    Dims must divide by the tile sizes and ``tk % fmt.block == 0``; the
+    model-layer wrapper (metis.py) handles padding, this kernel stays pure.
+    """
+    l, m = x.shape
+    m2, n = w.shape
+    assert m == m2, (x.shape, w.shape)
+    tm, tn, tk = min(tm, l), min(tn, n), min(tk, m)
+    assert l % tm == 0 and n % tn == 0 and m % tk == 0, (
+        f"({l},{m},{n}) not divisible by tiles ({tm},{tk},{tn})")
+    assert tk % fmt.block == 0, f"tk={tk} vs block={fmt.block}"
+    grid = (l // tm, n // tn, m // tk)
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,90 @@
+"""Pallas block-wise fake-quantization kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA simulation in the
+paper runs one warp per scale-block; here one grid step owns a
+(tile_rows × lanes) VMEM tile, and the microscaling blocks live along the
+lane (last) axis so a tile holds ``lanes / fmt.block`` scale groups per row
+— the layout Blackwell uses along K.  Scales are computed vectorised over
+the whole tile (max-reduce over the trailing block axis), then elements are
+snapped with the same exponent/step arithmetic as :mod:`compile.formats`.
+
+interpret=True everywhere: real-TPU lowering would emit a Mosaic
+custom-call that the CPU PJRT plugin (and the Rust runtime) cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+
+
+def _quant_tile(x, fmt: formats.BlockFormat):
+    """Quantize a (rows, lanes) tile, blocks along lanes. lanes % block == 0."""
+    rows, lanes = x.shape
+    nb = lanes // fmt.block
+    xb = x.reshape(rows, nb, fmt.block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = fmt.scale(amax)
+    q = fmt.elem(xb / s) * s
+    return q.reshape(rows, lanes)
+
+
+def _kernel(x_ref, o_ref, *, fmt: formats.BlockFormat):
+    o_ref[...] = _quant_tile(x_ref[...], fmt)
+
+
+def quantize_blockwise_pallas(
+    x: jnp.ndarray,
+    fmt: formats.BlockFormat,
+    *,
+    tile_rows: int = 256,
+) -> jnp.ndarray:
+    """Block-quantize a 2-D array along its last axis with a Pallas kernel.
+
+    The last axis must be a multiple of ``fmt.block`` (callers pad);
+    ``tile_rows`` bounds the VMEM tile height (grid-strided over rows).
+    """
+    assert x.ndim == 2, f"kernel is 2-D; got shape {x.shape}"
+    m, n = x.shape
+    assert n % fmt.block == 0, f"lane dim {n} not a multiple of {fmt.block}"
+    tr = min(tile_rows, m)
+    # pad rows to a multiple of tr; zero rows quantize to zero, harmless.
+    pad = (-m) % tr
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // tr,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m] if pad else out
+
+
+def quantize_any(x: jnp.ndarray, fmt: formats.BlockFormat, axis: int = -1,
+                 *, use_pallas: bool = True) -> jnp.ndarray:
+    """Quantize an arbitrary-rank array along ``axis``.
+
+    Reshapes to 2-D with the block axis last, pads the lane dim to the block
+    size, and dispatches to the Pallas kernel (or the jnp reference when
+    ``use_pallas`` is False — used for A/B testing and HLO-size control).
+    """
+    if not use_pallas:
+        return formats.quantize_blockwise(x, fmt, axis=axis)
+    xm = jnp.moveaxis(x, axis, -1)
+    lead = xm.shape[:-1]
+    n = xm.shape[-1]
+    padn = (-n) % fmt.block
+    x2 = xm.reshape(-1, n)
+    if padn:
+        x2 = jnp.pad(x2, ((0, 0), (0, padn)))
+    q2 = quantize_blockwise_pallas(x2, fmt)
+    q = q2[:, :n].reshape(lead + (n,))
+    return jnp.moveaxis(q, -1, axis if axis >= 0 else x.ndim + axis)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+These are deliberately written independently of the kernel code paths:
+``quantize_blockwise_ref`` delegates to :mod:`compile.formats` (reshape-based,
+no tiling), ``qgemm_ref`` is quantize-then-plain-matmul, and
+``dual_range_ref`` is the direct two-term sum.  pytest asserts the Pallas
+kernels match these bit-for-bit (quantization is exact snapping, so equality
+— not just allclose — is expected for matching tile configurations).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import formats
+
+
+def quantize_blockwise_ref(x, fmt: formats.BlockFormat, axis: int = -1):
+    return formats.quantize_blockwise(x, fmt, axis=axis)
+
+
+def qgemm_ref(x, w, fmt: formats.BlockFormat):
+    """Reference quantized GEMM: Y = Q(x) @ Q(w), K-axis block scales."""
+    xq, wq = formats.quantize_for_gemm(x, w, fmt)
+    return xq @ wq
+
+
+def dual_range_ref(w, lam1: float, lam2: float, eps: float):
+    """R(W) = lam1 * sum(w^2) + lam2 * sum(1 / (w^2 + eps))  (paper §3.3)."""
+    w = w.astype(jnp.float32)
+    return lam1 * jnp.sum(w * w) + lam2 * jnp.sum(1.0 / (w * w + eps))

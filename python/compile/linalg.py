@@ -1,0 +1,190 @@
+"""LAPACK-free linear algebra for *inside* AOT-exported graphs.
+
+``jnp.linalg.qr/svd/cholesky`` lower (on CPU jaxlib) to LAPACK custom-calls
+registered by jaxlib's runtime.  The standalone PJRT runtime that the Rust
+coordinator embeds (xla_extension 0.5.1) has no such registrations, so any
+exported graph containing them would fail to compile/execute.  Everything
+here lowers to plain HLO: GEMMs plus ``lax.fori_loop`` bodies of masked
+vector ops (constant trace size regardless of the sketch rank ``j``).
+
+Provided:
+
+* :func:`chol`              — right-looking Cholesky of a small SPD matrix.
+* :func:`tri_solve_lower`   — L X = B forward substitution.
+* :func:`cholqr` / :func:`cholqr2` — orthonormal basis via CholeskyQR(2);
+                              the QR step of randomized range finding.
+* :func:`randomized_range`  — Gaussian sketch + optional power iteration
+                              (Halko, Martinsson, Tropp).
+
+Used by :mod:`compile.spectral` for the per-step gradient decomposition
+D ≈ P_j T_j Q_jᵀ + D_R (paper Eq. 6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chol(g: jnp.ndarray, ridge: float = 1e-8) -> jnp.ndarray:
+    """Cholesky factor L (lower) of a small SPD matrix ``g`` (k×k).
+
+    Right-looking (outer-product) form: one ``fori_loop`` step per column,
+    each an O(k²) masked vector update — tiny HLO, no LAPACK.  A relative
+    ridge guards near-rank-deficient Gram matrices (over-sampled sketches).
+    """
+    k = g.shape[0]
+    g = g + (ridge * (jnp.trace(g) / k + 1.0)) * jnp.eye(k, dtype=g.dtype)
+    idx = jnp.arange(k)
+
+    def body(t, carry):
+        a, l = carry
+        pivot = jnp.sqrt(jnp.maximum(a[t, t], 1e-30))
+        col = a[:, t] / pivot
+        col = jnp.where(idx >= t, col, 0.0)
+        l = l.at[:, t].set(col)
+        a = a - jnp.outer(col, col)
+        return a, l
+
+    _, l = lax.fori_loop(0, k, body, (g, jnp.zeros_like(g)))
+    return l
+
+
+def tri_solve_lower(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve L X = B for lower-triangular L (k×k) and B (k×n).
+
+    Forward substitution as a ``fori_loop``; unsolved rows of X are zero so
+    the full matvec ``l[t] @ x`` only picks up already-solved rows.
+    """
+
+    def body(t, x):
+        r = b[t] - l[t] @ x
+        return x.at[t].set(r / l[t, t])
+
+    return lax.fori_loop(0, l.shape[0], body, jnp.zeros_like(b))
+
+
+def cholqr(y: jnp.ndarray) -> jnp.ndarray:
+    """One CholeskyQR pass: Q with the same column span as ``y`` (m×k)."""
+    g = y.T @ y
+    l = chol(g)
+    # Q = Y L^{-T}  ⇔  Qᵀ = L^{-1} Yᵀ
+    return tri_solve_lower(l, y.T).T
+
+
+def cholqr2(y: jnp.ndarray) -> jnp.ndarray:
+    """CholeskyQR2: the second pass restores orthogonality lost to the
+    squared condition number of the Gram matrix — ample for Gaussian
+    sketches of gradient matrices (tested against numpy QR)."""
+    return cholqr(cholqr(y))
+
+
+def spectral_rotation(g: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """Orthogonal matrix E (j×j) approximately diagonalizing a small SPD
+    ``g`` via *unrolled* orthogonal (subspace) iteration:
+
+        Z ← cholqr(G Z),  repeated ``iters`` times, Z₀ = I.
+
+    Built exclusively from GEMMs + :func:`chol`/:func:`tri_solve_lower`
+    loops, which are verified bit-stable on the Rust-side runtime.  Used
+    by spectral.decompose_gradient to rotate the randomized range basis
+    onto (approximate) singular directions.  E is exactly orthogonal by
+    construction regardless of convergence, so reconstruction through it
+    is exact; only the σ-estimate sharpness depends on ``iters``.
+    """
+    j = g.shape[0]
+
+    def colnorm(y):
+        n = jnp.sqrt(jnp.sum(y * y, axis=0))
+        return y / jnp.maximum(n, 1e-30)[None, :]
+
+    z = jnp.eye(j, dtype=g.dtype)
+    for _ in range(iters - 1):
+        # Column-normalize before the QR: G's eigenvalue spread scales the
+        # iterate columns by λᵢ each pass, and CholeskyQR breaks down at
+        # κ² ≈ 1/eps_f32 — normalization keeps the Gram's condition at
+        # that of the *directions* only.
+        z = cholqr(colnorm(g @ z))
+    # Final pass with CholeskyQR2 to push E's orthogonality to f32 eps —
+    # reconstruction exactness depends only on E being orthogonal.
+    return cholqr2(colnorm(g @ z))
+
+
+def jacobi_eigh(g: jnp.ndarray, sweeps: int = 8):
+    """Eigendecomposition of a small symmetric matrix (j×j) by cyclic
+    Jacobi rotations (``fori_loop`` over a static pair list).
+
+    .. warning::
+       **Do not use inside AOT-exported graphs.**  xla_extension 0.5.1
+       (the standalone runtime the Rust coordinator embeds) miscompiles
+       this loop body — eigenvalues come out wrong by O(σ) while the
+       same HLO is correct under jaxlib's XLA.  The unrolled variant is
+       correct on both (see EXPERIMENTS.md §Perf "old-XLA while-loop
+       divergence"); exported graphs use :func:`spectral_rotation`.
+       Kept for build-time analysis + as the pytest oracle cross-check.
+
+    Returns ``(evals (j,), evecs (j,j))`` with ``g ≈ evecs diag(evals)
+    evecsᵀ`` (unordered; callers sort).
+    """
+    j = g.shape[0]
+    if j == 1:
+        return g[0], jnp.ones((1, 1), g.dtype)
+    pairs = [(p, q) for p in range(j) for q in range(p + 1, j)]
+    pi = jnp.array([p for p, _ in pairs], jnp.int32)
+    qi = jnp.array([q for _, q in pairs], jnp.int32)
+    npairs = len(pairs)
+    idx = jnp.arange(j)
+    eye = jnp.eye(j, dtype=g.dtype)
+
+    # NOTE: the rotation is applied as a *dense* similarity transform
+    # built from one-hot vectors, NOT via .at[].set row/column updates.
+    # xla_extension 0.5.1 (the Rust-side runtime) miscompiles the
+    # multiple-dynamic-update-slice-per-iteration pattern inside while
+    # loops (in-place DUS aliasing), silently corrupting eigenvalues —
+    # caught by the cross-language differential test
+    # (rust/tests/runtime_roundtrip.rs::decompose_artifact_invariants).
+    def body(t, carry):
+        a, v = carry
+        p = pi[t % npairs]
+        q = qi[t % npairs]
+        ep = (idx == p).astype(g.dtype)
+        eq = (idx == q).astype(g.dtype)
+        app = ep @ a @ ep
+        aqq = eq @ a @ eq
+        apq = ep @ a @ eq
+        # rotation angle zeroing a[p,q]; guard the already-diagonal case
+        tau = (aqq - app) / (2.0 * jnp.where(apq == 0.0, 1.0, apq))
+        tt = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        tt = jnp.where(apq == 0.0, 0.0, tt)
+        c = 1.0 / jnp.sqrt(1.0 + tt * tt)
+        s = c * tt
+        # J: columns p,q rotated — J[:,p] = c·ep − s·eq, J[:,q] = s·ep + c·eq
+        rot = (eye
+               + (c - 1.0) * (jnp.outer(ep, ep) + jnp.outer(eq, eq))
+               - s * jnp.outer(eq, ep) + s * jnp.outer(ep, eq))
+        a = rot.T @ a @ rot
+        v = v @ rot
+        return a, v
+
+    a, v = jax.lax.fori_loop(
+        0, sweeps * npairs, body, (g, eye))
+    return jnp.diagonal(a), v
+
+
+def randomized_range(
+    a: jnp.ndarray, omega: jnp.ndarray, power_iters: int = 0
+) -> jnp.ndarray:
+    """Orthonormal basis Q (m×j) approximating the dominant column space of
+    ``a`` (m×n), from a Gaussian test matrix ``omega`` (n×j) [Halko et al.].
+
+    ``power_iters`` subspace iterations sharpen the spectral gap (two extra
+    GEMMs each); intermediate CholeskyQR keeps the basis well-conditioned.
+    """
+    y = a @ omega
+    q = cholqr2(y)
+    for _ in range(power_iters):
+        z = a.T @ q
+        z = cholqr(z)
+        q = cholqr2(a @ z)
+    return q

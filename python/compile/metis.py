@@ -1,0 +1,300 @@
+"""Metis quantized linear layers (paper §3) as ``jax.custom_vjp`` GEMMs.
+
+Two parameter layouts exist per linear layer:
+
+* **direct**  — ``{"w": (m,n), "b": (n,)}``; forward ``Y = Q(X) Q(W) + b``.
+* **decomp**  — ``{"u": (m,k), "s": (k,), "v": (n,k), "wr": (m,n),
+  "b": (n,)}`` holding the one-time spectral split W = U S Vᵀ + W_R
+  (paper Eq. 3, done at init pack time with full SVD); forward is Eq. 5:
+
+      Y = Q(X) Q(U) S Q(Vᵀ) + Q(X) Q(W_R) + b
+
+The backward pass implements Eqs. 7–11.  With backward decomposition on,
+the output gradient is first split (Eq. 6) D = P T Qᵀ + D_R by the
+randomized range finder, the adaptive spectral learning rate (§3.2)
+rescales T, and every GEMM operand is block-quantized along its
+contraction axis.  The shared intermediate B₁ = Q(Xᵀ)·[Q(P) T̃ Q(Qᵀ)] +
+Q(Xᵀ) Q(D_R) (m×n) is computed once and feeds Eqs. 8–11:
+
+    ∂L/∂U  = Q(B₁) Q(V) · S            (Eq. 8, column-scaled)
+    ∂L/∂S  = diag(Uᵀ B₁ V)             (Eq. 9)
+    ∂L/∂V  = Q(B₁ᵀ) Q(U) · S           (Eq. 10, transposed)
+    ∂L/∂W_R = B₁                        (Eq. 11)
+
+Design notes (documented deviations, see DESIGN.md §7):
+
+* ``S`` (and ``T``) stay in high precision everywhere — Eq. 5 exempts S
+  from quantization; the bars on S̄ in Eqs. 8–10 are treated as notational
+  (quantizing a diagonal of widely-spread singular values to FP4 would
+  reintroduce exactly the bias Metis removes).
+* Quantization blocks run along the *contraction* axis of each GEMM
+  (microscaling-hardware layout).  When the contraction dim is the sketch
+  rank j < block size, the block covers the whole dim (per-vector scale).
+* The Gaussian test matrix Ω is an explicit input (zero cotangent) so the
+  exported graph stays a pure function of (params, batch, step, seed).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from . import formats, spectral
+from .kernels import quant as kquant
+
+
+# ---------------------------------------------------------------------------
+# Static per-run quantization configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration describing one quantization mode.
+
+    ``fmt``: "none" | "fp8" | "nvfp4" | "mxfp4" (element+scale rule).
+    ``fwd_decomp``: store weights as U S Vᵀ + W_R (Eq. 3) and use Eq. 5.
+    ``bwd_decomp``: split output gradients per Eq. 6 before quantizing.
+    ``adaptive_lr``: apply σ̃ = 2σ/(1+σ/σ₁) to the gradient spectrum (§3.2).
+    ``dual_range``: add R(W) (§3.3) to the loss with (lam1, lam2, eps).
+    ``rho_fwd``: k = ⌈rho_fwd · r⌉ for the one-time weight split.
+    ``rho_bwd`` / ``j_cap``: j = min(j_cap, ⌈rho_bwd · min(l,n)⌉) sketch rank.
+    ``power_iters``: subspace iterations in the randomized range finder.
+    ``use_pallas``: route quantization through the Pallas kernel (L1) or
+    the pure-jnp reference (A/B testing; bit-identical by test).
+    """
+
+    name: str = "fp32"
+    fmt: str = "none"
+    fwd_decomp: bool = False
+    bwd_decomp: bool = False
+    adaptive_lr: bool = False
+    dual_range: bool = False
+    lam1: float = 1e-6
+    lam2: float = 1e-12
+    eps: float = 1e-4
+    rho_fwd: float = 0.5
+    rho_bwd: float = 0.1
+    j_cap: int = 16
+    power_iters: int = 1
+    use_pallas: bool = True
+
+    @property
+    def is_quant(self) -> bool:
+        return self.fmt != "none"
+
+    @property
+    def block_format(self) -> formats.BlockFormat | None:
+        if self.fmt == "none":
+            return None
+        return {
+            "fp8": formats.FP8_BLOCK,
+            "nvfp4": formats.NVFP4,
+            "mxfp4": formats.MXFP4,
+        }[self.fmt]
+
+    def sketch_rank(self, l: int, n: int) -> int:
+        return max(1, min(self.j_cap, int(-(-self.rho_bwd * min(l, n) // 1))))
+
+
+# The mode zoo used by aot.py / tests / benches (paper §4 + Table 5).
+MODES: dict[str, QuantConfig] = {}
+
+
+def _register(cfg: QuantConfig) -> QuantConfig:
+    MODES[cfg.name] = cfg
+    return cfg
+
+
+FP32 = _register(QuantConfig(name="fp32"))
+FP8_DIRECT = _register(QuantConfig(name="fp8_direct", fmt="fp8"))
+# Paper FP8 setting: forward decomposition only, backward plain block-FP8.
+FP8_METIS = _register(QuantConfig(
+    name="fp8_metis", fmt="fp8", fwd_decomp=True, adaptive_lr=False,
+    dual_range=True, rho_fwd=0.01))
+FP8_METIS_FULL = _register(replace(FP8_METIS, name="fp8_metis_full", rho_fwd=1.0))
+NVFP4_DIRECT = _register(QuantConfig(name="nvfp4_direct", fmt="nvfp4"))
+MXFP4_DIRECT = _register(QuantConfig(name="mxfp4_direct", fmt="mxfp4"))
+NVFP4_METIS = _register(QuantConfig(
+    name="nvfp4_metis", fmt="nvfp4", fwd_decomp=True, bwd_decomp=True,
+    adaptive_lr=True, dual_range=True, rho_fwd=0.5))
+MXFP4_METIS = _register(replace(NVFP4_METIS, name="mxfp4_metis", fmt="mxfp4"))
+# Table 5 ablations (on the NVFP4 Metis stack).
+ABL_NO_FWD = _register(replace(
+    NVFP4_METIS, name="abl_no_fwd_decomp", fwd_decomp=False))
+ABL_NO_BWD = _register(replace(
+    NVFP4_METIS, name="abl_no_bwd_decomp", bwd_decomp=False))
+ABL_NO_ALR = _register(replace(
+    NVFP4_METIS, name="abl_no_adaptive_lr", adaptive_lr=False))
+ABL_NO_REG = _register(replace(
+    NVFP4_METIS, name="abl_no_dual_range", dual_range=False))
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul helpers
+# ---------------------------------------------------------------------------
+
+
+def _q(cfg: QuantConfig, x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Block-quantize along ``axis`` (identity for fp32 mode)."""
+    fmt = cfg.block_format
+    if fmt is None:
+        return x
+    return kquant.quantize_any(x, fmt, axis=axis, use_pallas=cfg.use_pallas)
+
+
+def _qmm(cfg: QuantConfig, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Quantized GEMM: operands quantized along their contraction axes."""
+    return _q(cfg, a, -1) @ _q(cfg, b, 0)
+
+
+# ---------------------------------------------------------------------------
+# Direct layout:  Y = Q(X) Q(W) + b
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def make_direct_linear(cfg: QuantConfig):
+    """Build the custom-VJP direct quantized linear for a mode.
+
+    Signature: ``f(x2 (l,m), w (m,n), b (n,), omega (n,j)) -> (l,n)``.
+    ``omega`` is consumed only when ``cfg.bwd_decomp``; callers pass a
+    (1,1) dummy otherwise.
+    """
+
+    @jax.custom_vjp
+    def linear(x, w, b, omega):
+        return _qmm(cfg, x, w) + b[None, :]
+
+    def fwd(x, w, b, omega):
+        return linear(x, w, b, omega), (x, w, omega)
+
+    def bwd(res, d):
+        x, w, omega = res
+        db = jnp.sum(d, axis=0)
+        if cfg.bwd_decomp:
+            dec = spectral.decompose_gradient(
+                d, omega, power_iters=cfg.power_iters,
+                adaptive=cfg.adaptive_lr)
+            # dX = [Q(P) T̃ Q(Qᵀ)] Q(Wᵀ) + Q(D_R) Q(Wᵀ)
+            wt_q = _q(cfg, w.T, 0)
+            low = (_q(cfg, dec.p, -1) * dec.t_adapt[None, :]) @ _q(cfg, dec.qt, 0)
+            dx = _q(cfg, low, -1) @ wt_q + _q(cfg, dec.resid, -1) @ wt_q
+            # dW = Q(Xᵀ)[Q(P) T̃ Q(Qᵀ)] + Q(Xᵀ) Q(D_R)
+            xt_q = _q(cfg, x.T, -1)
+            zp = (xt_q @ _q(cfg, dec.p, 0)) * dec.t_adapt[None, :]
+            dw = zp @ _q(cfg, dec.qt, 0) + xt_q @ _q(cfg, dec.resid, 0)
+        else:
+            dx = _qmm(cfg, d, w.T)
+            dw = _qmm(cfg, x.T, d)
+        return dx, dw, db, jnp.zeros_like(omega)
+
+    linear.defvjp(fwd, bwd)
+    return linear
+
+
+# ---------------------------------------------------------------------------
+# Decomposed layout:  Y = Q(X) Q(U) S Q(Vᵀ) + Q(X) Q(W_R) + b   (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def make_decomp_linear(cfg: QuantConfig):
+    """Build the custom-VJP Metis (spectrally decomposed) linear.
+
+    Signature: ``f(x2, u, s, v, wr, b, omega) -> (l,n)``.
+    """
+
+    @jax.custom_vjp
+    def linear(x, u, s, v, wr, b, omega):
+        xq = _q(cfg, x, -1)
+        low = ((xq @ _q(cfg, u, 0)) * s[None, :]) @ _q(cfg, v.T, 0)
+        return low + xq @ _q(cfg, wr, 0) + b[None, :]
+
+    def fwd(x, u, s, v, wr, b, omega):
+        return linear(x, u, s, v, wr, b, omega), (x, u, s, v, wr, omega)
+
+    def bwd(res, d):
+        x, u, s, v, wr, omega = res
+        db = jnp.sum(d, axis=0)
+        xt_q = _q(cfg, x.T, -1)          # (m, l), blocks along l
+        v_q = _q(cfg, v, 0)              # (n, k), blocks along n
+        u_q = _q(cfg, u, 0)              # (m, k), blocks along m
+        ut_q = _q(cfg, u.T, 0)           # (k, m), blocks along k
+        wrt_q = _q(cfg, wr.T, 0)         # (n, m), blocks along n
+
+        if cfg.bwd_decomp:
+            dec = spectral.decompose_gradient(
+                d, omega, power_iters=cfg.power_iters,
+                adaptive=cfg.adaptive_lr)
+            p_q = _q(cfg, dec.p, -1)     # (l, j), blocks along j
+            qt_qn = _q(cfg, dec.qt, -1)  # (j, n), blocks along n
+            r_qn = _q(cfg, dec.resid, -1)
+            # dX (Eq. 7): four quantized chains sharing Q(V) S Q(Uᵀ)/Q(WRᵀ).
+            a = (qt_qn @ v_q) * s[None, :]              # (j, k)
+            core = _q(cfg, a, -1) @ ut_q                 # (j, m)
+            low_l = p_q * dec.t_adapt[None, :]           # (l, j)
+            dx = (
+                low_l @ core
+                + _q(cfg, low_l @ qt_qn, -1) @ wrt_q
+                + _q(cfg, (r_qn @ v_q) * s[None, :], -1) @ ut_q
+                + r_qn @ wrt_q
+            )
+            # B₁ = Q(Xᵀ)[Q(P) T̃ Q(Qᵀ) + Q(D_R)]  (m, n) — shared by Eq. 8–11.
+            zp = (xt_q @ _q(cfg, dec.p, 0)) * dec.t_adapt[None, :]
+            b1 = zp @ _q(cfg, dec.qt, 0) + xt_q @ _q(cfg, dec.resid, 0)
+        else:
+            d_qn = _q(cfg, d, -1)        # (l, n), blocks along n
+            dx = (d_qn @ v_q) * s[None, :] @ ut_q + d_qn @ wrt_q
+            b1 = xt_q @ _q(cfg, d, 0)
+
+        c = _q(cfg, b1, -1) @ v_q        # (m, k) = Xᵀ D V
+        du = c * s[None, :]              # Eq. 8
+        ds = jnp.sum(u * c, axis=0)      # Eq. 9 (diag extraction)
+        dv = (_q(cfg, b1.T, -1) @ u_q) * s[None, :]  # Eq. 10ᵀ
+        dwr = b1                         # Eq. 11
+        return dx, du, ds, dv, dwr, db, jnp.zeros_like(omega)
+
+    linear.defvjp(fwd, bwd)
+    return linear
+
+
+# ---------------------------------------------------------------------------
+# Layout-dispatching layer application + regularizer
+# ---------------------------------------------------------------------------
+
+
+def linear_apply(cfg: QuantConfig, params: dict, x2: jnp.ndarray,
+                 omega: jnp.ndarray) -> jnp.ndarray:
+    """Apply one quantized linear layer; dispatches on the param layout."""
+    if "u" in params:
+        f = make_decomp_linear(cfg)
+        return f(x2, params["u"], params["s"], params["v"], params["wr"],
+                 params["b"], omega)
+    f = make_direct_linear(cfg)
+    return f(x2, params["w"], params["b"], omega)
+
+
+def linear_weight_tensors(params: dict) -> list[jnp.ndarray]:
+    """The tensors the dual-range regularizer constrains (not S, not b)."""
+    if "u" in params:
+        return [params["u"], params["v"], params["wr"]]
+    return [params["w"]]
+
+
+def dual_range_penalty(cfg: QuantConfig, tensors) -> jnp.ndarray:
+    """R(W) = λ₁ Σ w² + λ₂ Σ 1/(w²+ε) summed over ``tensors`` (§3.3).
+
+    Pure-jnp (autodiff flows through it as part of the loss); the fused
+    Pallas kernel in kernels/reg.py covers the standalone/bench path.
+    """
+    total = jnp.zeros((), jnp.float32)
+    for w in tensors:
+        w = w.astype(jnp.float32)
+        sq = w * w
+        total = total + cfg.lam1 * jnp.sum(sq)
+        total = total + cfg.lam2 * jnp.sum(1.0 / (sq + cfg.eps))
+    return total

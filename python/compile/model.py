@@ -1,0 +1,343 @@
+"""GPT-2-style decoder-only transformer with Metis quantized GEMMs (L2).
+
+Every linear layer routes through :func:`compile.metis.linear_apply`, so a
+single model definition covers all quantization modes (fp32 / fp8 / fp4 ×
+direct / Metis): the mode lives in the parameter *layout* (direct ``w`` vs
+decomposed ``u,s,v,wr``) plus the static :class:`~compile.metis.QuantConfig`.
+
+Also defines the full AdamW ``train_step`` (warmup+cosine schedule, global
+gradient-norm clipping, dual-range regularization) as one jittable function
+— this is what ``aot.py`` lowers to HLO text for the Rust coordinator.
+Architecture follows GPT-2 [Radford et al. 2019]: pre-LN blocks, GELU MLP
+(ratio 4), learned positional embeddings, untied LM head (untied because
+the head weight participates in the spectral decomposition; DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import metis
+from .metis import QuantConfig
+
+Params = dict  # nested dict pytree of jnp arrays
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture shape (paper: 130M/1.1B GPT-2; here CPU-scaled)."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 64
+    n_layer: int = 2
+    n_head: int = 2
+    seq_len: int = 64
+    mlp_ratio: int = 4
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+    def param_count(self) -> int:
+        d, h, v_ = self.d_model, self.d_mlp, self.vocab
+        per_layer = 3 * d * d + d * d + 2 * d * h + 4 * d + 3 * d + h
+        return v_ * d + self.seq_len * d + self.n_layer * per_layer + 2 * d + d * v_ + v_
+
+
+MODEL_CONFIGS = {
+    "nano": ModelConfig("nano", vocab=128, d_model=32, n_layer=1, n_head=2, seq_len=32),
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layer=2, n_head=2, seq_len=64),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layer=4, n_head=4, seq_len=128),
+    "med": ModelConfig("med", vocab=2048, d_model=256, n_layer=8, n_head=8, seq_len=256),
+}
+
+# Linear-layer slots per transformer block + the LM head; used to build
+# omega pytrees and by initpack to decide which tensors get decomposed.
+BLOCK_LINEARS = ("wqkv", "wo", "wfc", "wproj")
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _linear_out_dim(mc: ModelConfig, slot: str) -> int:
+    return {
+        "wqkv": 3 * mc.d_model,
+        "wo": mc.d_model,
+        "wfc": mc.d_mlp,
+        "wproj": mc.d_model,
+        "head": mc.vocab,
+    }[slot]
+
+
+def make_omegas(cfg: QuantConfig, mc: ModelConfig, batch: int,
+                key: jax.Array) -> Params:
+    """Gaussian test matrices Ω per linear (Eq. 6), or (1,1) dummies.
+
+    One Ω of shape (n_out, j) per linear slot; the per-layer copies are
+    *stacked* on a leading L axis so they can ride through the layer
+    ``lax.scan`` (see :func:`forward`).  j is static from (l = batch·seq,
+    n_out) via ``cfg.sketch_rank``.
+    """
+    l = batch * mc.seq_len
+    need = cfg.bwd_decomp
+    keys = jax.random.split(key, len(BLOCK_LINEARS) + 1)
+    layers = {}
+    for ki, slot in enumerate(BLOCK_LINEARS):
+        n = _linear_out_dim(mc, slot)
+        if need:
+            j = cfg.sketch_rank(l, n)
+            lk = jax.random.split(keys[ki], mc.n_layer)
+            layers[slot] = jax.vmap(
+                lambda k: jax.random.normal(k, (n, j), jnp.float32))(lk)
+        else:
+            layers[slot] = jnp.zeros((mc.n_layer, 1, 1), jnp.float32)
+    n = _linear_out_dim(mc, "head")
+    if need:
+        j = cfg.sketch_rank(l, n)
+        head = jax.random.normal(keys[-1], (n, j), jnp.float32)
+    else:
+        head = jnp.zeros((1, 1), jnp.float32)
+    return {"layers": layers, "head": head}
+
+
+def _attention(mc: ModelConfig, q, k, v):
+    """Causal multi-head attention over (B, T, d) q/k/v (already projected).
+
+    The score/value BMMs stay in f32 — W4A4G4 applies to the dense linear
+    GEMMs (paper §3.1 targets weight GEMMs; attention BMMs have no weights).
+    """
+    b, t, d = q.shape
+    hd = d // mc.n_head
+
+    def split(x):
+        return x.reshape(b, t, mc.n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def forward(cfg: QuantConfig, mc: ModelConfig, params: Params,
+            tokens: jnp.ndarray, omegas: Params):
+    """Run the transformer; returns (logits (B,T,V), final hidden (B,T,d)).
+
+    The layer stack is a ``lax.scan`` over parameters stacked on a leading
+    L axis — the lowered HLO contains *one* block body regardless of
+    depth, which keeps XLA-CPU compile time flat in n_layer (the single
+    largest compile-cost lever; see EXPERIMENTS.md §Perf).
+    """
+    b, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][None, :t]
+
+    def lin(p, x3, omega):
+        x2 = x3.reshape(b * t, x3.shape[-1])
+        y2 = metis.linear_apply(cfg, p, x2, omega)
+        return y2.reshape(b, t, y2.shape[-1])
+
+    def block(x, xs):
+        lay, om = xs
+        h = layer_norm(x, lay["ln1_g"], lay["ln1_b"])
+        qkv = lin(lay["wqkv"], h, om["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        x = x + lin(lay["wo"], _attention(mc, q, k, v), om["wo"])
+        h = layer_norm(x, lay["ln2_g"], lay["ln2_b"])
+        h = lin(lay["wfc"], h, om["wfc"])
+        h = jax.nn.gelu(h)
+        x = x + lin(lay["wproj"], h, om["wproj"])
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, (params["layers"], omegas["layers"]))
+
+    hfin = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = lin(params["head"], hfin, omegas["head"])
+    return logits, hfin
+
+
+def cross_entropy(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def regularized_loss(cfg: QuantConfig, mc: ModelConfig, params: Params,
+                     tokens_xy: jnp.ndarray, omegas: Params):
+    """Task CE + dual-range penalty over all quantized weight tensors."""
+    x, y = tokens_xy[:, :-1], tokens_xy[:, 1:]
+    logits, _ = forward(cfg, mc, params, x, omegas)
+    loss = cross_entropy(logits, y)
+    if cfg.dual_range:
+        tensors = []
+        for slot in BLOCK_LINEARS:  # stacked (L, ...) tensors — sum is flat
+            tensors += metis.linear_weight_tensors(params["layers"][slot])
+        tensors += metis.linear_weight_tensors(params["head"])
+        loss = loss + metis.dual_range_penalty(cfg, tensors)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: AdamW + warmup/cosine + global-norm clip (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4          # paper uses 1e-5 at 512×1024-token batches;
+    warmup: int = 50          # rescaled for our CPU-sized runs (DESIGN.md §4)
+    total_steps: int = 400
+    beta1: float = 0.9
+    beta2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 1e-2
+    clip_norm: float = 8.0
+
+
+def lr_at(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / max(oc.warmup, 1)
+    prog = jnp.clip((s - oc.warmup) / max(oc.total_steps - oc.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * jnp.where(s < oc.warmup, warm, cos)
+
+
+def _is_decayed(path: tuple) -> bool:
+    """Weight decay applies to matrices (w/u/v/wr/wte/wpe/head), not to
+    biases, LN gains or the singular-value vector s."""
+    leaf = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return leaf in ("w", "u", "v", "wr") or leaf in ("wte", "wpe")
+
+
+def train_step(cfg: QuantConfig, mc: ModelConfig, oc: OptConfig,
+               params: Params, m: Params, v: Params,
+               tokens_xy: jnp.ndarray, step: jnp.ndarray,
+               seed: jnp.ndarray, lr: jnp.ndarray | None = None):
+    """One full training step; pure function of its inputs.
+
+    RNG for the gradient sketches is counter-based: fold_in(seed, step),
+    so runs are deterministic and resumable from the Rust coordinator.
+    ``lr`` is a runtime input — the *coordinator* owns the warmup/cosine
+    schedule (see rust coordinator::schedule), keeping one artifact valid
+    for any run length; None falls back to the baked schedule (tests).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    key = jax.random.fold_in(key, step)
+    omegas = make_omegas(cfg, mc, tokens_xy.shape[0], key)
+
+    loss, grads = jax.value_and_grad(regularized_loss, argnums=2)(
+        cfg, mc, params, tokens_xy, omegas)
+
+    # Global-norm clipping at 8.0 (paper §4.1).
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    if lr is None:
+        lr = lr_at(oc, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - oc.beta1 ** t
+    bc2 = 1.0 - oc.beta2 ** t
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [pp for pp, _ in flat_p[0]]
+
+    def upd(path, p, g, m_, v_):
+        m2 = oc.beta1 * m_ + (1 - oc.beta1) * g
+        v2 = oc.beta2 * v_ + (1 - oc.beta2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + oc.adam_eps)
+        wd = oc.weight_decay if _is_decayed(path) else 0.0
+        p2 = p - lr * (step_ + wd * p)
+        return p2, m2, v2
+
+    p_leaves = [x for _, x in flat_p[0]]
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    m_leaves = jax.tree_util.tree_leaves(m)
+    v_leaves = jax.tree_util.tree_leaves(v)
+    out = [upd(pp, p, g, m_, v_) for pp, p, g, m_, v_
+           in zip(paths, p_leaves, g_leaves, m_leaves, v_leaves)]
+    treedef = flat_p[1]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def eval_loss(cfg: QuantConfig, mc: ModelConfig, params: Params,
+              tokens_xy: jnp.ndarray):
+    """Held-out CE loss (quantized forward, no regularizer, no updates)."""
+    x, y = tokens_xy[:, :-1], tokens_xy[:, 1:]
+    omegas = make_omegas(
+        metis.QuantConfig(name="_eval", fmt=cfg.fmt, fwd_decomp=cfg.fwd_decomp),
+        mc, x.shape[0], jax.random.PRNGKey(0))
+    logits, _ = forward(cfg, mc, params, x, omegas)
+    return cross_entropy(logits, y)
+
+
+def features(cfg: QuantConfig, mc: ModelConfig, params: Params,
+             tokens_x: jnp.ndarray):
+    """Mean-pooled final hidden states (B, d) — frozen features for the
+    downstream linear probes (GLUE-substitute tasks, DESIGN.md §4)."""
+    omegas = make_omegas(
+        metis.QuantConfig(name="_feat", fmt=cfg.fmt, fwd_decomp=cfg.fwd_decomp),
+        mc, tokens_x.shape[0], jax.random.PRNGKey(0))
+    _, hfin = forward(cfg, mc, params, tokens_x, omegas)
+    return jnp.mean(hfin, axis=1)
+
+
+def analysis_tensors(mc: ModelConfig, params: Params, tokens_xy: jnp.ndarray):
+    """Raw-precision tensors for the paper's §2 analysis (Figs. 2–5):
+    the deepest block's first FFN linear W_fc, its input activations X_fc,
+    the fp32 gradients G_fc and G_key, and the attention key projection
+    W_key.  Only defined for direct-layout (fp32-mode) parameters.
+    """
+    cfg = metis.FP32
+    x, y = tokens_xy[:, :-1], tokens_xy[:, 1:]
+    b, t = x.shape
+    omegas = make_omegas(cfg, mc, b, jax.random.PRNGKey(0))
+
+    def loss_fn(params):
+        acts = {}
+        xx = params["wte"][x] + params["wpe"][None, :t]
+        for li in range(mc.n_layer):  # unrolled: analysis is fp32-only
+            lay = jax.tree_util.tree_map(lambda a: a[li], params["layers"])
+            h = layer_norm(xx, lay["ln1_g"], lay["ln1_b"])
+            h2 = h.reshape(b * t, -1)
+            qkv = (h2 @ lay["wqkv"]["w"] + lay["wqkv"]["b"]).reshape(b, t, -1)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            ao = _attention(mc, q, k, v).reshape(b * t, -1)
+            xx = xx + (ao @ lay["wo"]["w"] + lay["wo"]["b"]).reshape(b, t, -1)
+            h = layer_norm(xx, lay["ln2_g"], lay["ln2_b"])
+            h2 = h.reshape(b * t, -1)
+            if li == mc.n_layer - 1:
+                acts["x_fc"] = h2
+            h2 = h2 @ lay["wfc"]["w"] + lay["wfc"]["b"]
+            h2 = jax.nn.gelu(h2)
+            xx = xx + (h2 @ lay["wproj"]["w"] + lay["wproj"]["b"]).reshape(b, t, -1)
+        hfin = layer_norm(xx, params["lnf_g"], params["lnf_b"])
+        logits = (hfin.reshape(b * t, -1) @ params["head"]["w"]
+                  + params["head"]["b"]).reshape(b, t, -1)
+        return cross_entropy(logits, y), acts
+
+    grads, acts = jax.grad(loss_fn, has_aux=True)(params)
+    last = mc.n_layer - 1
+    d = mc.d_model
+    return {
+        "w_fc": params["layers"]["wfc"]["w"][last],
+        "g_fc": grads["layers"]["wfc"]["w"][last],
+        "x_fc": acts["x_fc"],
+        "w_key": params["layers"]["wqkv"]["w"][last][:, d:2 * d],
+        "g_key": grads["layers"]["wqkv"]["w"][last][:, d:2 * d],
+    }

@@ -1,0 +1,148 @@
+"""Format codec tests: exact grids, RNE ties, block-scale rules, and
+hypothesis property sweeps over shapes/dtypes (the L1 correctness base)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import formats
+
+FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+
+
+def fp8_grid():
+    """Enumerate all non-negative finite E4M3 values."""
+    vals = [0.0]
+    for e in range(-6, 9):
+        for m in range(8):
+            if e == -6:  # subnormals share the 2^-6 binade scale
+                vals.append(m / 8.0 * 2.0 ** -6)
+            vals.append((1 + m / 8.0) * 2.0 ** e)
+    vals = sorted(set(v for v in vals if v <= 448.0))
+    return np.array(vals, np.float32)
+
+
+class TestFp4:
+    def test_grid_fixed_points(self):
+        for g in FP4_GRID:
+            assert float(formats.fp4_e2m1(jnp.float32(g))) == g
+            assert float(formats.fp4_e2m1(jnp.float32(-g))) == -g
+
+    def test_rne_ties(self):
+        # midpoints: 0.25→0, 0.75→1(?), 1.25→1, 1.75→2, 2.5→2, 3.5→4, 5→4
+        ties = {0.25: 0.0, 1.25: 1.0, 1.75: 2.0, 2.5: 2.0, 3.5: 4.0, 5.0: 4.0}
+        for x, want in ties.items():
+            got = float(formats.fp4_e2m1(jnp.float32(x)))
+            assert got == want, f"fp4({x})={got}, want {want}"
+
+    def test_saturation_and_sign(self):
+        assert float(formats.fp4_e2m1(jnp.float32(1e9))) == 6.0
+        assert float(formats.fp4_e2m1(jnp.float32(-1e9))) == -6.0
+
+    @given(st.floats(-6.0, 6.0, allow_nan=False, width=32))
+    @settings(max_examples=300, deadline=None)
+    def test_nearest_grid_point(self, x):
+        q = float(formats.fp4_e2m1(jnp.float32(x)))
+        assert q in FP4_GRID or -q in FP4_GRID
+        best = np.min(np.abs(np.concatenate([FP4_GRID, -FP4_GRID]) - x))
+        assert abs(q - x) <= best + 1e-6
+
+
+class TestFp8:
+    def test_on_grid(self):
+        grid = fp8_grid()
+        xs = jnp.array(grid)
+        qs = np.asarray(formats.fp8_e4m3(xs))
+        np.testing.assert_array_equal(qs, grid)
+
+    @given(st.floats(-500.0, 500.0, allow_nan=False, width=32))
+    @settings(max_examples=300, deadline=None)
+    def test_nearest(self, x):
+        grid = fp8_grid()
+        full = np.concatenate([grid, -grid])
+        q = float(formats.fp8_e4m3(jnp.float32(x)))
+        assert np.any(np.isclose(full, q, rtol=0, atol=0))
+        xc = np.clip(x, -448, 448)
+        best = np.min(np.abs(full - xc))
+        assert abs(q - xc) <= best + 1e-6
+
+
+class TestScales:
+    def test_e8m0_is_power_of_two(self):
+        for amax in [0.001, 0.4, 1.0, 5.9, 6.0, 77.0]:
+            s = float(formats.e8m0_scale(jnp.float32(amax)))
+            e = np.log2(s)
+            assert abs(e - round(e)) < 1e-9
+
+    def test_e8m0_brings_amax_into_range(self):
+        for amax in [0.01, 1.0, 100.0]:
+            s = float(formats.e8m0_scale(jnp.float32(amax)))
+            assert 2.0 < amax / s <= 8.0  # within reach of the 6.0 grid top
+
+    def test_nv_scale_is_e4m3_value(self):
+        amax = jnp.float32(3.3)
+        s = formats.NVFP4.scale(amax)
+        assert float(formats.fp8_e4m3(s)) == float(s)
+
+    def test_zero_block_scale_is_one(self):
+        for fmt in (formats.MXFP4, formats.NVFP4, formats.FP8_BLOCK):
+            assert float(fmt.scale(jnp.float32(0.0))) == 1.0
+
+
+class TestBlockQuant:
+    @pytest.mark.parametrize("fmt", ["mxfp4", "nvfp4", "fp8"])
+    @pytest.mark.parametrize("shape,axis", [((4, 64), -1), ((64, 4), 0),
+                                            ((3, 5, 32), 1)])
+    def test_shape_preserved(self, fmt, shape, axis):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        q = formats.quantize_blockwise(x, formats.FORMATS[fmt], axis=axis)
+        assert q.shape == x.shape
+
+    def test_outlier_clips_neighbors(self):
+        x = np.full((1, 32), 0.01, np.float32)
+        x[0, 0] = 6.0
+        q = np.asarray(formats.quantize_blockwise(
+            jnp.asarray(x), formats.MXFP4, axis=-1))
+        assert q[0, 0] == 6.0
+        assert q[0, 5] == 0.0  # small value clipped: the §2.3 bias
+
+    def test_blocks_are_independent(self):
+        rng = np.random.default_rng(1)
+        a = rng.normal(size=(2, 64)).astype(np.float32)
+        b = a.copy()
+        b[:, 32:] *= 100.0  # second block rescaled
+        qa = np.asarray(formats.quantize_blockwise(jnp.asarray(a), formats.MXFP4))
+        qb = np.asarray(formats.quantize_blockwise(jnp.asarray(b), formats.MXFP4))
+        np.testing.assert_array_equal(qa[:, :32], qb[:, :32])
+
+    @given(st.integers(1, 4), st.integers(1, 100), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_error_bounded_by_scale(self, rows, cols, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(scale=2.0, size=(rows, cols)).astype(np.float32)
+        q = np.asarray(formats.quantize_blockwise(jnp.asarray(x), formats.NVFP4))
+        # per block: |q - x| <= s (worst-case grid step) + saturation slack
+        xb = x.reshape(rows, -1) if cols % 16 == 0 else None
+        err = np.abs(q - x)
+        amax = np.abs(x).max()
+        assert err.max() <= max(1.0, amax / 6.0) * 1.01 + 1e-5
+
+    def test_underflow_fraction_increases_with_spread(self):
+        rng = np.random.default_rng(2)
+        narrow = rng.normal(size=(64, 64)).astype(np.float32)
+        wide = narrow.copy()
+        wide[:, ::32] = 60.0
+        un = float(formats.underflow_fraction(jnp.asarray(narrow), formats.MXFP4))
+        uw = float(formats.underflow_fraction(jnp.asarray(wide), formats.MXFP4))
+        assert uw > 2 * un
+
+    def test_paper_scale_rule(self):
+        # s = amax / 7 (b=4): quoted formula of §2.3.
+        x = jnp.asarray(np.linspace(-3, 3, 32, dtype=np.float32)[None])
+        q = formats.quantize_blockwise(x, formats.PAPER_FP4)
+        assert q.shape == x.shape
+        assert float(jnp.max(jnp.abs(q))) <= 3.0 * (6.0 / 7.0) + 1e-5

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels vs pure-jnp oracles (ref.py) — the CORE correctness
+signal.  Quantization is exact snapping, so equality (not allclose) is
+asserted for the quantizer; the GEMM accumulates in f32 and allows ulp
+slack.  Hypothesis sweeps shapes/tile choices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import formats
+from compile.kernels import qgemm, quant, ref, reg
+
+FMTS = [formats.MXFP4, formats.NVFP4, formats.FP8_BLOCK]
+
+
+def assert_quant_equal(got, want, fmt):
+    """MXFP4 scales are powers of two → x/s is exact → bit equality.
+    NV/FP8 scales are arbitrary f32, and XLA may rewrite x/s into
+    x·rcp(s) per lowering path (kernel vs ref) — tolerate 1-ulp wobble."""
+    got, want = np.asarray(got), np.asarray(want)
+    if fmt.name == "mxfp4":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=2e-6, atol=2e-7)
+
+
+class TestQuantKernel:
+    @pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+    def test_matches_ref_2d(self, fmt):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+        got = quant.quantize_blockwise_pallas(x, fmt)
+        want = ref.quantize_blockwise_ref(x, fmt)
+        assert_quant_equal(got, want, fmt)
+
+    @pytest.mark.parametrize("tile_rows", [1, 7, 64, 1024])
+    def test_tiling_invariance(self, tile_rows):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(50, 64)).astype(np.float32))
+        got = quant.quantize_blockwise_pallas(x, formats.NVFP4,
+                                              tile_rows=tile_rows)
+        want = ref.quantize_blockwise_ref(x, formats.NVFP4)
+        assert_quant_equal(got, want, formats.NVFP4)
+
+    @given(st.integers(1, 65), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_any_arbitrary_shapes(self, rows, nb, seed):
+        rng = np.random.default_rng(seed)
+        cols = nb * 13  # deliberately not a block multiple
+        x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+        got = quant.quantize_any(x, formats.NVFP4, axis=-1)
+        want = ref.quantize_blockwise_ref(x, formats.NVFP4)
+        assert_quant_equal(got, want, formats.NVFP4)
+
+    @pytest.mark.parametrize("axis", [0, 1, -1])
+    def test_axis_handling_3d(self, axis):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(4, 32, 16)).astype(np.float32))
+        got = quant.quantize_any(x, formats.MXFP4, axis=axis)
+        want = ref.quantize_blockwise_ref(x, formats.MXFP4, axis=axis)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_jnp_fallback_identical(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(33, 40)).astype(np.float32))
+        a = quant.quantize_any(x, formats.NVFP4, use_pallas=True)
+        b = quant.quantize_any(x, formats.NVFP4, use_pallas=False)
+        assert_quant_equal(a, b, formats.NVFP4)
+
+    def test_jittable(self):
+        x = jnp.ones((8, 32), jnp.float32)
+        f = jax.jit(lambda a: quant.quantize_blockwise_pallas(a, formats.MXFP4))
+        np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+
+
+class TestQgemmKernel:
+    @pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+    def test_matches_ref(self, fmt):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32) * 0.1)
+        got = qgemm.qgemm_pallas(x, w, fmt, tm=64, tn=64, tk=128)
+        want = ref.qgemm_ref(x, w, fmt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_k_tiling_invariance(self):
+        # Scale blocks must align within K tiles: different tk, same result.
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+        a = qgemm.qgemm_pallas(x, w, formats.NVFP4, tm=32, tn=32, tk=32)
+        b = qgemm.qgemm_pallas(x, w, formats.NVFP4, tm=32, tn=32, tk=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_rejects_misaligned_tiles(self):
+        x = jnp.ones((30, 128), jnp.float32)
+        w = jnp.ones((128, 32), jnp.float32)
+        with pytest.raises(AssertionError):
+            qgemm.qgemm_pallas(x, w, formats.NVFP4, tm=16, tn=16, tk=128)
+
+
+class TestRegKernel:
+    @given(st.integers(1, 3000), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        got = float(reg.dual_range_pallas(w, 1e-6, 1e-12, 1e-4, tile=256))
+        want = float(ref.dual_range_ref(w, 1e-6, 1e-12, 1e-4))
+        assert got == pytest.approx(want, rel=1e-4)
+
+    def test_padding_correction_exact_for_zeros(self):
+        # all-zero input: R = lam2/eps * n exactly.
+        n, lam2, eps = 100, 1e-12, 1e-4
+        w = jnp.zeros((n,), jnp.float32)
+        got = float(reg.dual_range_pallas(w, 0.0, lam2, eps, tile=64))
+        assert got == pytest.approx(n * lam2 / eps, rel=1e-6)

@@ -1,0 +1,141 @@
+"""Graph-side linalg (LAPACK-free) vs numpy oracles, and the spectral
+gradient decomposition of Eq. 6 + the adaptive rescale of §3.2."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import linalg, spectral
+
+
+def anisotropic(rng, m, n, power=1.5, scale=10.0):
+    r = min(m, n)
+    s = scale * (np.arange(1, r + 1) ** -power)
+    q1, _ = np.linalg.qr(rng.normal(size=(m, r)))
+    q2, _ = np.linalg.qr(rng.normal(size=(n, r)))
+    return (q1 * s) @ q2.T
+
+
+class TestChol:
+    @given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_numpy(self, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(k + 4, k))
+        g = a.T @ a + 0.1 * np.eye(k)
+        l = np.asarray(linalg.chol(jnp.asarray(g, jnp.float32), ridge=0.0))
+        rec = l @ l.T
+        np.testing.assert_allclose(rec, g, rtol=2e-4, atol=2e-4)
+
+    def test_lower_triangular(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(10, 6))
+        g = jnp.asarray(a.T @ a, jnp.float32)
+        l = np.asarray(linalg.chol(g))
+        assert np.allclose(np.triu(l, 1), 0.0)
+
+
+class TestTriSolve:
+    @given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_solves(self, k, n, seed):
+        rng = np.random.default_rng(seed)
+        l = np.tril(rng.normal(size=(k, k))) + 3 * np.eye(k)
+        b = rng.normal(size=(k, n))
+        x = np.asarray(linalg.tri_solve_lower(
+            jnp.asarray(l, jnp.float32), jnp.asarray(b, jnp.float32)))
+        np.testing.assert_allclose(l @ x, b, rtol=1e-3, atol=1e-3)
+
+
+class TestCholQR:
+    @given(st.integers(8, 100), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_orthonormal_and_same_span(self, m, k, seed):
+        k = min(k, m)
+        rng = np.random.default_rng(seed)
+        y = rng.normal(size=(m, k)).astype(np.float32)
+        q = np.asarray(linalg.cholqr2(jnp.asarray(y)))
+        np.testing.assert_allclose(q.T @ q, np.eye(k), atol=5e-5)
+        # span check: projection of y onto q reproduces y
+        np.testing.assert_allclose(q @ (q.T @ y), y, rtol=2e-3, atol=2e-3)
+
+
+class TestRandomizedRange:
+    def test_captures_dominant_subspace(self):
+        rng = np.random.default_rng(0)
+        a = anisotropic(rng, 200, 80).astype(np.float32)
+        omega = rng.normal(size=(80, 8)).astype(np.float32)
+        q = np.asarray(linalg.randomized_range(
+            jnp.asarray(a), jnp.asarray(omega), power_iters=1))
+        u, s, _ = np.linalg.svd(a, full_matrices=False)
+        # energy of top-4 true directions captured by the basis
+        cap = np.linalg.norm(q.T @ u[:, :4], axis=0)
+        assert np.all(cap > 0.98), cap
+
+
+class TestGradDecomp:
+    def test_exact_for_low_rank(self):
+        rng = np.random.default_rng(1)
+        d = anisotropic(rng, 128, 64, power=3.0).astype(np.float32)
+        d8 = None
+        u, s, vt = np.linalg.svd(d, full_matrices=False)
+        d8 = (u[:, :8] * s[:8]) @ vt[:8]  # exactly rank 8
+        omega = rng.normal(size=(64, 8)).astype(np.float32)
+        dec = spectral.decompose_gradient(
+            jnp.asarray(d8), jnp.asarray(omega), adaptive=False)
+        rec = np.asarray(spectral.reconstruct(dec, adapted=False))
+        # exact up to the f32 orthogonality of the (unrolled) rotation
+        rel = np.linalg.norm(rec - d8) / np.linalg.norm(d8)
+        assert rel < 1e-4, rel
+        # residual ~ 0 and t tracks true sigmas (orthogonal iteration is
+        # approximate for clustered spectra; this one decays as i^-3)
+        assert float(jnp.abs(dec.resid).max()) < 1e-3
+        np.testing.assert_allclose(np.sort(np.asarray(dec.t))[::-1], s[:8],
+                                   rtol=2e-2)
+
+    def test_residual_orthogonal_to_basis(self):
+        rng = np.random.default_rng(2)
+        d = rng.normal(size=(96, 48)).astype(np.float32)
+        omega = rng.normal(size=(48, 6)).astype(np.float32)
+        dec = spectral.decompose_gradient(jnp.asarray(d), jnp.asarray(omega))
+        pr = np.asarray(dec.p).T @ np.asarray(dec.resid)
+        assert np.abs(pr).max() < 1e-4
+
+    def test_reconstruction_always_exact_without_adaptive(self):
+        # P (Pᵀ D) + (D − P Pᵀ D) == D identically.
+        rng = np.random.default_rng(3)
+        d = rng.normal(size=(64, 32)).astype(np.float32)
+        omega = rng.normal(size=(32, 4)).astype(np.float32)
+        dec = spectral.decompose_gradient(jnp.asarray(d), jnp.asarray(omega),
+                                          adaptive=False)
+        rec = np.asarray(spectral.reconstruct(dec, adapted=False))
+        np.testing.assert_allclose(rec, d, rtol=1e-5, atol=1e-5)
+
+    def test_factor_ranges_narrow(self):
+        # Fig. 5 claim on the gradient side: factors ≪ range of D.
+        rng = np.random.default_rng(4)
+        d = anisotropic(rng, 256, 64, scale=100.0).astype(np.float32)
+        omega = rng.normal(size=(64, 8)).astype(np.float32)
+        dec = spectral.decompose_gradient(jnp.asarray(d), jnp.asarray(omega))
+        assert float(jnp.abs(dec.p).max()) < 1.0
+        assert float(jnp.abs(dec.qt).max()) <= 1.0 + 1e-6
+        assert float(jnp.abs(jnp.asarray(d)).max()) > 5.0
+
+
+class TestAdaptiveRescale:
+    def test_top_fixed_small_doubled(self):
+        t = jnp.asarray([10.0, 5.0, 0.01])
+        r = np.asarray(spectral.adaptive_rescale(t))
+        assert r[0] == pytest.approx(10.0)
+        assert r[1] == pytest.approx(2 * 5 / (1 + 0.5))
+        assert r[2] == pytest.approx(0.02, rel=1e-3)
+
+    def test_monotone_and_bounded(self):
+        t = jnp.asarray(np.linspace(1e-4, 8.0, 100, dtype=np.float32))
+        r = np.asarray(spectral.adaptive_rescale(t))
+        assert np.all(np.diff(r) > 0)          # order preserved
+        assert np.all(r <= 2 * np.asarray(t) + 1e-9)  # ≤ 2σ
+        assert np.all(r + 1e-9 >= np.asarray(t))      # never shrinks

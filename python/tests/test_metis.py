@@ -1,0 +1,249 @@
+"""Metis quantized linear layers: Eq. 5 forward, Eqs. 7–11 backward.
+
+Key invariants:
+* fp32 mode == plain dense (forward and gradients, exactly);
+* decomposed layout with quantization disabled == dense with W = USVᵀ+WR;
+* backward formulas (quantization off, adaptive off) == autodiff grads;
+* quantized paths stay finite and within quantization-error bounds;
+* the dual-range penalty and its gradient behave per §3.3.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import initpack, metis
+from compile.metis import MODES, QuantConfig
+
+
+def dense_params(rng, m, n):
+    w = rng.normal(size=(m, n)).astype(np.float32) * 0.1
+    b = rng.normal(size=(n,)).astype(np.float32) * 0.01
+    return w, b
+
+
+def split_params(w, rho=0.5):
+    u, s, v, wr = initpack._split_weight(w, rho)
+    return u, s, v, wr
+
+
+class TestDirectLinear:
+    def test_fp32_equals_dense(self):
+        rng = np.random.default_rng(0)
+        w, b = dense_params(rng, 32, 48)
+        x = rng.normal(size=(64, 32)).astype(np.float32)
+        f = metis.make_direct_linear(MODES["fp32"])
+        om = jnp.zeros((1, 1), jnp.float32)
+        y = f(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), om)
+        np.testing.assert_allclose(np.asarray(y), x @ w + b, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_fp32_grads_equal_dense(self):
+        rng = np.random.default_rng(1)
+        w, b = dense_params(rng, 16, 24)
+        x = rng.normal(size=(32, 16)).astype(np.float32)
+        om = jnp.zeros((1, 1), jnp.float32)
+        f = metis.make_direct_linear(MODES["fp32"])
+
+        def loss_metis(x_, w_, b_):
+            return jnp.sum(f(x_, w_, b_, om) ** 2)
+
+        def loss_dense(x_, w_, b_):
+            return jnp.sum((x_ @ w_ + b_[None, :]) ** 2)
+
+        gm = jax.grad(loss_metis, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        gd = jax.grad(loss_dense, argnums=(0, 1, 2))(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        for a, c in zip(gm, gd):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_quantized_forward_error_bounded(self):
+        rng = np.random.default_rng(2)
+        w, b = dense_params(rng, 64, 64)
+        x = rng.normal(size=(32, 64)).astype(np.float32)
+        om = jnp.zeros((1, 1), jnp.float32)
+        for mode in ["nvfp4_direct", "mxfp4_direct", "fp8_direct"]:
+            f = metis.make_direct_linear(MODES[mode])
+            y = np.asarray(f(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), om))
+            dense = x @ w + b
+            rel = np.abs(y - dense).max() / np.abs(dense).max()
+            assert np.isfinite(y).all()
+            bound = 0.05 if mode == "fp8_direct" else 0.6
+            assert rel < bound, f"{mode}: rel fwd err {rel}"
+
+    def test_bwd_decomp_grads_close_to_dense(self):
+        # abl_no_fwd_decomp: direct W storage + gradient decomposition.
+        rng = np.random.default_rng(3)
+        cfg = QuantConfig(name="_t", fmt="none", bwd_decomp=True,
+                          adaptive_lr=False, j_cap=16, rho_bwd=1.0)
+        w, b = dense_params(rng, 24, 16)
+        x = rng.normal(size=(48, 24)).astype(np.float32)
+        om = rng.normal(size=(16, 16)).astype(np.float32)
+        f = metis.make_direct_linear(cfg)
+
+        def loss(x_, w_, b_):
+            return jnp.sum(f(x_, w_, b_, jnp.asarray(om)) ** 2)
+
+        gm = jax.grad(loss, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(w),
+                                            jnp.asarray(b))
+        def loss_dense(x_, w_, b_):
+            return jnp.sum((x_ @ w_ + b_[None, :]) ** 2)
+        gd = jax.grad(loss_dense, argnums=(0, 1))(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        # j = 16 = full rank of D's column space → decomposition is exact.
+        for a, c in zip(gm, gd):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-3, atol=1e-3)
+
+
+class TestDecompLinear:
+    def test_unquantized_decomposed_equals_dense(self):
+        rng = np.random.default_rng(4)
+        w, b = dense_params(rng, 40, 24)
+        u, s, v, wr = split_params(w, rho=0.5)
+        cfg = QuantConfig(name="_d", fmt="none", fwd_decomp=True)
+        f = metis.make_decomp_linear(cfg)
+        x = rng.normal(size=(16, 40)).astype(np.float32)
+        om = jnp.zeros((1, 1), jnp.float32)
+        y = f(jnp.asarray(x), jnp.asarray(u), jnp.asarray(s), jnp.asarray(v),
+              jnp.asarray(wr), jnp.asarray(b), om)
+        np.testing.assert_allclose(np.asarray(y), x @ w + b, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_backward_formulas_match_autodiff(self):
+        # With quantization and adaptive-LR off, Eqs. 7–11 must equal the
+        # true gradients of Y = X(USVᵀ + WR) + b.
+        rng = np.random.default_rng(5)
+        w, b = dense_params(rng, 20, 28)
+        u, s, v, wr = split_params(w, rho=0.3)
+        cfg = QuantConfig(name="_d2", fmt="none", fwd_decomp=True,
+                          bwd_decomp=False)
+        f = metis.make_decomp_linear(cfg)
+        x = rng.normal(size=(12, 20)).astype(np.float32)
+        om = jnp.zeros((1, 1), jnp.float32)
+        tgt = rng.normal(size=(12, 28)).astype(np.float32)
+
+        def loss(x_, u_, s_, v_, wr_, b_):
+            y = f(x_, u_, s_, v_, wr_, b_, om)
+            return jnp.sum((y - tgt) ** 2)
+
+        def loss_ref(x_, u_, s_, v_, wr_, b_):
+            y = x_ @ ((u_ * s_[None, :]) @ v_.T + wr_) + b_[None, :]
+            return jnp.sum((y - tgt) ** 2)
+
+        args = tuple(jnp.asarray(a) for a in (x, u, s, v, wr, b))
+        gm = jax.grad(loss, argnums=tuple(range(6)))(*args)
+        gr = jax.grad(loss_ref, argnums=tuple(range(6)))(*args)
+        names = ["x", "u", "s", "v", "wr", "b"]
+        for nm, a, c in zip(names, gm, gr):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(c), rtol=1e-3, atol=1e-3,
+                err_msg=f"grad wrt {nm}")
+
+    def test_backward_with_decomposition_close_to_autodiff(self):
+        # Full-rank sketch (j = n) keeps Eq. 6 exact; grads must match.
+        rng = np.random.default_rng(6)
+        w, b = dense_params(rng, 16, 12)
+        u, s, v, wr = split_params(w, rho=0.5)
+        cfg = QuantConfig(name="_d3", fmt="none", fwd_decomp=True,
+                          bwd_decomp=True, adaptive_lr=False,
+                          rho_bwd=1.0, j_cap=12)
+        f = metis.make_decomp_linear(cfg)
+        x = rng.normal(size=(32, 16)).astype(np.float32)
+        om = rng.normal(size=(12, 12)).astype(np.float32)
+        tgt = rng.normal(size=(32, 12)).astype(np.float32)
+
+        def loss(*args):
+            y = f(*args[:5], args[5], jnp.asarray(om))
+            return jnp.sum((y - tgt) ** 2)
+
+        def loss_ref(x_, u_, s_, v_, wr_, b_):
+            y = x_ @ ((u_ * s_[None, :]) @ v_.T + wr_) + b_[None, :]
+            return jnp.sum((y - tgt) ** 2)
+
+        args = tuple(jnp.asarray(a) for a in (x, u, s, v, wr, b))
+        gm = jax.grad(loss, argnums=tuple(range(6)))(*args)
+        gr = jax.grad(loss_ref, argnums=tuple(range(6)))(*args)
+        for a, c in zip(gm, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_adaptive_lr_amplifies_tail_directions(self):
+        # With adaptive on, the gradient component along the *second*
+        # singular direction of D grows relative to the first.
+        rng = np.random.default_rng(7)
+        w, b = dense_params(rng, 16, 16)
+        u, s, v, wr = split_params(w, rho=0.5)
+        x = rng.normal(size=(64, 16)).astype(np.float32)
+        om = rng.normal(size=(16, 8)).astype(np.float32)
+        # Build a target that creates an anisotropic D.
+        tgt = np.outer(rng.normal(size=64), rng.normal(size=16)).astype(
+            np.float32) * 5.0 + rng.normal(size=(64, 16)).astype(np.float32)
+
+        grads = {}
+        for adaptive in (False, True):
+            cfg = QuantConfig(name=f"_a{adaptive}", fmt="none",
+                              fwd_decomp=True, bwd_decomp=True,
+                              adaptive_lr=adaptive, rho_bwd=0.5, j_cap=8)
+            f = metis.make_decomp_linear(cfg)
+
+            def loss(wr_):
+                y = f(jnp.asarray(x), jnp.asarray(u), jnp.asarray(s),
+                      jnp.asarray(v), wr_, jnp.asarray(b), jnp.asarray(om))
+                return jnp.sum((y - tgt) ** 2)
+
+            grads[adaptive] = np.asarray(jax.grad(loss)(jnp.asarray(wr)))
+        # adaptive rescale only *amplifies* (t̃ ≥ t): total norm grows.
+        assert np.linalg.norm(grads[True]) >= np.linalg.norm(grads[False])
+        assert not np.allclose(grads[True], grads[False])
+
+    def test_quantized_modes_finite(self):
+        rng = np.random.default_rng(8)
+        w, b = dense_params(rng, 32, 32)
+        for mode in ["nvfp4_metis", "mxfp4_metis", "fp8_metis"]:
+            cfg = MODES[mode]
+            u, s, v, wr = split_params(w, rho=cfg.rho_fwd)
+            f = metis.make_decomp_linear(cfg)
+            x = rng.normal(size=(64, 32)).astype(np.float32)
+            j = cfg.sketch_rank(64, 32)
+            om = rng.normal(size=(32, j)).astype(np.float32)
+
+            def loss(*args):
+                y = f(*args, jnp.asarray(b), jnp.asarray(om))
+                return jnp.sum(y ** 2)
+
+            args = tuple(jnp.asarray(a) for a in (x, u, s, v, wr))
+            val, grads = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4))(*args)
+            assert np.isfinite(float(val))
+            for g in grads:
+                assert np.isfinite(np.asarray(g)).all()
+
+
+class TestDualRange:
+    def test_penalty_value(self):
+        cfg = QuantConfig(name="_r", dual_range=True, lam1=0.5, lam2=0.25,
+                          eps=1.0)
+        w = jnp.asarray([1.0, 2.0])
+        got = float(metis.dual_range_penalty(cfg, [w]))
+        want = 0.5 * 5.0 + 0.25 * (1 / 2 + 1 / 5)
+        assert got == pytest.approx(want, rel=1e-6)
+
+    def test_gradient_pushes_away_from_zero_and_infinity(self):
+        cfg = QuantConfig(name="_r2", dual_range=True, lam1=1e-2, lam2=1e-2,
+                          eps=1e-2)
+        g = jax.grad(lambda w: metis.dual_range_penalty(cfg, [w]))
+        g_small = float(g(jnp.asarray([0.01]))[0])
+        g_large = float(g(jnp.asarray([10.0]))[0])
+        assert g_small < 0  # near zero: pushed to grow in magnitude
+        assert g_large > 0  # large: pulled back
+
+
+class TestSketchRank:
+    def test_caps_and_fraction(self):
+        cfg = QuantConfig(name="_k", rho_bwd=0.1, j_cap=16)
+        assert cfg.sketch_rank(1024, 64) == 7   # ceil(0.1 * 64)
+        assert cfg.sketch_rank(1024, 2048) == 16  # capped
+        assert cfg.sketch_rank(4, 4) == 1

@@ -1,0 +1,181 @@
+"""Model-level tests: shapes, loss sanity, determinism, optimizer
+behaviour, flatten-order contract with the manifest, and short
+in-python training runs per quantization mode (shape of the paper's
+headline result at nano scale)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import initpack, metis, model
+from compile.metis import MODES
+from compile.model import MODEL_CONFIGS, OptConfig
+
+
+MC = MODEL_CONFIGS["nano"]
+OC = OptConfig(lr=1e-2, warmup=5, total_steps=50)
+
+
+def make_state(mode, seed=0):
+    cfg = MODES[mode]
+    p = jax.tree_util.tree_map(jnp.asarray, initpack.init_params(cfg, MC, seed))
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    return cfg, p, m, v
+
+
+def batch(rng, b=4):
+    seq = (rng.integers(0, MC.vocab, (b, 1))
+           + 3 * np.arange(MC.seq_len + 1)[None, :]) % MC.vocab
+    return jnp.asarray(seq, jnp.int32)
+
+
+class TestForward:
+    def test_logits_shape_and_finiteness(self):
+        cfg, p, _, _ = make_state("fp32")
+        toks = batch(np.random.default_rng(0))
+        om = model.make_omegas(cfg, MC, 4, jax.random.PRNGKey(0))
+        logits, h = model.forward(cfg, MC, p, toks[:, :-1], om)
+        assert logits.shape == (4, MC.seq_len, MC.vocab)
+        assert h.shape == (4, MC.seq_len, MC.d_model)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_initial_loss_near_uniform(self):
+        cfg, p, _, _ = make_state("fp32")
+        toks = batch(np.random.default_rng(1))
+        om = model.make_omegas(cfg, MC, 4, jax.random.PRNGKey(0))
+        loss = float(model.regularized_loss(cfg, MC, p, toks, om))
+        assert abs(loss - np.log(MC.vocab)) < 0.3
+
+    def test_causality(self):
+        # Changing a future token must not change past logits.
+        cfg, p, _, _ = make_state("fp32")
+        rng = np.random.default_rng(2)
+        toks = np.asarray(batch(rng))
+        om = model.make_omegas(cfg, MC, 4, jax.random.PRNGKey(0))
+        l1, _ = model.forward(cfg, MC, p, jnp.asarray(toks[:, :-1]), om)
+        toks2 = toks.copy()
+        toks2[:, -2] = (toks2[:, -2] + 7) % MC.vocab  # last input position
+        l2, _ = model.forward(cfg, MC, p, jnp.asarray(toks2[:, :-1]), om)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                                   np.asarray(l2[:, :-1]), atol=1e-6)
+        assert not np.allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]))
+
+    def test_features_shape(self):
+        cfg, p, _, _ = make_state("nvfp4_metis")
+        toks = batch(np.random.default_rng(3))[:, :-1]
+        feats = model.features(cfg, MC, p, toks)
+        assert feats.shape == (4, MC.d_model)
+
+
+class TestTrainStep:
+    def test_deterministic(self):
+        cfg, p, m, v = make_state("nvfp4_metis")
+        toks = batch(np.random.default_rng(4))
+        out1 = model.train_step(cfg, MC, OC, p, m, v, toks,
+                                jnp.int32(3), jnp.int32(0))
+        out2 = model.train_step(cfg, MC, OC, p, m, v, toks,
+                                jnp.int32(3), jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(out1[3]), np.asarray(out2[3]))
+        for a, b in zip(jax.tree_util.tree_leaves(out1[0]),
+                        jax.tree_util.tree_leaves(out2[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_changes_sketch(self):
+        cfg, p, m, v = make_state("nvfp4_metis")
+        toks = batch(np.random.default_rng(5))
+        # step must be past warmup: at lr == 0 all updates are no-ops.
+        o1 = model.train_step(cfg, MC, OC, p, m, v, toks, jnp.int32(10),
+                              jnp.int32(0))
+        o2 = model.train_step(cfg, MC, OC, p, m, v, toks, jnp.int32(10),
+                              jnp.int32(1))
+        # loss identical (fwd has no RNG); updates differ (bwd sketch).
+        assert float(o1[3]) == float(o2[3])
+        diffs = [
+            float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree_util.tree_leaves(o1[0]),
+                            jax.tree_util.tree_leaves(o2[0]))
+        ]
+        assert max(diffs) > 0
+
+    def test_grad_clipping_reported(self):
+        cfg, p, m, v = make_state("fp32")
+        toks = batch(np.random.default_rng(6))
+        *_, gnorm = model.train_step(cfg, MC, OC, p, m, v, toks,
+                                     jnp.int32(0), jnp.int32(0))
+        assert float(gnorm) > 0
+
+    def test_lr_schedule(self):
+        oc = OptConfig(lr=1.0, warmup=10, total_steps=110)
+        assert float(model.lr_at(oc, jnp.int32(0))) == 0.0
+        assert float(model.lr_at(oc, jnp.int32(5))) == pytest.approx(0.5)
+        assert float(model.lr_at(oc, jnp.int32(10))) == pytest.approx(1.0)
+        # cosine ends near zero
+        assert float(model.lr_at(oc, jnp.int32(110))) < 1e-6
+
+    def test_weight_decay_only_on_matrices(self):
+        assert model._is_decayed((jax.tree_util.DictKey("w"),))
+        assert model._is_decayed((jax.tree_util.DictKey("wte"),))
+        assert not model._is_decayed((jax.tree_util.DictKey("b"),))
+        assert not model._is_decayed((jax.tree_util.DictKey("s"),))
+        assert not model._is_decayed((jax.tree_util.DictKey("ln1_g"),))
+
+
+@pytest.mark.slow
+class TestTrainingShape:
+    """The paper's headline orderings, reproduced in-python at nano scale
+    (30 steps).  Exact values vary; orderings are the assertion."""
+
+    def run(self, mode, steps=30, seed=1):
+        cfg, p, m, v = make_state(mode)
+        step_fn = jax.jit(
+            lambda p, m, v, t, s: model.train_step(
+                cfg, MC, OC, p, m, v, t, s, jnp.int32(0)))
+        rng = np.random.default_rng(seed)
+        losses = []
+        for s in range(steps):
+            p, m, v, loss, _ = step_fn(p, m, v, batch(rng), jnp.int32(s))
+            losses.append(float(loss))
+        return losses
+
+    def test_fp32_learns(self):
+        losses = self.run("fp32")
+        assert losses[-1] < losses[0] * 0.5
+
+    def test_metis_fp4_tracks_fp32(self):
+        fp32 = self.run("fp32")
+        metis_fp4 = self.run("nvfp4_metis")
+        direct_fp4 = self.run("nvfp4_direct")
+        # the Fig. 7 ordering: metis ≈ fp32 < direct
+        assert metis_fp4[-1] < direct_fp4[-1]
+        assert abs(metis_fp4[-1] - fp32[-1]) < 0.35
+
+    def test_fp8_close_to_fp32(self):
+        fp32 = self.run("fp32")
+        fp8 = self.run("fp8_metis")
+        assert abs(fp8[-1] - fp32[-1]) < 0.3
+
+
+class TestFlattenContract:
+    """initpack.flatten_named order must equal jax tree_flatten order —
+    the manifest contract the Rust engine relies on."""
+
+    @pytest.mark.parametrize("mode", ["fp32", "nvfp4_metis"])
+    def test_orders_align(self, mode):
+        cfg = MODES[mode]
+        p = initpack.init_params(cfg, MC, seed=0)
+        named = initpack.flatten_named(p)
+        jleaves = jax.tree_util.tree_leaves(p)
+        assert len(named) == len(jleaves)
+        for (name, arr), leaf in zip(named, jleaves):
+            assert arr.shape == np.asarray(leaf).shape, name
+            np.testing.assert_array_equal(arr, np.asarray(leaf))
+
+    def test_zeros_like_matches_structure(self):
+        cfg = MODES["fp32"]
+        p = initpack.init_params(cfg, MC, seed=0)
+        z = initpack.zeros_like_tree(p)
+        n1 = [n for n, _ in initpack.flatten_named(p)]
+        n2 = [n for n, _ in initpack.flatten_named(z)]
+        assert n1 == n2

@@ -1,0 +1,75 @@
+//! Figure 1: singular-value spectra of FFN weights are sharply
+//! concentrated; the elbow fraction k*/r is a few percent and stable
+//! across model scale.
+//!
+//! Paper: Qwen2.5-7B/Qwen3-32B/Qwen2.5-72B/DeepSeek-671B → f = 1.9%,
+//! 2.2%, 2.1%, 2.4%.  Here (DESIGN.md §4): our trained checkpoints at
+//! three scales + planted-spectrum validation of the elbow estimator.
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::linalg::{householder_qr, jacobi_svd};
+use metis::runtime::Engine;
+use metis::spectral;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Fig. 1 — anisotropy of FFN spectra (paper: elbow ~1.9–2.4%, stable in scale)",
+        &["matrix", "rank", "elbow k*", "elbow frac", "top-10% energy", "PR/rank"],
+    );
+
+    // (a) Estimator validation on planted power-law spectra (the paper's
+    // observed shape) at three scales.
+    let mut rng = Rng::new(0);
+    for n in [64usize, 128, 256] {
+        let spec: Vec<f64> = (1..=n).map(|i| 10.0 * (i as f64).powf(-1.4)).collect();
+        let q1 = householder_qr(&Matrix::gaussian(&mut rng, n * 4, n, 1.0)).q;
+        let q2 = householder_qr(&Matrix::gaussian(&mut rng, n, n, 1.0)).q;
+        let w = q1.scale_cols(&spec).matmul(&q2.transpose());
+        let s = jacobi_svd(&w).s;
+        let (k, f) = spectral::elbow_fraction(&s);
+        table.row(vec![
+            format!("planted i^-1.4 ({}x{})", n * 4, n),
+            n.to_string(),
+            k.to_string(),
+            format!("{:.1}%", 100.0 * f),
+            format!("{:.1}%", 100.0 * spectral::energy_fraction(&s, n / 10)),
+            fmt_f(spectral::participation_ratio(&s) / n as f64, 3),
+        ]);
+    }
+
+    // (b) Trained checkpoints (final FFN wfc, as in the paper) at our
+    // scales, via the run store (reused by fig6/7 if already trained).
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    for model in ["nano", "tiny", "small"] {
+        let steps = canonical_steps(model);
+        let rec = store.get_or_run(&engine, &bench_config(model, "fp32", steps), false)?;
+        let info = &engine.manifest.models[model];
+        let last = info.n_layer - 1;
+        let arr = metis::util::npy::read_npy(
+            std::path::Path::new(&rec.ckpt_dir).join("layers.wfc.w.npy"),
+        )?;
+        let (d, h) = (arr.shape[1], arr.shape[2]);
+        let data = arr.to_f32();
+        let w = Matrix::from_f32(d, h, &data[last * d * h..(last + 1) * d * h]);
+        let s = jacobi_svd(&w).s;
+        let (k, f) = spectral::elbow_fraction(&s);
+        table.row(vec![
+            format!("{model} wfc[-1] ({}k params, {} steps)", info.params / 1000, steps),
+            s.len().to_string(),
+            k.to_string(),
+            format!("{:.1}%", 100.0 * f),
+            format!("{:.1}%", 100.0 * spectral::energy_fraction(&s, s.len() / 10)),
+            fmt_f(spectral::participation_ratio(&s) / s.len() as f64, 3),
+        ]);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("fig1.csv").to_str().unwrap())?;
+    println!("\npaper shape check: elbow fractions stay single-digit-% and");
+    println!("roughly stable as the matrix scale grows.");
+    Ok(())
+}

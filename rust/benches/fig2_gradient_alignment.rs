@@ -1,0 +1,113 @@
+//! Figure 2: gradient singular alignment |aᵢ| = |uᵢᵀ G vᵢ| declines
+//! monotonically with σᵢ and the pattern persists across training —
+//! gradient energy concentrates on dominant singular directions.
+//!
+//! Measured on the attention key projection and first FFN linear of the
+//! tiny model at the checkpoints the fp32 bench run left behind.
+
+use metis::bench::{artifacts_dir, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::linalg::jacobi_svd;
+use metis::runtime::{Engine, HostValue};
+use metis::spectral::gradient_alignment;
+use metis::tensor::Matrix;
+
+fn mat(hv: &HostValue) -> Matrix {
+    let s = hv.shape();
+    Matrix::from_f32(s[0], s[1], hv.f32s().unwrap())
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let model = "tiny";
+    let steps = canonical_steps(model);
+    let rec = store.get_or_run(&engine, &bench_config(model, "fp32", steps), false)?;
+
+    // Checkpoints dumped every steps/4 by bench_config + the final one.
+    let run_dir = std::path::Path::new(&rec.ckpt_dir).parent().unwrap().to_path_buf();
+    let mut ckpts: Vec<std::path::PathBuf> = std::fs::read_dir(&run_dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("ckpt_"))
+        .collect();
+    ckpts.sort();
+
+    let analysis = engine.manifest.name_for("analysis", model, "fp32", 8);
+    let pset = engine
+        .manifest
+        .param_set(&format!("{model}__fp32"))?
+        .clone();
+    let seq = engine.manifest.models[model].seq_len;
+    let tokens = {
+        use metis::data::corpus::{Corpus, CorpusConfig};
+        use metis::data::BatchIterator;
+        let c = Corpus::new(CorpusConfig::new(engine.manifest.models[model].vocab, 7));
+        BatchIterator::new(&c, 8, seq, 1).next_batch()
+    };
+
+    let mut table = Table::new(
+        "Fig. 2 — |aᵢ| = |uᵢᵀ G vᵢ| vs σ-rank over training (paper: monotone decline)",
+        &["ckpt", "matrix", "|a| @r0", "|a| @r4", "|a| @r16", "|a| @r-1",
+          "top/bottom-q ratio", "monotone frac"],
+    );
+
+    for ckpt in &ckpts {
+        // load params from the checkpoint in manifest order
+        let params: Vec<HostValue> = pset
+            .names
+            .iter()
+            .map(|n| {
+                Ok(HostValue::from_npy(&metis::util::npy::read_npy(
+                    ckpt.join(format!("{n}.npy")),
+                )?))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let tok_hv = HostValue::I32 {
+            shape: vec![8, seq + 1],
+            data: tokens.clone(),
+        };
+        let mut inputs: Vec<&HostValue> = params.iter().collect();
+        inputs.push(&tok_hv);
+        let outs = engine.run(&analysis, &inputs)?;
+        // outputs: w_fc, g_fc, x_fc, w_key, g_key
+        for (wname, wi, gi) in [("wfc", 0usize, 1usize), ("wkey", 3, 4)] {
+            let w = mat(&outs[wi]);
+            let g = mat(&outs[gi]);
+            let svd = jacobi_svd(&w);
+            let a: Vec<f64> = gradient_alignment(&svd, &g)
+                .iter()
+                .map(|x| x.abs())
+                .collect();
+            let r = a.len();
+            let q = r / 4;
+            let top: f64 = a[..q].iter().sum::<f64>() / q as f64;
+            let bot: f64 = a[3 * q..].iter().sum::<f64>() / (r - 3 * q) as f64;
+            // fraction of adjacent (smoothed) pairs that decline
+            let smooth: Vec<f64> = a
+                .chunks(4)
+                .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+                .collect();
+            let mono = smooth
+                .windows(2)
+                .filter(|w| w[0] >= w[1])
+                .count() as f64
+                / (smooth.len() - 1) as f64;
+            table.row(vec![
+                ckpt.file_name().unwrap().to_string_lossy().into_owned(),
+                wname.to_string(),
+                format!("{:.2e}", a[0]),
+                format!("{:.2e}", a[4.min(r - 1)]),
+                format!("{:.2e}", a[16.min(r - 1)]),
+                format!("{:.2e}", a[r - 1]),
+                format!("{:.1}x", top / bot.max(1e-18)),
+                format!("{:.0}%", 100.0 * mono),
+            ]);
+        }
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("fig2.csv").to_str().unwrap())?;
+    println!("\npaper shape check: |a| declines with σ-rank (ratio ≫ 1, high");
+    println!("monotone fraction) at every checkpoint.");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Figure 3: weight / activation / gradient matrices of a trained model
+//! show anisotropic spectra (top) and heavy-tailed, wide numerical
+//! distributions (bottom, log-log), with rank-1 components σᵢuᵢvᵢᵀ
+//! explaining the high-magnitude tails.
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::linalg::jacobi_svd;
+use metis::runtime::{Engine, HostValue};
+use metis::spectral;
+use metis::tensor::hist::{kurtosis, Histogram};
+use metis::tensor::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let model = "small";
+    let rec = store.get_or_run(&engine, &bench_config(model, "fp32", canonical_steps(model)), false)?;
+
+    // Analysis tensors at the final checkpoint.
+    let pset = engine.manifest.param_set(&format!("{model}__fp32"))?.clone();
+    let params: Vec<HostValue> = pset
+        .names
+        .iter()
+        .map(|n| {
+            Ok(HostValue::from_npy(&metis::util::npy::read_npy(
+                std::path::Path::new(&rec.ckpt_dir).join(format!("{n}.npy")),
+            )?))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let seq = engine.manifest.models[model].seq_len;
+    let tokens = {
+        use metis::data::corpus::{Corpus, CorpusConfig};
+        use metis::data::BatchIterator;
+        let c = Corpus::new(CorpusConfig::new(engine.manifest.models[model].vocab, 7));
+        BatchIterator::new(&c, 8, seq, 1).next_batch()
+    };
+    let tok_hv = HostValue::I32 {
+        shape: vec![8, seq + 1],
+        data: tokens,
+    };
+    let mut inputs: Vec<&HostValue> = params.iter().collect();
+    inputs.push(&tok_hv);
+    let analysis = engine.manifest.name_for("analysis", model, "fp32", 8);
+    let outs = engine.run(&analysis, &inputs)?;
+
+    let mut table = Table::new(
+        "Fig. 3 — spectra (top row) and value distributions (bottom row)",
+        &["matrix", "σ₁", "elbow frac", "kurtosis", "range/2σ(gauss ref=~4)",
+          "tail mass |v|>4·std"],
+    );
+    let mut comp_table = Table::new(
+        "Fig. 3 overlay — rank-1 component σᵢ/√(mn) magnitude scale",
+        &["matrix", "i=0", "i=4", "i=16", "i=64"],
+    );
+
+    for (name, idx) in [("W (wfc)", 0usize), ("X (acts)", 2), ("G (grad)", 1)] {
+        let hv = &outs[idx];
+        let s = hv.shape();
+        let m = Matrix::from_f32(s[0], s[1], hv.f32s()?);
+        let svd = jacobi_svd(&m);
+        let (_, ef) = spectral::elbow_fraction(&svd.s);
+        let std = m.variance().sqrt();
+        let tail = m
+            .data
+            .iter()
+            .filter(|v| v.abs() > 4.0 * std)
+            .count() as f64
+            / m.data.len() as f64;
+        table.row(vec![
+            name.to_string(),
+            fmt_f(svd.s[0], 4),
+            format!("{:.1}%", 100.0 * ef),
+            fmt_f(kurtosis(&m.data), 1),
+            fmt_f(m.value_range() / (2.0 * std), 1),
+            format!("{:.3}%", 100.0 * tail),
+        ]);
+        let mn = (m.rows * m.cols) as f64;
+        let comp = |i: usize| {
+            if i < svd.s.len() {
+                format!("{:.2e}", svd.s[i] / mn.sqrt())
+            } else {
+                "—".into()
+            }
+        };
+        comp_table.row(vec![name.to_string(), comp(0), comp(4), comp(16), comp(64)]);
+
+        // log-magnitude histogram (printed compactly: decade bins)
+        let h = Histogram::log_magnitude(&m.data, -6.0, 1.0, 7);
+        print!("{name:<9} |v| decades 1e-6..1e1:");
+        for c in &h.counts {
+            print!(" {:>6}", c);
+        }
+        println!("  (n={})", m.data.len());
+    }
+
+    table.print();
+    comp_table.print();
+    table.write_csv(reports_dir().join("fig3.csv").to_str().unwrap())?;
+    println!("\npaper shape check: all three matrices anisotropic (small elbow");
+    println!("fraction), with positive excess kurtosis (heavy tails) and the");
+    println!("dominant rank-1 components sitting in the high-value decades.");
+    Ok(())
+}

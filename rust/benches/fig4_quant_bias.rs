@@ -1,0 +1,95 @@
+//! Figure 4: bias of MXFP4 block quantization on a trained weight matrix.
+//! (A) small values clipped to zero; (B) relative σ error grows toward
+//! small singular values; (C) singular-vector directions of large σ are
+//! preserved better (|cos| near 1).
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::formats::{self, blockq::quant_stats, Format};
+use metis::linalg::jacobi_svd;
+use metis::spectral;
+use metis::tensor::hist::small_value_fraction;
+use metis::tensor::Matrix;
+use metis::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let rec = store.get_or_run(&engine, &bench_config("tiny", "fp32", canonical_steps("tiny")), false)?;
+    let arr = metis::util::npy::read_npy(
+        std::path::Path::new(&rec.ckpt_dir).join("layers.wfc.w.npy"),
+    )?;
+    let (l, d, h) = (arr.shape[0], arr.shape[1], arr.shape[2]);
+    let data = arr.to_f32();
+    // deepest layer's first FFN linear, as in the paper
+    let w = Matrix::from_f32(d, h, &data[(l - 1) * d * h..]);
+
+    let svd_w = jacobi_svd(&w);
+
+    let mut a_table = Table::new(
+        "Fig. 4A — value distribution before/after quantization",
+        &["format", "nonzero before", "nonzero after", "underflow",
+          "|v|<1e-3 before", "|v|<1e-3 after", "rel-F err"],
+    );
+    let mut b_table = Table::new(
+        "Fig. 4B — relative σ error by rank (small σ hit harder)",
+        &["format", "r0", "r4", "r16", "r-half", "r-tail", "tail/top ratio"],
+    );
+    let mut c_table = Table::new(
+        "Fig. 4C — |cos| of left singular vectors (large σ preserved)",
+        &["format", "r0", "r4", "r16", "r-half", "r-tail"],
+    );
+
+    for fmt in [Format::Mxfp4, Format::Nvfp4, Format::PaperFp4, Format::Fp8] {
+        let q = formats::quantize_matrix_along(fmt, &w, 0);
+        let st = quant_stats(&w, &q);
+        let nz_b = w.data.iter().filter(|v| **v != 0.0).count();
+        let nz_a = q.data.iter().filter(|v| **v != 0.0).count();
+        a_table.row(vec![
+            fmt.name().to_string(),
+            nz_b.to_string(),
+            nz_a.to_string(),
+            format!("{:.2}%", 100.0 * st.underflow_frac),
+            format!("{:.1}%", 100.0 * small_value_fraction(&w.data, 1e-3)),
+            format!("{:.1}%", 100.0 * small_value_fraction(&q.data, 1e-3)),
+            fmt_f(st.rel_frob_err, 4),
+        ]);
+
+        let svd_q = jacobi_svd(&q);
+        let errs = spectral::sigma_rel_errors(&svd_w.s, &svd_q.s);
+        let r = errs.len();
+        let top3: f64 = errs[..3].iter().sum::<f64>() / 3.0;
+        let tail: f64 = errs[r - r / 4..].iter().sum::<f64>() / (r / 4) as f64;
+        b_table.row(vec![
+            fmt.name().to_string(),
+            fmt_f(errs[0], 4),
+            fmt_f(errs[4.min(r - 1)], 4),
+            fmt_f(errs[16.min(r - 1)], 4),
+            fmt_f(errs[r / 2], 4),
+            fmt_f(errs[r - 2], 4),
+            format!("{:.1}x", tail / top3.max(1e-12)),
+        ]);
+
+        let cos = spectral::singular_vector_cosines(&svd_w.u, &svd_q.u);
+        c_table.row(vec![
+            fmt.name().to_string(),
+            fmt_f(cos[0], 3),
+            fmt_f(cos[4.min(r - 1)], 3),
+            fmt_f(cos[16.min(r - 1)], 3),
+            fmt_f(cos[r / 2], 3),
+            fmt_f(cos[r - 2], 3),
+        ]);
+    }
+
+    a_table.print();
+    b_table.print();
+    c_table.print();
+    a_table.write_csv(reports_dir().join("fig4a.csv").to_str().unwrap())?;
+    b_table.write_csv(reports_dir().join("fig4b.csv").to_str().unwrap())?;
+    c_table.write_csv(reports_dir().join("fig4c.csv").to_str().unwrap())?;
+    println!("\npaper shape check: FP4 formats clip a visible fraction of small");
+    println!("values to zero (A); σ relative error rises toward the tail (B);");
+    println!("leading singular directions keep |cos| ≈ 1 while tail directions");
+    println!("rotate away (C).  FP8 shows the same bias, much attenuated.");
+    Ok(())
+}

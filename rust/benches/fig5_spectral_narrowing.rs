@@ -1,0 +1,77 @@
+//! Figure 5: the wide distribution of a weight matrix is the
+//! superposition of rank-1 singular components; once σ is factored out
+//! as a scale, every component (and the U/V factors) lives in a narrow,
+//! Gaussian-like range ~two orders of magnitude tighter than the matrix.
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::linalg::{jacobi_svd, rsvd::spectral_split};
+use metis::runtime::Engine;
+use metis::tensor::hist::kurtosis;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let rec = store.get_or_run(&engine, &bench_config("tiny", "fp32", canonical_steps("tiny")), false)?;
+    let arr = metis::util::npy::read_npy(
+        std::path::Path::new(&rec.ckpt_dir).join("layers.wfc.w.npy"),
+    )?;
+    let (l, d, h) = (arr.shape[0], arr.shape[1], arr.shape[2]);
+    let data = arr.to_f32();
+    let w = Matrix::from_f32(d, h, &data[(l - 1) * d * h..]);
+    let svd = jacobi_svd(&w);
+    let mn_sqrt = ((d * h) as f64).sqrt();
+
+    // Left panel: rank-1 sub-distributions WITH σ kept inside.
+    let mut left = Table::new(
+        "Fig. 5 (left) — rank-1 components σᵢuᵢvᵢᵀ: width tracks σᵢ",
+        &["component i", "σᵢ", "entry scale σᵢ/√(mn)", "share of |W| range"],
+    );
+    let w_range = w.value_range();
+    for i in [0usize, 4, 16, 48] {
+        if i >= svd.s.len() {
+            continue;
+        }
+        left.row(vec![
+            i.to_string(),
+            fmt_f(svd.s[i], 4),
+            format!("{:.2e}", svd.s[i] / mn_sqrt),
+            format!("{:.1}%", 100.0 * (4.0 * svd.s[i] / mn_sqrt) / w_range),
+        ]);
+    }
+
+    // Right panel: σ extracted as scale — factors are all narrow + alike.
+    let mut rng = Rng::new(0);
+    let k = (d.min(h) as f64 * 0.5).ceil() as usize;
+    let split = spectral_split(&w, k, &mut rng);
+    let mut right = Table::new(
+        "Fig. 5 (right) — after extracting σ as scale: narrow Gaussian-like factors",
+        &["tensor", "range", "range/W-range", "std", "kurtosis"],
+    );
+    for (name, m) in [
+        ("W (original)", &w),
+        ("U_k", &split.svd.u),
+        ("V_k", &split.svd.v),
+        ("W_R (residual)", &split.residual),
+    ] {
+        right.row(vec![
+            name.to_string(),
+            format!("{:.3e}", m.value_range()),
+            fmt_f(m.value_range() / w_range, 2),
+            format!("{:.3e}", m.variance().sqrt()),
+            fmt_f(kurtosis(&m.data), 2),
+        ]);
+    }
+
+    left.print();
+    right.print();
+    left.write_csv(reports_dir().join("fig5_left.csv").to_str().unwrap())?;
+    right.write_csv(reports_dir().join("fig5_right.csv").to_str().unwrap())?;
+    println!("\npaper shape check: component entry scale decays with σᵢ (left);");
+    println!("U/V factor kurtosis ≈ 0 (Gaussian-like) and their ranges are much");
+    println!("narrower relative to W once σ is factored out (right).  Note the");
+    println!("scale-invariance: factor range is set by 1/√dim, not by σ.");
+    Ok(())
+}

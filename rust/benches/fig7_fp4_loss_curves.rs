@@ -1,0 +1,75 @@
+//! Figure 7: FP4 training-loss curves at two model sizes.  Paper:
+//! direct FP4 degrades (NVFP4) or destabilises/diverges (MXFP4), while
+//! Metis+FP4 closely tracks the FP32 trajectory at both scales.
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let modes = [
+        ("fp32", "FP32"),
+        ("nvfp4_direct", "NVFP4 (direct)"),
+        ("mxfp4_direct", "MXFP4 (direct)"),
+        ("nvfp4_metis", "Metis+NVFP4"),
+        ("mxfp4_metis", "Metis+MXFP4"),
+    ];
+
+    for (model, paper_name) in [("tiny", "130M stand-in"), ("small", "1.1B stand-in")] {
+        let steps = canonical_steps(model);
+        let sample: Vec<usize> = (0..=8).map(|i| (i * (steps - 1)) / 8).collect();
+        let mut headers: Vec<String> = vec!["mode".into()];
+        headers.extend(sample.iter().map(|s| format!("s{s}")));
+        headers.push("final".into());
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(
+            &format!("Fig. 7 ({model} = {paper_name}) — FP4 loss curves"),
+            &hdr_refs,
+        );
+        let mut finals = Vec::new();
+        for (mode, label) in modes {
+            let rec = store.get_or_run(&engine, &bench_config(model, mode, steps), false)?;
+            let mut row = vec![label.to_string()];
+            for &s in &sample {
+                let v = rec.losses.get(s).copied().unwrap_or(f32::NAN);
+                row.push(if v.is_finite() { fmt_f(v as f64, 3) } else { "NaN".into() });
+            }
+            row.push(if rec.diverged {
+                "DIVERGED".into()
+            } else {
+                fmt_f(rec.final_train_loss() as f64, 4)
+            });
+            finals.push((label, rec.diverged, rec.final_train_loss()));
+            table.row(row);
+        }
+        table.print();
+        table.write_csv(
+            reports_dir()
+                .join(format!("fig7_{model}.csv"))
+                .to_str()
+                .unwrap(),
+        )?;
+
+        let get = |l: &str| finals.iter().find(|(n, _, _)| *n == l).unwrap();
+        let fp32 = get("FP32").2;
+        println!("\n  shape check ({model}):");
+        println!(
+            "    Metis+NVFP4 − FP32 = {:+.4}  |  NVFP4-direct − FP32 = {:+.4}",
+            get("Metis+NVFP4").2 - fp32,
+            get("NVFP4 (direct)").2 - fp32
+        );
+        println!(
+            "    Metis+MXFP4 − FP32 = {:+.4}  |  MXFP4-direct: {}",
+            get("Metis+MXFP4").2 - fp32,
+            if get("MXFP4 (direct)").1 {
+                "DIVERGED (paper: fails to converge)".to_string()
+            } else {
+                format!("{:+.4} vs FP32 (paper: unstable/diverges)",
+                        get("MXFP4 (direct)").2 - fp32)
+            }
+        );
+    }
+    Ok(())
+}

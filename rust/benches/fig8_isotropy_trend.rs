@@ -1,0 +1,68 @@
+//! Figure 8 / Appendix A: in the Metis parameterization the magnitude
+//! growth is absorbed by S_k; the U/V factor matrices stay near-isotropic
+//! over training with far narrower value ranges than the reconstructed W.
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::runtime::Engine;
+use metis::spectral::isotropy_report;
+use metis::tensor::Matrix;
+
+fn layer_slice(arr: &metis::util::npy::NpyArray, li: usize) -> Matrix {
+    let (r, c) = (arr.shape[1], arr.shape[2]);
+    let data = arr.to_f32();
+    Matrix::from_f32(r, c, &data[li * r * c..(li + 1) * r * c])
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let model = "tiny";
+    let rec = store.get_or_run(&engine, &bench_config(model, "nvfp4_metis", canonical_steps(model)), false)?;
+    let run_dir = std::path::Path::new(&rec.ckpt_dir).parent().unwrap().to_path_buf();
+    let mut ckpts: Vec<std::path::PathBuf> = std::fs::read_dir(&run_dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.file_name().unwrap().to_string_lossy().starts_with("ckpt_"))
+        .collect();
+    ckpts.sort();
+
+    let mut table = Table::new(
+        "Fig. 8 — isotropy of U/V factors vs reconstructed W over training",
+        &["ckpt", "PR/rank U", "PR/rank V", "PR/rank W", "range U", "range V",
+          "range W", "σ-contrast U", "σ-contrast W"],
+    );
+
+    let last = engine.manifest.models[model].n_layer - 1;
+    for ckpt in &ckpts {
+        let u = layer_slice(&metis::util::npy::read_npy(ckpt.join("layers.wfc.u.npy"))?, last);
+        let v = layer_slice(&metis::util::npy::read_npy(ckpt.join("layers.wfc.v.npy"))?, last);
+        let wr = layer_slice(&metis::util::npy::read_npy(ckpt.join("layers.wfc.wr.npy"))?, last);
+        let s_arr = metis::util::npy::read_npy(ckpt.join("layers.wfc.s.npy"))?;
+        let k = s_arr.shape[1];
+        let s = &s_arr.to_f32()[last * k..(last + 1) * k];
+        // W = U diag(s) Vᵀ + W_R
+        let sv: Vec<f64> = s.iter().map(|&x| x as f64).collect();
+        let w = u.scale_cols(&sv).matmul(&v.transpose()).add(&wr);
+
+        let (ru, rv, rw) = (isotropy_report(&u), isotropy_report(&v), isotropy_report(&w));
+        table.row(vec![
+            ckpt.file_name().unwrap().to_string_lossy().into_owned(),
+            fmt_f(ru.participation_norm, 3),
+            fmt_f(rv.participation_norm, 3),
+            fmt_f(rw.participation_norm, 3),
+            fmt_f(ru.value_range, 3),
+            fmt_f(rv.value_range, 3),
+            fmt_f(rw.value_range, 3),
+            fmt_f(ru.sigma_contrast, 1),
+            fmt_f(rw.sigma_contrast, 1),
+        ]);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("fig8.csv").to_str().unwrap())?;
+    println!("\npaper shape check: the U/V factors keep a higher normalized");
+    println!("participation ratio (more isotropic), lower σ-contrast, and a");
+    println!("narrower value range than the reconstructed W at every checkpoint");
+    println!("— magnitude growth is absorbed by S_k.");
+    Ok(())
+}

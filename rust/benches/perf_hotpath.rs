@@ -1,0 +1,187 @@
+//! §Perf hot-path microbenchmarks — the numbers EXPERIMENTS.md §Perf
+//! tracks before/after each optimization:
+//!
+//! * L3: per-step cost breakdown of the coordinator hot loop —
+//!   batch generation, literal conversion, PJRT execute, output fetch;
+//! * L1: standalone Pallas kernel artifacts (quantize / qgemm) exec time;
+//! * substrates: Rust matmul GFLOP/s, Jacobi SVD, block quantizer
+//!   throughput (these bound the analysis benches, not the train path).
+
+use metis::bench::{artifacts_dir, fmt_f, time_fn, Table};
+use metis::coordinator::{ExperimentConfig, Trainer};
+use metis::data::corpus::{Corpus, CorpusConfig};
+use metis::data::BatchIterator;
+use metis::formats::{self, Format};
+use metis::linalg::jacobi_svd;
+use metis::runtime::{Engine, HostValue};
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+use metis::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+
+    // --- L1 kernels -----------------------------------------------------
+    let mut rng = Rng::new(0);
+    let data: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let hv = HostValue::F32 {
+        shape: vec![256, 256],
+        data: data.clone(),
+    };
+    let mut t1 = Table::new(
+        "L1 — standalone kernel artifacts (256x256, PJRT CPU)",
+        &["artifact", "mean ms", "p95 ms", "MB/s eff"],
+    );
+    for name in [
+        "quantize__mxfp4__256x256",
+        "quantize__nvfp4__256x256",
+        "quantize__fp8__256x256",
+        "dual_range__256x256",
+    ] {
+        let st = time_fn(2, 10, || {
+            engine.run(name, &[hv.clone()]).unwrap();
+        });
+        let mbs = (256.0 * 256.0 * 4.0) / (st.mean() / 1e3) / 1e6;
+        t1.row(vec![
+            name.into(),
+            fmt_f(st.mean(), 2),
+            fmt_f(st.percentile(95.0), 2),
+            fmt_f(mbs, 0),
+        ]);
+    }
+    let w_hv = HostValue::F32 {
+        shape: vec![256, 256],
+        data: (0..256 * 256).map(|_| rng.gauss_f32(0.0, 0.1)).collect(),
+    };
+    let st = time_fn(2, 10, || {
+        engine
+            .run("qgemm__nvfp4__256", &[hv.clone(), w_hv.clone()])
+            .unwrap();
+    });
+    let gflops = 2.0 * 256f64.powi(3) / (st.mean() / 1e3) / 1e9;
+    t1.row(vec![
+        "qgemm__nvfp4__256".into(),
+        fmt_f(st.mean(), 2),
+        fmt_f(st.percentile(95.0), 2),
+        format!("{gflops:.1} GF/s"),
+    ]);
+    t1.print();
+
+    // --- L3 step breakdown ------------------------------------------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "tiny".into();
+    cfg.mode = "nvfp4_metis".into();
+    cfg.steps = 1;
+    cfg.out_dir = std::env::temp_dir()
+        .join("metis_perf")
+        .to_string_lossy()
+        .into_owned();
+    let trainer = Trainer::new(&engine, cfg)?;
+    let artifact = engine
+        .manifest
+        .name_for("train_step", "tiny", "nvfp4_metis", 8);
+    let seq = engine.manifest.models["tiny"].seq_len;
+    let corpus = Corpus::new(CorpusConfig::new(engine.manifest.models["tiny"].vocab, 7));
+    let mut it = BatchIterator::new(&corpus, 8, seq, 0);
+
+    // warm compile
+    let w = Stopwatch::start();
+    engine.load(&artifact)?;
+    let compile_s = w.secs();
+
+    let mut gen_ms = metis::util::timer::Stats::default();
+    let mut conv_ms = metis::util::timer::Stats::default();
+    let mut exec_ms = metis::util::timer::Stats::default();
+    for step in 0..12 {
+        let w = Stopwatch::start();
+        let tokens = it.next_batch();
+        gen_ms.add(w.ms());
+
+        let tok_hv = HostValue::I32 {
+            shape: vec![8, seq + 1],
+            data: tokens,
+        };
+        let step_hv = HostValue::scalar_i32(step);
+        let seed_hv = HostValue::scalar_i32(0);
+        let lr_hv = HostValue::scalar_f32(1e-3);
+        let mut inputs: Vec<&HostValue> = trainer.state.iter().collect();
+        inputs.push(&tok_hv);
+        inputs.push(&step_hv);
+        inputs.push(&seed_hv);
+        inputs.push(&lr_hv);
+
+        // conversion timing (same marshaling run() performs)
+        let w = Stopwatch::start();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|h| h.to_literal().unwrap())
+            .collect();
+        conv_ms.add(w.ms());
+        drop(lits);
+
+        let w = Stopwatch::start();
+        let _ = engine.run(&artifact, &inputs)?;
+        exec_ms.add(w.ms());
+    }
+    let mut t2 = Table::new(
+        "L3 — coordinator hot-loop breakdown (tiny/nvfp4_metis, b8)",
+        &["phase", "mean ms", "p95 ms", "share of step"],
+    );
+    let total = exec_ms.mean();
+    t2.row(vec![
+        "batch generation (loader)".into(),
+        fmt_f(gen_ms.mean(), 2),
+        fmt_f(gen_ms.percentile(95.0), 2),
+        format!("{:.1}%", 100.0 * gen_ms.mean() / total),
+    ]);
+    t2.row(vec![
+        "literal marshaling (in)".into(),
+        fmt_f(conv_ms.mean(), 2),
+        fmt_f(conv_ms.percentile(95.0), 2),
+        format!("{:.1}%", 100.0 * conv_ms.mean() / total),
+    ]);
+    t2.row(vec![
+        "run() = marshal+execute+fetch".into(),
+        fmt_f(exec_ms.mean(), 2),
+        fmt_f(exec_ms.percentile(95.0), 2),
+        "100%".into(),
+    ]);
+    t2.row(vec![
+        "one-time XLA compile".into(),
+        fmt_f(compile_s * 1e3, 0),
+        "—".into(),
+        format!("= {:.0} steps", compile_s * 1e3 / total),
+    ]);
+    t2.print();
+
+    // --- substrates ---------------------------------------------------------
+    let mut t3 = Table::new(
+        "substrates — Rust-side analysis primitives",
+        &["op", "mean ms", "throughput"],
+    );
+    let a = Matrix::gaussian(&mut rng, 256, 256, 1.0);
+    let b = Matrix::gaussian(&mut rng, 256, 256, 1.0);
+    let st = time_fn(2, 8, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    t3.row(vec![
+        "matmul 256³ (f64)".into(),
+        fmt_f(st.mean(), 2),
+        format!("{:.2} GF/s", 2.0 * 256f64.powi(3) / (st.mean() / 1e3) / 1e9),
+    ]);
+    let st = time_fn(1, 3, || {
+        std::hint::black_box(jacobi_svd(&a));
+    });
+    t3.row(vec!["jacobi_svd 256x256".into(), fmt_f(st.mean(), 1), "—".into()]);
+    let xs: Vec<f32> = (0..1 << 20).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let st = time_fn(2, 8, || {
+        std::hint::black_box(formats::quantize_block(Format::Mxfp4, &xs));
+    });
+    t3.row(vec![
+        "mxfp4 block quantize 1M elems".into(),
+        fmt_f(st.mean(), 2),
+        format!("{:.0} Melem/s", 1.048e6 / (st.mean() / 1e3) / 1e6),
+    ]);
+    t3.print();
+    Ok(())
+}

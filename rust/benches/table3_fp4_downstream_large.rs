@@ -1,0 +1,52 @@
+//! Table 3: downstream performance under FP4, larger model (paper:
+//! GPT-2 1.1B → our "small").  Same shape expectations as Table 2 with
+//! a stronger divergence tendency for direct MXFP4 (paper: 7.54 loss).
+
+use metis::bench::{artifacts_dir, fmt_f, fmt_pct, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::runtime::Engine;
+
+const TASKS: [&str; 6] = ["CoLA", "SST-2", "MRPC", "MNLI", "QNLI", "RTE"];
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let rows = [
+        ("fp32", "FP32"),
+        ("nvfp4_metis", "Metis+NVFP4"),
+        ("mxfp4_metis", "Metis+MXFP4"),
+        ("nvfp4_direct", "NVFP4"),
+        ("mxfp4_direct", "MXFP4"),
+    ];
+
+    let mut headers = vec!["Method".to_string(), "test loss".to_string()];
+    headers.extend(TASKS.iter().map(|t| format!("{t}* (acc)")));
+    headers.push("Avg".into());
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 3 — downstream under FP4, small model (paper 1.1B analogue)",
+        &hdr,
+    );
+
+    for (mode, label) in rows {
+        let rec = store.get_or_run(&engine, &bench_config("small", mode, canonical_steps("small")), true)?;
+        let mut row = vec![label.to_string()];
+        if rec.diverged {
+            row.push("NaN (diverged)".into());
+            row.extend(std::iter::repeat("—".to_string()).take(TASKS.len() + 1));
+        } else {
+            row.push(fmt_f(rec.test_loss as f64, 4));
+            for t in TASKS {
+                row.push(fmt_pct(rec.probes.get(t).copied().unwrap_or(f64::NAN)));
+            }
+            row.push(fmt_pct(rec.avg_probe_acc(&TASKS)));
+        }
+        table.row(row);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("table3.csv").to_str().unwrap())?;
+    println!("\npaper shape check: ordering Metis-FP4 ≈ FP32 > NVFP4-direct >");
+    println!("MXFP4-direct (worst / diverging), mirroring Table 3 of the paper.");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Table 4: computational complexity of Metis — baseline O(lmn) vs
+//! Metis O(lmn + lkn) — measured three ways:
+//!
+//! 1. pure-Rust GEMM sweep: dense X·W vs the Metis forward split
+//!    X·U·S·Vᵀ + X·W_R across k fractions (overhead should grow ~k and
+//!    stay marginal for k ≲ 10%);
+//! 2. randomized vs full SVD: the O(mnk)-vs-O(mnr) decomposition cost;
+//! 3. end-to-end: measured ms/step of the train_step artifacts per mode
+//!    (pulled from the run store when fig6/7 already trained them).
+
+use metis::bench::{artifacts_dir, fmt_f, reports_dir, time_fn, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::linalg::{jacobi_svd, randomized_svd};
+use metis::runtime::Engine;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+
+    // 1. forward GEMM sweep -------------------------------------------------
+    let (l, m, n) = (512usize, 256, 256);
+    let x = Matrix::gaussian(&mut rng, l, m, 1.0);
+    let w = Matrix::gaussian(&mut rng, m, n, 0.1);
+    let dense = time_fn(1, 5, || {
+        std::hint::black_box(x.matmul(&w));
+    });
+
+    let mut t1 = Table::new(
+        &format!("Table 4 (fwd) — dense {l}x{m}x{n} vs Metis split, measured"),
+        &["k / r", "k", "low-rank+resid ms", "dense ms", "overhead", "model O()"],
+    );
+    for frac in [0.01f64, 0.05, 0.1, 0.25, 0.5] {
+        let k = ((m.min(n) as f64 * frac).ceil() as usize).max(1);
+        let u = Matrix::gaussian(&mut rng, m, k, 1.0);
+        let v = Matrix::gaussian(&mut rng, n, k, 1.0);
+        let s: Vec<f64> = (0..k).map(|i| 1.0 / (i + 1) as f64).collect();
+        let wr = Matrix::gaussian(&mut rng, m, n, 0.1);
+        let split = time_fn(1, 5, || {
+            let low = x.matmul(&u).scale_cols(&s).matmul(&v.transpose());
+            let res = x.matmul(&wr);
+            std::hint::black_box(low.add(&res));
+        });
+        t1.row(vec![
+            format!("{:.0}%", frac * 100.0),
+            k.to_string(),
+            fmt_f(split.mean(), 2),
+            fmt_f(dense.mean(), 2),
+            format!("{:+.0}%", 100.0 * (split.mean() / dense.mean() - 1.0)),
+            format!("1 + k/min(m,n) = {:.2}", 1.0 + frac),
+        ]);
+    }
+    t1.print();
+
+    // 2. randomized vs full SVD ---------------------------------------------
+    let mut t2 = Table::new(
+        "Table 4 (decomposition) — randomized SVD O(mnk) vs full SVD O(mnr)",
+        &["matrix", "k", "rsvd ms", "full svd ms", "speedup"],
+    );
+    for n in [128usize, 256] {
+        let a = Matrix::gaussian(&mut rng, n, n, 1.0);
+        let k = (n as f64 * 0.1).ceil() as usize;
+        let mut r2 = Rng::new(1);
+        let rs = time_fn(1, 3, || {
+            std::hint::black_box(randomized_svd(&a, k, 8, 1, &mut r2));
+        });
+        let fs = time_fn(1, 3, || {
+            std::hint::black_box(jacobi_svd(&a));
+        });
+        t2.row(vec![
+            format!("{n}x{n}"),
+            k.to_string(),
+            fmt_f(rs.mean(), 1),
+            fmt_f(fs.mean(), 1),
+            format!("{:.1}x", fs.mean() / rs.mean()),
+        ]);
+    }
+    t2.print();
+
+    // 3. end-to-end step latency per mode ------------------------------------
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let mut t3 = Table::new(
+        "Table 4 (end-to-end) — measured ms/step of train_step artifacts (small)",
+        &["mode", "ms/step", "vs fp32", "fwd decomp", "bwd decomp"],
+    );
+    let base = store
+        .get_or_run(&engine, &bench_config("small", "fp32", canonical_steps("small")), false)?
+        .step_ms_mean;
+    for mode in ["fp32", "fp8_direct", "fp8_metis", "nvfp4_direct", "nvfp4_metis"] {
+        let rec = store.get_or_run(&engine, &bench_config("small", mode, canonical_steps("small")), false)?;
+        let (fd, bd) = match mode {
+            "fp8_metis" => ("yes", "no"),
+            "nvfp4_metis" => ("yes", "yes"),
+            _ => ("no", "no"),
+        };
+        t3.row(vec![
+            mode.to_string(),
+            fmt_f(rec.step_ms_mean, 1),
+            format!("{:.2}x", rec.step_ms_mean / base),
+            fd.into(),
+            bd.into(),
+        ]);
+    }
+    t3.print();
+    t1.write_csv(reports_dir().join("table4_fwd.csv").to_str().unwrap())?;
+    t3.write_csv(reports_dir().join("table4_e2e.csv").to_str().unwrap())?;
+    println!("\npaper shape check: forward overhead grows linearly in k and is");
+    println!("marginal at k ≈ 1–10%; randomized SVD beats full SVD by the k/r");
+    println!("factor; note our e2e FP4 ratios include *simulated* quantization");
+    println!("cost that real FP4 tensor cores would turn into speedups.");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Table 5: component ablation of Metis under FP4 (paper: 1B GPT-2;
+//! here the tiny stand-in per DESIGN.md §4).  Each row removes one
+//! component from the full nvfp4_metis stack.
+//!
+//! Paper shape: w/o backward decomposition destabilises training (loss
+//! 7.50); adaptive-LR removal costs the most accuracy among the soft
+//! components; fwd-decomp mostly hits MNLI; dual-range is a mild
+//! stabilizer; the full stack has the best aggregate.
+
+use metis::bench::{artifacts_dir, fmt_f, fmt_pct, reports_dir, Table};
+use metis::coordinator::{bench_config, runstore::canonical_steps, RunStore};
+use metis::runtime::Engine;
+
+const TASKS: [&str; 4] = ["CoLA", "SST-2", "MRPC", "MNLI"];
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(artifacts_dir())?;
+    let store = RunStore::default_store()?;
+    let rows = [
+        ("abl_no_fwd_decomp", "Metis w/o forward decomposition"),
+        ("abl_no_bwd_decomp", "Metis w/o backward decomposition"),
+        ("abl_no_adaptive_lr", "Metis w/o adaptive learning rate"),
+        ("abl_no_dual_range", "Metis w/o dual-range regularization"),
+        ("nvfp4_metis", "Metis (full)"),
+    ];
+
+    let mut headers = vec!["Setup".to_string(), "Test loss".to_string()];
+    headers.extend(TASKS.iter().map(|t| format!("{t}*")));
+    headers.push("Avg Acc".into());
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 5 — ablation of Metis components (tiny model, NVFP4)",
+        &hdr,
+    );
+
+    let mut summary = Vec::new();
+    for (mode, label) in rows {
+        let rec = store.get_or_run(&engine, &bench_config("tiny", mode, canonical_steps("tiny")), true)?;
+        let mut row = vec![label.to_string()];
+        if rec.diverged || !rec.test_loss.is_finite() {
+            row.push("diverged".into());
+            row.extend(std::iter::repeat("—".to_string()).take(TASKS.len() + 1));
+        } else {
+            row.push(fmt_f(rec.test_loss as f64, 4));
+            for t in TASKS {
+                row.push(fmt_pct(rec.probes.get(t).copied().unwrap_or(f64::NAN)));
+            }
+            row.push(fmt_pct(rec.avg_probe_acc(&TASKS)));
+        }
+        summary.push((label, rec.test_loss, rec.avg_probe_acc(&TASKS)));
+        table.row(row);
+    }
+
+    table.print();
+    table.write_csv(reports_dir().join("table5.csv").to_str().unwrap())?;
+    let full = summary.last().unwrap();
+    println!("\npaper shape check vs full stack (loss {:.4}, avg {:.3}):", full.1, full.2);
+    for (label, loss, acc) in &summary[..summary.len() - 1] {
+        println!(
+            "  {label:<38} Δloss {:+.4}  Δavg-acc {:+.3}",
+            loss - full.1,
+            acc - full.2
+        );
+    }
+    Ok(())
+}

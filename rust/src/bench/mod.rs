@@ -1,0 +1,147 @@
+//! Hand-rolled benchmark harness (criterion is not vendorable offline).
+//!
+//! Two roles:
+//! * micro-timing (`time_fn`): warmup + N iterations → mean/p50/p95;
+//! * report emission: every `cargo bench` target regenerates one of the
+//!   paper's tables/figures as an aligned text table + optional CSV next
+//!   to it, so EXPERIMENTS.md can diff paper-vs-measured.
+
+use std::fmt::Write as _;
+
+use crate::util::timer::{Stats, Stopwatch};
+
+/// Time a closure: `warmup` unmeasured runs then `iters` measured ones.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::default();
+    for _ in 0..iters {
+        let w = Stopwatch::start();
+        f();
+        stats.add(w.ms());
+    }
+    stats
+}
+
+/// Aligned text table builder for bench reports.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, "{c:<w$} | ");
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", line(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Also write CSV for downstream plotting.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{x:.prec$}")
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    if x.is_nan() {
+        "—".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * x)
+    }
+}
+
+/// Resolve the artifacts dir for bench/example binaries.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("METIS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Output dir for bench reports.
+pub fn reports_dir() -> std::path::PathBuf {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("reports");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1.00".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| name   | value |"));
+        assert!(r.contains("| longer | 2     |"));
+    }
+
+    #[test]
+    fn time_fn_measures() {
+        let s = time_fn(1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean() >= 1.5);
+    }
+}

@@ -1,0 +1,130 @@
+//! Hand-rolled CLI substrate (clap is not vendorable offline): a small
+//! `--flag value` / `--switch` parser plus the `metis` subcommands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed arguments: positionals + `--key value` flags + `--switch`es.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?} is not an integer: {e}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?} is not a number: {e}")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+pub const USAGE: &str = "\
+metis — FP4/FP8 LLM training via spectral decomposition (paper reproduction)
+
+USAGE:
+  metis info      [--artifacts DIR]
+      List models, quantization modes and artifacts.
+  metis train     --model NAME --mode MODE [--steps N] [--lr F]
+                  [--warmup N] [--seed N] [--config FILE] [--downstream]
+                  [--checkpoint-every N] [--eval-every N] [--out DIR]
+      Train via the AOT train_step artifact; logs runs/<name>/log.jsonl.
+  metis eval      --model NAME --mode MODE --ckpt DIR [--downstream]
+      Held-out loss (+ optional GLUE-like probes) for a checkpoint.
+  metis analyze   --npy FILE [--k N]
+      Spectral report for a weight matrix: spectrum head, elbow fraction,
+      participation ratio, Popoviciu bound, quantization impact.
+  metis quant     [--fmt mxfp4|nvfp4|fp8] [--rows N] [--cols N]
+      Block-quantization bias demo on a synthetic anisotropic matrix.
+
+Artifacts default to ./artifacts (built by `make artifacts`);
+override with --artifacts or METIS_ARTIFACTS.";
+
+pub fn artifacts_flag(args: &Args) -> String {
+    args.flags
+        .get("artifacts")
+        .cloned()
+        .or_else(|| std::env::var("METIS_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn flags_and_switches() {
+        let a = parse(&["train", "--model", "tiny", "--steps=50", "--downstream"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str("model", ""), "tiny");
+        assert_eq!(a.usize("steps", 0).unwrap(), 50);
+        assert!(a.switch("downstream"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn missing_and_bad_values() {
+        let a = parse(&["--lr", "abc"]);
+        assert!(a.f64("lr", 1.0).is_err());
+        assert!(a.req("nope").is_err());
+        assert_eq!(a.usize("absent", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,130 @@
+//! Experiment configuration: defaults ← TOML file ← CLI overrides.
+
+use anyhow::{bail, Result};
+
+use crate::util::toml::TomlDoc;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Model config name from the manifest ("nano" | "tiny" | "small").
+    pub model: String,
+    /// Quantization mode ("fp32", "nvfp4_metis", ... see manifest.modes).
+    pub mode: String,
+    pub steps: usize,
+    pub seed: u64,
+    /// Peak learning rate + schedule (owned by the coordinator).
+    pub lr: f64,
+    pub warmup: usize,
+    /// Evaluate held-out loss every N steps (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Checkpoint params every N steps (0 = only final).
+    pub checkpoint_every: usize,
+    pub out_dir: String,
+    pub corpus_seed: u64,
+    /// Bounded prefetch depth of the data-loader channel.
+    pub prefetch: usize,
+    /// Run downstream probes after training.
+    pub downstream: bool,
+    /// Artifact directory.
+    pub artifacts: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            model: "tiny".into(),
+            mode: "fp32".into(),
+            steps: 200,
+            seed: 0,
+            lr: 1e-2,
+            warmup: 20,
+            eval_every: 0,
+            eval_batches: 8,
+            checkpoint_every: 0,
+            out_dir: "runs".into(),
+            corpus_seed: 7,
+            prefetch: 4,
+            downstream: false,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            name: doc.str_or("name", &d.name),
+            model: doc.str_or("train.model", &d.model),
+            mode: doc.str_or("train.mode", &d.mode),
+            steps: doc.i64_or("train.steps", d.steps as i64) as usize,
+            seed: doc.i64_or("train.seed", d.seed as i64) as u64,
+            lr: doc.f64_or("train.lr", d.lr),
+            warmup: doc.i64_or("train.warmup", d.warmup as i64) as usize,
+            eval_every: doc.i64_or("eval.every", d.eval_every as i64) as usize,
+            eval_batches: doc.i64_or("eval.batches", d.eval_batches as i64) as usize,
+            checkpoint_every: doc.i64_or("train.checkpoint_every", 0) as usize,
+            out_dir: doc.str_or("out.dir", &d.out_dir),
+            corpus_seed: doc.i64_or("data.seed", d.corpus_seed as i64) as u64,
+            prefetch: doc.i64_or("data.prefetch", d.prefetch as i64) as usize,
+            downstream: doc.bool_or("eval.downstream", d.downstream),
+            artifacts: doc.str_or("artifacts.dir", &d.artifacts),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_toml(&TomlDoc::load(path)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("train.steps must be > 0");
+        }
+        if self.lr <= 0.0 {
+            bail!("train.lr must be > 0");
+        }
+        if self.prefetch == 0 {
+            bail!("data.prefetch must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn run_dir(&self) -> std::path::PathBuf {
+        std::path::Path::new(&self.out_dir)
+            .join(format!("{}__{}__{}", self.name, self.model, self.mode))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_toml_overrides_defaults() {
+        let doc = TomlDoc::parse(
+            "name = \"x\"\n[train]\nmodel = \"small\"\nmode = \"nvfp4_metis\"\nsteps = 42\nlr = 0.005\n[eval]\ndownstream = true\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.steps, 42);
+        assert!((c.lr - 5e-3).abs() < 1e-12);
+        assert!(c.downstream);
+        assert_eq!(c.prefetch, 4); // default survives
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = ExperimentConfig::default();
+        c.steps = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Downstream evaluation harness: frozen features → linear probes over
+//! the six GLUE-shaped tasks (Tables 1–3 and 5).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::tasks::{Task, TaskKind, ALL_TASKS};
+use crate::probe::{Probe, ProbeConfig};
+use crate::runtime::{Engine, HostValue};
+
+#[derive(Clone, Debug)]
+pub struct DownstreamResult {
+    pub task: TaskKind,
+    pub accuracy: f64,
+    pub n_eval: usize,
+}
+
+/// Extract features for a set of examples through the `features`
+/// artifact (fixed batch size — remainder padded then truncated).
+pub fn extract_features(
+    engine: &Engine,
+    artifact: &str,
+    params: &[HostValue],
+    examples: &[Vec<i32>],
+    batch: usize,
+    seq_len: usize,
+) -> Result<Vec<f32>> {
+    let spec = engine.manifest.artifact(artifact)?;
+    let d_out = spec
+        .model
+        .as_ref()
+        .and_then(|m| engine.manifest.models.get(m))
+        .map(|m| m.d_model)
+        .ok_or_else(|| anyhow!("features artifact lacks model info"))?;
+
+    let mut feats = Vec::with_capacity(examples.len() * d_out);
+    let mut i = 0;
+    while i < examples.len() {
+        let mut toks = Vec::with_capacity(batch * seq_len);
+        let mut real = 0;
+        for b in 0..batch {
+            if i + b < examples.len() {
+                assert_eq!(examples[i + b].len(), seq_len);
+                toks.extend(&examples[i + b]);
+                real += 1;
+            } else {
+                toks.extend(std::iter::repeat(0).take(seq_len));
+            }
+        }
+        let tok_hv = HostValue::I32 {
+            shape: vec![batch, seq_len],
+            data: toks,
+        };
+        let mut inputs: Vec<&HostValue> = params.iter().collect();
+        inputs.push(&tok_hv);
+        let outs = engine.run(artifact, &inputs)?;
+        let f = outs[0].f32s()?;
+        feats.extend_from_slice(&f[..real * d_out]);
+        i += real;
+    }
+    Ok(feats)
+}
+
+/// Probe one task on frozen features of the given trained params.
+pub fn eval_task(
+    engine: &Engine,
+    features_artifact: &str,
+    params: &[HostValue],
+    task: &Task,
+    batch: usize,
+) -> Result<DownstreamResult> {
+    let model_name = engine
+        .manifest
+        .artifact(features_artifact)?
+        .model
+        .clone()
+        .unwrap();
+    let dim = engine.manifest.models[&model_name].d_model;
+
+    let train_toks: Vec<Vec<i32>> = task.train.iter().map(|e| e.tokens.clone()).collect();
+    let eval_toks: Vec<Vec<i32>> = task.eval.iter().map(|e| e.tokens.clone()).collect();
+    let train_labels: Vec<usize> = task.train.iter().map(|e| e.label).collect();
+    let eval_labels: Vec<usize> = task.eval.iter().map(|e| e.label).collect();
+
+    let ftr = extract_features(engine, features_artifact, params, &train_toks, batch, task.seq_len)?;
+    let fev = extract_features(engine, features_artifact, params, &eval_toks, batch, task.seq_len)?;
+
+    let (probe, norm) = Probe::train(
+        &ftr,
+        &train_labels,
+        dim,
+        task.kind.n_classes(),
+        &ProbeConfig::default(),
+    );
+    let accuracy = probe.accuracy(&norm, &fev, &eval_labels);
+    Ok(DownstreamResult {
+        task: task.kind,
+        accuracy,
+        n_eval: eval_labels.len(),
+    })
+}
+
+/// Full downstream sweep (all six tasks) for one trained model.
+pub fn eval_downstream(
+    engine: &Engine,
+    model: &str,
+    mode: &str,
+    params: &[HostValue],
+    corpus_seed: u64,
+    tasks: &[TaskKind],
+) -> Result<Vec<DownstreamResult>> {
+    let batch = 8;
+    let artifact = engine.manifest.name_for("features", model, mode, batch);
+    let info = &engine.manifest.models[model];
+    let corpus = Corpus::new(CorpusConfig::new(info.vocab, corpus_seed));
+    let mut out = Vec::new();
+    for kind in tasks.iter().copied().filter(|k| ALL_TASKS.contains(k)) {
+        let task = Task::generate(&corpus, kind, info.seq_len, 0);
+        out.push(eval_task(engine, &artifact, params, &task, batch)?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,16 @@
+//! The training framework (L3): experiment config, LR schedule, the
+//! training orchestrator (prefetching data loader thread + train loop +
+//! checkpointing + logging), and the downstream evaluation harness.
+
+pub mod config;
+pub mod evalharness;
+pub mod runlog;
+pub mod runstore;
+pub mod schedule;
+pub mod trainer;
+
+pub use config::ExperimentConfig;
+pub use evalharness::{eval_downstream, DownstreamResult};
+pub use runstore::{bench_config, RunRecord, RunStore};
+pub use schedule::Schedule;
+pub use trainer::{RunResult, Trainer};

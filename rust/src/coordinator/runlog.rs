@@ -1,0 +1,58 @@
+//! Structured run logging: JSONL event stream + stdout progress lines.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+pub struct RunLog {
+    file: Option<File>,
+    pub quiet: bool,
+}
+
+impl RunLog {
+    pub fn create(dir: &Path, quiet: bool) -> Result<RunLog> {
+        fs::create_dir_all(dir)?;
+        let file = File::create(dir.join("log.jsonl"))?;
+        Ok(RunLog {
+            file: Some(file),
+            quiet,
+        })
+    }
+
+    /// Log sink that discards (for benches that keep their own tables).
+    pub fn null() -> RunLog {
+        RunLog {
+            file: None,
+            quiet: true,
+        }
+    }
+
+    pub fn event(&mut self, kind: &str, fields: Vec<(&str, Json)>) {
+        let mut kvs = vec![("event", Json::str(kind))];
+        kvs.extend(fields);
+        let line = Json::obj(kvs).to_string();
+        if let Some(f) = self.file.as_mut() {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+
+    pub fn step(&mut self, step: usize, loss: f32, gnorm: f32, lr: f64, ms: f64) {
+        self.event(
+            "step",
+            vec![
+                ("step", Json::num(step as f64)),
+                ("loss", Json::num(loss as f64)),
+                ("gnorm", Json::num(gnorm as f64)),
+                ("lr", Json::num(lr)),
+                ("ms", Json::num(ms)),
+            ],
+        );
+        if !self.quiet && (step % 25 == 0) {
+            println!("  step {step:>5}  loss {loss:.4}  gnorm {gnorm:.3}  lr {lr:.2e}  {ms:.0} ms");
+        }
+    }
+}

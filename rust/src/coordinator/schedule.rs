@@ -1,0 +1,62 @@
+//! Learning-rate schedule (paper §4.1: linear warmup → cosine decay).
+//!
+//! Owned by the coordinator — the `train_step` artifact takes `lr` as a
+//! runtime input, so one artifact serves any run length or policy.
+
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub peak: f64,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl Schedule {
+    pub fn new(peak: f64, warmup: usize, total: usize) -> Self {
+        Self {
+            peak,
+            warmup,
+            total,
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let s = step as f64;
+        if step < self.warmup {
+            return self.peak * s / self.warmup.max(1) as f64;
+        }
+        let span = (self.total.saturating_sub(self.warmup)).max(1) as f64;
+        let prog = ((s - self.warmup as f64) / span).clamp(0.0, 1.0);
+        self.peak * 0.5 * (1.0 + (std::f64::consts::PI * prog).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_cosine() {
+        let s = Schedule::new(1.0, 10, 110);
+        assert_eq!(s.lr_at(0), 0.0);
+        assert!((s.lr_at(5) - 0.5).abs() < 1e-12);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-12);
+        assert!(s.lr_at(60) < 1.0);
+        assert!(s.lr_at(110) < 1e-9);
+        // monotone decreasing after warmup
+        let mut prev = s.lr_at(10);
+        for t in 11..=110 {
+            let cur = s.lr_at(t);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn matches_python_lr_at() {
+        // python model.lr_at(OptConfig(lr=1.0, warmup=10, total_steps=110))
+        // spot values (see test_model.py::test_lr_schedule).
+        let s = Schedule::new(1.0, 10, 110);
+        assert!((s.lr_at(5) - 0.5).abs() < 1e-9);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,309 @@
+//! The training orchestrator: owns the engine state for one run —
+//! parameter/optimizer buffers, a prefetching data-loader thread, the
+//! step loop feeding the `train_step` artifact, periodic held-out
+//! evaluation, checkpointing, and the JSONL run log.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::runlog::RunLog;
+use crate::coordinator::schedule::Schedule;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::BatchIterator;
+use crate::runtime::{Engine, HostValue};
+use crate::util::json::Json;
+use crate::util::npy;
+use crate::util::timer::{Stats, Stopwatch};
+
+/// Split ids for the deterministic data streams.
+pub const SPLIT_TRAIN: u64 = 0;
+pub const SPLIT_EVAL: u64 = 1;
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub mode: String,
+    pub model: String,
+    pub losses: Vec<f32>,
+    pub gnorms: Vec<f32>,
+    pub test_loss: f32,
+    pub step_ms_mean: f64,
+    pub step_ms_p95: f64,
+    pub compile_ms: f64,
+    pub diverged: bool,
+}
+
+impl RunResult {
+    pub fn final_train_loss(&self) -> f32 {
+        let tail = self.losses.len().saturating_sub(10);
+        let window = &self.losses[tail..];
+        window.iter().sum::<f32>() / window.len().max(1) as f32
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ExperimentConfig,
+    /// Flat state vector: params ++ m ++ v (manifest order).
+    pub state: Vec<HostValue>,
+    pub n_params: usize,
+    pub param_names: Vec<String>,
+    artifact: String,
+    eval_artifact: String,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: ExperimentConfig) -> Result<Trainer<'e>> {
+        let batch = 8; // all artifacts are exported at b8 (manifest)
+        let artifact = engine
+            .manifest
+            .name_for("train_step", &cfg.model, &cfg.mode, batch);
+        let eval_artifact = engine
+            .manifest
+            .name_for("eval_loss", &cfg.model, &cfg.mode, batch);
+        let spec = engine
+            .manifest
+            .artifact(&artifact)
+            .with_context(|| format!("no train_step artifact for {}/{}", cfg.model, cfg.mode))?;
+        let params_key = spec
+            .params_key
+            .clone()
+            .ok_or_else(|| anyhow!("artifact {artifact} lacks params_key"))?;
+        let params = engine.load_params(&params_key)?;
+        let n_params = params.len();
+        let param_names = engine.manifest.param_set(&params_key)?.names.clone();
+
+        let zeros: Vec<HostValue> = params
+            .iter()
+            .map(|p| HostValue::F32 {
+                shape: p.shape().to_vec(),
+                data: vec![0.0; p.shape().iter().product()],
+            })
+            .collect();
+        let mut state = params;
+        state.extend(zeros.iter().cloned());
+        state.extend(zeros);
+
+        let seq_len = engine
+            .manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown model {}", cfg.model))?
+            .seq_len;
+
+        Ok(Trainer {
+            engine,
+            cfg,
+            state,
+            n_params,
+            param_names,
+            artifact,
+            eval_artifact,
+            batch,
+            seq_len,
+        })
+    }
+
+    /// Spawn the prefetching loader thread: deterministic batches pushed
+    /// through a bounded channel (backpressure = channel depth).
+    fn spawn_loader(&self, steps: usize) -> mpsc::Receiver<Vec<i32>> {
+        let (tx, rx) = mpsc::sync_channel(self.cfg.prefetch);
+        let corpus_cfg = CorpusConfig::new(
+            self.engine.manifest.models[&self.cfg.model].vocab,
+            self.cfg.corpus_seed,
+        );
+        let (batch, seq_len) = (self.batch, self.seq_len);
+        thread::spawn(move || {
+            let corpus = Corpus::new(corpus_cfg);
+            let mut it = BatchIterator::new(&corpus, batch, seq_len, SPLIT_TRAIN);
+            for _ in 0..steps {
+                if tx.send(it.next_batch()).is_err() {
+                    break; // trainer dropped the receiver
+                }
+            }
+        });
+        rx
+    }
+
+    /// Run the configured number of steps; returns the loss curve.
+    pub fn train(&mut self) -> Result<RunResult> {
+        let run_dir = self.cfg.run_dir();
+        let mut log = RunLog::create(&run_dir, false)?;
+        log.event(
+            "config",
+            vec![
+                ("model", Json::str(&self.cfg.model)),
+                ("mode", Json::str(&self.cfg.mode)),
+                ("steps", Json::num(self.cfg.steps as f64)),
+                ("lr", Json::num(self.cfg.lr)),
+                ("seed", Json::num(self.cfg.seed as f64)),
+            ],
+        );
+        self.train_with_log(&mut log)
+    }
+
+    /// Train quietly (benches supply RunLog::null()).
+    pub fn train_with_log(&mut self, log: &mut RunLog) -> Result<RunResult> {
+        let sched = Schedule::new(self.cfg.lr, self.cfg.warmup, self.cfg.steps);
+        let rx = self.spawn_loader(self.cfg.steps);
+
+        // First execution includes XLA compilation; measure it separately.
+        let compile_watch = Stopwatch::start();
+        self.engine.load(&self.artifact)?;
+        let compile_ms = compile_watch.ms();
+
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut gnorms = Vec::with_capacity(self.cfg.steps);
+        let mut step_stats = Stats::default();
+        let mut diverged = false;
+
+        for step in 0..self.cfg.steps {
+            let tokens = rx
+                .recv()
+                .map_err(|_| anyhow!("data loader thread died"))?;
+            let lr = sched.lr_at(step);
+            let watch = Stopwatch::start();
+
+            let tok_hv = HostValue::I32 {
+                shape: vec![self.batch, self.seq_len + 1],
+                data: tokens,
+            };
+            let step_hv = HostValue::scalar_i32(step as i32);
+            let seed_hv = HostValue::scalar_i32(self.cfg.seed as i32);
+            let lr_hv = HostValue::scalar_f32(lr as f32);
+            let mut inputs: Vec<&HostValue> = self.state.iter().collect();
+            inputs.push(&tok_hv);
+            inputs.push(&step_hv);
+            inputs.push(&seed_hv);
+            inputs.push(&lr_hv);
+
+            let outs = self.engine.run(&self.artifact, &inputs)?;
+            let n3 = 3 * self.n_params;
+            let loss = outs[n3].scalar()?;
+            let gnorm = outs[n3 + 1].scalar()?;
+            self.state = outs;
+            self.state.truncate(n3);
+
+            let ms = watch.ms();
+            if step > 0 {
+                step_stats.add(ms); // step 0 may still hit lazy costs
+            }
+            losses.push(loss);
+            gnorms.push(gnorm);
+            log.step(step, loss, gnorm, lr, ms);
+
+            if !loss.is_finite() {
+                diverged = true;
+                log.event("diverged", vec![("step", Json::num(step as f64))]);
+                break;
+            }
+            if self.cfg.checkpoint_every > 0
+                && step > 0
+                && step % self.cfg.checkpoint_every == 0
+            {
+                self.checkpoint(step)?;
+            }
+            if self.cfg.eval_every > 0 && step > 0 && step % self.cfg.eval_every == 0 {
+                let el = self.eval_loss(self.cfg.eval_batches)?;
+                log.event(
+                    "eval",
+                    vec![
+                        ("step", Json::num(step as f64)),
+                        ("test_loss", Json::num(el as f64)),
+                    ],
+                );
+            }
+        }
+
+        let test_loss = if diverged {
+            f32::NAN
+        } else {
+            self.eval_loss(self.cfg.eval_batches)?
+        };
+        log.event(
+            "done",
+            vec![
+                ("test_loss", Json::num(test_loss as f64)),
+                ("steps", Json::num(losses.len() as f64)),
+            ],
+        );
+
+        Ok(RunResult {
+            name: self.cfg.name.clone(),
+            mode: self.cfg.mode.clone(),
+            model: self.cfg.model.clone(),
+            losses,
+            gnorms,
+            test_loss,
+            step_ms_mean: step_stats.mean(),
+            step_ms_p95: step_stats.percentile(95.0),
+            compile_ms,
+            diverged,
+        })
+    }
+
+    /// Current parameters (first n_params state entries).
+    pub fn params(&self) -> &[HostValue] {
+        &self.state[..self.n_params]
+    }
+
+    /// Held-out loss averaged over `n` deterministic eval batches.
+    pub fn eval_loss(&self, n: usize) -> Result<f32> {
+        let corpus = Corpus::new(CorpusConfig::new(
+            self.engine.manifest.models[&self.cfg.model].vocab,
+            self.cfg.corpus_seed,
+        ));
+        let it = BatchIterator::new(&corpus, self.batch, self.seq_len, SPLIT_EVAL);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let tokens = it.batch_at(i as u64);
+            let tok_hv = HostValue::I32 {
+                shape: vec![self.batch, self.seq_len + 1],
+                data: tokens,
+            };
+            let mut inputs: Vec<&HostValue> = self.params().iter().collect();
+            inputs.push(&tok_hv);
+            let outs = self.engine.run(&self.eval_artifact, &inputs)?;
+            total += outs[0].scalar()? as f64;
+        }
+        Ok((total / n as f64) as f32)
+    }
+
+    /// Write current params as npy blobs under run_dir/ckpt_<step>/.
+    pub fn checkpoint(&self, step: usize) -> Result<std::path::PathBuf> {
+        let dir = self.cfg.run_dir().join(format!("ckpt_{step:06}"));
+        std::fs::create_dir_all(&dir)?;
+        for (name, hv) in self.param_names.iter().zip(self.params()) {
+            npy::write_npy(dir.join(format!("{name}.npy")), &hv.to_npy())?;
+        }
+        Ok(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_result_final_loss_window() {
+        let r = RunResult {
+            name: "x".into(),
+            mode: "fp32".into(),
+            model: "nano".into(),
+            losses: (0..20).map(|i| 20.0 - i as f32).collect(),
+            gnorms: vec![],
+            test_loss: 1.0,
+            step_ms_mean: 0.0,
+            step_ms_p95: 0.0,
+            compile_ms: 0.0,
+            diverged: false,
+        };
+        // mean of last 10 losses: 10..1 → 5.5
+        assert!((r.final_train_loss() - 5.5).abs() < 1e-6);
+    }
+}

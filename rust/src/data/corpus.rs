@@ -1,0 +1,290 @@
+//! Synthetic corpus: a probabilistic CFG over a Zipf-distributed lexicon.
+//!
+//! Stands in for the paper's DCLM pretraining data (DESIGN.md §4): the
+//! token process is (a) learnable — grammar gives exploitable structure,
+//! so cross-entropy drops well below uniform; (b) long-tailed — Zipfian
+//! word frequencies reproduce the rare-token mechanism the anisotropy
+//! analysis builds on (§5 Related Work ties outlier dimensions to token
+//! frequency imbalance).
+//!
+//! Grammar (terminals are part-of-speech pools, words drawn Zipf within
+//! each pool):
+//!
+//! ```text
+//! S  → NP VP END
+//! NP → DET NOUN | DET ADJ NOUN | NAME
+//! VP → VERB NP | VERB ADV | VERB NP PP | VERB
+//! PP → PREP NP
+//! ```
+
+use crate::util::prng::{Rng, ZipfTable};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const END: i32 = 3; // sentence terminator ('.')
+pub const QMARK: i32 = 4; // question terminator
+pub const NOT: i32 = 5; // negation marker (used by NLI-like tasks)
+const SPECIALS: usize = 6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pos {
+    Det,
+    Adj,
+    Noun,
+    Verb,
+    Adv,
+    Prep,
+    Name,
+}
+
+/// A contiguous id range [start, start+len) for one part of speech.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    pub pos: Pos,
+    pub start: i32,
+    pub len: usize,
+    zipf: ZipfTable,
+}
+
+impl Pool {
+    fn new(pos: Pos, start: i32, len: usize, zipf_s: f64) -> Self {
+        Self {
+            pos,
+            start,
+            len,
+            zipf: ZipfTable::new(len.max(1), zipf_s),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> i32 {
+        self.start + self.zipf.sample(rng) as i32
+    }
+
+    /// Rank of a token within the pool (0 = most frequent), if a member.
+    pub fn rank_of(&self, tok: i32) -> Option<usize> {
+        let off = tok - self.start;
+        (0..self.len as i32).contains(&off).then_some(off as usize)
+    }
+
+    /// The token at a given frequency rank.
+    pub fn at_rank(&self, rank: usize) -> i32 {
+        self.start + (rank.min(self.len - 1)) as i32
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        Self {
+            vocab,
+            zipf_s: 1.3,
+            seed,
+        }
+    }
+}
+
+/// The corpus generator: deterministic, seekable by document index.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub det: Pool,
+    pub adj: Pool,
+    pub noun: Pool,
+    pub verb: Pool,
+    pub adv: Pool,
+    pub prep: Pool,
+    pub name: Pool,
+    base: Rng,
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        assert!(cfg.vocab >= 64, "vocab too small for the grammar pools");
+        let usable = cfg.vocab - SPECIALS;
+        // Fixed small closed classes, Zipfian open classes.
+        let n_det = 4;
+        let n_prep = 6;
+        let open = usable - n_det - n_prep;
+        let n_noun = open * 35 / 100;
+        let n_verb = open * 20 / 100;
+        let n_adj = open * 20 / 100;
+        let n_adv = open * 10 / 100;
+        let n_name = open - n_noun - n_verb - n_adj - n_adv;
+
+        let mut at = SPECIALS as i32;
+        let mut take = |pos, len: usize, s: f64| {
+            let p = Pool::new(pos, at, len, s);
+            at += len as i32;
+            p
+        };
+        let det = take(Pos::Det, n_det, 1.0);
+        let prep = take(Pos::Prep, n_prep, 1.0);
+        let adj = take(Pos::Adj, n_adj, cfg.zipf_s);
+        let noun = take(Pos::Noun, n_noun, cfg.zipf_s);
+        let verb = take(Pos::Verb, n_verb, cfg.zipf_s);
+        let adv = take(Pos::Adv, n_adv, cfg.zipf_s);
+        let name = take(Pos::Name, n_name, cfg.zipf_s);
+        assert!(at as usize <= cfg.vocab);
+
+        let base = Rng::new(cfg.seed ^ 0x4D45_5449_53);
+        Self {
+            cfg,
+            det,
+            adj,
+            noun,
+            verb,
+            adv,
+            prep,
+            name,
+            base,
+        }
+    }
+
+    /// Independent RNG stream for document `idx` of a named split.
+    pub fn doc_rng(&self, split: u64, idx: u64) -> Rng {
+        self.base.fold_in(split.wrapping_mul(0x1000_0000_0000) ^ idx)
+    }
+
+    // -- grammar ---------------------------------------------------------------
+
+    pub fn gen_np(&self, rng: &mut Rng, out: &mut Vec<i32>) {
+        match rng.below(5) {
+            0 | 1 => {
+                out.push(self.det.sample(rng));
+                out.push(self.noun.sample(rng));
+            }
+            2 | 3 => {
+                out.push(self.det.sample(rng));
+                out.push(self.adj.sample(rng));
+                out.push(self.noun.sample(rng));
+            }
+            _ => out.push(self.name.sample(rng)),
+        }
+    }
+
+    pub fn gen_vp(&self, rng: &mut Rng, out: &mut Vec<i32>) {
+        match rng.below(6) {
+            0 | 1 => {
+                out.push(self.verb.sample(rng));
+                self.gen_np(rng, out);
+            }
+            2 => {
+                out.push(self.verb.sample(rng));
+                out.push(self.adv.sample(rng));
+            }
+            3 | 4 => {
+                out.push(self.verb.sample(rng));
+                self.gen_np(rng, out);
+                out.push(self.prep.sample(rng));
+                self.gen_np(rng, out);
+            }
+            _ => out.push(self.verb.sample(rng)),
+        }
+    }
+
+    /// One grammatical sentence: NP VP END.
+    pub fn gen_sentence(&self, rng: &mut Rng) -> Vec<i32> {
+        let mut s = Vec::with_capacity(10);
+        self.gen_np(rng, &mut s);
+        self.gen_vp(rng, &mut s);
+        s.push(END);
+        s
+    }
+
+    /// A token stream of at least `min_len` tokens (BOS-prefixed sentences).
+    pub fn gen_stream(&self, rng: &mut Rng, min_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(min_len + 16);
+        out.push(BOS);
+        while out.len() < min_len {
+            out.extend(self.gen_sentence(rng));
+        }
+        out
+    }
+
+    /// Which pool does a token belong to?
+    pub fn pos_of(&self, tok: i32) -> Option<Pos> {
+        for p in [
+            &self.det, &self.prep, &self.adj, &self.noun, &self.verb,
+            &self.adv, &self.name,
+        ] {
+            if p.rank_of(tok).is_some() {
+                return Some(p.pos);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusConfig::new(256, 7))
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let c = corpus();
+        let a = c.gen_stream(&mut c.doc_rng(0, 42), 100);
+        let b = c.gen_stream(&mut c.doc_rng(0, 42), 100);
+        assert_eq!(a, b);
+        let d = c.gen_stream(&mut c.doc_rng(0, 43), 100);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = corpus();
+        let s = c.gen_stream(&mut c.doc_rng(1, 0), 2000);
+        assert!(s.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn sentences_are_grammatical_shape() {
+        let c = corpus();
+        let mut rng = c.doc_rng(2, 0);
+        for _ in 0..100 {
+            let s = c.gen_sentence(&mut rng);
+            assert_eq!(*s.last().unwrap(), END);
+            assert!(s.len() >= 3);
+            // first token opens an NP: DET or NAME
+            let pos = c.pos_of(s[0]).unwrap();
+            assert!(matches!(pos, Pos::Det | Pos::Name), "{pos:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_frequencies_long_tailed() {
+        let c = corpus();
+        let s = c.gen_stream(&mut c.doc_rng(3, 0), 50_000);
+        let mut counts = vec![0usize; 256];
+        for &t in &s {
+            counts[t as usize] += 1;
+        }
+        // head noun much more frequent than deep-tail noun
+        let head = counts[c.noun.at_rank(0) as usize];
+        let tail = counts[c.noun.at_rank(c.noun.len - 1) as usize];
+        assert!(head > 10 * (tail + 1), "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn pools_disjoint_and_cover() {
+        let c = corpus();
+        let mut seen = vec![false; 256];
+        for p in [&c.det, &c.prep, &c.adj, &c.noun, &c.verb, &c.adv, &c.name] {
+            for t in p.start..p.start + p.len as i32 {
+                assert!(!seen[t as usize], "overlap at {t}");
+                seen[t as usize] = true;
+            }
+        }
+        assert!(!seen[PAD as usize] && !seen[END as usize]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: the synthetic corpus that stands in for DCLM and the
+//! six GLUE-shaped downstream probe tasks (DESIGN.md §4 Substitutions).
+
+pub mod batcher;
+pub mod corpus;
+pub mod tasks;
+
+pub use batcher::BatchIterator;
+pub use corpus::{Corpus, CorpusConfig};
+pub use tasks::{Task, TaskExample, TaskKind, ALL_TASKS};

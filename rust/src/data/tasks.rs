@@ -1,0 +1,366 @@
+//! Downstream probe tasks with GLUE-shaped semantics (DESIGN.md §4).
+//!
+//! The paper evaluates on CoLA / SST-2 / MRPC / MNLI / QNLI / RTE.  We
+//! cannot ship GLUE, so each task is re-created synthetically *with the
+//! same decision shape* over the pretraining grammar — what the probes
+//! measure is how much linearly-decodable structure the (quantized)
+//! pretraining preserved, which is exactly what the paper uses GLUE for:
+//!
+//! * `ColaLike`  — acceptability: grammatical vs corrupted word order.
+//! * `Sst2Like`  — polarity: sentence lexicalised from one of two
+//!                 disjoint "valence" halves of the adjective pool.
+//! * `MrpcLike`  — paraphrase: pair is a near-relexicalisation vs an
+//!                 unrelated sentence (SEP-joined).
+//! * `MnliLike`  — 3-class NLI: hypothesis entails / contradicts (NOT
+//!                 marker) / is neutral w.r.t. the premise.
+//! * `QnliLike`  — question-answer relevance: QMARK query mentions a
+//!                 noun that does / does not occur in the sentence.
+//! * `RteLike`   — small-data entailment: hypothesis drops the premise's
+//!                 adjective (entailed) vs swaps its noun (not entailed).
+
+use crate::data::corpus::{Corpus, END, NOT, QMARK, SEP};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    ColaLike,
+    Sst2Like,
+    MrpcLike,
+    MnliLike,
+    QnliLike,
+    RteLike,
+}
+
+pub const ALL_TASKS: [TaskKind; 6] = [
+    TaskKind::ColaLike,
+    TaskKind::Sst2Like,
+    TaskKind::MrpcLike,
+    TaskKind::MnliLike,
+    TaskKind::QnliLike,
+    TaskKind::RteLike,
+];
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::ColaLike => "CoLA*",
+            TaskKind::Sst2Like => "SST-2*",
+            TaskKind::MrpcLike => "MRPC*",
+            TaskKind::MnliLike => "MNLI*",
+            TaskKind::QnliLike => "QNLI*",
+            TaskKind::RteLike => "RTE*",
+        }
+    }
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            TaskKind::ColaLike => "CoLA",
+            TaskKind::Sst2Like => "SST-2",
+            TaskKind::MrpcLike => "MRPC",
+            TaskKind::MnliLike => "MNLI",
+            TaskKind::QnliLike => "QNLI",
+            TaskKind::RteLike => "RTE",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TaskKind::MnliLike => 3,
+            _ => 2,
+        }
+    }
+
+    /// Number of train examples (RTE is deliberately small-data, as in
+    /// GLUE; overall sizes trade probe noise for feature-extraction cost
+    /// — extraction through the engine dominates the table benches).
+    pub fn n_train(&self) -> usize {
+        match self {
+            TaskKind::RteLike => 192,
+            _ => 512,
+        }
+    }
+
+    pub fn n_eval(&self) -> usize {
+        256
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskExample {
+    pub tokens: Vec<i32>, // padded to seq_len
+    pub label: usize,
+}
+
+pub struct Task {
+    pub kind: TaskKind,
+    pub seq_len: usize,
+    pub train: Vec<TaskExample>,
+    pub eval: Vec<TaskExample>,
+}
+
+fn pad_to(mut toks: Vec<i32>, seq_len: usize) -> Vec<i32> {
+    toks.truncate(seq_len);
+    while toks.len() < seq_len {
+        toks.push(super::corpus::PAD);
+    }
+    toks
+}
+
+/// Shift a token to a nearby frequency rank within its pool (a crude
+/// "synonym": distributionally similar word).
+fn synonym(c: &Corpus, tok: i32, rng: &mut Rng) -> i32 {
+    for pool in [&c.adj, &c.noun, &c.verb, &c.adv, &c.name] {
+        if let Some(r) = pool.rank_of(tok) {
+            let delta = 1 + rng.usize(3);
+            let nr = if rng.below(2) == 0 {
+                r.saturating_sub(delta)
+            } else {
+                (r + delta).min(pool.len - 1)
+            };
+            return pool.at_rank(nr);
+        }
+    }
+    tok
+}
+
+fn gen_example(c: &Corpus, kind: TaskKind, rng: &mut Rng, seq_len: usize) -> TaskExample {
+    match kind {
+        TaskKind::ColaLike => {
+            let mut s = c.gen_sentence(rng);
+            let label = rng.usize(2);
+            if label == 0 {
+                // corrupt: swap two adjacent non-terminal tokens
+                if s.len() >= 4 {
+                    let i = rng.usize(s.len() - 2);
+                    s.swap(i, i + 1);
+                }
+            }
+            TaskExample {
+                tokens: pad_to(s, seq_len),
+                label,
+            }
+        }
+        TaskKind::Sst2Like => {
+            // polarity = which half of the adjective pool lexicalises it;
+            // inject 2 polarity adjectives so the signal is present.
+            let label = rng.usize(2);
+            let half = c.adj.len / 2;
+            let pick = |rng: &mut Rng| {
+                let r = rng.usize(half.max(1));
+                c.adj.at_rank(if label == 1 { r } else { half + r })
+            };
+            let mut s = Vec::new();
+            s.push(c.det.sample(rng));
+            s.push(pick(rng));
+            s.push(c.noun.sample(rng));
+            s.push(c.verb.sample(rng));
+            s.push(c.det.sample(rng));
+            s.push(pick(rng));
+            s.push(c.noun.sample(rng));
+            s.push(END);
+            TaskExample {
+                tokens: pad_to(s, seq_len),
+                label,
+            }
+        }
+        TaskKind::MrpcLike => {
+            let s1 = c.gen_sentence(rng);
+            let label = rng.usize(2);
+            let s2 = if label == 1 {
+                // paraphrase: synonym-shift open-class words
+                s1.iter().map(|&t| synonym(c, t, rng)).collect()
+            } else {
+                c.gen_sentence(rng)
+            };
+            let mut pair = s1;
+            pair.push(SEP);
+            pair.extend(s2);
+            TaskExample {
+                tokens: pad_to(pair, seq_len),
+                label,
+            }
+        }
+        TaskKind::MnliLike => {
+            // premise: DET ADJ NOUN VERB DET NOUN END
+            let det1 = c.det.sample(rng);
+            let adj = c.adj.sample(rng);
+            let subj = c.noun.sample(rng);
+            let verb = c.verb.sample(rng);
+            let det2 = c.det.sample(rng);
+            let obj = c.noun.sample(rng);
+            let premise = vec![det1, adj, subj, verb, det2, obj, END];
+            let label = rng.usize(3); // 0 entail, 1 neutral, 2 contradict
+            let hypothesis = match label {
+                0 => vec![det1, subj, verb, det2, obj, END], // drop ADJ: entailed
+                1 => {
+                    // same subject, unrelated predicate
+                    let mut h = vec![det1, subj];
+                    c.gen_vp(rng, &mut h);
+                    h.push(END);
+                    h
+                }
+                _ => vec![det1, subj, NOT, verb, det2, obj, END], // negated
+            };
+            let mut pair = premise;
+            pair.push(SEP);
+            pair.extend(hypothesis);
+            TaskExample {
+                tokens: pad_to(pair, seq_len),
+                label,
+            }
+        }
+        TaskKind::QnliLike => {
+            let s = c.gen_sentence(rng);
+            let nouns: Vec<i32> = s
+                .iter()
+                .cloned()
+                .filter(|&t| c.noun.rank_of(t).is_some() || c.name.rank_of(t).is_some())
+                .collect();
+            let label = rng.usize(2);
+            let q_noun = if label == 1 && !nouns.is_empty() {
+                nouns[rng.usize(nouns.len())]
+            } else {
+                // a noun not in the sentence
+                loop {
+                    let t = c.noun.sample(rng);
+                    if !s.contains(&t) {
+                        break t;
+                    }
+                }
+            };
+            let mut pair = vec![c.verb.sample(rng), q_noun, QMARK, SEP];
+            pair.extend(s);
+            TaskExample {
+                tokens: pad_to(pair, seq_len),
+                label,
+            }
+        }
+        TaskKind::RteLike => {
+            let det = c.det.sample(rng);
+            let adj = c.adj.sample(rng);
+            let subj = c.noun.sample(rng);
+            let mut premise = vec![det, adj, subj];
+            c.gen_vp(rng, &mut premise);
+            premise.push(END);
+            let label = rng.usize(2);
+            let hyp = if label == 1 {
+                let mut h = premise.clone();
+                h.remove(1); // drop ADJ → entailed
+                h
+            } else {
+                let mut h = premise.clone();
+                h[2] = loop {
+                    let t = c.noun.sample(rng);
+                    if t != subj {
+                        break t;
+                    }
+                }; // different subject → not entailed
+                h
+            };
+            let mut pair = premise;
+            pair.push(SEP);
+            pair.extend(hyp);
+            TaskExample {
+                tokens: pad_to(pair, seq_len),
+                label,
+            }
+        }
+    }
+}
+
+impl Task {
+    /// Build a task dataset; `split_seed` distinguishes experiment reruns.
+    pub fn generate(c: &Corpus, kind: TaskKind, seq_len: usize, split_seed: u64) -> Task {
+        let gen_set = |n: usize, salt: u64| {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut rng = c.doc_rng(0xD0DA ^ salt ^ split_seed, i as u64 ^ (kind as u64) << 32);
+                out.push(gen_example(c, kind, &mut rng, seq_len));
+            }
+            out
+        };
+        Task {
+            kind,
+            seq_len,
+            train: gen_set(kind.n_train(), 0x7EA1),
+            eval: gen_set(kind.n_eval(), 0xE7A1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusConfig::new(256, 3))
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        let c = corpus();
+        for kind in ALL_TASKS {
+            let t = Task::generate(&c, kind, 64, 0);
+            assert_eq!(t.train.len(), kind.n_train());
+            assert_eq!(t.eval.len(), kind.n_eval());
+            for ex in t.train.iter().chain(&t.eval) {
+                assert_eq!(ex.tokens.len(), 64);
+                assert!(ex.label < kind.n_classes());
+                assert!(ex.tokens.iter().all(|&x| (0..256).contains(&x)));
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let c = corpus();
+        for kind in ALL_TASKS {
+            let t = Task::generate(&c, kind, 64, 0);
+            let mut counts = vec![0usize; kind.n_classes()];
+            for ex in &t.train {
+                counts[ex.label] += 1;
+            }
+            let lo = *counts.iter().min().unwrap() as f64;
+            let hi = *counts.iter().max().unwrap() as f64;
+            assert!(lo / hi > 0.6, "{kind:?}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn sst2_signal_exists() {
+        // Polarity must be decodable from token identities alone.
+        let c = corpus();
+        let t = Task::generate(&c, TaskKind::Sst2Like, 64, 0);
+        let half = c.adj.len / 2;
+        let mut correct = 0;
+        for ex in &t.eval {
+            let vote = ex
+                .tokens
+                .iter()
+                .filter_map(|&tok| c.adj.rank_of(tok))
+                .map(|r| if r < half { 1 } else { 0 })
+                .sum::<usize>();
+            let n_adj = ex
+                .tokens
+                .iter()
+                .filter(|&&tok| c.adj.rank_of(tok).is_some())
+                .count();
+            let pred = (vote * 2 > n_adj) as usize;
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / t.eval.len() as f64 > 0.95);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let c = corpus();
+        let a = Task::generate(&c, TaskKind::MnliLike, 32, 1);
+        let b = Task::generate(&c, TaskKind::MnliLike, 32, 1);
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        let d = Task::generate(&c, TaskKind::MnliLike, 32, 2);
+        assert_ne!(a.train[0].tokens, d.train[0].tokens);
+    }
+}

@@ -1,0 +1,222 @@
+//! Block-wise fake quantization + error statistics (paper §2.3).
+//!
+//! A `BlockQuantizer` applies a `Format` along a chosen axis of a
+//! `Matrix`, one shared scale per contiguous block — exactly the layout
+//! of `quantize_blockwise` in python/compile/formats.py.  `QuantStats`
+//! collects the bias measurements of Fig. 4: reconstruction error,
+//! small-value clipping (underflow) rate, and per-magnitude-decile error.
+
+use crate::formats::Format;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BlockQuantizer {
+    pub fmt: Format,
+}
+
+impl BlockQuantizer {
+    pub fn new(fmt: Format) -> Self {
+        Self { fmt }
+    }
+
+    /// Quantize a 1-D block in place semantics (returns new vec).
+    pub fn quantize_block_vec(&self, xs: &[f32]) -> Vec<f32> {
+        let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let s = self.fmt.scale(amax);
+        xs.iter().map(|&x| self.fmt.elem(x / s) * s).collect()
+    }
+}
+
+/// Quantize a flat slice blockwise (contiguous blocks of fmt.block()).
+pub fn quantize_block(fmt: Format, xs: &[f32]) -> Vec<f32> {
+    let q = BlockQuantizer::new(fmt);
+    let mut out = Vec::with_capacity(xs.len());
+    for chunk in xs.chunks(fmt.block()) {
+        out.extend(q.quantize_block_vec(chunk));
+    }
+    out
+}
+
+/// Quantize a matrix with scale blocks along `axis` (0 = down columns,
+/// 1 = along rows).  Axis 1 matches activation quantization (blocks along
+/// K for X·W); axis 0 matches weight quantization.
+pub fn quantize_matrix_along(fmt: Format, a: &Matrix, axis: usize) -> Matrix {
+    let f32s: Vec<f32> = a.data.iter().map(|&x| x as f32).collect();
+    match axis {
+        1 => {
+            let mut out = Vec::with_capacity(f32s.len());
+            for r in 0..a.rows {
+                let row = &f32s[r * a.cols..(r + 1) * a.cols];
+                out.extend(quantize_block(fmt, row));
+            }
+            Matrix::from_vec(a.rows, a.cols, out.iter().map(|&x| x as f64).collect())
+        }
+        0 => {
+            let t = a.transpose();
+            quantize_matrix_along(fmt, &t, 1).transpose()
+        }
+        _ => panic!("axis must be 0 or 1"),
+    }
+}
+
+/// Bias / error statistics of a quantization pass (Fig. 4 metrics).
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    /// ‖Q(A) − A‖_F / ‖A‖_F
+    pub rel_frob_err: f64,
+    /// fraction of non-zero inputs clipped to exactly 0 (underflow bias)
+    pub underflow_frac: f64,
+    /// mean relative error per input-magnitude decile (small → large)
+    pub decile_rel_err: Vec<f64>,
+    /// fraction of elements that changed at all
+    pub changed_frac: f64,
+}
+
+pub fn quant_stats(a: &Matrix, q: &Matrix) -> QuantStats {
+    assert_eq!((a.rows, a.cols), (q.rows, q.cols));
+    let n = a.data.len();
+    let mut err2 = 0.0;
+    let mut norm2 = 0.0;
+    let mut nz = 0usize;
+    let mut clipped = 0usize;
+    let mut changed = 0usize;
+
+    // deciles of |a|
+    let mut mags: Vec<f64> = a.data.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let decile_edges: Vec<f64> = (1..10).map(|i| mags[i * n / 10]).collect();
+    let mut dec_err = vec![0.0f64; 10];
+    let mut dec_cnt = vec![0usize; 10];
+
+    for (&x, &y) in a.data.iter().zip(&q.data) {
+        let e = y - x;
+        err2 += e * e;
+        norm2 += x * x;
+        if x != 0.0 {
+            nz += 1;
+            if y == 0.0 {
+                clipped += 1;
+            }
+            let d = decile_edges
+                .iter()
+                .position(|&edge| x.abs() <= edge)
+                .unwrap_or(9);
+            dec_err[d] += (e / x).abs();
+            dec_cnt[d] += 1;
+        }
+        if e != 0.0 {
+            changed += 1;
+        }
+    }
+    QuantStats {
+        rel_frob_err: (err2 / norm2.max(1e-300)).sqrt(),
+        underflow_frac: clipped as f64 / nz.max(1) as f64,
+        decile_rel_err: dec_err
+            .iter()
+            .zip(&dec_cnt)
+            .map(|(e, &c)| if c > 0 { e / c as f64 } else { 0.0 })
+            .collect(),
+        changed_frac: changed as f64 / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn block_scale_uses_block_max() {
+        // A single huge value in a block coarsens everything around it.
+        let mut xs = vec![0.01f32; 32];
+        xs[0] = 6.0;
+        let q = quantize_block(Format::Mxfp4, &xs);
+        // 0.01 with scale 2^0=1: fp4(0.01) = 0 → clipped.
+        assert_eq!(q[5], 0.0);
+        assert_eq!(q[0], 6.0);
+        // Same small values alone survive (scale adapts down).
+        let q2 = quantize_block(Format::Mxfp4, &vec![0.01f32; 32]);
+        assert!(q2[5] != 0.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(0);
+        for fmt in [Format::Mxfp4, Format::Nvfp4, Format::Fp8] {
+            let xs: Vec<f32> = (0..256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let q1 = quantize_block(fmt, &xs);
+            let q2 = quantize_block(fmt, &q1);
+            // One more pass may re-scale but values stay on grid·scale;
+            // for MX (power-of-two scales) it is exactly idempotent.
+            if fmt == Format::Mxfp4 {
+                assert_eq!(q1, q2);
+            }
+        }
+    }
+
+    #[test]
+    fn axis_0_equals_transposed_axis_1() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(&mut rng, 64, 48, 1.0);
+        let q0 = quantize_matrix_along(Format::Nvfp4, &a, 0);
+        let q1t = quantize_matrix_along(Format::Nvfp4, &a.transpose(), 1).transpose();
+        assert_eq!(q0, q1t);
+    }
+
+    #[test]
+    fn error_bound_per_block() {
+        // |q - x| <= scale * elem_step_max/2 per element (worst binade step).
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..320).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let q = quantize_block(Format::Mxfp4, &xs);
+        for (chunk_x, chunk_q) in xs.chunks(32).zip(q.chunks(32)) {
+            let amax = chunk_x.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let s = Format::Mxfp4.scale(amax);
+            for (&x, &y) in chunk_x.iter().zip(chunk_q) {
+                // max step on the E2M1 grid is 2 (between 4 and 6);
+                // saturation can add up to amax - 6s.
+                let bound = (s * 1.0).max(amax - 6.0 * s) + 1e-6;
+                assert!((y - x).abs() <= bound, "x={x} y={y} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_distribution_increases_underflow() {
+        // Paper §2.3: wider spread within a block → more small-value
+        // clipping.  Narrow Gaussian vs heavy-tailed mixture.
+        let mut rng = Rng::new(3);
+        let narrow = Matrix::gaussian(&mut rng, 32, 64, 1.0);
+        let mut wide = narrow.clone();
+        for i in 0..wide.rows {
+            wide[(i, 0)] = 50.0; // one outlier per 64-block row… 2 blocks/row
+            wide[(i, 32)] = 50.0;
+        }
+        let qn = quantize_matrix_along(Format::Mxfp4, &narrow, 1);
+        let qw = quantize_matrix_along(Format::Mxfp4, &wide, 1);
+        let sn = quant_stats(&narrow, &qn);
+        let sw = quant_stats(&wide, &qw);
+        assert!(
+            sw.underflow_frac > sn.underflow_frac * 3.0,
+            "wide {} vs narrow {}",
+            sw.underflow_frac,
+            sn.underflow_frac
+        );
+    }
+
+    #[test]
+    fn smaller_magnitudes_get_larger_relative_error() {
+        // The bias of Fig. 4B: relative error decreasing in magnitude.
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(&mut rng, 128, 128, 1.0);
+        let q = quantize_matrix_along(Format::Mxfp4, &a, 1);
+        let st = quant_stats(&a, &q);
+        let small = st.decile_rel_err[0];
+        let large = st.decile_rel_err[9];
+        assert!(
+            small > 2.0 * large,
+            "decile errs {:?}",
+            st.decile_rel_err
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Element-level codecs, written to match the jnp implementations in
+//! `python/compile/formats.py` operation-for-operation (clamp → floor∘log2
+//! → step snap with round-ties-even → clamp).  Rounding uses
+//! `round_ties_even`, matching `jnp.round` semantics.
+
+const TINY: f32 = 1e-30;
+
+/// FP4 E2M1 snap: grid ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}, RNE, saturating.
+pub fn fp4_e2m1(x: f32) -> f32 {
+    let sign = if x < 0.0 {
+        -1.0
+    } else if x > 0.0 {
+        1.0
+    } else {
+        return x * 0.0; // preserves ±0 like jnp.sign(x) * 0
+    };
+    let ax = x.abs().min(6.0);
+    let e = ax.max(TINY).log2().floor().clamp(0.0, 2.0);
+    let step = (e - 1.0).exp2();
+    let q = (ax / step).round_ties_even() * step;
+    sign * q.min(6.0)
+}
+
+/// FP8 E4M3 (finite-only) snap: bias 7, normals 2^-6..2^8, max 448,
+/// subnormal step 2^-9, RNE, saturating.
+pub fn fp8_e4m3(x: f32) -> f32 {
+    let sign = if x < 0.0 {
+        -1.0
+    } else if x > 0.0 {
+        1.0
+    } else {
+        return x * 0.0;
+    };
+    let ax = x.abs().min(448.0);
+    let e = ax.max(TINY).log2().floor().clamp(-6.0, 8.0);
+    let step = (e - 3.0).exp2();
+    let q = (ax / step).round_ties_even() * step;
+    sign * q.min(448.0)
+}
+
+/// E8M0 power-of-two scale (OCP MX): 2^(floor(log2 amax) − emax_elem),
+/// exponent clamped to [-127, 127]; amax ≤ 0 → 1.0.
+pub fn e8m0_scale(amax: f32, emax_elem: i32) -> f32 {
+    if amax <= 0.0 {
+        return 1.0;
+    }
+    let e = (amax.max(TINY).log2().floor() - emax_elem as f32).clamp(-127.0, 127.0);
+    e.exp2()
+}
+
+/// Round f32 to the bfloat16 grid (round-to-nearest-even on the top 16
+/// bits, matching hardware bf16 conversion).
+pub fn bf16_snap(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Enumerate the non-negative FP4 E2M1 grid (for tests/analysis).
+pub fn fp4_grid() -> [f32; 8] {
+    [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp4_idempotent_on_grid() {
+        for &g in fp4_grid().iter() {
+            assert_eq!(fp4_e2m1(g), g);
+            assert_eq!(fp4_e2m1(-g), -g);
+        }
+    }
+
+    #[test]
+    fn fp4_nearest_with_rne_ties() {
+        // ties: 1.75 → 2.0 (2.0 has even mantissa), 3.5 → 4.0, 5.0 → 4.0
+        assert_eq!(fp4_e2m1(1.75), 2.0);
+        assert_eq!(fp4_e2m1(3.5), 4.0);
+        assert_eq!(fp4_e2m1(5.0), 4.0);
+        assert_eq!(fp4_e2m1(0.25), 0.0); // tie 0 vs 0.5 → 0 (even)
+        assert_eq!(fp4_e2m1(0.26), 0.5);
+        assert_eq!(fp4_e2m1(100.0), 6.0); // saturation
+        assert_eq!(fp4_e2m1(-2.4), -2.0);
+    }
+
+    #[test]
+    fn fp4_exhaustive_nearest() {
+        // Sweep: result must always be a grid point within half a step
+        // (except at saturation).
+        let grid = fp4_grid();
+        let mut x = -7.0f32;
+        while x < 7.0 {
+            let q = fp4_e2m1(x);
+            assert!(
+                grid.contains(&q.abs()),
+                "fp4({x}) = {q} not on grid"
+            );
+            // Nearest check: no other grid point strictly closer.
+            let d = (q - x).abs();
+            for &g in grid.iter() {
+                for sg in [g, -g] {
+                    assert!(
+                        (sg - x).abs() >= d - 1e-6,
+                        "fp4({x}) = {q}, but {sg} closer"
+                    );
+                }
+            }
+            x += 0.013;
+        }
+    }
+
+    #[test]
+    fn fp8_spot_values() {
+        assert_eq!(fp8_e4m3(448.0), 448.0);
+        assert_eq!(fp8_e4m3(500.0), 448.0);
+        assert_eq!(fp8_e4m3(2.0f32.powi(-9)), 2.0f32.powi(-9)); // min subnormal
+        assert_eq!(fp8_e4m3(0.0), 0.0);
+        // 1.0 + 1/16 should snap onto 3-mantissa-bit grid: step at 1.0 is 1/8.
+        assert_eq!(fp8_e4m3(1.0625), 1.0); // tie 1.0 vs 1.125 → even
+        assert_eq!(fp8_e4m3(1.07), 1.125);
+    }
+
+    #[test]
+    fn fp8_relative_error_bound() {
+        // For normal-range inputs, relative error ≤ 2^-4 (half ulp of M3).
+        let mut x = 0.02f32;
+        while x < 400.0 {
+            let q = fp8_e4m3(x);
+            let rel = (q - x).abs() / x;
+            assert!(rel <= 1.0 / 16.0 + 1e-6, "x={x} q={q} rel={rel}");
+            x *= 1.093;
+        }
+    }
+
+    #[test]
+    fn e8m0_powers_of_two() {
+        let s = e8m0_scale(6.0, 2);
+        assert_eq!(s, 1.0); // floor(log2 6)=2, minus 2 → 2^0
+        let s = e8m0_scale(0.4, 2);
+        assert!((s.log2() - s.log2().round()).abs() < 1e-9);
+        assert_eq!(e8m0_scale(0.0, 2), 1.0);
+    }
+
+    #[test]
+    fn bf16_matches_reference_cases() {
+        assert_eq!(bf16_snap(1.0), 1.0);
+        // bf16 has 7 explicit mantissa bits → step 2^-7 at 1.0.
+        assert_eq!(bf16_snap(1.0078125), 1.0078125);
+        // 1 + 2^-8 ties between 1.0 and 1+2^-7 → even → 1.0
+        assert_eq!(bf16_snap(1.00390625), 1.0);
+        let x = 3.14159265f32;
+        let q = bf16_snap(x);
+        assert!((q - x).abs() / x < 0.004);
+        assert_eq!(bf16_snap(q), q); // idempotent
+    }
+}

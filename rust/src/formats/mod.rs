@@ -1,0 +1,89 @@
+//! Software numeric formats: bit-exact FP4 E2M1 / FP8 E4M3 / E8M0 / BF16
+//! codecs and the block-scaled quantizers (MXFP4 / NVFP4 / block-FP8).
+//!
+//! These mirror `python/compile/formats.py` — the pytest ↔ cargo-test
+//! cross-validation runs the exported Pallas quantizer artifact through
+//! the Rust runtime and compares against this implementation.
+
+pub mod blockq;
+pub mod codecs;
+
+pub use blockq::{quantize_block, quantize_matrix_along, BlockQuantizer, QuantStats};
+pub use codecs::{bf16_snap, e8m0_scale, fp4_e2m1, fp8_e4m3};
+
+/// Block-scaled format descriptors matching the paper §2.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// OCP MXFP4: E2M1 elements, 32-block, power-of-two (E8M0) scale.
+    Mxfp4,
+    /// NVFP4: E2M1 elements, 16-block, FP8 E4M3 scale = amax/6.
+    Nvfp4,
+    /// Block FP8: E4M3 elements, 128-block, f32 scale = amax/448.
+    Fp8,
+    /// The paper's §2.3 int-style scale rule s = amax/(2^{b-1}-1) on FP4.
+    PaperFp4,
+}
+
+impl Format {
+    pub fn block(&self) -> usize {
+        match self {
+            Format::Mxfp4 | Format::PaperFp4 => 32,
+            Format::Nvfp4 => 16,
+            Format::Fp8 => 128,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Mxfp4 => "mxfp4",
+            Format::Nvfp4 => "nvfp4",
+            Format::Fp8 => "fp8",
+            Format::PaperFp4 => "paper_fp4",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Format> {
+        match s {
+            "mxfp4" => Some(Format::Mxfp4),
+            "nvfp4" => Some(Format::Nvfp4),
+            "fp8" => Some(Format::Fp8),
+            "paper_fp4" => Some(Format::PaperFp4),
+            _ => None,
+        }
+    }
+
+    pub fn elem_max(&self) -> f32 {
+        match self {
+            Format::Fp8 => 448.0,
+            _ => 6.0,
+        }
+    }
+
+    /// Element codec.
+    pub fn elem(&self, x: f32) -> f32 {
+        match self {
+            Format::Fp8 => fp8_e4m3(x),
+            _ => fp4_e2m1(x),
+        }
+    }
+
+    /// Shared-scale rule from the block absolute max.
+    pub fn scale(&self, amax: f32) -> f32 {
+        if amax <= 0.0 {
+            return 1.0;
+        }
+        match self {
+            Format::Mxfp4 => e8m0_scale(amax, 2),
+            Format::Nvfp4 => {
+                let s = fp8_e4m3(amax / 6.0);
+                if s > 0.0 {
+                    s
+                } else {
+                    1.0
+                }
+            }
+            Format::Fp8 => amax / 448.0,
+            Format::PaperFp4 => amax / 7.0,
+        }
+    }
+}

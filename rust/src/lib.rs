@@ -1,0 +1,30 @@
+//! # Metis — FP4/FP8 LLM training via spectral decomposition
+//!
+//! Rust + JAX + Pallas reproduction of *"Metis: Training LLMs with FP4
+//! Quantization"* (Chen et al., 2025).  See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for measured-vs-paper results.
+//!
+//! Layering (Python never on the request path):
+//! * **L1** Pallas kernels + **L2** JAX model live in `python/compile/`,
+//!   AOT-lowered once to HLO text artifacts by `make artifacts`.
+//! * **L3** (this crate) is the coordinator: it loads artifacts through
+//!   the PJRT CPU client ([`runtime`]), drives training ([`coordinator`]),
+//!   generates data ([`data`]), evaluates downstream probes ([`probe`]),
+//!   and reproduces every figure/table with the analysis substrates
+//!   ([`linalg`], [`formats`], [`spectral`]).
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod linalg;
+pub mod probe;
+pub mod runtime;
+pub mod spectral;
+pub mod tensor;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

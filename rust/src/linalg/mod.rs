@@ -1,0 +1,12 @@
+//! From-scratch dense linear algebra (no LAPACK/BLAS available offline):
+//! Householder QR, one-sided Jacobi SVD, and randomized SVD — the tools
+//! behind every spectral analysis in the paper (Figs. 1–5, 8) and the
+//! Rust-side mirror of the decomposition the training graph performs.
+
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use qr::{householder_qr, QrResult};
+pub use rsvd::randomized_svd;
+pub use svd::{jacobi_svd, SvdResult};

@@ -1,0 +1,149 @@
+//! Thin Householder QR: A (m×n, m ≥ n) = Q (m×n) · R (n×n upper).
+//!
+//! Used by the randomized SVD range finder and as the orthonormalisation
+//! oracle in property tests for the graph-side CholeskyQR2.
+
+use crate::tensor::Matrix;
+
+pub struct QrResult {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder QR with column-wise reflector application.
+pub fn householder_qr(a: &Matrix) -> QrResult {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin QR requires m >= n (got {m}x{n})");
+    let mut r = a.clone();
+    // Store reflectors v_k in a workspace matrix (m x n).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build reflector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let x = r.at(i, k);
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m];
+        let akk = r.at(k, k);
+        let alpha = if akk >= 0.0 { -norm } else { norm };
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        v[k] = akk - alpha;
+        for i in (k + 1)..m {
+            v[i] = r.at(i, k);
+        }
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * r.at(i, j);
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= c * v[i];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * q.at(i, j);
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= c * v[i];
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of R's top block and truncate.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r.at(i, j);
+        }
+    }
+    QrResult { q, r: r_out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn ortho_err(q: &Matrix) -> f64 {
+        let qtq = q.transpose().matmul(q);
+        let mut err: f64 = 0.0;
+        for i in 0..qtq.rows {
+            for j in 0..qtq.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                err = err.max((qtq.at(i, j) - want).abs());
+            }
+        }
+        err
+    }
+
+    #[test]
+    fn qr_reconstructs_and_is_orthonormal() {
+        let mut rng = Rng::new(0);
+        for (m, n) in [(8, 8), (40, 12), (100, 3)] {
+            let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+            let QrResult { q, r } = householder_qr(&a);
+            assert!(ortho_err(&q) < 1e-10, "{m}x{n} ortho");
+            let rec = q.matmul(&r);
+            let err = rec.sub(&a).frob_norm() / a.frob_norm();
+            assert!(err < 1e-12, "{m}x{n} recon {err}");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(&mut rng, 20, 6, 1.0);
+        let QrResult { r, .. } = householder_qr(&a);
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // Two identical columns — QR must not produce NaNs.
+        let mut rng = Rng::new(5);
+        let base = Matrix::gaussian(&mut rng, 30, 1, 1.0);
+        let mut a = Matrix::zeros(30, 2);
+        for i in 0..30 {
+            a[(i, 0)] = base.at(i, 0);
+            a[(i, 1)] = base.at(i, 0);
+        }
+        let QrResult { q, r } = householder_qr(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        let rec = q.matmul(&r);
+        assert!(rec.sub(&a).frob_norm() < 1e-10);
+    }
+}

@@ -1,0 +1,202 @@
+//! One-sided Jacobi SVD (Hestenes): A = U Σ Vᵀ with singular values in
+//! descending order.  O(mn²) per sweep; converges in a handful of sweeps
+//! for the ≤512² matrices the analysis benches decompose.  All the
+//! paper's spectral measurements (elbow fractions, alignment, relative
+//! σ error under quantization, singular-vector cosines) run through this.
+
+use crate::tensor::Matrix;
+
+pub struct SvdResult {
+    /// m×r left singular vectors (columns).
+    pub u: Matrix,
+    /// r singular values, descending.
+    pub s: Vec<f64>,
+    /// n×r right singular vectors (columns).
+    pub v: Matrix,
+}
+
+impl SvdResult {
+    /// Rank-k reconstruction Σᵢ σᵢ uᵢ vᵢᵀ for i < k.
+    pub fn reconstruct(&self, k: usize) -> Matrix {
+        let k = k.min(self.s.len());
+        let (m, n) = (self.u.rows, self.v.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..k {
+            let si = self.s[i];
+            for r in 0..m {
+                let ur = self.u.at(r, i) * si;
+                if ur == 0.0 {
+                    continue;
+                }
+                for c in 0..n {
+                    out[(r, c)] += ur * self.v.at(c, i);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One-sided Jacobi on columns of W (work = A, or Aᵀ when m < n, so the
+/// rotated side is always the wide set of columns).
+pub fn jacobi_svd(a: &Matrix) -> SvdResult {
+    let transposed = a.rows < a.cols;
+    let w = if transposed { a.transpose() } else { a.clone() };
+    let (m, n) = (w.rows, w.cols);
+
+    // Column-major working copy for cache-friendly column rotations.
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| w.col(j)).collect();
+    let mut v = Matrix::eye(n);
+
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = cols[p][i];
+                    let xq = cols[q][i];
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols
+        .iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let r = n.min(m);
+    let mut u = Matrix::zeros(m, r);
+    let mut vv = Matrix::zeros(n, r);
+    let mut s = Vec::with_capacity(r);
+    for (out_i, &ci) in order.iter().take(r).enumerate() {
+        let norm = norms[ci];
+        s.push(norm);
+        if norm > 0.0 {
+            for i in 0..m {
+                u[(i, out_i)] = cols[ci][i] / norm;
+            }
+        }
+        for i in 0..n {
+            vv[(i, out_i)] = v.at(i, ci);
+        }
+    }
+
+    if transposed {
+        SvdResult { u: vv, s, v: u }
+    } else {
+        SvdResult { u, s, v: vv }
+    }
+}
+
+/// Singular values only (convenience).
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    jacobi_svd(a).s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn make_with_spectrum(rng: &mut Rng, m: usize, n: usize, s: &[f64]) -> Matrix {
+        // A = Q1 diag(s) Q2ᵀ from random orthonormal factors.
+        let r = s.len();
+        let q1 = crate::linalg::householder_qr(&Matrix::gaussian(rng, m, r, 1.0)).q;
+        let q2 = crate::linalg::householder_qr(&Matrix::gaussian(rng, n, r, 1.0)).q;
+        q1.scale_cols(s).matmul(&q2.transpose())
+    }
+
+    #[test]
+    fn recovers_planted_spectrum() {
+        let mut rng = Rng::new(0);
+        let planted = vec![10.0, 5.0, 2.0, 1.0, 0.5, 0.1];
+        let a = make_with_spectrum(&mut rng, 40, 20, &planted);
+        let svd = jacobi_svd(&a);
+        for (got, want) in svd.s.iter().zip(&planted) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // trailing values ~ 0
+        assert!(svd.s[6..].iter().all(|&x| x < 1e-9));
+    }
+
+    #[test]
+    fn full_reconstruction() {
+        let mut rng = Rng::new(1);
+        for (m, n) in [(12, 12), (30, 10), (10, 30)] {
+            let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+            let svd = jacobi_svd(&a);
+            let rec = svd.reconstruct(m.min(n));
+            let err = rec.sub(&a).frob_norm() / a.frob_norm();
+            assert!(err < 1e-10, "{m}x{n}: {err}");
+        }
+    }
+
+    #[test]
+    fn descending_order_and_orthonormal_factors() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(&mut rng, 25, 15, 1.0);
+        let svd = jacobi_svd(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        for f in [&svd.u, &svd.v] {
+            let g = f.transpose().matmul(f);
+            for i in 0..g.rows {
+                for j in 0..g.cols {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((g.at(i, j) - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eckart_young_best_rank_k() {
+        // ‖A - A_k‖_F² == Σ_{i>k} σᵢ² for the SVD truncation.
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(&mut rng, 20, 16, 1.0);
+        let svd = jacobi_svd(&a);
+        let k = 5;
+        let err = svd.reconstruct(k).sub(&a).frob_norm();
+        let tail: f64 = svd.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - tail).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let svd = jacobi_svd(&Matrix::zeros(5, 3));
+        assert!(svd.s.iter().all(|&x| x == 0.0));
+    }
+}

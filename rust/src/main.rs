@@ -1,0 +1,225 @@
+//! `metis` — leader entrypoint / CLI for the Metis reproduction.
+//!
+//! Python runs only at build time (`make artifacts`); this binary is the
+//! entire request path: it loads HLO-text artifacts through PJRT, drives
+//! training/evaluation, and runs the paper's analyses.
+
+use anyhow::{bail, Result};
+
+use metis::cli::{artifacts_flag, Args, USAGE};
+use metis::coordinator::{eval_downstream, ExperimentConfig, Trainer};
+use metis::data::tasks::ALL_TASKS;
+use metis::formats::{self, Format};
+use metis::linalg::{householder_qr, jacobi_svd};
+use metis::runtime::Engine;
+use metis::spectral;
+use metis::tensor::Matrix;
+use metis::util::prng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(String::as_str) {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("quant") => cmd_quant(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_flag(args))?;
+    println!("metis {} — PJRT platform: {}", metis::version(),
+             engine.client.platform_name());
+    println!("\nmodels:");
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "  {name:<6} vocab={:<5} d={:<4} layers={} heads={} seq={} (~{}k params)",
+            m.vocab, m.d_model, m.n_layer, m.n_head, m.seq_len, m.params / 1000
+        );
+    }
+    println!("\nquantization modes: {}", engine.manifest.modes.join(", "));
+    println!("\nartifacts ({}):", engine.manifest.artifacts.len());
+    for (name, a) in &engine.manifest.artifacts {
+        println!("  {:<44} kind={:<10} inputs={}", name, a.kind, a.inputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(m) = args.flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(m) = args.flags.get("mode") {
+        cfg.mode = m.clone();
+    }
+    cfg.steps = args.usize("steps", cfg.steps)?;
+    cfg.lr = args.f64("lr", cfg.lr)?;
+    cfg.warmup = args.usize("warmup", cfg.warmup)?;
+    cfg.seed = args.usize("seed", cfg.seed as usize)? as u64;
+    cfg.eval_every = args.usize("eval-every", cfg.eval_every)?;
+    cfg.checkpoint_every = args.usize("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.out_dir = args.str("out", &cfg.out_dir);
+    cfg.name = args.str("name", &cfg.name);
+    cfg.downstream = cfg.downstream || args.switch("downstream");
+    cfg.artifacts = artifacts_flag(args);
+    cfg.validate()?;
+
+    let engine = Engine::new(&cfg.artifacts)?;
+    println!(
+        "training {}/{} for {} steps (lr {:.2e}, warmup {})",
+        cfg.model, cfg.mode, cfg.steps, cfg.lr, cfg.warmup
+    );
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    let result = trainer.train()?;
+    println!(
+        "done: final train loss {:.4}, test loss {:.4}, {:.0} ms/step (p95 {:.0}), compile {:.1}s{}",
+        result.final_train_loss(),
+        result.test_loss,
+        result.step_ms_mean,
+        result.step_ms_p95,
+        result.compile_ms / 1e3,
+        if result.diverged { "  [DIVERGED]" } else { "" }
+    );
+    let ckpt = trainer.checkpoint(result.losses.len())?;
+    println!("checkpoint: {}", ckpt.display());
+
+    if cfg.downstream && !result.diverged {
+        println!("\ndownstream probes:");
+        let res = eval_downstream(
+            &engine,
+            &cfg.model,
+            &cfg.mode,
+            trainer.params(),
+            cfg.corpus_seed,
+            &ALL_TASKS,
+        )?;
+        for r in res {
+            println!("  {:<7} acc {:.1}%", r.task.name(), 100.0 * r.accuracy);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_flag(args))?;
+    let model = args.req("model")?;
+    let mode = args.req("mode")?;
+    let ckpt = args.req("ckpt")?;
+
+    // Load checkpointed params in manifest order.
+    let key = format!("{model}__{mode}");
+    let pset = engine.manifest.param_set(&key)?.clone();
+    let params: Vec<_> = pset
+        .names
+        .iter()
+        .map(|n| {
+            let arr = metis::util::npy::read_npy(
+                std::path::Path::new(&ckpt).join(format!("{n}.npy")),
+            )?;
+            Ok(metis::runtime::HostValue::from_npy(&arr))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.clone();
+    cfg.mode = mode.clone();
+    cfg.artifacts = artifacts_flag(args);
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    trainer.state[..params.len()].clone_from_slice(&params);
+    let loss = trainer.eval_loss(8)?;
+    println!("test loss: {loss:.4}");
+
+    if args.switch("downstream") {
+        for r in eval_downstream(&engine, &model, &mode, trainer.params(),
+                                 cfg.corpus_seed, &ALL_TASKS)? {
+            println!("  {:<7} acc {:.1}%", r.task.name(), 100.0 * r.accuracy);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let path = args.req("npy")?;
+    let w = Matrix::load_npy(&path)?;
+    let svd = jacobi_svd(&w);
+    let (k_star, frac) = spectral::elbow_fraction(&svd.s);
+    let (var, bound, actual) = spectral::popoviciu_check(&w, &svd.s);
+    println!("matrix {}x{} from {path}", w.rows, w.cols);
+    println!("  σ head: {:?}", &svd.s[..svd.s.len().min(8)]);
+    println!("  elbow k* = {k_star} (fraction {:.2}%)", 100.0 * frac);
+    println!(
+        "  energy: top-1% {:.1}%, top-10% {:.1}%, participation ratio {:.1}",
+        100.0 * spectral::energy_fraction(&svd.s, (svd.s.len() / 100).max(1)),
+        100.0 * spectral::energy_fraction(&svd.s, (svd.s.len() / 10).max(1)),
+        spectral::participation_ratio(&svd.s)
+    );
+    println!(
+        "  Var(W) {var:.3e}; Popoviciu range ≥ {bound:.3e}; actual range {actual:.3e}"
+    );
+    for fmt in [Format::Mxfp4, Format::Nvfp4, Format::Fp8] {
+        let q = formats::quantize_matrix_along(fmt, &w, 0);
+        let st = formats::blockq::quant_stats(&w, &q);
+        println!(
+            "  {:<6} rel-err {:.4}  underflow {:.2}%  small-decile err {:.3} vs large {:.3}",
+            fmt.name(),
+            st.rel_frob_err,
+            100.0 * st.underflow_frac,
+            st.decile_rel_err[0],
+            st.decile_rel_err[9]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quant(args: &Args) -> Result<()> {
+    let fmt = Format::from_name(&args.str("fmt", "mxfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+    let rows = args.usize("rows", 128)?;
+    let cols = args.usize("cols", 128)?;
+    let mut rng = Rng::new(0);
+    // Anisotropic demo matrix: power-law spectrum (the paper's setting).
+    let r = rows.min(cols);
+    let s: Vec<f64> = (1..=r).map(|i| 10.0 * (i as f64).powf(-1.2)).collect();
+    let q1 = householder_qr(&Matrix::gaussian(&mut rng, rows, r, 1.0)).q;
+    let q2 = householder_qr(&Matrix::gaussian(&mut rng, cols, r, 1.0)).q;
+    let w = q1.scale_cols(&s).matmul(&q2.transpose());
+
+    let q = formats::quantize_matrix_along(fmt, &w, 0);
+    let st = formats::blockq::quant_stats(&w, &q);
+    println!("{} on {rows}x{cols} anisotropic matrix:", fmt.name());
+    println!("  relative Frobenius error : {:.4}", st.rel_frob_err);
+    println!("  underflow (clip-to-zero) : {:.2}%", 100.0 * st.underflow_frac);
+    println!("  per-decile relative error (small → large magnitudes):");
+    for (i, e) in st.decile_rel_err.iter().enumerate() {
+        println!("    decile {i}: {e:.4}");
+    }
+    let s1 = jacobi_svd(&w).s;
+    let s2 = jacobi_svd(&q).s;
+    let errs = spectral::sigma_rel_errors(&s1, &s2);
+    println!(
+        "  σ rel-err: top {:.4}  median {:.4}  tail {:.4}  (Fig. 4B shape)",
+        errs[0],
+        errs[errs.len() / 2],
+        errs[errs.len() - 2]
+    );
+    Ok(())
+}

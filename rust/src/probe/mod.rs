@@ -1,0 +1,259 @@
+//! Linear probes: multinomial logistic regression on frozen features.
+//!
+//! The downstream evaluation harness (Tables 1–3, 5): features come from
+//! the `features` artifact (mean-pooled final hidden states of the
+//! trained, quantized model); the probe measures how much task-relevant
+//! structure the quantized pretraining preserved.  Deterministic
+//! full-batch gradient descent with L2 — no randomness, so accuracy
+//! differences across quantization modes are attributable to the models.
+
+#[cfg(test)]
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 300,
+            lr: 0.5,
+            l2: 1e-3,
+        }
+    }
+}
+
+/// Multinomial logistic regression: W (C×D) + b (C).
+pub struct Probe {
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+    pub classes: usize,
+    pub dim: usize,
+}
+
+fn softmax_row(logits: &mut [f64]) {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for l in logits.iter_mut() {
+        *l = (*l - m).exp();
+        z += *l;
+    }
+    for l in logits.iter_mut() {
+        *l /= z;
+    }
+}
+
+impl Probe {
+    /// Train on (features, labels); features row-major (n × dim),
+    /// standardized internally (mean/std from train set only).
+    pub fn train(
+        feats: &[f32],
+        labels: &[usize],
+        dim: usize,
+        classes: usize,
+        cfg: &ProbeConfig,
+    ) -> (Probe, Normalizer) {
+        let n = labels.len();
+        assert_eq!(feats.len(), n * dim);
+        let norm = Normalizer::fit(feats, n, dim);
+        let x = norm.apply(feats);
+
+        let mut w = vec![0.0f64; classes * dim];
+        let mut b = vec![0.0f64; classes];
+        let inv_n = 1.0 / n as f64;
+
+        for _ in 0..cfg.epochs {
+            let mut gw = vec![0.0f64; classes * dim];
+            let mut gb = vec![0.0f64; classes];
+            for i in 0..n {
+                let xi = &x[i * dim..(i + 1) * dim];
+                let mut logits: Vec<f64> = (0..classes)
+                    .map(|c| {
+                        b[c] + w[c * dim..(c + 1) * dim]
+                            .iter()
+                            .zip(xi)
+                            .map(|(wj, &xj)| wj * xj)
+                            .sum::<f64>()
+                    })
+                    .collect();
+                softmax_row(&mut logits);
+                for c in 0..classes {
+                    let err = logits[c] - if c == labels[i] { 1.0 } else { 0.0 };
+                    gb[c] += err;
+                    let gwr = &mut gw[c * dim..(c + 1) * dim];
+                    for (g, &xj) in gwr.iter_mut().zip(xi) {
+                        *g += err * xj;
+                    }
+                }
+            }
+            for c in 0..classes {
+                b[c] -= cfg.lr * gb[c] * inv_n;
+                for j in 0..dim {
+                    let idx = c * dim + j;
+                    w[idx] -= cfg.lr * (gw[idx] * inv_n + cfg.l2 * w[idx]);
+                }
+            }
+        }
+        (
+            Probe {
+                w,
+                b,
+                classes,
+                dim,
+            },
+            norm,
+        )
+    }
+
+    pub fn predict(&self, xi: &[f64]) -> usize {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for c in 0..self.classes {
+            let score: f64 = self.b[c]
+                + self.w[c * self.dim..(c + 1) * self.dim]
+                    .iter()
+                    .zip(xi)
+                    .map(|(wj, &xj)| wj * xj)
+                    .sum::<f64>();
+            if score > best.1 {
+                best = (c, score);
+            }
+        }
+        best.0
+    }
+
+    pub fn accuracy(&self, norm: &Normalizer, feats: &[f32], labels: &[usize]) -> f64 {
+        let n = labels.len();
+        let x = norm.apply(feats);
+        let mut correct = 0;
+        for i in 0..n {
+            if self.predict(&x[i * self.dim..(i + 1) * self.dim]) == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Feature standardizer fitted on the training set.
+pub struct Normalizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Normalizer {
+    pub fn fit(feats: &[f32], n: usize, dim: usize) -> Normalizer {
+        let mut mean = vec![0.0f64; dim];
+        for i in 0..n {
+            for j in 0..dim {
+                mean[j] += feats[i * dim + j] as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut std = vec![0.0f64; dim];
+        for i in 0..n {
+            for j in 0..dim {
+                let d = feats[i * dim + j] as f64 - mean[j];
+                std[j] += d * d;
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / n as f64).sqrt().max(1e-8);
+        }
+        Normalizer { mean, std }
+    }
+
+    pub fn apply(&self, feats: &[f32]) -> Vec<f64> {
+        let dim = self.mean.len();
+        feats
+            .chunks(dim)
+            .flat_map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(j, &x)| (x as f64 - self.mean[j]) / self.std[j])
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Gaussian blobs with *shared* class centers, split train/test.
+    fn blobs(
+        n_train: usize,
+        n_test: usize,
+        dim: usize,
+        classes: usize,
+        spread: f64,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<usize>, Vec<f32>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f64>> = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.gauss() * 3.0).collect())
+            .collect();
+        let mut gen = |n: usize| {
+            let mut feats = Vec::new();
+            let mut labels = Vec::new();
+            for c in 0..classes {
+                for _ in 0..n {
+                    for j in 0..dim {
+                        feats.push((centers[c][j] + rng.gauss() * spread) as f32);
+                    }
+                    labels.push(c);
+                }
+            }
+            (feats, labels)
+        };
+        let (xtr, ytr) = gen(n_train);
+        let (xte, yte) = gen(n_test);
+        (xtr, ytr, xte, yte)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let (xtr, ytr, xte, yte) = blobs(100, 50, 8, 3, 0.5, 0);
+        let (p, norm) = Probe::train(&xtr, &ytr, 8, 3, &ProbeConfig::default());
+        assert!(p.accuracy(&norm, &xte, &yte) > 0.95);
+    }
+
+    #[test]
+    fn noise_near_chance() {
+        let mut rng = Rng::new(2);
+        let n = 400;
+        let dim = 8;
+        let feats: Vec<f32> = (0..n * dim).map(|_| rng.gauss() as f32).collect();
+        let labels: Vec<usize> = (0..n).map(|_| rng.usize(2)).collect();
+        let (p, norm) = Probe::train(&feats, &labels, dim, 2, &ProbeConfig::default());
+        let (xe, ye): (Vec<f32>, Vec<usize>) = {
+            let f: Vec<f32> = (0..n * dim).map(|_| rng.gauss() as f32).collect();
+            let l: Vec<usize> = (0..n).map(|_| rng.usize(2)).collect();
+            (f, l)
+        };
+        let acc = p.accuracy(&norm, &xe, &ye);
+        assert!((0.35..0.65).contains(&acc), "acc {acc}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x, y, _, _) = blobs(50, 1, 4, 2, 1.0, 3);
+        let (p1, _) = Probe::train(&x, &y, 4, 2, &ProbeConfig::default());
+        let (p2, _) = Probe::train(&x, &y, 4, 2, &ProbeConfig::default());
+        assert_eq!(p1.w, p2.w);
+    }
+
+    #[test]
+    fn harder_overlap_degrades_gracefully() {
+        let (xtr, ytr, xte, yte) = blobs(150, 75, 6, 2, 4.0, 4);
+        let (p, norm) = Probe::train(&xtr, &ytr, 6, 2, &ProbeConfig::default());
+        let acc = p.accuracy(&norm, &xte, &yte);
+        assert!(acc > 0.6 && acc < 1.0, "acc {acc}");
+    }
+}

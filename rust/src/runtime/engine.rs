@@ -1,0 +1,245 @@
+//! The PJRT execution engine: compile-once / run-many over HLO text
+//! artifacts, plus host↔literal marshaling helpers.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! ≥ 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::util::npy::{self, NpyArray, NpyData};
+
+/// Host-side tensor value: shape + typed data, bridging npy blobs,
+/// `tensor::Matrix` and PJRT literals.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_i32(v: i32) -> Self {
+        HostValue::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } => shape,
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 host value"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 host value"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.f32s()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elems", d.len());
+        }
+        Ok(d[0])
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostValue::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    shape,
+                    bytes,
+                )?)
+            }
+            HostValue::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32,
+                    shape,
+                    bytes,
+                )?)
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<HostValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostValue::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            ElementType::S32 => Ok(HostValue::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            t => bail!("unsupported literal element type {t:?}"),
+        }
+    }
+
+    pub fn from_npy(arr: &NpyArray) -> HostValue {
+        match &arr.data {
+            NpyData::I32(v) => HostValue::I32 {
+                shape: arr.shape.clone(),
+                data: v.clone(),
+            },
+            NpyData::I64(v) => HostValue::I32 {
+                shape: arr.shape.clone(),
+                data: v.iter().map(|&x| x as i32).collect(),
+            },
+            _ => HostValue::F32 {
+                shape: arr.shape.clone(),
+                data: arr.to_f32(),
+            },
+        }
+    }
+
+    pub fn to_npy(&self) -> NpyArray {
+        match self {
+            HostValue::F32 { shape, data } => NpyArray::f32(shape.clone(), data.clone()),
+            HostValue::I32 { shape, data } => NpyArray::i32(shape.clone(), data.clone()),
+        }
+    }
+}
+
+/// Compile-once execution engine with an executable cache.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute an artifact with host inputs, returning host outputs
+    /// (the exported graphs return one tuple; it is decomposed here).
+    /// Generic over `Borrow` so hot loops can pass references and avoid
+    /// cloning multi-MB parameter vectors every step.
+    pub fn run<H: std::borrow::Borrow<HostValue>>(
+        &self,
+        name: &str,
+        inputs: &[H],
+    ) -> Result<Vec<HostValue>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.load(name)?;
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|h| h.borrow().to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs of {name}: {e:?}"))?;
+        let parts = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple outputs of {name}: {e:?}"))?;
+        parts.iter().map(HostValue::from_literal).collect()
+    }
+
+    fn check_inputs<H: std::borrow::Borrow<HostValue>>(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[H],
+    ) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (io, h)) in spec.inputs.iter().zip(inputs).enumerate() {
+            let h = h.borrow();
+            if io.shape != h.shape() {
+                bail!(
+                    "{} input #{i} ({}): shape {:?} != manifest {:?}",
+                    spec.name,
+                    io.name,
+                    h.shape(),
+                    io.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a parameter set (npy blobs) in manifest order.
+    pub fn load_params(&self, params_key: &str) -> Result<Vec<HostValue>> {
+        let pset = self.manifest.param_set(params_key)?.clone();
+        let dir = self.manifest.param_dir(params_key)?;
+        pset.names
+            .iter()
+            .map(|n| {
+                let arr = npy::read_npy(dir.join(format!("{n}.npy")))
+                    .with_context(|| format!("param {n}"))?;
+                Ok(HostValue::from_npy(&arr))
+            })
+            .collect()
+    }
+}

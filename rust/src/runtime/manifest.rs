@@ -1,0 +1,175 @@
+//! Parsed form of `artifacts/manifest.json` — the build-time contract
+//! between aot.py and the Rust coordinator.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32" | ...
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub mode: Option<String>,
+    pub batch: Option<usize>,
+    pub params_key: Option<String>,
+    pub inputs: Vec<IoSpec>,
+    pub output_names: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub dir: String,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub seq_len: usize,
+    pub params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, ParamSet>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub modes: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr()? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|io| {
+                    Ok(IoSpec {
+                        name: io.req("name")?.as_str()?.to_string(),
+                        dtype: io.req("dtype")?.as_str()?.to_string(),
+                        shape: io.req("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let spec = ArtifactSpec {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                kind: a.req("kind")?.as_str()?.to_string(),
+                model: a.get("model").and_then(|v| v.as_str().ok()).map(String::from),
+                mode: a.get("mode").and_then(|v| v.as_str().ok()).map(String::from),
+                batch: a.get("batch").and_then(|v| v.as_usize().ok()),
+                params_key: a
+                    .get("params_key")
+                    .and_then(|v| v.as_str().ok())
+                    .map(String::from),
+                inputs,
+                output_names: a.req("output_names")?.str_vec()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        let mut params = BTreeMap::new();
+        for (key, p) in j.req("params")?.as_obj()? {
+            params.insert(
+                key.clone(),
+                ParamSet {
+                    dir: p.req("dir")?.as_str()?.to_string(),
+                    names: p.req("names")?.str_vec()?,
+                    shapes: p
+                        .req("shapes")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| s.usize_vec())
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (key, m) in j.req("models")?.as_obj()? {
+            models.insert(
+                key.clone(),
+                ModelInfo {
+                    vocab: m.req("vocab")?.as_usize()?,
+                    d_model: m.req("d_model")?.as_usize()?,
+                    n_layer: m.req("n_layer")?.as_usize()?,
+                    n_head: m.req("n_head")?.as_usize()?,
+                    seq_len: m.req("seq_len")?.as_usize()?,
+                    params: m.req("params")?.as_usize()?,
+                },
+            );
+        }
+
+        let modes = j
+            .req("modes")?
+            .as_obj()?
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+
+        Ok(Manifest {
+            root,
+            artifacts,
+            params,
+            models,
+            modes,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    /// Canonical artifact name for a model/mode/kind triple.
+    pub fn name_for(&self, kind: &str, model: &str, mode: &str, batch: usize) -> String {
+        format!("{kind}__{model}__{mode}__b{batch}")
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.root.join(&spec.file)
+    }
+
+    pub fn param_set(&self, key: &str) -> Result<&ParamSet> {
+        self.params
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown param set {key:?}"))
+    }
+
+    pub fn param_dir(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.root.join(&self.param_set(key)?.dir))
+    }
+}

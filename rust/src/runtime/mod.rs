@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! `Engine` owns the PJRT CPU client and an executable cache; `Manifest`
+//! is the parsed `artifacts/manifest.json` contract (names, dtypes,
+//! shapes of every artifact's I/O, parameter blob directories).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostValue};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};

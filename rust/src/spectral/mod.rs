@@ -1,0 +1,243 @@
+//! Spectral analysis toolkit — the measurements behind the paper's §2
+//! analysis and Figs. 1–5/8:
+//!
+//! * elbow index / elbow fraction of a singular spectrum (Fig. 1),
+//! * gradient singular alignment aᵢ = uᵢᵀ G vᵢ (Fig. 2),
+//! * spectral energy → variance → Popoviciu range bound (§2.2),
+//! * quantization impact on the spectrum: relative σ error and singular
+//!   vector cosine preservation (Fig. 4 B/C),
+//! * isotropy metrics for factor matrices (Fig. 8 / Appendix A).
+
+use crate::linalg::{jacobi_svd, SvdResult};
+use crate::tensor::Matrix;
+
+/// Elbow index k*: point of maximum curvature of the normalized spectrum
+/// (i/r, σᵢ/σ₁), via discrete second differences.  Returns (k*, k*/r).
+pub fn elbow_fraction(s: &[f64]) -> (usize, f64) {
+    let r = s.len();
+    if r < 3 || s[0] <= 0.0 {
+        return (0, 0.0);
+    }
+    let y: Vec<f64> = s.iter().map(|&x| x / s[0]).collect();
+    let dx = 1.0 / (r - 1) as f64;
+    let mut best = (1usize, f64::NEG_INFINITY);
+    for i in 1..r - 1 {
+        let d1 = (y[i + 1] - y[i - 1]) / (2.0 * dx);
+        let d2 = (y[i + 1] - 2.0 * y[i] + y[i - 1]) / (dx * dx);
+        let kappa = d2.abs() / (1.0 + d1 * d1).powf(1.5);
+        if kappa > best.1 {
+            best = (i, kappa);
+        }
+    }
+    (best.0, best.0 as f64 / r as f64)
+}
+
+/// Fraction of spectral energy (Σσᵢ²) in the top-k values.
+pub fn energy_fraction(s: &[f64], k: usize) -> f64 {
+    let total: f64 = s.iter().map(|x| x * x).sum();
+    let top: f64 = s.iter().take(k).map(|x| x * x).sum();
+    if total > 0.0 {
+        top / total
+    } else {
+        0.0
+    }
+}
+
+/// Smallest k whose top-k energy fraction reaches `frac` (e.g. 0.9).
+pub fn rank_for_energy(s: &[f64], frac: f64) -> usize {
+    let total: f64 = s.iter().map(|x| x * x).sum();
+    let mut acc = 0.0;
+    for (i, &x) in s.iter().enumerate() {
+        acc += x * x;
+        if acc >= frac * total {
+            return i + 1;
+        }
+    }
+    s.len()
+}
+
+/// Participation ratio (Σσᵢ²)² / Σσᵢ⁴ — effective number of active
+/// directions; small PR ⇔ anisotropic.
+pub fn participation_ratio(s: &[f64]) -> f64 {
+    let e2: f64 = s.iter().map(|x| x * x).sum();
+    let e4: f64 = s.iter().map(|x| x.powi(4)).sum();
+    if e4 > 0.0 {
+        e2 * e2 / e4
+    } else {
+        0.0
+    }
+}
+
+/// Gradient singular alignment aᵢ = uᵢᵀ G vᵢ for each singular triplet of
+/// W (paper Fig. 2: |aᵢ| ≈ per-step change of σᵢ to first order).
+pub fn gradient_alignment(w_svd: &SvdResult, g: &Matrix) -> Vec<f64> {
+    let r = w_svd.s.len();
+    let mut out = Vec::with_capacity(r);
+    for i in 0..r {
+        // u_iᵀ G v_i
+        let mut gv = vec![0.0; g.rows];
+        for row in 0..g.rows {
+            let mut acc = 0.0;
+            for col in 0..g.cols {
+                acc += g.at(row, col) * w_svd.v.at(col, i);
+            }
+            gv[row] = acc;
+        }
+        let mut a = 0.0;
+        for row in 0..g.rows {
+            a += w_svd.u.at(row, i) * gv[row];
+        }
+        out.push(a);
+    }
+    out
+}
+
+/// §2.2 quantities: Var(W) = Σσᵢ²/(mn) − μ² and the Popoviciu lower bound
+/// range(W) ≥ 2√Var(W); returns (variance_from_spectrum, bound, actual).
+pub fn popoviciu_check(w: &Matrix, s: &[f64]) -> (f64, f64, f64) {
+    let mn = (w.rows * w.cols) as f64;
+    let mu = w.mean();
+    let var = s.iter().map(|x| x * x).sum::<f64>() / mn - mu * mu;
+    (var, 2.0 * var.max(0.0).sqrt(), w.value_range())
+}
+
+/// Fig. 4B: per-index relative singular value error |σ'ᵢ − σᵢ| / σᵢ.
+pub fn sigma_rel_errors(orig: &[f64], quant: &[f64]) -> Vec<f64> {
+    orig.iter()
+        .zip(quant)
+        .map(|(&a, &b)| if a > 0.0 { (b - a).abs() / a } else { 0.0 })
+        .collect()
+}
+
+/// Fig. 4C: |cos| between corresponding left singular vectors.
+pub fn singular_vector_cosines(u1: &Matrix, u2: &Matrix) -> Vec<f64> {
+    let r = u1.cols.min(u2.cols);
+    let mut out = Vec::with_capacity(r);
+    for i in 0..r {
+        let mut dot = 0.0;
+        let mut n1 = 0.0;
+        let mut n2 = 0.0;
+        for row in 0..u1.rows {
+            let a = u1.at(row, i);
+            let b = u2.at(row, i);
+            dot += a * b;
+            n1 += a * a;
+            n2 += b * b;
+        }
+        out.push(dot.abs() / (n1.sqrt() * n2.sqrt()).max(1e-300));
+    }
+    out
+}
+
+/// Isotropy report for a matrix (Fig. 8): spectrum participation ratio
+/// normalized by rank, value range, and σ₁/σ_med contrast.
+#[derive(Clone, Debug)]
+pub struct IsotropyReport {
+    pub participation: f64,
+    pub participation_norm: f64,
+    pub value_range: f64,
+    pub sigma_contrast: f64,
+}
+
+pub fn isotropy_report(a: &Matrix) -> IsotropyReport {
+    let s = jacobi_svd(a).s;
+    let pr = participation_ratio(&s);
+    let med = s[s.len() / 2].max(1e-300);
+    IsotropyReport {
+        participation: pr,
+        participation_norm: pr / s.len() as f64,
+        value_range: a.value_range(),
+        sigma_contrast: s[0] / med,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder_qr;
+    use crate::util::prng::Rng;
+
+    fn planted(rng: &mut Rng, m: usize, n: usize, s: &[f64]) -> Matrix {
+        let q1 = householder_qr(&Matrix::gaussian(rng, m, s.len(), 1.0)).q;
+        let q2 = householder_qr(&Matrix::gaussian(rng, n, s.len(), 1.0)).q;
+        q1.scale_cols(s).matmul(&q2.transpose())
+    }
+
+    #[test]
+    fn elbow_finds_planted_knee() {
+        // Spectrum: steep drop over the first 5 of 100, flat tail.
+        let mut s: Vec<f64> = (0..100)
+            .map(|i| if i < 5 { 100.0 / (1 << i) as f64 } else { 1.0 })
+            .collect();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let (k, f) = elbow_fraction(&s);
+        assert!((1..=8).contains(&k), "elbow at {k}");
+        assert!(f < 0.1);
+    }
+
+    #[test]
+    fn energy_and_rank() {
+        let s = vec![10.0, 1.0, 1.0, 1.0];
+        assert!(energy_fraction(&s, 1) > 0.97);
+        assert_eq!(rank_for_energy(&s, 0.9), 1);
+        assert_eq!(rank_for_energy(&s, 0.999), 4);
+    }
+
+    #[test]
+    fn participation_ratio_extremes() {
+        assert!((participation_ratio(&[1.0, 1.0, 1.0, 1.0]) - 4.0).abs() < 1e-12);
+        assert!((participation_ratio(&[5.0, 0.0, 0.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alignment_matches_first_order_sigma_change() {
+        // σᵢ(W − ηG) ≈ σᵢ(W) − η aᵢ  (matrix perturbation, §2.1)
+        let mut rng = Rng::new(0);
+        let w = planted(&mut rng, 24, 16, &[8.0, 4.0, 2.0, 1.0, 0.5]);
+        let g = Matrix::gaussian(&mut rng, 24, 16, 0.1);
+        let svd_w = jacobi_svd(&w);
+        let a = gradient_alignment(&svd_w, &g);
+        let eta = 1e-5;
+        let w2 = w.sub(&g.scale(eta));
+        let s2 = jacobi_svd(&w2).s;
+        for i in 0..5 {
+            let predicted = svd_w.s[i] - eta * a[i];
+            assert!(
+                (s2[i] - predicted).abs() < 1e-8,
+                "σ{i}: {} vs {}",
+                s2[i],
+                predicted
+            );
+        }
+    }
+
+    #[test]
+    fn popoviciu_bound_holds() {
+        let mut rng = Rng::new(1);
+        let w = planted(&mut rng, 30, 30, &[20.0, 5.0, 2.0, 1.0, 1.0, 0.5]);
+        let s = jacobi_svd(&w).s;
+        let (var, bound, actual) = popoviciu_check(&w, &s);
+        assert!(var > 0.0);
+        assert!(actual >= bound, "range {actual} < bound {bound}");
+    }
+
+    #[test]
+    fn cosines_of_identical_factors_are_one() {
+        let mut rng = Rng::new(2);
+        let q = householder_qr(&Matrix::gaussian(&mut rng, 20, 5, 1.0)).q;
+        let cos = singular_vector_cosines(&q, &q);
+        assert!(cos.iter().all(|&c| (c - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn isotropy_gaussian_vs_anisotropic() {
+        let mut rng = Rng::new(3);
+        let iso = Matrix::gaussian(&mut rng, 48, 48, 1.0);
+        let spectrum: Vec<f64> = (1..=48).map(|i| 50.0 * (i as f64).powf(-2.0)).collect();
+        let aniso = planted(&mut rng, 48, 48, &spectrum);
+        let ri = isotropy_report(&iso);
+        let ra = isotropy_report(&aniso);
+        assert!(ri.participation_norm > 2.0 * ra.participation_norm);
+        assert!(ra.sigma_contrast > ri.sigma_contrast);
+    }
+}

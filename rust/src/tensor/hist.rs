@@ -1,0 +1,127 @@
+//! Histograms for the paper's distribution analyses (Figs. 3–5):
+//! linear-bin histograms plus the log-log magnitude histograms used to
+//! visualise heavy tails, and summary shape statistics (kurtosis, tail
+//! mass) that the benches report as numbers instead of plots.
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub edges: Vec<f64>,
+    pub counts: Vec<usize>,
+    pub total: usize,
+}
+
+impl Histogram {
+    /// Linear histogram over [lo, hi] with `bins` bins.
+    pub fn linear(values: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        let mut counts = vec![0usize; bins];
+        let w = (hi - lo) / bins as f64;
+        for &v in values {
+            if v.is_finite() && v >= lo && v < hi {
+                counts[((v - lo) / w) as usize] += 1;
+            } else if v == hi {
+                counts[bins - 1] += 1;
+            }
+        }
+        let edges = (0..=bins).map(|i| lo + w * i as f64).collect();
+        Self {
+            edges,
+            counts,
+            total: values.len(),
+        }
+    }
+
+    /// Log-magnitude histogram: bins |v| into `bins` decades-spaced bins
+    /// between 10^lo_exp and 10^hi_exp (zeros counted separately by caller).
+    pub fn log_magnitude(values: &[f64], lo_exp: f64, hi_exp: f64, bins: usize) -> Self {
+        let mut counts = vec![0usize; bins];
+        let w = (hi_exp - lo_exp) / bins as f64;
+        for &v in values {
+            let a = v.abs();
+            if a > 0.0 && a.is_finite() {
+                let e = a.log10();
+                if e >= lo_exp && e < hi_exp {
+                    counts[((e - lo_exp) / w) as usize] += 1;
+                }
+            }
+        }
+        let edges = (0..=bins).map(|i| 10f64.powf(lo_exp + w * i as f64)).collect();
+        Self {
+            edges,
+            counts,
+            total: values.len(),
+        }
+    }
+
+    pub fn fraction(&self, bin: usize) -> f64 {
+        self.counts[bin] as f64 / self.total.max(1) as f64
+    }
+
+    /// Render as sparse "edge: count" lines for bench reports.
+    pub fn to_rows(&self) -> Vec<(f64, usize)> {
+        self.edges
+            .iter()
+            .zip(self.counts.iter())
+            .map(|(&e, &c)| (e, c))
+            .collect()
+    }
+}
+
+/// Excess kurtosis — heavy-tail indicator the paper's wide-distribution
+/// argument predicts grows with anisotropy.
+pub fn kurtosis(values: &[f64]) -> f64 {
+    let n = values.len() as f64;
+    let mu = values.iter().sum::<f64>() / n;
+    let m2 = values.iter().map(|v| (v - mu).powi(2)).sum::<f64>() / n;
+    let m4 = values.iter().map(|v| (v - mu).powi(4)).sum::<f64>() / n;
+    m4 / (m2 * m2) - 3.0
+}
+
+/// Fraction of entries with |v| below `thresh` — the small-value mass
+/// that block quantization clips (Fig. 4A).
+pub fn small_value_fraction(values: &[f64], thresh: f64) -> f64 {
+    let n = values.len().max(1) as f64;
+    values.iter().filter(|v| v.abs() < thresh).count() as f64 / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn linear_hist_counts() {
+        let vals = vec![0.1, 0.2, 0.55, 0.9, 1.0];
+        let h = Histogram::linear(&vals, 0.0, 1.0, 2);
+        assert_eq!(h.counts, vec![2, 3]);
+    }
+
+    #[test]
+    fn log_hist_places_decades() {
+        let vals = vec![1e-3, 1e-2, 1e-1, 0.0];
+        let h = Histogram::log_magnitude(&vals, -4.0, 0.0, 4);
+        assert_eq!(h.counts, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn gaussian_kurtosis_near_zero() {
+        let mut rng = Rng::new(0);
+        let vals: Vec<f64> = (0..50_000).map(|_| rng.gauss()).collect();
+        assert!(kurtosis(&vals).abs() < 0.15);
+    }
+
+    #[test]
+    fn heavy_tail_has_positive_kurtosis() {
+        let mut rng = Rng::new(1);
+        // Mixture: mostly small, occasional large — a crude heavy tail.
+        let vals: Vec<f64> = (0..50_000)
+            .map(|i| {
+                if i % 100 == 0 {
+                    rng.gauss() * 20.0
+                } else {
+                    rng.gauss() * 0.5
+                }
+            })
+            .collect();
+        assert!(kurtosis(&vals) > 5.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Dense matrix substrate: row-major f64 matrices with the operations the
+//! spectral analysis, quantizers and probes need.  f64 storage keeps the
+//! SVD/QR numerics honest; conversion helpers bridge to the f32 world of
+//! artifacts and npy blobs.
+
+pub mod hist;
+
+use crate::util::npy::{self, NpyArray};
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn gaussian(rng: &mut Rng, rows: usize, cols: usize, std: f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for x in m.data.iter_mut() {
+            *x = rng.gauss() * std;
+        }
+        m
+    }
+
+    // -- accessors -----------------------------------------------------------
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn min_dim(&self) -> usize {
+        self.rows.min(self.cols)
+    }
+
+    // -- basic ops -----------------------------------------------------------
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// C = A·B with k-blocked inner loops (cache-friendly ikj order).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a_ip = self.data[i * k + p];
+                if a_ip == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += a_ip * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for x in out.data.iter_mut() {
+            *x *= s;
+        }
+        out
+    }
+
+    pub fn add(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (x, y) in out.data.iter_mut().zip(&b.data) {
+            *x += y;
+        }
+        out
+    }
+
+    pub fn sub(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (x, y) in out.data.iter_mut().zip(&b.data) {
+            *x -= y;
+        }
+        out
+    }
+
+    /// Scale column j by s[j] (diag right-multiply).
+    pub fn scale_cols(&self, s: &[f64]) -> Matrix {
+        assert_eq!(s.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(r, c)] *= s[c];
+            }
+        }
+        out
+    }
+
+    // -- statistics -----------------------------------------------------------
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn variance(&self) -> f64 {
+        let mu = self.mean();
+        self.data.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// max - min of the entries (the "range" of Popoviciu's inequality).
+    pub fn value_range(&self) -> f64 {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in &self.data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        hi - lo
+    }
+
+    // -- IO --------------------------------------------------------------------
+
+    pub fn to_npy(&self) -> NpyArray {
+        NpyArray::f32(
+            vec![self.rows, self.cols],
+            self.data.iter().map(|&x| x as f32).collect(),
+        )
+    }
+
+    pub fn save_npy(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        npy::write_npy(path, &self.to_npy())
+    }
+
+    pub fn load_npy(path: impl AsRef<std::path::Path>) -> Result<Matrix> {
+        let arr = npy::read_npy(path)?;
+        let (rows, cols) = match arr.shape.len() {
+            1 => (1, arr.shape[0]),
+            2 => (arr.shape[0], arr.shape[1]),
+            n => bail!("expected 1-D/2-D npy, got {n}-D"),
+        };
+        Ok(Matrix::from_f32(rows, cols, &arr.to_f32()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::gaussian(&mut rng, 7, 3, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(&mut rng, 4, 4, 1.0);
+        let i = Matrix::eye(4);
+        let prod = a.matmul(&i);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn variance_and_range() {
+        let a = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((a.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(a.value_range(), 3.0);
+        // Popoviciu: range >= 2 sqrt(var)
+        assert!(a.value_range() >= 2.0 * a.variance().sqrt());
+    }
+
+    #[test]
+    fn npy_roundtrip() {
+        let dir = std::env::temp_dir().join("metis_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.npy");
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(&mut rng, 5, 6, 2.0);
+        a.save_npy(&p).unwrap();
+        let b = Matrix::load_npy(&p).unwrap();
+        assert_eq!((b.rows, b.cols), (5, 6));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6); // f32 roundtrip
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Foundational substrates built from scratch (offline environment:
+//! only `xla` + `anyhow` are vendorable — see DESIGN.md §7).
+
+pub mod json;
+pub mod npy;
+pub mod prng;
+pub mod timer;
+pub mod toml;

@@ -1,0 +1,266 @@
+//! Minimal `.npy` (numpy v1.0 format) reader/writer.
+//!
+//! Handles the dtypes this project exchanges with the build path:
+//! little-endian f32/f64/i32/i64, C-order.  Used for parameter blobs
+//! written by aot.py/initpack.py, Rust-side checkpoints and analysis
+//! dumps consumed by the bench harness.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+#[derive(Clone, Debug)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: NpyData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: NpyData::I32(data),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 regardless of storage (copies on dtype mismatch).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn descr(&self) -> &'static str {
+        match self.data {
+            NpyData::F32(_) => "<f4",
+            NpyData::F64(_) => "<f8",
+            NpyData::I32(_) => "<i4",
+            NpyData::I64(_) => "<i8",
+        }
+    }
+}
+
+pub fn read_npy(path: impl AsRef<Path>) -> Result<NpyArray> {
+    let mut f = File::open(path.as_ref())
+        .map_err(|e| anyhow!("open {}: {e}", path.as_ref().display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("not an npy file: {}", path.as_ref().display());
+    }
+    let major = magic[6];
+    let header_len = if major == 1 {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header)?;
+
+    let descr = extract_quoted(&header, "descr")
+        .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran-order npy unsupported");
+    }
+    let shape = extract_shape(&header)?;
+    let count: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+
+    let data = match descr.as_str() {
+        "<f4" | "|f4" => NpyData::F32(bytes_to_vec::<4, f32>(&raw, count, f32::from_le_bytes)?),
+        "<f8" => NpyData::F64(bytes_to_vec::<8, f64>(&raw, count, f64::from_le_bytes)?),
+        "<i4" => NpyData::I32(bytes_to_vec::<4, i32>(&raw, count, i32::from_le_bytes)?),
+        "<i8" => NpyData::I64(bytes_to_vec::<8, i64>(&raw, count, i64::from_le_bytes)?),
+        d => bail!("unsupported npy dtype {d:?}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        arr.descr(),
+        shape_str
+    );
+    // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = File::create(path.as_ref())
+        .map_err(|e| anyhow!("create {}: {e}", path.as_ref().display()))?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    match &arr.data {
+        NpyData::F32(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
+        NpyData::F64(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
+        NpyData::I32(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
+        NpyData::I64(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
+    }
+    Ok(())
+}
+
+fn write_raw<T: Copy, const N: usize>(
+    f: &mut File,
+    v: &[T],
+    to_bytes: impl Fn(T) -> [u8; N],
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(v.len() * N);
+    for &x in v {
+        buf.extend_from_slice(&to_bytes(x));
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn bytes_to_vec<const N: usize, T>(
+    raw: &[u8],
+    count: usize,
+    from: impl Fn([u8; N]) -> T,
+) -> Result<Vec<T>> {
+    if raw.len() < count * N {
+        bail!("npy payload too short: {} < {}", raw.len(), count * N);
+    }
+    Ok(raw[..count * N]
+        .chunks_exact(N)
+        .map(|c| from(c.try_into().unwrap()))
+        .collect())
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header
+        .find("'shape':")
+        .ok_or_else(|| anyhow!("npy header missing shape"))?
+        + "'shape':".len();
+    let rest = header[at..].trim_start();
+    let open = rest
+        .find('(')
+        .ok_or_else(|| anyhow!("bad shape in npy header"))?;
+    let close = rest
+        .find(')')
+        .ok_or_else(|| anyhow!("bad shape in npy header"))?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if !part.is_empty() {
+            shape.push(part.parse::<usize>()?);
+        }
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_2d() {
+        let dir = std::env::temp_dir().join("metis_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let arr = NpyArray::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, -6.5]);
+        write_npy(&p, &arr).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.to_f32(), arr.to_f32());
+    }
+
+    #[test]
+    fn roundtrip_scalar_and_1d() {
+        let dir = std::env::temp_dir().join("metis_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (shape, n) in [(vec![], 1usize), (vec![5], 5)] {
+            let p = dir.join(format!("s{}.npy", shape.len()));
+            let arr = NpyArray::i32(shape.clone(), (0..n as i32).collect());
+            write_npy(&p, &arr).unwrap();
+            let back = read_npy(&p).unwrap();
+            assert_eq!(back.shape, shape);
+        }
+    }
+
+    #[test]
+    fn reads_numpy_written_file() {
+        // Golden bytes produced by numpy 2.x: np.save of arange(4, f4).
+        // Header layout differs slightly (version padding) — construct the
+        // canonical numpy header to guard parser assumptions.
+        let header =
+            "{'descr': '<f4', 'fortran_order': False, 'shape': (4,), }".to_string();
+        let unpadded = 10 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        let full = format!("{}{}\n", header, " ".repeat(pad));
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend_from_slice(&(full.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(full.as_bytes());
+        for x in [0f32, 1.0, 2.0, 3.0] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("metis_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("golden.npy");
+        std::fs::write(&p, &bytes).unwrap();
+        let arr = read_npy(&p).unwrap();
+        assert_eq!(arr.shape, vec![4]);
+        assert_eq!(arr.to_f32(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supports: `[section]` / `[a.b]` tables, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays of those; `#` comments.
+//! That covers every config this project ships (configs/*.toml).  Values
+//! are exposed through dotted-path lookups: `cfg.get("train.steps")`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header {raw:?}", ln + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            let key = line[..eq].trim();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("read {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, dotted: &str) -> Option<&TomlValue> {
+        self.values.get(dotted)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok().map(String::from))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let end = inner
+            .rfind('"')
+            .ok_or_else(|| anyhow!("unterminated string {s:?}"))?;
+        return Ok(TomlValue::Str(inner[..end].replace("\\n", "\n")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array {s:?}"))?;
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split on commas not inside quotes (arrays are flat; no nesting needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+name = "fp4 run"
+[train]
+steps = 200
+lr = 3e-4
+resume = false
+[data]
+zipf = 1.2
+tasks = ["cola", "sst2"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fp4 run");
+        assert_eq!(doc.i64_or("train.steps", 0), 200);
+        assert!((doc.f64_or("train.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(!doc.bool_or("train.resume", true));
+        match doc.get("data.tasks").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn comments_and_underscored_ints() {
+        let doc = TomlDoc::parse("a = 1_000 # one thousand\nb = \"x # y\"").unwrap();
+        assert_eq!(doc.i64_or("a", 0), 1000);
+        assert_eq!(doc.str_or("b", ""), "x # y");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = @@").is_err());
+    }
+}

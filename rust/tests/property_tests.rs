@@ -1,0 +1,245 @@
+//! Property-based tests over the Rust substrates (hand-rolled harness —
+//! proptest is not vendorable offline).  Each property runs many random
+//! cases from a deterministic PRNG; failure messages carry the seed.
+
+use metis::formats::{self, codecs, Format};
+use metis::linalg::{householder_qr, jacobi_svd, randomized_svd};
+use metis::spectral;
+use metis::tensor::Matrix;
+use metis::util::json::Json;
+use metis::util::npy::{read_npy, write_npy, NpyArray};
+use metis::util::prng::Rng;
+
+const P_SEED: u64 = 0x9E3779B97F4A7C15;
+
+fn seed(s: u64) -> Rng {
+    Rng::new(P_SEED ^ s)
+}
+
+// -- formats ------------------------------------------------------------------
+
+#[test]
+fn prop_fp4_always_on_grid_and_nearest() {
+    let grid = codecs::fp4_grid();
+    for s in 0..2000u64 {
+        let mut rng = seed(s);
+        let x = (rng.f32() - 0.5) * 16.0;
+        let q = codecs::fp4_e2m1(x);
+        assert!(grid.contains(&q.abs()), "fp4({x}) = {q}");
+        let xc = x.clamp(-6.0, 6.0);
+        let best = grid
+            .iter()
+            .flat_map(|&g| [g, -g])
+            .map(|g| (g - xc).abs())
+            .fold(f32::INFINITY, f32::min);
+        assert!((q - xc).abs() <= best + 1e-6, "fp4({x}) = {q} not nearest");
+    }
+}
+
+#[test]
+fn prop_fp8_monotone() {
+    // Quantization must preserve ordering (monotone non-decreasing).
+    for s in 0..500u64 {
+        let mut rng = seed(s);
+        let a = (rng.f32() - 0.5) * 1000.0;
+        let b = (rng.f32() - 0.5) * 1000.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(codecs::fp8_e4m3(lo) <= codecs::fp8_e4m3(hi));
+    }
+}
+
+#[test]
+fn prop_block_quant_scale_invariance_mx() {
+    // MXFP4 uses power-of-two scales: quantizing 2^k·x == 2^k·quantize(x).
+    for s in 0..200u64 {
+        let mut rng = seed(s);
+        let xs: Vec<f32> = (0..32).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let k = (rng.below(9) as i32) - 4;
+        let factor = (k as f32).exp2();
+        let scaled: Vec<f32> = xs.iter().map(|x| x * factor).collect();
+        let q1 = formats::quantize_block(Format::Mxfp4, &xs);
+        let q2 = formats::quantize_block(Format::Mxfp4, &scaled);
+        for (a, b) in q1.iter().zip(&q2) {
+            let expect = a * factor;
+            assert!(
+                (b - expect).abs() <= 1e-6 * expect.abs().max(1e-3),
+                "scale invariance broke: {a} {b} k={k} seed {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quant_never_increases_amax_much() {
+    for s in 0..200u64 {
+        let mut rng = seed(s);
+        let n = 16 + rng.usize(200);
+        let xs: Vec<f32> = (0..n).map(|_| rng.gauss_f32(0.0, 3.0)).collect();
+        for fmt in [Format::Mxfp4, Format::Nvfp4, Format::Fp8] {
+            let q = formats::quantize_block(fmt, &xs);
+            let amax_x = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let amax_q = q.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            // Worst overshoot: value just above a grid midpoint rounds up
+            // (e.g. amax/s = 5.01 → 6, ratio 1.198) — bound is 6/5.
+            assert!(
+                amax_q <= amax_x * 1.2 + 1e-6,
+                "{}: amax grew {amax_x} -> {amax_q} (seed {s})",
+                fmt.name()
+            );
+        }
+    }
+}
+
+// -- linalg ---------------------------------------------------------------------
+
+#[test]
+fn prop_svd_reconstructs_random_shapes() {
+    for s in 0..30u64 {
+        let mut rng = seed(s);
+        let m = 3 + rng.usize(30);
+        let n = 3 + rng.usize(30);
+        let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+        let svd = jacobi_svd(&a);
+        let err = svd.reconstruct(m.min(n)).sub(&a).frob_norm() / a.frob_norm();
+        assert!(err < 1e-9, "{m}x{n}: {err}");
+    }
+}
+
+#[test]
+fn prop_svd_frobenius_identity() {
+    // ‖A‖_F² == Σσᵢ² (rotation invariance).
+    for s in 0..30u64 {
+        let mut rng = seed(s);
+        let (m, n) = (5 + rng.usize(20), 5 + rng.usize(20));
+        let a = Matrix::gaussian(&mut rng, m, n, 2.0);
+        let svd = jacobi_svd(&a);
+        let sum: f64 = svd.s.iter().map(|x| x * x).sum();
+        let f2 = a.frob_norm().powi(2);
+        assert!((sum - f2).abs() / f2 < 1e-10);
+    }
+}
+
+#[test]
+fn prop_rsvd_captures_planted_energy() {
+    for s in 0..15u64 {
+        let mut rng = seed(s);
+        let (m, n, k) = (30 + rng.usize(40), 20 + rng.usize(30), 4);
+        let r = m.min(n);
+        let spectrum: Vec<f64> = (1..=r).map(|i| 20.0 * (i as f64).powf(-2.0)).collect();
+        let q1 = householder_qr(&Matrix::gaussian(&mut rng, m, r, 1.0)).q;
+        let q2 = householder_qr(&Matrix::gaussian(&mut rng, n, r, 1.0)).q;
+        let a = q1.scale_cols(&spectrum).matmul(&q2.transpose());
+        let approx = randomized_svd(&a, k, 8, 2, &mut rng);
+        for i in 0..k {
+            let rel = (approx.s[i] - spectrum[i]).abs() / spectrum[i];
+            assert!(
+                rel < 1e-4,
+                "seed {s} σ{i}: {} vs {}",
+                approx.s[i],
+                spectrum[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quantization_bias_hits_small_singulars_harder() {
+    // The Fig. 4B property as a statistical invariant over random
+    // anisotropic matrices: mean relative σ error of the bottom half of
+    // the spectrum exceeds the top-3 mean in almost all draws.
+    let mut worse = 0;
+    let total = 10u64;
+    for s in 0..total {
+        let mut rng = seed(s);
+        let (m, n) = (48, 48);
+        let spectrum: Vec<f64> = (1..=n).map(|i| 30.0 * (i as f64).powf(-1.5)).collect();
+        let q1 = householder_qr(&Matrix::gaussian(&mut rng, m, n, 1.0)).q;
+        let q2 = householder_qr(&Matrix::gaussian(&mut rng, n, n, 1.0)).q;
+        let a = q1.scale_cols(&spectrum).matmul(&q2.transpose());
+        let q = formats::quantize_matrix_along(Format::Mxfp4, &a, 0);
+        let s1 = jacobi_svd(&a).s;
+        let s2 = jacobi_svd(&q).s;
+        let errs = spectral::sigma_rel_errors(&s1, &s2);
+        let top: f64 = errs[..3].iter().sum::<f64>() / 3.0;
+        let tail: f64 = errs[n / 2..].iter().sum::<f64>() / (n - n / 2) as f64;
+        if tail > top {
+            worse += 1;
+        }
+    }
+    assert!(worse >= 8, "tail errors larger in only {worse}/{total} cases");
+}
+
+// -- util ------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.gauss() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+            4 => Json::Arr(
+                (0..rng.usize(4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.usize(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for s in 0..200u64 {
+        let mut rng = seed(s);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {s}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {s}");
+    }
+}
+
+#[test]
+fn prop_npy_roundtrip_random_shapes() {
+    let dir = std::env::temp_dir().join("metis_prop_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    for s in 0..40u64 {
+        let mut rng = seed(s);
+        let ndim = 1 + rng.usize(3);
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.usize(8)).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.gauss_f32(0.0, 10.0)).collect();
+        let arr = NpyArray::f32(shape.clone(), data.clone());
+        let p = dir.join(format!("p{s}.npy"));
+        write_npy(&p, &arr).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.shape, shape);
+        assert_eq!(back.to_f32(), data);
+    }
+}
+
+#[test]
+fn prop_elbow_fraction_bounded() {
+    for s in 0..50u64 {
+        let mut rng = seed(s);
+        let r = 10 + rng.usize(200);
+        let mut spec: Vec<f64> = (0..r).map(|_| rng.f64() * 10.0 + 1e-6).collect();
+        spec.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let (k, f) = spectral::elbow_fraction(&spec);
+        assert!(k < r);
+        assert!((0.0..1.0).contains(&f));
+    }
+}
+
+#[test]
+fn prop_popoviciu_holds_for_random_matrices() {
+    for s in 0..30u64 {
+        let mut rng = seed(s);
+        let (m, n) = (10 + rng.usize(30), 10 + rng.usize(30));
+        let a = Matrix::gaussian(&mut rng, m, n, 1.5);
+        let svd = jacobi_svd(&a);
+        let (_, bound, actual) = spectral::popoviciu_check(&a, &svd.s);
+        assert!(actual >= bound - 1e-9, "seed {s}: {actual} < {bound}");
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration: the AOT bridge end-to-end — manifest → HLO text →
+//! PJRT compile → execute — against the nano artifacts built by
+//! `make artifacts` (skipped with a notice if artifacts are missing).
+//!
+//! Also the cross-language bit-exactness check: the Pallas quantizer
+//! artifact vs the Rust `formats` implementation on the same inputs.
+
+use metis::formats::{self, Format};
+use metis::runtime::{Engine, HostValue};
+use metis::util::prng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn quantizer_artifact_matches_rust_codecs() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(7);
+    let data: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let input = HostValue::F32 {
+        shape: vec![256, 256],
+        data: data.clone(),
+    };
+    for (name, fmt) in [
+        ("quantize__mxfp4__256x256", Format::Mxfp4),
+        ("quantize__nvfp4__256x256", Format::Nvfp4),
+        ("quantize__fp8__256x256", Format::Fp8),
+    ] {
+        let out = eng.run(name, &[input.clone()]).expect(name);
+        let got = out[0].f32s().unwrap();
+        // Rust mirror: blocks along rows (the kernel's lane axis).
+        let mut want = Vec::with_capacity(data.len());
+        for row in data.chunks(256) {
+            want.extend(formats::quantize_block(fmt, row));
+        }
+        // Near-bit-exact: XLA may rewrite x/s into x·rcp(s) (1-ulp scale
+        // roundoff) and libm log2 can differ at razor-edge binade
+        // boundaries — tolerate 1-ulp-scale deviations, forbid real ones.
+        let mut mismatches = 0usize;
+        let mut max_err = 0f32;
+        for (&a, &b) in got.iter().zip(&want) {
+            let tol = 1e-5 * a.abs().max(b.abs()).max(1.0);
+            if (a - b).abs() > tol {
+                mismatches += 1;
+                max_err = max_err.max((a - b).abs());
+            }
+        }
+        let frac = mismatches as f64 / data.len() as f64;
+        assert!(
+            frac < 1e-4,
+            "{name}: {mismatches} mismatches ({frac:.2e}), max {max_err}"
+        );
+    }
+}
+
+#[test]
+fn qgemm_artifact_matches_quantized_matmul() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(8);
+    let x: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 0.1)).collect();
+    let hx = HostValue::F32 {
+        shape: vec![256, 256],
+        data: x.clone(),
+    };
+    let hw = HostValue::F32 {
+        shape: vec![256, 256],
+        data: w.clone(),
+    };
+    let out = eng
+        .run("qgemm__nvfp4__256", &[hx, hw])
+        .expect("qgemm artifact");
+    let y = out[0].f32s().unwrap();
+
+    // Rust reference: quantize x along rows, w along cols, then matmul.
+    use metis::tensor::Matrix;
+    let xm = Matrix::from_f32(256, 256, &x);
+    let wm = Matrix::from_f32(256, 256, &w);
+    let xq = formats::quantize_matrix_along(Format::Nvfp4, &xm, 1);
+    let wq = formats::quantize_matrix_along(Format::Nvfp4, &wm, 0);
+    let want = xq.matmul(&wq);
+
+    let mut max_rel = 0f64;
+    for (i, &got) in y.iter().enumerate() {
+        let w_ = want.data[i];
+        let rel = ((got as f64) - w_).abs() / w_.abs().max(1.0);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-3, "qgemm max rel err {max_rel}");
+}
+
+#[test]
+fn nano_train_step_runs_and_learns() {
+    let Some(eng) = engine() else { return };
+    let name = "train_step__nano__nvfp4_metis__b8";
+    let spec = eng.manifest.artifact(name).expect("spec").clone();
+    let params_key = spec.params_key.clone().unwrap();
+    let params = eng.load_params(&params_key).expect("params");
+    let n = params.len();
+
+    // m/v zero states shaped like params.
+    let zeros: Vec<HostValue> = params
+        .iter()
+        .map(|p| HostValue::F32 {
+            shape: p.shape().to_vec(),
+            data: vec![0.0; p.shape().iter().product()],
+        })
+        .collect();
+
+    let batch = spec.batch.unwrap();
+    let seq = eng.manifest.models["nano"].seq_len;
+    let vocab = eng.manifest.models["nano"].vocab as i32;
+    let mut rng = Rng::new(0);
+
+    let mut state: Vec<HostValue> = params
+        .iter()
+        .chain(zeros.iter())
+        .chain(zeros.iter())
+        .cloned()
+        .collect();
+
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..40 {
+        // Learnable pattern: arithmetic token sequences.
+        let mut toks = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let start = rng.below(vocab as u64) as i32;
+            for t in 0..=seq {
+                toks.push((start + 3 * t as i32).rem_euclid(vocab));
+            }
+        }
+        let mut inputs = state.clone();
+        inputs.push(HostValue::I32 {
+            shape: vec![batch, seq + 1],
+            data: toks,
+        });
+        inputs.push(HostValue::scalar_i32(step));
+        inputs.push(HostValue::scalar_i32(42));
+        // short warmup, as the coordinator's schedule would provide
+        let lr = 1e-2 * (step as f32 / 5.0).min(1.0);
+        inputs.push(HostValue::scalar_f32(lr));
+        let outs = eng.run(name, &inputs).expect("train step");
+        assert_eq!(outs.len(), 3 * n + 2);
+        let loss = outs[3 * n].scalar().unwrap();
+        assert!(loss.is_finite(), "step {step} loss {loss}");
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        state = outs[..3 * n].to_vec();
+    }
+    assert!(
+        last < first * 0.8,
+        "loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn decompose_artifact_invariants() {
+    // Regression guard for the old-XLA while-loop miscompilation (see
+    // python linalg.jacobi_eigh docstring): exact mathematical
+    // invariants of D = P diag(t) Qᵀ + resid, checked on the runtime
+    // the Rust coordinator actually uses.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let d: Vec<f32> = (0..256 * 96).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let om: Vec<f32> = (0..96 * 10).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let outs = eng
+        .run(
+            "decompose__256x96",
+            &[
+                HostValue::F32 {
+                    shape: vec![256, 96],
+                    data: d.clone(),
+                },
+                HostValue::F32 {
+                    shape: vec![96, 10],
+                    data: om,
+                },
+            ],
+        )
+        .expect("decompose artifact");
+    use metis::tensor::Matrix;
+    let p = Matrix::from_f32(256, 10, outs[0].f32s().unwrap());
+    let t = outs[1].f32s().unwrap();
+    let qt = Matrix::from_f32(10, 96, outs[2].f32s().unwrap());
+    let resid = Matrix::from_f32(256, 96, outs[3].f32s().unwrap());
+    let dm = Matrix::from_f32(256, 96, &d);
+
+    // (1) exact reconstruction: P diag(t) Qᵀ + resid == D
+    let tv: Vec<f64> = t.iter().map(|&x| x as f64).collect();
+    let rec = p.scale_cols(&tv).matmul(&qt).add(&resid);
+    let err = rec.sub(&dm).frob_norm() / dm.frob_norm();
+    assert!(err < 1e-5, "reconstruction err {err}");
+
+    // (2) P orthonormal
+    let ptp = p.transpose().matmul(&p);
+    for i in 0..10 {
+        for j in 0..10 {
+            let want = if i == j { 1.0 } else { 0.0 };
+            assert!((ptp.at(i, j) - want).abs() < 1e-4, "PᵀP[{i},{j}]");
+        }
+    }
+
+    // (3) Qᵀ rows unit norm; (4) resid ⊥ P; (5) Σt² == ‖D−resid‖²_F
+    for i in 0..10 {
+        let n: f64 = qt.row(i).iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((n - 1.0).abs() < 1e-4, "qt row {i} norm {n}");
+    }
+    let pr = p.transpose().matmul(&resid);
+    assert!(pr.abs_max() < 1e-4, "resid not orthogonal: {}", pr.abs_max());
+    let t2: f64 = tv.iter().map(|x| x * x).sum();
+    let low = dm.sub(&resid).frob_norm().powi(2);
+    assert!(
+        ((t2 - low) / low).abs() < 1e-4,
+        "energy mismatch {t2} vs {low}"
+    );
+}
+
+#[test]
+fn eval_and_features_artifacts_run() {
+    let Some(eng) = engine() else { return };
+    let params = eng.load_params("nano__fp32").expect("params");
+    let batch = 8;
+    let seq = eng.manifest.models["nano"].seq_len;
+
+    let mut inputs = params.clone();
+    inputs.push(HostValue::I32 {
+        shape: vec![batch, seq + 1],
+        data: vec![1; batch * (seq + 1)],
+    });
+    let outs = eng
+        .run("eval_loss__nano__fp32__b8", &inputs)
+        .expect("eval");
+    assert!(outs[0].scalar().unwrap().is_finite());
+
+    let mut inputs = params.clone();
+    inputs.push(HostValue::I32 {
+        shape: vec![batch, seq],
+        data: vec![1; batch * seq],
+    });
+    let outs = eng
+        .run("features__nano__fp32__b8", &inputs)
+        .expect("features");
+    let d = eng.manifest.models["nano"].d_model;
+    assert_eq!(outs[0].shape(), &[batch, d]);
+}
