@@ -1,0 +1,88 @@
+//! Quickstart for the pure-Rust Metis engine (no artifacts needed):
+//! split an anisotropic weight matrix (Eq. 3), quantize each
+//! sub-distribution (Eq. 5), split a synthetic gradient (Eq. 6) with
+//! the §3.2 adaptive spectral LR, then sweep a small synthetic model
+//! through the layer-sharded pipeline.
+//!
+//! Run: `cargo run --release --example metis_quantize [-- --fmt mxfp4
+//!       --strategy sparse_sample --threads 4]`
+
+use anyhow::Result;
+use metis::cli::Args;
+use metis::formats::Format;
+use metis::linalg::jacobi_svd;
+use metis::metis::{
+    gradient_split, pipeline, quantizer, weight_split, DecompStrategy, MetisQuantConfig,
+    PipelineConfig,
+};
+use metis::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let fmt = Format::from_name(&args.str("fmt", "nvfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --strategy"))?;
+    let threads = args.usize("threads", 4)?;
+    let mut rng = Rng::new(0);
+
+    // --- 1. Eq. 3 split + Eq. 5 sub-distribution quantization ------------
+    let w = pipeline::planted_powerlaw(&mut rng, 128, 96, 1.5);
+    let split = weight_split(&w, 12, strategy, &mut rng);
+    println!(
+        "W 128x96: σ₁ {:.3}, split k=12 residual carries {:.1}% of ‖W‖",
+        split.svd.s[0],
+        100.0 * split.residual.frob_norm() / w.frob_norm()
+    );
+    let reference = jacobi_svd(&w).s;
+    let metis_q = quantizer::quantize_split(&split, fmt);
+    let direct_q = quantizer::quantize_direct(&w, fmt);
+    let (sig_m, tail_m) = quantizer::sigma_distortion(&reference, &metis_q);
+    let (sig_d, tail_d) = quantizer::sigma_distortion(&reference, &direct_q);
+    println!(
+        "{}: σ-distortion metis {:.4} (tail {:.4}) vs direct {:.4} (tail {:.4})",
+        fmt.name(),
+        sig_m,
+        tail_m,
+        sig_d,
+        tail_d
+    );
+
+    // --- 2. Eq. 6 gradient split + §3.2 adaptive spectral LR -------------
+    let d = pipeline::planted_powerlaw(&mut rng, 64, 96, 1.5).scale(1e-4);
+    let dec = gradient_split(&d, 8, 1, true, &mut rng);
+    let rec_err = dec.reconstruct(false).sub(&d).frob_norm() / d.frob_norm();
+    println!(
+        "\ngradient split j=8: exact reconstruction err {rec_err:.2e}; \
+         t̃/t amplification head→tail: {:.2} → {:.2}",
+        dec.t_adapt[0] / dec.t[0].max(1e-300),
+        dec.t_adapt[7] / dec.t[7].max(1e-300)
+    );
+
+    // --- 3. Layer-sharded pipeline over a synthetic model ----------------
+    let cfg = PipelineConfig {
+        quant: MetisQuantConfig {
+            fmt,
+            strategy,
+            rho: 0.1,
+            max_rank: 32,
+        },
+        threads,
+        measure_sigma: true,
+        sigma_dim_cap: 128,
+        seed: 0,
+    };
+    let res = pipeline::run(pipeline::synthetic_model(2, 48, 0), &cfg)?;
+    let (m, dd) = res.mean_sigma_err();
+    println!(
+        "\npipeline: {} layers in {:.0} ms on {} threads; mean σ-distortion {:.4} vs {:.4} direct",
+        res.reports.len(),
+        res.wall_ms,
+        res.threads,
+        m,
+        dd
+    );
+    println!("\nmetis_quantize OK");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! §Perf — the Metis engine benches EXPERIMENTS.md §Perf tracks:
+//!
+//! 1. decomposition strategy cost: Full Jacobi SVD vs RSVD vs
+//!    SparseSample vs RandomProject at matched top-k σ accuracy
+//!    (acceptance bar: SparseSample ≥ 5× cheaper than Full at
+//!    < 1e-2 relative top-k σ error);
+//! 2. layer-sharded pipeline throughput: 1 thread vs N threads
+//!    (acceptance bar: ≥ 2× at 4 threads on a 4-core host);
+//! 3. sub-distribution quantization quality per format (the Fig. 5
+//!    σ-distortion claim, all four formats).
+//!
+//! Pure Rust — no artifacts or PJRT needed.
+
+use metis::bench::{fmt_f, fmt_ratio, reports_dir, time_fn, Table};
+use metis::formats::Format;
+use metis::linalg::{jacobi_svd, svd::singular_values};
+use metis::metis::{
+    decompose, pipeline, quantizer, weight_split, DecompStrategy, MetisQuantConfig,
+    PipelineConfig,
+};
+use metis::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. decomposition strategy cost/accuracy -------------------------
+    let mut rng = Rng::new(0);
+    let (m, n, k) = (256, 256, 16);
+    let a = pipeline::planted_powerlaw(&mut rng, m, n, 1.5);
+    let exact = singular_values(&a);
+
+    let mut t1 = Table::new(
+        &format!("decomposition strategies ({m}x{n}, k={k}, power-law 1.5)"),
+        &["strategy", "mean ms", "speedup vs full", "max top-k σ rel err"],
+    );
+    let mut full_ms = f64::NAN;
+    for strat in DecompStrategy::ALL {
+        let iters = if strat == DecompStrategy::Full { 2 } else { 5 };
+        let st = time_fn(1, iters, || {
+            let mut r = Rng::new(1);
+            std::hint::black_box(decompose(&a, k, strat, &mut r));
+        });
+        let mut r = Rng::new(1);
+        let got = decompose(&a, k, strat, &mut r);
+        let max_rel = got
+            .s
+            .iter()
+            .zip(&exact)
+            .map(|(g, e)| (g - e).abs() / e)
+            .fold(0.0f64, f64::max);
+        if strat == DecompStrategy::Full {
+            full_ms = st.mean();
+        }
+        t1.row(vec![
+            strat.name().to_string(),
+            fmt_f(st.mean(), 1),
+            fmt_ratio(full_ms, st.mean()),
+            format!("{max_rel:.2e}"),
+        ]);
+    }
+    t1.print();
+
+    // --- 2. pipeline throughput: threads scaling -------------------------
+    let n_threads_avail = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let mut t2 = Table::new(
+        "layer-sharded pipeline throughput (synthetic 3x96 model, sparse_sample)",
+        &["threads", "wall ms", "layers/s", "speedup vs 1"],
+    );
+    let quant = MetisQuantConfig {
+        fmt: Format::Nvfp4,
+        strategy: DecompStrategy::SparseSample,
+        rho: 0.1,
+        max_rank: 32,
+    };
+    let mut base_ms = f64::NAN;
+    let mut thread_counts = vec![1usize, 2, 4];
+    if n_threads_avail > 4 {
+        thread_counts.push(n_threads_avail);
+    }
+    for threads in thread_counts {
+        let cfg = PipelineConfig {
+            quant,
+            threads,
+            measure_sigma: true,
+            sigma_dim_cap: 256,
+            seed: 0,
+        };
+        let res = pipeline::run(pipeline::synthetic_model(3, 96, 0), &cfg)?;
+        if threads == 1 {
+            base_ms = res.wall_ms;
+        }
+        t2.row(vec![
+            threads.to_string(),
+            fmt_f(res.wall_ms, 0),
+            fmt_f(res.layers_per_sec(), 1),
+            format!("{:.2}x", base_ms / res.wall_ms),
+        ]);
+    }
+    t2.print();
+
+    // --- 3. Fig. 5 σ-distortion per format -------------------------------
+    let mut t3 = Table::new(
+        "sub-distribution quantization (128x128, k=13): σ-distortion metis vs direct",
+        &["format", "σ-err metis", "σ-err direct", "tail metis", "tail direct", "ratio"],
+    );
+    let w = pipeline::planted_powerlaw(&mut rng, 128, 128, 1.5);
+    let reference = jacobi_svd(&w).s;
+    let split = weight_split(&w, 13, DecompStrategy::Full, &mut rng);
+    for fmt in Format::ALL {
+        let mq = quantizer::quantize_split(&split, fmt);
+        let dq = quantizer::quantize_direct(&w, fmt);
+        let (sm, tm) = quantizer::sigma_distortion(&reference, &mq);
+        let (sd, td) = quantizer::sigma_distortion(&reference, &dq);
+        t3.row(vec![
+            fmt.name().to_string(),
+            fmt_f(sm, 4),
+            fmt_f(sd, 4),
+            fmt_f(tm, 4),
+            fmt_f(td, 4),
+            fmt_ratio(sd, sm.max(1e-12)),
+        ]);
+    }
+    t3.print();
+
+    for (t, file) in [
+        (&t1, "metis_decomp_strategies.csv"),
+        (&t2, "metis_pipeline_threads.csv"),
+        (&t3, "metis_fig5_formats.csv"),
+    ] {
+        t.write_csv(reports_dir().join(file).to_str().unwrap())?;
+    }
+    println!("\nreports: reports/metis_*.csv");
+    Ok(())
+}

@@ -105,6 +105,16 @@ pub fn fmt_pct(x: f64) -> String {
     }
 }
 
+/// "N.Nx" speedup/ratio cell; NaN or a zero denominator renders as "—".
+pub fn fmt_ratio(num: f64, den: f64) -> String {
+    let r = num / den;
+    if r.is_finite() {
+        format!("{r:.1}x")
+    } else {
+        "—".to_string()
+    }
+}
+
 /// Resolve the artifacts dir for bench/example binaries.
 pub fn artifacts_dir() -> std::path::PathBuf {
     std::env::var("METIS_ARTIFACTS")
@@ -134,6 +144,13 @@ mod tests {
         assert!(r.contains("== demo =="));
         assert!(r.contains("| name   | value |"));
         assert!(r.contains("| longer | 2     |"));
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(10.0, 2.0), "5.0x");
+        assert_eq!(fmt_ratio(1.0, 0.0), "—");
+        assert_eq!(fmt_ratio(f64::NAN, 2.0), "—");
     }
 
     #[test]

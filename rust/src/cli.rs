@@ -90,6 +90,21 @@ USAGE:
       participation ratio, Popoviciu bound, quantization impact.
   metis quant     [--fmt mxfp4|nvfp4|fp8] [--rows N] [--cols N]
       Block-quantization bias demo on a synthetic anisotropic matrix.
+  metis quantize-model [--ckpt DIR] [--fmt mxfp4|nvfp4|fp8|paper_fp4]
+                  [--strategy full|rsvd|sparse_sample|random_project]
+                  [--threads N] [--rho F] [--max-rank N] [--seed N]
+                  [--layers N] [--d-model N] [--sigma-cap N] [--no-sigma]
+                  [--out report.jsonl]
+      Pure-Rust Metis pipeline: sweep a checkpoint dir of .npy weights
+      (or, without --ckpt, a synthetic anisotropic model of --layers
+      transformer blocks at width --d-model) through the Eq. 3 split +
+      Eq. 5 sub-distribution quantization, sharded over --threads
+      workers; per-layer error and σ-distortion reports as JSONL.
+      Decomposition strategies (cost ↓ / accuracy →): full = exact
+      Jacobi SVD oracle; rsvd = randomized SVD, 2 power iterations;
+      sparse_sample = §3.1 row-sampling sketch + subspace lift
+      (< 1e-2 top-k σ error at a fraction of full-SVD cost);
+      random_project = zero-iteration sketch, cheapest and loosest.
 
 Artifacts default to ./artifacts (built by `make artifacts`);
 override with --artifacts or METIS_ARTIFACTS.";

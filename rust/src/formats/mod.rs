@@ -25,6 +25,15 @@ pub enum Format {
 }
 
 impl Format {
+    /// Every implemented block format, in presentation order — the axis
+    /// the Fig. 5 property test and the Metis pipeline sweep over.
+    pub const ALL: [Format; 4] = [
+        Format::Mxfp4,
+        Format::Nvfp4,
+        Format::Fp8,
+        Format::PaperFp4,
+    ];
+
     pub fn block(&self) -> usize {
         match self {
             Format::Mxfp4 | Format::PaperFp4 => 32,

@@ -12,6 +12,11 @@
 //!   generates data ([`data`]), evaluates downstream probes ([`probe`]),
 //!   and reproduces every figure/table with the analysis substrates
 //!   ([`linalg`], [`formats`], [`spectral`]).
+//! * The [`metis`] subsystem composes those substrates into the paper's
+//!   full algorithm natively — spectral splits (Eqs. 3/6), §3.1
+//!   decomposition strategies, sub-distribution quantization
+//!   (Eqs. 5/8–11), the §3.2 adaptive spectral LR, and the
+//!   layer-sharded `quantize-model` pipeline.
 
 pub mod bench;
 pub mod cli;
@@ -19,6 +24,7 @@ pub mod coordinator;
 pub mod data;
 pub mod formats;
 pub mod linalg;
+pub mod metis;
 pub mod probe;
 pub mod runtime;
 pub mod spectral;

@@ -49,10 +49,20 @@ pub fn randomized_svd(
     }
 }
 
-/// The Metis weight split (Eq. 3): W = U_k S_k V_kᵀ + W_R.
+/// The Metis weight split (Eq. 3): W = U_k S_k V_kᵀ + W_R.  Also the
+/// type behind `metis::split::WeightSplit` — the engine's strategies
+/// all produce this shape.
 pub struct SpectralSplit {
     pub svd: SvdResult,
     pub residual: Matrix,
+}
+
+impl SpectralSplit {
+    /// U S Vᵀ + W_R — reproduces the original matrix up to
+    /// decomposition tolerance.
+    pub fn reconstruct(&self) -> Matrix {
+        self.svd.reconstruct(self.svd.s.len()).add(&self.residual)
+    }
 }
 
 pub fn spectral_split(a: &Matrix, k: usize, rng: &mut Rng) -> SpectralSplit {

@@ -16,6 +16,28 @@ pub struct SvdResult {
 }
 
 impl SvdResult {
+    /// Copy of the leading k singular triplets (k is clamped to the
+    /// available rank).  Shared by every `metis::sampler` strategy so
+    /// Full/RSVD/sampled decompositions return the same shape contract.
+    pub fn truncated(&self, k: usize) -> SvdResult {
+        let k = k.min(self.s.len());
+        let mut u = Matrix::zeros(self.u.rows, k);
+        let mut v = Matrix::zeros(self.v.rows, k);
+        for i in 0..k {
+            for r in 0..self.u.rows {
+                u[(r, i)] = self.u.at(r, i);
+            }
+            for r in 0..self.v.rows {
+                v[(r, i)] = self.v.at(r, i);
+            }
+        }
+        SvdResult {
+            u,
+            s: self.s[..k].to_vec(),
+            v,
+        }
+    }
+
     /// Rank-k reconstruction Σᵢ σᵢ uᵢ vᵢᵀ for i < k.
     pub fn reconstruct(&self, k: usize) -> Matrix {
         let k = k.min(self.s.len());
@@ -198,5 +220,22 @@ mod tests {
     fn zero_matrix() {
         let svd = jacobi_svd(&Matrix::zeros(5, 3));
         assert!(svd.s.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn truncated_keeps_leading_triplets() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(&mut rng, 18, 12, 1.0);
+        let svd = jacobi_svd(&a);
+        let t = svd.truncated(5);
+        assert_eq!(t.s.len(), 5);
+        assert_eq!((t.u.rows, t.u.cols), (18, 5));
+        assert_eq!((t.v.rows, t.v.cols), (12, 5));
+        assert_eq!(t.s, svd.s[..5]);
+        // Same rank-5 reconstruction as the full result.
+        let d = t.reconstruct(5).sub(&svd.reconstruct(5)).frob_norm();
+        assert!(d < 1e-12);
+        // Over-asking clamps instead of panicking.
+        assert_eq!(svd.truncated(99).s.len(), 12);
     }
 }

@@ -11,6 +11,7 @@ use metis::coordinator::{eval_downstream, ExperimentConfig, Trainer};
 use metis::data::tasks::ALL_TASKS;
 use metis::formats::{self, Format};
 use metis::linalg::{householder_qr, jacobi_svd};
+use metis::metis::{pipeline, DecompStrategy, MetisQuantConfig, PipelineConfig};
 use metis::runtime::Engine;
 use metis::spectral;
 use metis::tensor::Matrix;
@@ -32,6 +33,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("quant") => cmd_quant(&args),
+        Some("quantize-model") => cmd_quantize_model(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -186,6 +188,102 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             st.decile_rel_err[0],
             st.decile_rel_err[9]
         );
+    }
+    Ok(())
+}
+
+fn cmd_quantize_model(args: &Args) -> Result<()> {
+    let fmt = Format::from_name(&args.str("fmt", "nvfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt (mxfp4|nvfp4|fp8|paper_fp4)"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --strategy (full|rsvd|sparse_sample|random_project)")
+        })?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cfg = PipelineConfig {
+        quant: MetisQuantConfig {
+            fmt,
+            strategy,
+            rho: args.f64("rho", 0.1)?,
+            max_rank: args.usize("max-rank", 64)?,
+        },
+        threads: args.usize("threads", default_threads)?,
+        measure_sigma: !args.switch("no-sigma"),
+        sigma_dim_cap: args.usize("sigma-cap", 256)?,
+        seed: args.usize("seed", 0)? as u64,
+    };
+
+    let layers = if let Some(dir) = args.flags.get("ckpt") {
+        println!("loading checkpoint {dir} ...");
+        pipeline::load_checkpoint_dir(dir)?
+    } else {
+        let n_layers = args.usize("layers", 2)?;
+        let d_model = args.usize("d-model", 64)?;
+        println!(
+            "no --ckpt: synthetic anisotropic model ({n_layers} blocks, d_model {d_model})"
+        );
+        pipeline::synthetic_model(n_layers, d_model, cfg.seed)
+    };
+    println!(
+        "quantize-model: {} layers | fmt {} | strategy {} | rho {:.2} | {} threads",
+        layers.len(),
+        fmt.name(),
+        strategy.name(),
+        cfg.quant.rho,
+        cfg.threads
+    );
+
+    let res = pipeline::run(layers, &cfg)?;
+
+    let mut table = metis::bench::Table::new(
+        "per-layer Metis vs direct quantization",
+        &[
+            "layer", "shape", "k", "ms", "rel-err M", "rel-err D", "underflow M",
+            "underflow D", "σ-err M", "σ-err D",
+        ],
+    );
+    let f = |x: f64| {
+        if x.is_finite() {
+            format!("{x:.4}")
+        } else {
+            "—".to_string()
+        }
+    };
+    for r in &res.reports {
+        table.row(vec![
+            r.name.clone(),
+            format!("{}x{}", r.rows, r.cols),
+            r.k.to_string(),
+            format!("{:.0}", r.quant_ms),
+            f(r.metis_rel_err),
+            f(r.direct_rel_err),
+            f(r.metis_underflow),
+            f(r.direct_underflow),
+            f(r.metis_sigma_err),
+            f(r.direct_sigma_err),
+        ]);
+    }
+    table.print();
+
+    let (sig_m, sig_d) = res.mean_sigma_err();
+    println!(
+        "\n{} layers in {:.0} ms on {} threads ({:.1} layers/s)",
+        res.reports.len(),
+        res.wall_ms,
+        res.threads,
+        res.layers_per_sec()
+    );
+    if sig_m.is_finite() {
+        println!(
+            "mean σ-distortion: metis {sig_m:.4} vs direct {sig_d:.4} ({:.1}x lower)",
+            sig_d / sig_m.max(1e-12)
+        );
+    }
+    if let Some(out) = args.flags.get("out") {
+        res.write_jsonl(out)?;
+        println!("report: {out}");
     }
     Ok(())
 }

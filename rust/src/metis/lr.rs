@@ -1,0 +1,68 @@
+//! Adaptive spectral learning rate (paper §3.2).
+//!
+//! The gradient spectrum T estimated by the Eq. 6 split is rescaled
+//! before it enters the backward GEMMs:
+//!
+//!     σ̃ᵢ = 2σᵢ / (1 + σᵢ/σ₁)
+//!
+//! σ̃₁ = σ₁ exactly, and σ̃ᵢ → 2σᵢ as σᵢ/σ₁ → 0: long-tail directions
+//! receive up to twice their raw step while the dominant direction is
+//! untouched.  Mirrors `adaptive_rescale` in python/compile/spectral.py.
+
+/// Apply the §3.2 rescale to a spectrum (any order; only max(t) matters).
+pub fn adaptive_rescale(t: &[f64]) -> Vec<f64> {
+    let t1 = t.iter().fold(0.0f64, |a, &x| a.max(x)).max(1e-300);
+    t.iter().map(|&x| 2.0 * x / (1.0 + x / t1)).collect()
+}
+
+/// Amplification factor σ̃ᵢ/σᵢ = 2/(1 + σᵢ/σ₁) ∈ (1, 2] for σᵢ ∈ (0, σ₁].
+pub fn amplification(sigma: f64, sigma1: f64) -> f64 {
+    2.0 / (1.0 + sigma / sigma1.max(1e-300))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_sigma_is_fixed_point() {
+        let t = vec![8.0, 2.0, 0.5, 0.01];
+        let a = adaptive_rescale(&t);
+        assert!((a[0] - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_approaches_doubling() {
+        let t = vec![100.0, 1e-6];
+        let a = adaptive_rescale(&t);
+        assert!((a[1] / t[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rescale_preserves_order_and_bounds() {
+        let t = vec![5.0, 4.0, 3.0, 1.0, 0.2, 0.0];
+        let a = adaptive_rescale(&t);
+        for w in a.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "order broken: {w:?}");
+        }
+        for (x, y) in t.iter().zip(&a) {
+            assert!(*y >= *x - 1e-12, "never shrinks: {x} -> {y}");
+            assert!(*y <= 2.0 * x + 1e-12, "at most doubles: {x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_spectra() {
+        assert!(adaptive_rescale(&[]).is_empty());
+        let a = adaptive_rescale(&[0.0, 0.0]);
+        assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn amplification_range() {
+        assert!((amplification(1.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((amplification(0.0, 1.0) - 2.0).abs() < 1e-12);
+        let mid = amplification(0.5, 1.0);
+        assert!(mid > 1.0 && mid < 2.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! The Metis engine (paper §3), pure Rust — the spectral-domain
+//! W4A4G4 quantization pipeline on the native hot path.
+//!
+//! The substrates ([`crate::linalg`], [`crate::formats`],
+//! [`crate::spectral`]) provide decompositions and codecs; this
+//! subsystem composes them into the paper's algorithm:
+//!
+//! * [`split`] — weight split W = U S Vᵀ + W_R (Eq. 3) and gradient
+//!   split D = P T Qᵀ + D_R via randomized range finding (Eq. 6);
+//! * [`sampler`] — interchangeable decomposition strategies
+//!   (`Full | Rsvd | SparseSample | RandomProject`, §3.1), including
+//!   the sparse-random-row-sampling sketch;
+//! * [`quantizer`] — independent sub-distribution quantization in any
+//!   [`crate::formats::Format`] with S/T kept high-precision
+//!   (Eqs. 5/8–11), plus the σ-distortion metrics of Fig. 4;
+//! * [`lr`] — the §3.2 adaptive spectral learning-rate rescale;
+//! * [`pipeline`] — the multi-threaded layer-sharded driver behind
+//!   `metis quantize-model` (checkpoint dir or synthetic model →
+//!   per-layer JSONL reports).
+
+pub mod lr;
+pub mod pipeline;
+pub mod quantizer;
+pub mod sampler;
+pub mod split;
+
+pub use lr::adaptive_rescale;
+pub use pipeline::{
+    load_checkpoint_dir, synthetic_model, Layer, LayerReport, PipelineConfig, PipelineResult,
+};
+pub use quantizer::{compare, quantize_split, sigma_distortion, MetisQuantConfig, QuantCompare};
+pub use sampler::{decompose, sparse_sample_svd, DecompStrategy};
+pub use split::{gradient_split, weight_split, GradSplit, WeightSplit};

@@ -1,0 +1,226 @@
+//! The two Metis spectral splits, pure Rust.
+//!
+//! * **Weights** (Eq. 3): W = U_k S_k V_kᵀ + W_R, computed once per
+//!   weight matrix through any [`DecompStrategy`].
+//! * **Gradients** (Eq. 6): D = P_j T_j Q_jᵀ + D_R via the randomized
+//!   range finder, every step.  Mirrors `decompose_gradient` in
+//!   python/compile/spectral.py operation-for-operation (including the
+//!   amax pre-normalization that keeps the f32 graph from underflowing;
+//!   harmless in f64 but kept so the two sides stay comparable), with
+//!   one difference: the basis rotation may use an exact small Jacobi
+//!   SVD here because no HLO-export constraint applies on the Rust side.
+
+use crate::linalg::{householder_qr, jacobi_svd, SvdResult};
+use crate::metis::lr::adaptive_rescale;
+use crate::metis::sampler::{decompose, DecompStrategy};
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// Eq. 3: W = U S Vᵀ + W_R with S kept high-precision.  One type for
+/// the whole crate: this is `linalg::rsvd::SpectralSplit` under the
+/// engine's name, so the RSVD-only `spectral_split` and every
+/// `DecompStrategy` produce interchangeable values.
+pub use crate::linalg::rsvd::SpectralSplit as WeightSplit;
+
+/// Rank for a fractional split: k = ⌈rho · min(m,n)⌉, clamped to
+/// [1, cap] (cap itself clamped to the rank bound).
+pub fn rank_for(rho: f64, min_dim: usize, cap: usize) -> usize {
+    let hi = cap.min(min_dim).max(1);
+    let k = (rho * min_dim as f64).ceil() as usize;
+    k.clamp(1, hi)
+}
+
+/// One-time weight split (Eq. 3) through the chosen strategy.
+pub fn weight_split(
+    w: &Matrix,
+    k: usize,
+    strategy: DecompStrategy,
+    rng: &mut Rng,
+) -> WeightSplit {
+    split_from_svd(w, decompose(w, k, strategy, rng))
+}
+
+/// Build the Eq. 3 split from an already-computed (truncated)
+/// decomposition of `w` — lets callers that have a full SVD in hand
+/// (e.g. the pipeline's σ-reference path) avoid decomposing twice.
+pub fn split_from_svd(w: &Matrix, svd: SvdResult) -> WeightSplit {
+    let low = svd.reconstruct(svd.s.len());
+    WeightSplit {
+        residual: w.sub(&low),
+        svd,
+    }
+}
+
+/// Eq. 6: D ≈ P diag(T) Qᵀ + D_R (true singular triplets of the
+/// projected gradient) plus the §3.2 adaptive spectrum T̃.
+pub struct GradSplit {
+    /// (l, j) left singular basis of the projection.
+    pub p: Matrix,
+    /// (j,) singular value estimates, descending.
+    pub t: Vec<f64>,
+    /// (j, n) right factor (unit rows).
+    pub qt: Matrix,
+    /// (l, n) residual D − P Pᵀ D.
+    pub residual: Matrix,
+    /// (j,) adaptively rescaled spectrum actually used in the backward.
+    pub t_adapt: Vec<f64>,
+}
+
+impl GradSplit {
+    /// P diag(t) Qᵀ + D_R — the effective gradient fed to the backward
+    /// GEMMs (with the adaptive spectrum when `adapted`).
+    pub fn reconstruct(&self, adapted: bool) -> Matrix {
+        let t = if adapted { &self.t_adapt } else { &self.t };
+        self.p.scale_cols(t).matmul(&self.qt).add(&self.residual)
+    }
+}
+
+/// Randomized gradient split (Eq. 6) with sketch rank `j` and
+/// `power_iters` subspace iterations.
+pub fn gradient_split(
+    d: &Matrix,
+    j: usize,
+    power_iters: usize,
+    adaptive: bool,
+    rng: &mut Rng,
+) -> GradSplit {
+    let (l, n) = (d.rows, d.cols);
+    let j = j.min(l).min(n).max(1);
+
+    // Scale-normalize first (mirrors python/compile/spectral.py): real
+    // gradients arrive at ~1e-4..1e-6 magnitudes where the f32 graph's
+    // Gram chains underflow; kept here for cross-side comparability.
+    let amax = d.abs_max();
+    let scale = if amax > 0.0 { amax } else { 1.0 };
+    let dn = d.scale(1.0 / scale);
+
+    // Randomized range finder: P = qr(D Ω), optionally sharpened.
+    let omega = Matrix::gaussian(rng, n, j, 1.0);
+    let mut p = householder_qr(&dn.matmul(&omega)).q; // (l, j)
+    for _ in 0..power_iters {
+        let z = householder_qr(&dn.transpose().matmul(&p)).q; // (n, j)
+        p = householder_qr(&dn.matmul(&z)).q;
+    }
+
+    let b = p.transpose().matmul(&dn); // (j, n)
+    let residual = dn.sub(&p.matmul(&b)).scale(scale);
+
+    // Rotate the basis onto singular directions: exact small SVD of B.
+    // P·U_b diag(s_b) V_bᵀ == P·B identically, so the reconstruction
+    // P diag(t) Qᵀ + D_R == D holds to Jacobi tolerance.
+    let small = jacobi_svd(&b); // u: j×j, s: j, v: n×j
+    let p = p.matmul(&small.u); // (l, j) singular basis
+    let qt = small.v.transpose(); // (j, n)
+    let t: Vec<f64> = small.s.iter().map(|&x| x * scale).collect();
+    let t_adapt = if adaptive {
+        adaptive_rescale(&t)
+    } else {
+        t.clone()
+    };
+    GradSplit {
+        p,
+        t,
+        qt,
+        residual,
+        t_adapt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::singular_values;
+    use crate::metis::pipeline::planted_powerlaw as planted;
+
+    #[test]
+    fn weight_split_reconstructs_for_every_strategy() {
+        let mut rng = Rng::new(0);
+        let w = planted(&mut rng, 48, 36, 1.5);
+        for strat in DecompStrategy::ALL {
+            let split = weight_split(&w, 6, strat, &mut rng);
+            let err = split.reconstruct().sub(&w).frob_norm() / w.frob_norm();
+            assert!(err < 1e-10, "{}: {err:.2e}", strat.name());
+            assert_eq!(split.svd.s.len(), 6);
+        }
+    }
+
+    #[test]
+    fn rank_for_clamps() {
+        assert_eq!(rank_for(0.5, 64, 64), 32);
+        assert_eq!(rank_for(0.1, 64, 64), 7); // ceil(6.4)
+        assert_eq!(rank_for(0.0, 64, 64), 1);
+        assert_eq!(rank_for(2.0, 64, 64), 64);
+        assert_eq!(rank_for(0.5, 64, 16), 16); // cap
+        assert_eq!(rank_for(0.5, 1, 64), 1);
+    }
+
+    #[test]
+    fn gradient_split_reconstructs_exactly() {
+        let mut rng = Rng::new(1);
+        let d = Matrix::gaussian(&mut rng, 40, 32, 1e-4); // gradient scale
+        let dec = gradient_split(&d, 8, 1, true, &mut rng);
+        let rec = dec.reconstruct(false);
+        let err = rec.sub(&d).frob_norm() / d.frob_norm();
+        assert!(err < 1e-10, "{err:.2e}");
+    }
+
+    #[test]
+    fn gradient_split_recovers_low_rank_spectrum() {
+        // Rank-j gradient: the randomized finder is exact and t matches
+        // the true σ of D (paper: "exact for rank-j D").
+        let mut rng = Rng::new(2);
+        let pj = householder_qr(&Matrix::gaussian(&mut rng, 50, 5, 1.0)).q;
+        let qj = householder_qr(&Matrix::gaussian(&mut rng, 30, 5, 1.0)).q;
+        let planted_t = [4.0, 2.0, 1.0, 0.5, 0.25];
+        let d = pj.scale_cols(&planted_t).matmul(&qj.transpose());
+        let dec = gradient_split(&d, 5, 1, false, &mut rng);
+        for (got, want) in dec.t.iter().zip(&planted_t) {
+            assert!((got - want).abs() / want < 1e-9, "{got} vs {want}");
+        }
+        // Residual ~ 0 for exact-rank input.
+        assert!(dec.residual.frob_norm() < 1e-9);
+        // t_adapt == t when adaptive is off.
+        assert_eq!(dec.t, dec.t_adapt);
+    }
+
+    #[test]
+    fn adaptive_spectrum_amplifies_tail_only() {
+        let mut rng = Rng::new(3);
+        let d = planted(&mut rng, 40, 32, 1.5);
+        let dec = gradient_split(&d, 6, 1, true, &mut rng);
+        let t1 = dec.t.iter().cloned().fold(0.0f64, f64::max);
+        let a1 = dec.t_adapt.iter().cloned().fold(0.0f64, f64::max);
+        assert!((t1 - a1).abs() / t1 < 1e-9, "σ₁ fixed: {t1} vs {a1}");
+        for (t, a) in dec.t.iter().zip(&dec.t_adapt) {
+            assert!(*a >= *t - 1e-12 && *a <= 2.0 * t + 1e-12);
+        }
+        // The adapted reconstruction differs from the raw gradient.
+        let raw = dec.reconstruct(false);
+        let ada = dec.reconstruct(true);
+        assert!(ada.sub(&raw).frob_norm() > 1e-6);
+    }
+
+    #[test]
+    fn gradient_split_topk_sigma_accuracy() {
+        // Real (full-rank) gradients: top-j σ estimates track the true
+        // spectrum after one power iteration.
+        let mut rng = Rng::new(4);
+        let d = planted(&mut rng, 64, 48, 1.5);
+        let exact = singular_values(&d);
+        let dec = gradient_split(&d, 6, 1, false, &mut rng);
+        // t is descending (jacobi sorts) — compare the head.
+        for i in 0..3 {
+            let rel = (dec.t[i] - exact[i]).abs() / exact[i];
+            assert!(rel < 5e-2, "σ{i}: {} vs {} ({rel:.2e})", dec.t[i], exact[i]);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_does_not_panic() {
+        let mut rng = Rng::new(5);
+        let d = Matrix::zeros(16, 12);
+        let dec = gradient_split(&d, 4, 1, true, &mut rng);
+        assert!(dec.t.iter().all(|&x| x == 0.0));
+        assert!(dec.reconstruct(true).frob_norm() < 1e-12);
+    }
+}

@@ -141,6 +141,21 @@ pub struct IsotropyReport {
 
 pub fn isotropy_report(a: &Matrix) -> IsotropyReport {
     let s = jacobi_svd(a).s;
+    // Degenerate inputs (0×n / m×0 matrices have an empty spectrum; the
+    // zero matrix has σ₁ = 0): report zeros instead of indexing/dividing
+    // into a panic or NaN.
+    if s.is_empty() || s[0] <= 0.0 {
+        return IsotropyReport {
+            participation: 0.0,
+            participation_norm: 0.0,
+            value_range: if a.data.is_empty() {
+                0.0
+            } else {
+                a.value_range()
+            },
+            sigma_contrast: 0.0,
+        };
+    }
     let pr = participation_ratio(&s);
     let med = s[s.len() / 2].max(1e-300);
     IsotropyReport {
@@ -227,6 +242,31 @@ mod tests {
         let q = householder_qr(&Matrix::gaussian(&mut rng, 20, 5, 1.0)).q;
         let cos = singular_vector_cosines(&q, &q);
         assert!(cos.iter().all(|&c| (c - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // Rank-0 by value (zero matrix), rank-0 by shape (empty dims)
+        // and empty spectra — all previously index-panicked.
+        for m in [
+            Matrix::zeros(5, 3),
+            Matrix::zeros(0, 4),
+            Matrix::zeros(4, 0),
+            Matrix::zeros(0, 0),
+            Matrix::zeros(1, 1),
+        ] {
+            let r = isotropy_report(&m);
+            assert_eq!(r.participation, 0.0);
+            assert_eq!(r.participation_norm, 0.0);
+            assert_eq!(r.sigma_contrast, 0.0);
+            assert!(r.value_range.is_finite());
+        }
+        assert_eq!(elbow_fraction(&[]), (0, 0.0));
+        assert_eq!(elbow_fraction(&[0.0, 0.0, 0.0, 0.0]), (0, 0.0));
+        assert_eq!(elbow_fraction(&[1.0]), (0, 0.0));
+        assert_eq!(energy_fraction(&[], 3), 0.0);
+        assert_eq!(rank_for_energy(&[], 0.9), 0);
+        assert_eq!(participation_ratio(&[]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Offline stub of the `xla` PJRT bindings used by the runtime layer.
+//!
+//! The real dependency (an xla_extension-backed PJRT FFI crate) is not
+//! vendorable in this offline build environment, so this stub mirrors
+//! exactly the API surface `metis::runtime` consumes.  Everything
+//! type-checks and the host-side pieces (literal storage/marshaling)
+//! work for real; every entry point that would need the native library
+//! (`PjRtClient::cpu`, compile, execute, HLO parsing) returns
+//! [`Error::Unavailable`] at runtime with a message naming the missing
+//! capability.  Swap the `xla = { path = "vendor/xla" }` dependency in
+//! Cargo.toml for the real bindings to execute AOT artifacts.
+
+use std::path::Path;
+
+/// Stub error: every PJRT-backed call site reports which capability is
+/// missing rather than failing to link.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+    Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT is unavailable in this offline build (xla API stub); \
+                 link the real xla bindings to run AOT artifacts"
+            ),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element dtypes of the artifacts this project exchanges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            ElementType::Pred => 1,
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Array shape: element type + dimensions (mirrors xla::ArrayShape).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Native element types a literal can be viewed as.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+    fn read_le(bytes: &[u8]) -> Self {
+        i64::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+/// Host-side literal: typed shape + raw little-endian payload.  Fully
+/// functional (this part needs no native library).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        if data.len() != count * ty.size_bytes() {
+            return Err(Error::Other(format!(
+                "literal payload {} bytes != {} elements of {:?}",
+                data.len(),
+                count,
+                ty
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            ty: self.ty,
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::Other(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let n = std::mem::size_of::<T>();
+        Ok(self.data.chunks_exact(n).map(T::read_le).collect())
+    }
+
+    /// Tuples only exist in PJRT execution outputs, which the stub
+    /// cannot produce, so this is unreachable in practice.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (stub: parsing needs the native text parser).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.0];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_rejects_bad_payload() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 3])
+            .is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_report_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("PJRT is unavailable"));
+    }
+}
