@@ -1,0 +1,71 @@
+//! The native W4A4G4 training loop in ~60 lines (no artifacts, no
+//! PJRT): pack a synthetic model once through the Eq. 3 split, then
+//! watch the per-step Eq. 6 gradient splits + §3.2 adaptive LR +
+//! sub-distribution quantization drive the loss down — and verify the
+//! loss curve is bit-identical across thread counts.
+//!
+//! Run: `cargo run --release --example train_native [-- --fmt paper_fp4
+//!       --strategy sparse_sample --steps 40 --threads 4]`
+
+use anyhow::Result;
+use metis::cli::Args;
+use metis::formats::Format;
+use metis::metis::{
+    train_native, DecompStrategy, GradStepConfig, MetisQuantConfig, NativeTrainConfig, Optim,
+};
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let fmt = Format::from_name(&args.str("fmt", "paper_fp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --strategy"))?;
+    let cfg = NativeTrainConfig {
+        n_layers: args.usize("layers", 2)?,
+        d_model: args.usize("d-model", 48)?,
+        steps: args.usize("steps", 40)?,
+        threads: args.usize("threads", 4)?,
+        quant: MetisQuantConfig {
+            fmt,
+            strategy,
+            ..MetisQuantConfig::default()
+        },
+        grad: GradStepConfig {
+            fmt,
+            ..GradStepConfig::default()
+        },
+        optim: Optim::from_name(&args.str("optim", "sgd"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --optim"))?,
+        ..NativeTrainConfig::default()
+    };
+
+    println!(
+        "native W4A4G4 loop: {} blocks @ d_model {}, {} steps, fmt {}, strategy {}, {} threads",
+        cfg.n_layers, cfg.d_model, cfg.steps, fmt.name(), strategy.name(), cfg.threads
+    );
+    let res = train_native(&cfg)?;
+    for rep in res.reports.iter().step_by(5.max(cfg.steps / 8)) {
+        let l0 = &rep.layers[0];
+        println!(
+            "  step {:>3}  loss {:>9.4}  lr {:.2e}  |  {}: σ₁ {:.3e} amp {:.2} captured {:.0}% split {:.1} ms",
+            rep.step, rep.loss, rep.lr, l0.name, l0.t1, l0.amp_mean,
+            100.0 * l0.captured, l0.split_ms
+        );
+    }
+    println!(
+        "loss {:.4} → {:.4} ({:.1}× lower) in {:.0} ms on {} threads",
+        res.first_loss(),
+        res.final_loss(),
+        res.first_loss() / res.final_loss().max(1e-12),
+        res.wall_ms,
+        res.threads
+    );
+
+    // Determinism spot-check: one extra single-threaded step-for-step run.
+    let res1 = train_native(&NativeTrainConfig { threads: 1, ..cfg })?;
+    let same = res.losses() == res1.losses();
+    println!("thread-count invariance: {}", if same { "bit-identical" } else { "FAILED" });
+    anyhow::ensure!(same, "loss curves diverged across thread counts");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! §Perf — the native W4A4G4 step loop: is the per-step overhead of
+//! the Eq. 6 split + §3.2 rescale + G4 quantization small enough for
+//! the training hot path (the paper's Table 4 claim, Rust side)?
+//!
+//! 1. `GradStep` cost per layer size and sketch rank — the marginal
+//!    per-layer per-step price of the Metis gradient path;
+//! 2. init-time Eq. 3 packing cost per strategy (paid once);
+//! 3. whole-step throughput of `metis train-native` vs thread count
+//!    (acceptance bar: ≥ 2× at 4 threads on a 4-core host), with the
+//!    loss curve asserted bit-identical across counts.
+//!
+//! Pure Rust — no artifacts or PJRT needed.
+
+use metis::bench::{fmt_f, fmt_ratio, time_fn, Table};
+use metis::formats::Format;
+use metis::metis::{
+    pipeline, train_native, DecompStrategy, GradStep, GradStepConfig, MetisQuantConfig,
+    NativeTrainConfig, Optim, PackedWeight,
+};
+use metis::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. per-step GradStep cost ---------------------------------------
+    let mut t1 = Table::new(
+        "GradStep (Eq. 6 split + rescale + G4 quantize) per layer",
+        &["shape", "rank j", "mean ms", "captured energy"],
+    );
+    for (m, n) in [(64usize, 64usize), (128, 128), (256, 256)] {
+        for j in [4usize, 8, 16] {
+            let mut rng = Rng::new(0);
+            let d = pipeline::planted_powerlaw(&mut rng, m, n, 1.5).scale(1e-4);
+            let gs = GradStep::new(GradStepConfig {
+                rank: j,
+                ..GradStepConfig::default()
+            });
+            let st = time_fn(1, 5, || {
+                let mut r = Rng::new(1);
+                std::hint::black_box(gs.apply(&d, &mut r));
+            });
+            let mut r = Rng::new(1);
+            let out = gs.apply(&d, &mut r);
+            t1.row(vec![
+                format!("{m}x{n}"),
+                j.to_string(),
+                fmt_f(st.mean(), 2),
+                fmt_f(out.captured, 3),
+            ]);
+        }
+    }
+    t1.print();
+
+    // --- 2. init-time Eq. 3 packing cost per strategy --------------------
+    let mut t2 = Table::new(
+        "init-time packing (Eq. 3 split + Eq. 5 quantize), 256x256",
+        &["strategy", "mean ms", "speedup vs full"],
+    );
+    let mut rng = Rng::new(2);
+    let w = pipeline::planted_powerlaw(&mut rng, 256, 256, 1.5);
+    let mut full_ms = f64::NAN;
+    for strat in DecompStrategy::ALL {
+        let quant = MetisQuantConfig {
+            strategy: strat,
+            ..MetisQuantConfig::default()
+        };
+        let iters = if strat == DecompStrategy::Full { 2 } else { 5 };
+        let st = time_fn(1, iters, || {
+            let mut r = Rng::new(3);
+            std::hint::black_box(PackedWeight::pack("w".into(), w.clone(), &quant, &mut r));
+        });
+        if strat == DecompStrategy::Full {
+            full_ms = st.mean();
+        }
+        t2.row(vec![
+            strat.name().to_string(),
+            fmt_f(st.mean(), 1),
+            fmt_ratio(full_ms, st.mean()),
+        ]);
+    }
+    t2.print();
+
+    // --- 3. native step-loop throughput vs threads -----------------------
+    let mut t3 = Table::new(
+        "metis train-native wall time (2 blocks @ d64, 10 steps, nvfp4)",
+        &["threads", "wall ms", "steps/s", "speedup vs 1"],
+    );
+    let cfg = |threads: usize| NativeTrainConfig {
+        steps: 10,
+        threads,
+        optim: Optim::Sgd,
+        quant: MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            ..MetisQuantConfig::default()
+        },
+        ..NativeTrainConfig::default()
+    };
+    let baseline = train_native(&cfg(1))?;
+    let mut base_ms = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let res = train_native(&cfg(threads))?;
+        assert_eq!(
+            res.losses(),
+            baseline.losses(),
+            "loss curve must be thread-count invariant"
+        );
+        if threads == 1 {
+            base_ms = res.wall_ms;
+        }
+        t3.row(vec![
+            threads.to_string(),
+            fmt_f(res.wall_ms, 0),
+            fmt_f(10.0 / (res.wall_ms / 1e3).max(1e-9), 1),
+            fmt_ratio(base_ms, res.wall_ms),
+        ]);
+    }
+    t3.print();
+    Ok(())
+}

@@ -105,6 +105,22 @@ USAGE:
       sparse_sample = §3.1 row-sampling sketch + subspace lift
       (< 1e-2 top-k σ error at a fraction of full-SVD cost);
       random_project = zero-iteration sketch, cheapest and loosest.
+  metis train-native [--layers N] [--d-model N] [--steps N] [--batch N]
+                  [--fmt mxfp4|nvfp4|fp8|paper_fp4]
+                  [--strategy full|rsvd|sparse_sample|random_project]
+                  [--threads N] [--rho F] [--max-rank N] [--grad-rank N]
+                  [--power-iters N] [--lr F] [--warmup N] [--seed N]
+                  [--optim sgd|adam] [--repack-every N] [--no-adaptive]
+                  [--out steps.jsonl]
+      Pure-Rust W4A4G4 training loop, no PJRT needed: a synthetic
+      anisotropic model is packed once via the Eq. 3 split (quantized
+      factors, high-precision S), then every step runs quantized probe
+      activations forward and the Eq. 6 randomized gradient split +
+      §3.2 adaptive spectral LR + sub-distribution quantization before
+      the optimizer update, sharded over --threads workers (loss curves
+      are bit-identical for any thread count).  Emits one JSON object
+      per step on stdout (loss, per-layer σ̃ rescale stats, split
+      timings); --out mirrors the stream to a file.
 
 Artifacts default to ./artifacts (built by `make artifacts`);
 override with --artifacts or METIS_ARTIFACTS.";

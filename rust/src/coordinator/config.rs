@@ -120,11 +120,15 @@ mod tests {
 
     #[test]
     fn validation_rejects_nonsense() {
-        let mut c = ExperimentConfig::default();
-        c.steps = 0;
+        let c = ExperimentConfig {
+            steps: 0,
+            ..ExperimentConfig::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.lr = -1.0;
+        let c = ExperimentConfig {
+            lr: -1.0,
+            ..ExperimentConfig::default()
+        };
         assert!(c.validate().is_err());
     }
 }

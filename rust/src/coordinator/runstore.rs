@@ -36,10 +36,10 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    /// See [`crate::coordinator::trainer::final_loss_window`] — NaN for
+    /// an empty curve, non-finite tail entries excluded.
     pub fn final_train_loss(&self) -> f32 {
-        let tail = self.losses.len().saturating_sub(10);
-        let w = &self.losses[tail..];
-        w.iter().sum::<f32>() / w.len().max(1) as f32
+        crate::coordinator::trainer::final_loss_window(&self.losses)
     }
 
     pub fn avg_probe_acc(&self, tasks: &[&str]) -> f64 {
@@ -241,19 +241,20 @@ pub const FP8_BENCH_LR: f64 = 5e-3;
 
 /// The bench suite's canonical experiment configs.
 pub fn bench_config(model: &str, mode: &str, steps: usize) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.name = "bench".into();
-    cfg.model = model.into();
-    cfg.mode = mode.into();
-    cfg.steps = steps;
-    cfg.lr = 1e-2;
-    cfg.warmup = (steps / 10).max(5);
-    cfg.checkpoint_every = (steps / 4).max(1);
-    cfg.out_dir = crate::bench::reports_dir()
-        .join("runs")
-        .to_string_lossy()
-        .into_owned();
-    cfg
+    ExperimentConfig {
+        name: "bench".into(),
+        model: model.into(),
+        mode: mode.into(),
+        steps,
+        lr: 1e-2,
+        warmup: (steps / 10).max(5),
+        checkpoint_every: (steps / 4).max(1),
+        out_dir: crate::bench::reports_dir()
+            .join("runs")
+            .to_string_lossy()
+            .into_owned(),
+        ..ExperimentConfig::default()
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +281,28 @@ mod tests {
         assert_eq!(back.probes["CoLA"], 0.68);
         assert!(!back.diverged);
         assert!((back.final_train_loss() - 4.166_666_7).abs() < 1e-4);
+    }
+
+    #[test]
+    fn record_final_loss_skips_nan_tail() {
+        // Regression: RunRecord used to duplicate the pre-fix logic —
+        // 0.0 for an empty curve, NaN tail averaged in (the fig6/fig7
+        // benches consume this copy on diverged runs).
+        let mut rec = RunRecord {
+            model: "t".into(),
+            mode: "m".into(),
+            steps: 3,
+            losses: vec![4.0, 2.0, f32::NAN],
+            test_loss: f32::NAN,
+            step_ms_mean: 1.0,
+            compile_ms: 0.0,
+            diverged: true,
+            probes: BTreeMap::new(),
+            ckpt_dir: String::new(),
+        };
+        assert!((rec.final_train_loss() - 3.0).abs() < 1e-6);
+        rec.losses.clear();
+        assert!(rec.final_train_loss().is_nan());
     }
 
     #[test]

@@ -13,7 +13,10 @@ use crate::coordinator::runlog::RunLog;
 use crate::coordinator::schedule::Schedule;
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::BatchIterator;
+use crate::metis::trainstate::{GradStepConfig, Optim, TrainState};
+use crate::metis::{Layer, MetisQuantConfig};
 use crate::runtime::{Engine, HostValue};
+use crate::tensor::Matrix;
 use crate::util::json::Json;
 use crate::util::npy;
 use crate::util::timer::{Stats, Stopwatch};
@@ -36,12 +39,43 @@ pub struct RunResult {
     pub diverged: bool,
 }
 
-impl RunResult {
-    pub fn final_train_loss(&self) -> f32 {
-        let tail = self.losses.len().saturating_sub(10);
-        let window = &self.losses[tail..];
-        window.iter().sum::<f32>() / window.len().max(1) as f32
+/// Mean of the finite entries in a loss curve's last-10-step window;
+/// NaN when the curve is empty or the whole window is non-finite.
+/// (The old per-type copies reported 0.0 for an empty curve and
+/// averaged the NaN tail a diverged run leaves behind.)  Shared by
+/// `RunResult` and `runstore::RunRecord`.
+pub fn final_loss_window(losses: &[f32]) -> f32 {
+    let tail = losses.len().saturating_sub(10);
+    let (sum, n) = losses[tail..]
+        .iter()
+        .filter(|x| x.is_finite())
+        .fold((0.0f32, 0usize), |(s, c), &x| (s + x, c + 1));
+    if n == 0 {
+        f32::NAN
+    } else {
+        sum / n as f32
     }
+}
+
+impl RunResult {
+    /// See [`final_loss_window`].
+    pub fn final_train_loss(&self) -> f32 {
+        final_loss_window(&self.losses)
+    }
+}
+
+/// Lossless bridge from the u64 experiment seed to the `train_step`
+/// artifact's scalar s32 input.  Seeds ≥ 2³¹ used to wrap negative via
+/// `as i32` and silently diverge from the Python-side stream; they are
+/// a hard error until the exported graph grows a split hi/lo seed.
+pub fn seed_input(seed: u64) -> Result<HostValue> {
+    let s = i32::try_from(seed).map_err(|_| {
+        anyhow!(
+            "experiment seed {seed} exceeds the train_step artifact's i32 seed \
+             input; use a seed < 2^31 or re-export the graph with a hi/lo seed pair"
+        )
+    })?;
+    Ok(HostValue::scalar_i32(s))
 }
 
 pub struct Trainer<'e> {
@@ -74,6 +108,7 @@ impl<'e> Trainer<'e> {
             .params_key
             .clone()
             .ok_or_else(|| anyhow!("artifact {artifact} lacks params_key"))?;
+        seed_input(cfg.seed)?; // fail at construction, not mid-run
         let params = engine.load_params(&params_key)?;
         let n_params = params.len();
         let param_names = engine.manifest.param_set(&params_key)?.names.clone();
@@ -150,6 +185,7 @@ impl<'e> Trainer<'e> {
     /// Train quietly (benches supply RunLog::null()).
     pub fn train_with_log(&mut self, log: &mut RunLog) -> Result<RunResult> {
         let sched = Schedule::new(self.cfg.lr, self.cfg.warmup, self.cfg.steps);
+        let seed_hv = seed_input(self.cfg.seed)?;
         let rx = self.spawn_loader(self.cfg.steps);
 
         // First execution includes XLA compilation; measure it separately.
@@ -174,7 +210,6 @@ impl<'e> Trainer<'e> {
                 data: tokens,
             };
             let step_hv = HostValue::scalar_i32(step as i32);
-            let seed_hv = HostValue::scalar_i32(self.cfg.seed as i32);
             let lr_hv = HostValue::scalar_f32(lr as f32);
             let mut inputs: Vec<&HostValue> = self.state.iter().collect();
             inputs.push(&tok_hv);
@@ -252,6 +287,49 @@ impl<'e> Trainer<'e> {
         &self.state[..self.n_params]
     }
 
+    /// Init-time Eq. 3 packing of the trainer's weight matrices into
+    /// the native Metis train state — the hook through which the
+    /// `GradStep`-driven step loop (`metis::trainstate`) takes over the
+    /// PJRT path: once artifacts expose per-parameter gradients, the
+    /// same `TrainState::step_with` that powers `metis train-native`
+    /// runs here with real gradients instead of the synthetic probe
+    /// objective.  2-D parameters pack one layer each; JAX-stacked
+    /// `(L, m, n)` parameters unstack into L layers (the same layout
+    /// `load_checkpoint_dir` handles).  Vectors/scalars (biases, norms)
+    /// stay full-precision in the flat state vector and are skipped.
+    pub fn pack_weights(
+        &self,
+        quant: &MetisQuantConfig,
+        grad: GradStepConfig,
+        optim: Optim,
+    ) -> Result<TrainState> {
+        let mut layers: Vec<Layer> = Vec::new();
+        for (name, hv) in self.param_names.iter().zip(self.params()) {
+            let (shape, data) = match hv {
+                HostValue::F32 { shape, data } => (shape, data),
+                HostValue::I32 { .. } => continue,
+            };
+            match shape[..] {
+                [m, n] if m >= 2 && n >= 2 => {
+                    layers.push(Layer {
+                        name: name.clone(),
+                        w: Matrix::from_f32(m, n, data),
+                    });
+                }
+                [stack, m, n] if m >= 2 && n >= 2 => {
+                    for l in 0..stack {
+                        layers.push(Layer {
+                            name: format!("{name}.{l}"),
+                            w: Matrix::from_f32(m, n, &data[l * m * n..(l + 1) * m * n]),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        TrainState::init(layers, *quant, grad, optim, self.cfg.seed)
+    }
+
     /// Held-out loss averaged over `n` deterministic eval batches.
     pub fn eval_loss(&self, n: usize) -> Result<f32> {
         let corpus = Corpus::new(CorpusConfig::new(
@@ -305,5 +383,54 @@ mod tests {
         };
         // mean of last 10 losses: 10..1 → 5.5
         assert!((r.final_train_loss() - 5.5).abs() < 1e-6);
+    }
+
+    fn result_with_losses(losses: Vec<f32>) -> RunResult {
+        RunResult {
+            name: "x".into(),
+            mode: "fp32".into(),
+            model: "nano".into(),
+            losses,
+            gnorms: vec![],
+            test_loss: 1.0,
+            step_ms_mean: 0.0,
+            step_ms_p95: 0.0,
+            compile_ms: 0.0,
+            diverged: false,
+        }
+    }
+
+    #[test]
+    fn final_loss_is_nan_for_empty_curve() {
+        // Regression: an empty curve used to report 0.0 — indistinguishable
+        // from a perfectly-converged run.
+        assert!(result_with_losses(vec![]).final_train_loss().is_nan());
+    }
+
+    #[test]
+    fn final_loss_excludes_non_finite_tail() {
+        // Regression: a diverged run's NaN tail used to poison the mean.
+        let mut losses: Vec<f32> = (0..12).map(|i| 12.0 - i as f32).collect();
+        losses.push(f32::NAN); // divergence at the end
+        let r = result_with_losses(losses);
+        // Window = last 10 entries [9..1, NaN]; finite mean = (9+..+1)/9 = 5.
+        assert!((r.final_train_loss() - 5.0).abs() < 1e-6);
+        // All-NaN window → NaN, not a number invented from nothing.
+        let r = result_with_losses(vec![f32::NAN, f32::INFINITY]);
+        assert!(r.final_train_loss().is_nan());
+    }
+
+    #[test]
+    fn seed_input_is_lossless_or_loud() {
+        // Regression: seeds ≥ 2³¹ wrapped negative via `as i32`, silently
+        // decoupling the graph-side PRNG stream from the config.
+        let hv = seed_input(7).unwrap();
+        assert_eq!(hv.i32s().unwrap(), &[7]);
+        let hv = seed_input(i32::MAX as u64).unwrap();
+        assert_eq!(hv.i32s().unwrap(), &[i32::MAX]);
+        for bad in [1u64 << 31, u64::MAX, (i32::MAX as u64) + 1] {
+            let err = seed_input(bad).unwrap_err().to_string();
+            assert!(err.contains("seed"), "unhelpful error: {err}");
+        }
     }
 }

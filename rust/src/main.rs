@@ -11,10 +11,14 @@ use metis::coordinator::{eval_downstream, ExperimentConfig, Trainer};
 use metis::data::tasks::ALL_TASKS;
 use metis::formats::{self, Format};
 use metis::linalg::{householder_qr, jacobi_svd};
-use metis::metis::{pipeline, DecompStrategy, MetisQuantConfig, PipelineConfig};
+use metis::metis::{
+    pipeline, trainstate, DecompStrategy, GradStepConfig, MetisQuantConfig, NativeTrainConfig,
+    Optim, PipelineConfig,
+};
 use metis::runtime::Engine;
 use metis::spectral;
 use metis::tensor::Matrix;
+use metis::util::json::Json;
 use metis::util::prng::Rng;
 
 fn main() {
@@ -34,6 +38,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("analyze") => cmd_analyze(&args),
         Some("quant") => cmd_quant(&args),
         Some("quantize-model") => cmd_quantize_model(&args),
+        Some("train-native") => cmd_train_native(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -141,10 +146,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         })
         .collect::<Result<_>>()?;
 
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = model.clone();
-    cfg.mode = mode.clone();
-    cfg.artifacts = artifacts_flag(args);
+    let cfg = ExperimentConfig {
+        model: model.clone(),
+        mode: mode.clone(),
+        artifacts: artifacts_flag(args),
+        ..ExperimentConfig::default()
+    };
     let mut trainer = Trainer::new(&engine, cfg.clone())?;
     trainer.state[..params.len()].clone_from_slice(&params);
     let loss = trainer.eval_loss(8)?;
@@ -284,6 +291,70 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
     if let Some(out) = args.flags.get("out") {
         res.write_jsonl(out)?;
         println!("report: {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let fmt = Format::from_name(&args.str("fmt", "nvfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt (mxfp4|nvfp4|fp8|paper_fp4)"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --strategy (full|rsvd|sparse_sample|random_project)")
+        })?;
+    let optim = Optim::from_name(&args.str("optim", "sgd"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --optim (sgd|adam)"))?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cfg = NativeTrainConfig {
+        n_layers: args.usize("layers", 2)?,
+        d_model: args.usize("d-model", 64)?,
+        steps: args.usize("steps", 50)?,
+        batch: args.usize("batch", 32)?,
+        lr: args.f64("lr", 0.02)?,
+        warmup: args.usize("warmup", 5)?,
+        seed: args.usize("seed", 0)? as u64,
+        threads: args.usize("threads", default_threads)?,
+        quant: MetisQuantConfig {
+            fmt,
+            strategy,
+            rho: args.f64("rho", 0.1)?,
+            max_rank: args.usize("max-rank", 64)?,
+        },
+        grad: GradStepConfig {
+            rank: args.usize("grad-rank", 8)?,
+            power_iters: args.usize("power-iters", 1)?,
+            adaptive: !args.switch("no-adaptive"),
+            fmt,
+        },
+        optim,
+        repack_every: args.usize("repack-every", 0)?,
+    };
+
+    // One JSON object per step on stdout: the per-step loop is the
+    // product here, so the report stream *is* the primary output.
+    let res = trainstate::train_native_with(&cfg, &mut |rep| println!("{}", rep.to_json()))?;
+    if let Some(out) = args.flags.get("out") {
+        res.write_jsonl(out)?;
+    }
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("event", Json::str("done")),
+            ("steps", Json::num(res.reports.len() as f64)),
+            ("first_loss", Json::num_or_null(res.first_loss())),
+            ("final_loss", Json::num_or_null(res.final_loss())),
+            ("wall_ms", Json::num_or_null(res.wall_ms)),
+            ("threads", Json::num(res.threads as f64)),
+            ("fmt", Json::str(fmt.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("optim", Json::str(optim.name())),
+            ("diverged", Json::Bool(res.diverged)),
+        ])
+    );
+    if res.diverged {
+        anyhow::bail!("native training diverged (non-finite loss)");
     }
     Ok(())
 }

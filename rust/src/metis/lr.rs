@@ -20,6 +20,40 @@ pub fn amplification(sigma: f64, sigma1: f64) -> f64 {
     2.0 / (1.0 + sigma / sigma1.max(1e-300))
 }
 
+/// Summary of one §3.2 rescale, reported per layer per step by the
+/// native training loop's `GradStep`.
+#[derive(Clone, Copy, Debug)]
+pub struct RescaleStats {
+    /// Dominant singular value σ₁ (a fixed point of the rescale).
+    pub t1: f64,
+    /// Mean σ̃ᵢ/σᵢ over the nonzero spectrum, ∈ [1, 2].
+    pub amp_mean: f64,
+    /// Max σ̃ᵢ/σᵢ (the deepest-tail amplification), ∈ [1, 2].
+    pub amp_max: f64,
+}
+
+/// Measure how strongly the rescale acted on a spectrum.  Zero entries
+/// (and empty spectra) contribute amplification 1.
+pub fn rescale_stats(t: &[f64], t_adapt: &[f64]) -> RescaleStats {
+    let t1 = t.iter().fold(0.0f64, |a, &x| a.max(x));
+    let mut sum = 0.0;
+    let mut max = 1.0f64;
+    let mut n = 0usize;
+    for (&raw, &ada) in t.iter().zip(t_adapt) {
+        if raw > 0.0 {
+            let amp = ada / raw;
+            sum += amp;
+            max = max.max(amp);
+            n += 1;
+        }
+    }
+    RescaleStats {
+        t1,
+        amp_mean: if n > 0 { sum / n as f64 } else { 1.0 },
+        amp_max: max,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,6 +90,24 @@ mod tests {
         assert!(adaptive_rescale(&[]).is_empty());
         let a = adaptive_rescale(&[0.0, 0.0]);
         assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn rescale_stats_measures_the_rescale() {
+        let t = vec![8.0, 2.0, 1e-6];
+        let a = adaptive_rescale(&t);
+        let st = rescale_stats(&t, &a);
+        assert!((st.t1 - 8.0).abs() < 1e-12);
+        assert!(st.amp_mean > 1.0 && st.amp_mean < 2.0);
+        assert!((st.amp_max - 2.0).abs() < 1e-5); // deep tail doubles
+        // Identity rescale (adaptive off): everything is 1.
+        let id = rescale_stats(&t, &t);
+        assert_eq!(id.amp_mean, 1.0);
+        assert_eq!(id.amp_max, 1.0);
+        // Degenerate spectra.
+        let z = rescale_stats(&[0.0], &[0.0]);
+        assert_eq!((z.amp_mean, z.amp_max), (1.0, 1.0));
+        assert_eq!(rescale_stats(&[], &[]).amp_mean, 1.0);
     }
 
     #[test]

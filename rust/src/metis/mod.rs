@@ -16,18 +16,29 @@
 //! * [`lr`] — the §3.2 adaptive spectral learning-rate rescale;
 //! * [`pipeline`] — the multi-threaded layer-sharded driver behind
 //!   `metis quantize-model` (checkpoint dir or synthetic model →
-//!   per-layer JSONL reports).
+//!   per-layer JSONL reports);
+//! * [`trainstate`] — the splits on the training hot path: init-time
+//!   Eq. 3 packing into [`trainstate::PackedWeight`]s, per-step Eq. 6
+//!   gradient splits via [`trainstate::GradStep`], and the sharded
+//!   native step loop behind `metis train-native`.
 
 pub mod lr;
 pub mod pipeline;
 pub mod quantizer;
 pub mod sampler;
 pub mod split;
+pub mod trainstate;
 
-pub use lr::adaptive_rescale;
+pub use lr::{adaptive_rescale, rescale_stats, RescaleStats};
 pub use pipeline::{
     load_checkpoint_dir, synthetic_model, Layer, LayerReport, PipelineConfig, PipelineResult,
 };
-pub use quantizer::{compare, quantize_split, sigma_distortion, MetisQuantConfig, QuantCompare};
+pub use quantizer::{
+    compare, quantize_grad_split, quantize_split, sigma_distortion, MetisQuantConfig, QuantCompare,
+};
 pub use sampler::{decompose, sparse_sample_svd, DecompStrategy};
 pub use split::{gradient_split, weight_split, GradSplit, WeightSplit};
+pub use trainstate::{
+    train_native, train_native_with, GradStep, GradStepConfig, NativeRunResult, NativeTrainConfig,
+    Optim, PackedWeight, StepReport, TrainState,
+};

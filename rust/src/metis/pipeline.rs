@@ -82,14 +82,6 @@ pub struct LayerReport {
     pub direct_sigma_tail: f64,
 }
 
-fn num_or_null(x: f64) -> Json {
-    if x.is_finite() {
-        Json::num(x)
-    } else {
-        Json::Null
-    }
-}
-
 impl LayerReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -97,15 +89,15 @@ impl LayerReport {
             ("rows", Json::num(self.rows as f64)),
             ("cols", Json::num(self.cols as f64)),
             ("k", Json::num(self.k as f64)),
-            ("quant_ms", num_or_null(self.quant_ms)),
-            ("metis_rel_err", num_or_null(self.metis_rel_err)),
-            ("direct_rel_err", num_or_null(self.direct_rel_err)),
-            ("metis_underflow", num_or_null(self.metis_underflow)),
-            ("direct_underflow", num_or_null(self.direct_underflow)),
-            ("metis_sigma_err", num_or_null(self.metis_sigma_err)),
-            ("direct_sigma_err", num_or_null(self.direct_sigma_err)),
-            ("metis_sigma_tail", num_or_null(self.metis_sigma_tail)),
-            ("direct_sigma_tail", num_or_null(self.direct_sigma_tail)),
+            ("quant_ms", Json::num_or_null(self.quant_ms)),
+            ("metis_rel_err", Json::num_or_null(self.metis_rel_err)),
+            ("direct_rel_err", Json::num_or_null(self.direct_rel_err)),
+            ("metis_underflow", Json::num_or_null(self.metis_underflow)),
+            ("direct_underflow", Json::num_or_null(self.direct_underflow)),
+            ("metis_sigma_err", Json::num_or_null(self.metis_sigma_err)),
+            ("direct_sigma_err", Json::num_or_null(self.direct_sigma_err)),
+            ("metis_sigma_tail", Json::num_or_null(self.metis_sigma_tail)),
+            ("direct_sigma_tail", Json::num_or_null(self.direct_sigma_tail)),
         ])
     }
 }
@@ -271,32 +263,50 @@ pub fn run(layers: Vec<Layer>, cfg: &PipelineConfig) -> Result<PipelineResult> {
     })
 }
 
-/// Load every 2-D `.npy` under `dir` as a layer (sorted by file name;
-/// vectors/scalars such as biases are skipped).
+/// Load every weight matrix under `dir` as a layer (sorted by file
+/// name).  2-D `.npy` blobs load as one layer each; 3-D `(L, m, n)`
+/// blobs — the layout JAX-stacked checkpoints use for per-layer
+/// parameter stacks — unstack into L layers named `<stem>.<l>`.
+/// Vectors/scalars such as biases are skipped.
 pub fn load_checkpoint_dir(dir: impl AsRef<Path>) -> Result<Vec<Layer>> {
     let dir = dir.as_ref();
     let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
         .map_err(|e| anyhow!("read checkpoint dir {}: {e}", dir.display()))?
         .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.extension().map_or(false, |x| x == "npy"))
+        .filter(|p| p.extension().is_some_and(|x| x == "npy"))
         .collect();
     paths.sort();
     let mut out = Vec::new();
     for path in paths {
         let arr = crate::util::npy::read_npy(&path)
             .with_context(|| format!("layer {}", path.display()))?;
-        if arr.shape.len() != 2 || arr.shape[0] < 2 || arr.shape[1] < 2 {
-            continue; // biases, scalars, stacked 3-D blobs
-        }
-        let w = Matrix::from_f32(arr.shape[0], arr.shape[1], &arr.to_f32());
         let name = path
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| path.display().to_string());
-        out.push(Layer { name, w });
+        match arr.shape.len() {
+            2 if arr.shape[0] >= 2 && arr.shape[1] >= 2 => {
+                let w = Matrix::from_f32(arr.shape[0], arr.shape[1], &arr.to_f32());
+                out.push(Layer { name, w });
+            }
+            3 if arr.shape[1] >= 2 && arr.shape[2] >= 2 => {
+                let (stack, m, n) = (arr.shape[0], arr.shape[1], arr.shape[2]);
+                let flat = arr.to_f32();
+                for l in 0..stack {
+                    out.push(Layer {
+                        name: format!("{name}.{l}"),
+                        w: Matrix::from_f32(m, n, &flat[l * m * n..(l + 1) * m * n]),
+                    });
+                }
+            }
+            _ => continue, // biases, scalars, degenerate dims
+        }
     }
     if out.is_empty() {
-        bail!("no 2-D .npy weight matrices under {}", dir.display());
+        bail!(
+            "no 2-D or stacked 3-D .npy weight matrices under {}",
+            dir.display()
+        );
     }
     Ok(out)
 }
@@ -418,6 +428,89 @@ mod tests {
             // σ was skipped → serialized as null, not NaN.
             assert_eq!(j.req("metis_sigma_err").unwrap(), &Json::Null);
         }
+    }
+
+    #[test]
+    fn measure_sigma_reports_finite_distortion() {
+        // σ measurement on (the default configuration, previously only
+        // unit-tested with σ off): distortion columns are finite and
+        // the Metis path wins them on anisotropic layers.
+        let mut cfg = small_cfg(2);
+        cfg.measure_sigma = true;
+        cfg.quant.rho = 0.25; // k=4 at d_model 16 — the Fig. 5 regime
+        let res = run(synthetic_model(1, 16, 21), &cfg).unwrap();
+        for r in &res.reports {
+            assert!(r.metis_sigma_err.is_finite() && r.metis_sigma_err > 0.0, "{}", r.name);
+            assert!(r.direct_sigma_err.is_finite() && r.direct_sigma_err > 0.0, "{}", r.name);
+            assert!(r.metis_sigma_tail.is_finite() && r.direct_sigma_tail.is_finite());
+            assert!(r.metis_sigma_err < r.direct_sigma_err, "{}", r.name);
+        }
+        let (sig_m, sig_d) = res.mean_sigma_err();
+        assert!(sig_m.is_finite() && sig_d.is_finite() && sig_m < sig_d);
+        // σ on must not perturb the quantization numbers themselves.
+        let mut off = small_cfg(2);
+        off.measure_sigma = false;
+        off.quant.rho = 0.25;
+        let res_off = run(synthetic_model(1, 16, 21), &off).unwrap();
+        for (a, b) in res.reports.iter().zip(&res_off.reports) {
+            assert_eq!(a.metis_rel_err, b.metis_rel_err);
+            assert_eq!(a.direct_rel_err, b.direct_rel_err);
+        }
+    }
+
+    #[test]
+    fn measure_sigma_full_strategy_shares_the_reference_svd() {
+        // The Full-strategy fast path (split and σ reference from one
+        // Jacobi SVD) must produce the same report fields as any other
+        // measured run: correct k, finite σ columns.
+        let mut cfg = small_cfg(1);
+        cfg.quant.strategy = DecompStrategy::Full;
+        cfg.measure_sigma = true;
+        cfg.quant.rho = 0.25;
+        let res = run(synthetic_model(1, 16, 13), &cfg).unwrap();
+        for r in &res.reports {
+            assert_eq!(r.k, cfg.quant.rank(r.rows.min(r.cols)));
+            assert!(r.metis_sigma_err.is_finite() && r.direct_sigma_err.is_finite());
+            assert!(r.metis_sigma_err < r.direct_sigma_err, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn checkpoint_dir_unstacks_3d_blobs() {
+        // Regression: JAX-stacked checkpoints store per-layer stacks as
+        // (L, m, n) blobs; these used to be silently skipped, so whole
+        // models reported "no 2-D .npy weight matrices".
+        use crate::util::npy::{write_npy, NpyArray};
+        let dir = std::env::temp_dir().join("metis_pipeline_ckpt3d");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(0);
+        let (stack, m, n) = (3usize, 8usize, 6usize);
+        let mats: Vec<Matrix> = (0..stack)
+            .map(|_| Matrix::gaussian(&mut rng, m, n, 1.0))
+            .collect();
+        let flat: Vec<f32> = mats
+            .iter()
+            .flat_map(|w| w.data.iter().map(|&x| x as f32))
+            .collect();
+        write_npy(dir.join("stack.npy"), &NpyArray::f32(vec![stack, m, n], flat)).unwrap();
+        // A 3-D stack of vectors must still be skipped.
+        write_npy(
+            dir.join("biases.npy"),
+            &NpyArray::f32(vec![2, 1, 6], vec![0.5; 12]),
+        )
+        .unwrap();
+        let layers = load_checkpoint_dir(&dir).unwrap();
+        let names: Vec<&str> = layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["stack.0", "stack.1", "stack.2"]);
+        for (layer, want) in layers.iter().zip(&mats) {
+            assert_eq!((layer.w.rows, layer.w.cols), (m, n));
+            let err = layer.w.sub(want).frob_norm();
+            assert!(err < 1e-6, "unstacked slice diverges: {err:.2e}");
+        }
+        // And the unstacked layers flow through the pipeline end-to-end.
+        let res = run(layers, &small_cfg(2)).unwrap();
+        assert_eq!(res.reports.len(), stack);
     }
 
     #[test]

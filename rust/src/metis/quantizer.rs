@@ -26,7 +26,7 @@ use crate::formats::blockq::quant_stats;
 use crate::formats::{self, Format, QuantStats};
 use crate::linalg::jacobi_svd;
 use crate::metis::sampler::DecompStrategy;
-use crate::metis::split::{rank_for, weight_split, WeightSplit};
+use crate::metis::split::{rank_for, weight_split, GradSplit, WeightSplit};
 use crate::spectral;
 use crate::tensor::Matrix;
 use crate::util::prng::Rng;
@@ -59,17 +59,47 @@ impl MetisQuantConfig {
     }
 }
 
+/// Quantized Eq. 5 factors of a split — (Q(U), Q(Vᵀ), Q(W_R)), each
+/// blocked along its contraction axis (axis 0).  The single source of
+/// the factor block layout: both the measured pipeline
+/// ([`quantize_split`]) and the training path
+/// (`trainstate::PackedWeight::pack`) compose this, so the pipeline's
+/// accuracy numbers stay predictive of training behavior.
+pub fn quantize_split_parts(split: &WeightSplit, fmt: Format) -> (Matrix, Matrix, Matrix) {
+    (
+        formats::quantize_matrix_along(fmt, &split.svd.u, 0),
+        formats::quantize_matrix_along(fmt, &split.svd.v.transpose(), 0),
+        formats::quantize_matrix_along(fmt, &split.residual, 0),
+    )
+}
+
 /// Eq. 5 effective weight of a split: Q(U) S Q(Vᵀ) + Q(W_R).
 pub fn quantize_split(split: &WeightSplit, fmt: Format) -> Matrix {
-    let uq = formats::quantize_matrix_along(fmt, &split.svd.u, 0);
-    let vtq = formats::quantize_matrix_along(fmt, &split.svd.v.transpose(), 0);
-    let rq = formats::quantize_matrix_along(fmt, &split.residual, 0);
+    let (uq, vtq, rq) = quantize_split_parts(split, fmt);
     uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq)
 }
 
 /// Direct baseline: Q(W) along the contraction axis.
 pub fn quantize_direct(w: &Matrix, fmt: Format) -> Matrix {
     formats::quantize_matrix_along(fmt, w, 0)
+}
+
+/// Gradient-side Eq. 5 analogue (the G4 of W4A4G4): the Eq. 6 split's
+/// sub-distributions are block-quantized independently while the
+/// spectrum stays high-precision,
+///
+///     D̂ = Q(P) diag(T) Q(Qᵀ) + Q(D_R)
+///
+/// with the same contraction-axis block layout as the weight side
+/// (P axis 0, Qᵀ axis 0, D_R axis 0).  `adapted` selects the §3.2
+/// rescaled spectrum T̃ — the effective gradient the optimizer consumes
+/// on the native step loop.
+pub fn quantize_grad_split(split: &GradSplit, fmt: Format, adapted: bool) -> Matrix {
+    let t = if adapted { &split.t_adapt } else { &split.t };
+    let pq = formats::quantize_matrix_along(fmt, &split.p, 0);
+    let qtq = formats::quantize_matrix_along(fmt, &split.qt, 0);
+    let rq = formats::quantize_matrix_along(fmt, &split.residual, 0);
+    pq.scale_cols(t).matmul(&qtq).add(&rq)
 }
 
 /// Side-by-side result of the Metis path vs the direct baseline on one
@@ -195,6 +225,34 @@ mod tests {
         // §2.3 bias: direct FP4 clips small values; the split does not.
         assert!(cmp.direct.underflow_frac > 0.01);
         assert!(cmp.metis.underflow_frac < cmp.direct.underflow_frac);
+    }
+
+    #[test]
+    fn quantize_grad_split_matches_manual_composition() {
+        // Same bit-exactness contract as the weight side: the G4 path is
+        // the public formats API composed in the documented layout, with
+        // the spectrum (raw or §3.2-adapted) exempt.
+        use crate::metis::split::gradient_split;
+        let mut rng = Rng::new(4);
+        let d = planted(&mut rng, 48, 40, 1.5).scale(1e-4);
+        let split = gradient_split(&d, 6, 1, true, &mut rng);
+        for fmt in Format::ALL {
+            for adapted in [false, true] {
+                let got = quantize_grad_split(&split, fmt, adapted);
+                let t = if adapted { &split.t_adapt } else { &split.t };
+                let want = formats::quantize_matrix_along(fmt, &split.p, 0)
+                    .scale_cols(t)
+                    .matmul(&formats::quantize_matrix_along(fmt, &split.qt, 0))
+                    .add(&formats::quantize_matrix_along(fmt, &split.residual, 0));
+                assert_eq!(got, want, "{} adapted={adapted}", fmt.name());
+            }
+        }
+        // The quantized effective gradient stays close to the raw split
+        // reconstruction — structured noise, not a different direction.
+        let raw = split.reconstruct(false);
+        let q = quantize_grad_split(&split, Format::Fp8, false);
+        let rel = q.sub(&raw).frob_norm() / raw.frob_norm();
+        assert!(rel < 0.1, "fp8 grad quantization error: {rel:.3}");
     }
 
     #[test]

@@ -73,6 +73,24 @@ impl GradSplit {
         let t = if adapted { &self.t_adapt } else { &self.t };
         self.p.scale_cols(t).matmul(&self.qt).add(&self.residual)
     }
+
+    /// Sketch rank j actually realized by the range finder.
+    pub fn rank(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Fraction of ‖D‖²_F captured by the rank-j subspace.  P and Qᵀ are
+    /// orthonormal and D_R ⟂ span(P), so the low-rank energy is exactly
+    /// Σtᵢ² and the two parts add to ‖D‖² — no extra pass over D needed.
+    pub fn captured_energy(&self) -> f64 {
+        let low: f64 = self.t.iter().map(|x| x * x).sum();
+        let res = self.residual.frob_norm().powi(2);
+        if low + res > 0.0 {
+            low / (low + res)
+        } else {
+            1.0
+        }
+    }
 }
 
 /// Randomized gradient split (Eq. 6) with sketch rank `j` and
@@ -192,7 +210,7 @@ mod tests {
         let a1 = dec.t_adapt.iter().cloned().fold(0.0f64, f64::max);
         assert!((t1 - a1).abs() / t1 < 1e-9, "σ₁ fixed: {t1} vs {a1}");
         for (t, a) in dec.t.iter().zip(&dec.t_adapt) {
-            assert!(*a >= *t - 1e-12 && *a <= 2.0 * t + 1e-12);
+            assert!((*t - 1e-12..=2.0 * t + 1e-12).contains(a));
         }
         // The adapted reconstruction differs from the raw gradient.
         let raw = dec.reconstruct(false);
@@ -213,6 +231,24 @@ mod tests {
             let rel = (dec.t[i] - exact[i]).abs() / exact[i];
             assert!(rel < 5e-2, "σ{i}: {} vs {} ({rel:.2e})", dec.t[i], exact[i]);
         }
+    }
+
+    #[test]
+    fn captured_energy_partitions_the_gradient_norm() {
+        let mut rng = Rng::new(6);
+        let d = planted(&mut rng, 40, 32, 1.5);
+        let dec = gradient_split(&d, 6, 1, false, &mut rng);
+        assert_eq!(dec.rank(), 6);
+        // Low-rank energy + residual energy == ‖D‖² (orthogonal parts).
+        let low: f64 = dec.t.iter().map(|x| x * x).sum();
+        let total = low + dec.residual.frob_norm().powi(2);
+        let rel = (total - d.frob_norm().powi(2)).abs() / d.frob_norm().powi(2);
+        assert!(rel < 1e-9, "energy partition violated: {rel:.2e}");
+        let frac = dec.captured_energy();
+        assert!(frac > 0.5 && frac <= 1.0, "power-law top-6 carries the bulk: {frac}");
+        // Zero gradient: convention is "everything captured".
+        let z = gradient_split(&Matrix::zeros(8, 8), 2, 0, false, &mut rng);
+        assert_eq!(z.captured_energy(), 1.0);
     }
 
     #[test]

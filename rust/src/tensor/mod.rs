@@ -110,8 +110,8 @@ impl Matrix {
                     continue;
                 }
                 let brow = &b.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += a_ip * brow[j];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += a_ip * bj;
                 }
             }
         }

@@ -111,6 +111,16 @@ impl Json {
         Json::Num(x)
     }
 
+    /// `Num` for finite values, `Null` otherwise — JSON has no NaN/Inf,
+    /// so skipped/diverged metrics serialize as null in the run logs.
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -132,12 +142,6 @@ impl Json {
     }
 
     // -- serialization --------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
 
     fn write(&self, out: &mut String) {
         match self {
@@ -174,6 +178,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization entry point: `format!("{j}")` / `j.to_string()` emit
+/// compact JSON (one line — the JSONL-friendly form).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
