@@ -72,6 +72,7 @@ fn main() -> Result<()> {
         measure_sigma: true,
         sigma_dim_cap: 128,
         seed: 0,
+        ..PipelineConfig::default()
     };
     let res = pipeline::run(pipeline::synthetic_model(2, 48, 0), &cfg)?;
     let (m, dd) = res.mean_sigma_err();

@@ -16,7 +16,7 @@ use metis::formats::Format;
 use metis::linalg::{jacobi_svd, svd::singular_values};
 use metis::metis::{
     decompose, pipeline, quantizer, weight_split, DecompStrategy, MetisQuantConfig,
-    PipelineConfig,
+    PipelineConfig, SigmaRef,
 };
 use metis::util::prng::Rng;
 
@@ -84,6 +84,8 @@ fn main() -> anyhow::Result<()> {
             measure_sigma: true,
             sigma_dim_cap: 256,
             seed: 0,
+            block_cols: 0, // pure layer sharding, as labeled
+            sigma_ref: SigmaRef::Sampled,
         };
         let res = pipeline::run(pipeline::synthetic_model(3, 96, 0), &cfg)?;
         if threads == 1 {
@@ -122,10 +124,51 @@ fn main() -> anyhow::Result<()> {
     }
     t3.print();
 
+    // --- 4. blocked vs layer-granularity sharding ------------------------
+    // A wide model (widest layer 4·128 = 512 cols): at layer
+    // granularity the big ffn blobs straggle on one worker each;
+    // 64-column blocks fan them out across the pool.
+    let mut t4 = Table::new(
+        "intra-layer column-block sharding (synthetic 2x128 model, σ off)",
+        &["sharding", "threads", "wall ms", "speedup vs layer@1"],
+    );
+    let quant4 = MetisQuantConfig {
+        fmt: Format::Nvfp4,
+        strategy: DecompStrategy::SparseSample,
+        rho: 0.1,
+        max_rank: 32,
+    };
+    let mut layer1_ms = f64::NAN;
+    for (label, block_cols) in [("layer", 0usize), ("block-64", 64)] {
+        for threads in [1usize, 4] {
+            let cfg = PipelineConfig {
+                quant: quant4,
+                threads,
+                measure_sigma: false,
+                sigma_dim_cap: 256,
+                seed: 0,
+                block_cols,
+                sigma_ref: SigmaRef::Sampled,
+            };
+            let res = pipeline::run(pipeline::synthetic_model(2, 128, 0), &cfg)?;
+            if block_cols == 0 && threads == 1 {
+                layer1_ms = res.wall_ms;
+            }
+            t4.row(vec![
+                label.to_string(),
+                threads.to_string(),
+                fmt_f(res.wall_ms, 0),
+                format!("{:.2}x", layer1_ms / res.wall_ms),
+            ]);
+        }
+    }
+    t4.print();
+
     for (t, file) in [
         (&t1, "metis_decomp_strategies.csv"),
         (&t2, "metis_pipeline_threads.csv"),
         (&t3, "metis_fig5_formats.csv"),
+        (&t4, "metis_pipeline_blocked.csv"),
     ] {
         t.write_csv(reports_dir().join(file).to_str().unwrap())?;
     }

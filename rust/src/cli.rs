@@ -94,12 +94,22 @@ USAGE:
                   [--strategy full|rsvd|sparse_sample|random_project]
                   [--threads N] [--rho F] [--max-rank N] [--seed N]
                   [--layers N] [--d-model N] [--sigma-cap N] [--no-sigma]
+                  [--sigma-ref sampled|full] [--block-cols N]
                   [--out report.jsonl]
       Pure-Rust Metis pipeline: sweep a checkpoint dir of .npy weights
       (or, without --ckpt, a synthetic anisotropic model of --layers
       transformer blocks at width --d-model) through the Eq. 3 split +
       Eq. 5 sub-distribution quantization, sharded over --threads
       workers; per-layer error and σ-distortion reports as JSONL.
+      Bounded-memory large-layer path: checkpoint payloads stream off
+      disk per column block, and layers wider than --block-cols
+      (default 1024; 0 = layer granularity) fan out as (layer, block)
+      work units, so a 4k²-class matrix neither sits in RAM whole nor
+      monopolizes one worker; reports stay bit-identical for any
+      thread count.  Layers past --sigma-cap measure σ against the
+      §3.1 sampled top-k spectrum (--sigma-ref sampled, the default,
+      O(mnk)) instead of skipping; --sigma-ref full keeps the old
+      skip-above-cap behavior.
       Decomposition strategies (cost ↓ / accuracy →): full = exact
       Jacobi SVD oracle; rsvd = randomized SVD, 2 power iterations;
       sparse_sample = §3.1 row-sampling sketch + subspace lift

@@ -12,8 +12,8 @@ use metis::data::tasks::ALL_TASKS;
 use metis::formats::{self, Format};
 use metis::linalg::{householder_qr, jacobi_svd};
 use metis::metis::{
-    pipeline, trainstate, DecompStrategy, GradStepConfig, MetisQuantConfig, NativeTrainConfig,
-    Optim, PipelineConfig,
+    pipeline, trainstate, DecompStrategy, GradStepConfig, LayerSpec, MetisQuantConfig,
+    NativeTrainConfig, Optim, PipelineConfig, SigmaRef,
 };
 use metis::runtime::Engine;
 use metis::spectral;
@@ -206,6 +206,8 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
         .ok_or_else(|| {
             anyhow::anyhow!("unknown --strategy (full|rsvd|sparse_sample|random_project)")
         })?;
+    let sigma_ref = SigmaRef::from_name(&args.str("sigma-ref", "sampled"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --sigma-ref (sampled|full)"))?;
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -220,11 +222,16 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
         measure_sigma: !args.switch("no-sigma"),
         sigma_dim_cap: args.usize("sigma-cap", 256)?,
         seed: args.usize("seed", 0)? as u64,
+        block_cols: args.usize("block-cols", 1024)?,
+        sigma_ref,
     };
 
-    let layers = if let Some(dir) = args.flags.get("ckpt") {
-        println!("loading checkpoint {dir} ...");
-        pipeline::load_checkpoint_dir(dir)?
+    let specs: Vec<LayerSpec> = if let Some(dir) = args.flags.get("ckpt") {
+        // Headers only: payloads stream off disk column-block by
+        // column-block inside the workers, so a 4k²-class layer never
+        // sits in memory whole.
+        println!("scanning checkpoint {dir} (streaming) ...");
+        pipeline::scan_checkpoint_dir(dir)?
     } else {
         let n_layers = args.usize("layers", 2)?;
         let d_model = args.usize("d-model", 64)?;
@@ -232,17 +239,28 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
             "no --ckpt: synthetic anisotropic model ({n_layers} blocks, d_model {d_model})"
         );
         pipeline::synthetic_model(n_layers, d_model, cfg.seed)
+            .into_iter()
+            .map(|l| LayerSpec::mem(l.name, l.w))
+            .collect()
+    };
+    let block_cols = if cfg.block_cols == 0 {
+        "off".to_string()
+    } else {
+        cfg.block_cols.to_string()
     };
     println!(
-        "quantize-model: {} layers | fmt {} | strategy {} | rho {:.2} | {} threads",
-        layers.len(),
+        "quantize-model: {} layers | fmt {} | strategy {} | rho {:.2} | {} threads | \
+         block-cols {} | sigma-ref {}",
+        specs.len(),
         fmt.name(),
         strategy.name(),
         cfg.quant.rho,
-        cfg.threads
+        cfg.threads,
+        block_cols,
+        cfg.sigma_ref.name()
     );
 
-    let res = pipeline::run(layers, &cfg)?;
+    let res = pipeline::run_specs(specs, &cfg)?;
 
     let mut table = metis::bench::Table::new(
         "per-layer Metis vs direct quantization",

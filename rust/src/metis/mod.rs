@@ -14,9 +14,11 @@
 //!   [`crate::formats::Format`] with S/T kept high-precision
 //!   (Eqs. 5/8–11), plus the σ-distortion metrics of Fig. 4;
 //! * [`lr`] — the §3.2 adaptive spectral learning-rate rescale;
-//! * [`pipeline`] — the multi-threaded layer-sharded driver behind
-//!   `metis quantize-model` (checkpoint dir or synthetic model →
-//!   per-layer JSONL reports);
+//! * [`pipeline`] — the multi-threaded driver behind `metis
+//!   quantize-model` (checkpoint dir or synthetic model → per-layer
+//!   JSONL reports), sharded at (layer, column-block) granularity with
+//!   streaming `.npy` specs so paper-scale matrices sweep through with
+//!   bounded memory;
 //! * [`trainstate`] — the splits on the training hot path: init-time
 //!   Eq. 3 packing into [`trainstate::PackedWeight`]s, per-step Eq. 6
 //!   gradient splits via [`trainstate::GradStep`], and the sharded
@@ -31,12 +33,14 @@ pub mod trainstate;
 
 pub use lr::{adaptive_rescale, rescale_stats, RescaleStats};
 pub use pipeline::{
-    load_checkpoint_dir, synthetic_model, Layer, LayerReport, PipelineConfig, PipelineResult,
+    load_checkpoint_dir, run_specs, scan_checkpoint_dir, synthetic_model, Layer, LayerReport,
+    LayerSource, LayerSpec, NpySlice, PipelineConfig, PipelineResult, SigmaRef,
 };
 pub use quantizer::{
-    compare, quantize_grad_split, quantize_split, sigma_distortion, MetisQuantConfig, QuantCompare,
+    compare, quantize_grad_split, quantize_split, sigma_distortion, sigma_distortion_vs,
+    MetisQuantConfig, QuantCompare,
 };
-pub use sampler::{decompose, sparse_sample_svd, DecompStrategy};
+pub use sampler::{decompose, sampled_spectrum, sparse_sample_svd, DecompStrategy};
 pub use split::{gradient_split, weight_split, GradSplit, WeightSplit};
 pub use trainstate::{
     train_native, train_native_with, GradStep, GradStepConfig, NativeRunResult, NativeTrainConfig,

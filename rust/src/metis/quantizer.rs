@@ -141,8 +141,19 @@ pub fn sigma_distortion(reference: &[f64], recon: &Matrix) -> (f64, f64) {
     if reference.is_empty() {
         return (0.0, 0.0);
     }
-    let s2 = jacobi_svd(recon).s;
-    let errs = spectral::sigma_rel_errors(reference, &s2);
+    sigma_distortion_vs(reference, &jacobi_svd(recon).s)
+}
+
+/// [`sigma_distortion`] against an already-computed reconstruction
+/// spectrum.  The bounded-memory pipeline uses this with §3.1 sampled
+/// top-k spectra on both sides (reference and reconstruction) so large
+/// layers never pay a full Jacobi SVD; both spectra must be descending
+/// and are compared index-wise over the shorter length.
+pub fn sigma_distortion_vs(reference: &[f64], recon_s: &[f64]) -> (f64, f64) {
+    if reference.is_empty() {
+        return (0.0, 0.0);
+    }
+    let errs = spectral::sigma_rel_errors(reference, recon_s);
     if errs.is_empty() {
         return (0.0, 0.0);
     }
@@ -263,5 +274,25 @@ mod tests {
         let (mean, tail) = sigma_distortion(&s, &w);
         assert!(mean < 1e-9 && tail < 1e-9);
         assert_eq!(sigma_distortion(&[], &w), (0.0, 0.0));
+    }
+
+    #[test]
+    fn sigma_distortion_vs_matches_the_jacobi_path() {
+        // The spectrum-to-spectrum variant is the same metric: feeding
+        // it the recon's exact Jacobi spectrum reproduces
+        // sigma_distortion bit-for-bit, and a truncated (sampled-style)
+        // recon spectrum compares over the shorter head only.
+        let mut rng = Rng::new(5);
+        let w = planted(&mut rng, 32, 28, 1.5);
+        let reference = jacobi_svd(&w).s;
+        let recon = quantize_direct(&w, Format::Fp8);
+        let recon_s = jacobi_svd(&recon).s;
+        assert_eq!(
+            sigma_distortion(&reference, &recon),
+            sigma_distortion_vs(&reference, &recon_s)
+        );
+        let (head, _) = sigma_distortion_vs(&reference[..8], &recon_s[..8]);
+        assert!(head.is_finite() && head >= 0.0);
+        assert_eq!(sigma_distortion_vs(&[], &recon_s), (0.0, 0.0));
     }
 }

@@ -229,14 +229,19 @@ impl Engine {
         Ok(())
     }
 
-    /// Load a parameter set (npy blobs) in manifest order.
+    /// Load a parameter set (npy blobs) in manifest order — through the
+    /// streaming [`npy::NpyReader`], so header validation (checked
+    /// shape arithmetic, exact payload length) runs before any payload
+    /// is decoded, and decoding is chunked rather than a raw
+    /// `read_to_end` copy of the whole blob.
     pub fn load_params(&self, params_key: &str) -> Result<Vec<HostValue>> {
         let pset = self.manifest.param_set(params_key)?.clone();
         let dir = self.manifest.param_dir(params_key)?;
         pset.names
             .iter()
             .map(|n| {
-                let arr = npy::read_npy(dir.join(format!("{n}.npy")))
+                let arr = npy::NpyReader::open(dir.join(format!("{n}.npy")))
+                    .and_then(|mut r| r.read_all())
                     .with_context(|| format!("param {n}"))?;
                 Ok(HostValue::from_npy(&arr))
             })

@@ -144,6 +144,24 @@ impl Matrix {
         out
     }
 
+    /// Copy of the column block [c0, c0+width) as a rows×width matrix —
+    /// the in-memory analogue of the streaming reader's strided block
+    /// reads, used by the pipeline's intra-layer sharding.
+    pub fn col_block(&self, c0: usize, width: usize) -> Matrix {
+        assert!(
+            c0 + width <= self.cols,
+            "col_block [{c0}, {}) out of range for {} cols",
+            c0 + width,
+            self.cols
+        );
+        let mut out = Matrix::zeros(self.rows, width);
+        for r in 0..self.rows {
+            let at = r * self.cols + c0;
+            out.data[r * width..(r + 1) * width].copy_from_slice(&self.data[at..at + width]);
+        }
+        out
+    }
+
     /// Scale column j by s[j] (diag right-multiply).
     pub fn scale_cols(&self, s: &[f64]) -> Matrix {
         assert_eq!(s.len(), self.cols);
@@ -251,6 +269,21 @@ mod tests {
         for (x, y) in prod.data.iter().zip(&a.data) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn col_block_slices_columns() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(&mut rng, 5, 8, 1.0);
+        let b = a.col_block(2, 3);
+        assert_eq!((b.rows, b.cols), (5, 3));
+        for r in 0..5 {
+            for c in 0..3 {
+                assert_eq!(b.at(r, c), a.at(r, 2 + c));
+            }
+        }
+        // Full-width block is the identity copy.
+        assert_eq!(a.col_block(0, 8), a);
     }
 
     #[test]

@@ -1,13 +1,28 @@
 //! Minimal `.npy` (numpy v1.0 format) reader/writer.
 //!
 //! Handles the dtypes this project exchanges with the build path:
-//! little-endian f32/f64/i32/i64, C-order.  Used for parameter blobs
-//! written by aot.py/initpack.py, Rust-side checkpoints and analysis
-//! dumps consumed by the bench harness.
+//! f32/f64/i32/i64 in either byte order, C-order.  Used for parameter
+//! blobs written by aot.py/initpack.py, Rust-side checkpoints and
+//! analysis dumps consumed by the bench harness.
+//!
+//! Two access modes share one header parser:
+//!
+//! * [`read_npy`] / [`write_npy`] — whole-array convenience, as before.
+//! * [`NpyReader`] / [`NpyWriter`] — streaming: the reader validates the
+//!   header and payload length up front but materializes nothing; blocks
+//!   of elements (rows, column blocks) are decoded on demand through
+//!   [`NpyReader::read_f64_at`], so peak memory is the caller's block
+//!   size rather than the blob.  The writer is the converse: a header up
+//!   front, then payload chunks, with an element-count check at `finish`.
+//!
+//! Header arithmetic is fully checked: a corrupt shape whose element
+//! count or byte size would overflow `usize` is an error, not a wrapped
+//! multiply, and payloads must match the declared size *exactly* — both
+//! truncated and trailing bytes are rejected with the offending path.
 
 use std::fs::File;
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -70,78 +85,306 @@ impl NpyArray {
     }
 }
 
-pub fn read_npy(path: impl AsRef<Path>) -> Result<NpyArray> {
-    let mut f = File::open(path.as_ref())
-        .map_err(|e| anyhow!("open {}: {e}", path.as_ref().display()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic[..6] != b"\x93NUMPY" {
-        bail!("not an npy file: {}", path.as_ref().display());
-    }
-    let major = magic[6];
-    let header_len = if major == 1 {
-        let mut b = [0u8; 2];
-        f.read_exact(&mut b)?;
-        u16::from_le_bytes(b) as usize
-    } else {
-        let mut b = [0u8; 4];
-        f.read_exact(&mut b)?;
-        u32::from_le_bytes(b) as usize
-    };
-    let mut header = vec![0u8; header_len];
-    f.read_exact(&mut header)?;
-    let header = String::from_utf8(header)?;
-
-    let descr = extract_quoted(&header, "descr")
-        .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
-    if header.contains("'fortran_order': True") {
-        bail!("fortran-order npy unsupported");
-    }
-    let shape = extract_shape(&header)?;
-    let count: usize = shape.iter().product();
-
-    let mut raw = Vec::new();
-    f.read_to_end(&mut raw)?;
-
-    let data = match descr.as_str() {
-        "<f4" | "|f4" => NpyData::F32(bytes_to_vec::<4, f32>(&raw, count, f32::from_le_bytes)?),
-        "<f8" => NpyData::F64(bytes_to_vec::<8, f64>(&raw, count, f64::from_le_bytes)?),
-        "<i4" => NpyData::I32(bytes_to_vec::<4, i32>(&raw, count, i32::from_le_bytes)?),
-        "<i8" => NpyData::I64(bytes_to_vec::<8, i64>(&raw, count, i64::from_le_bytes)?),
-        d => bail!("unsupported npy dtype {d:?}"),
-    };
-    Ok(NpyArray { shape, data })
+/// Element type of an npy payload (byte order is tracked separately).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NpyDtype {
+    F32,
+    F64,
+    I32,
+    I64,
 }
 
-pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
-    let shape_str = match arr.shape.len() {
+impl NpyDtype {
+    pub fn size(&self) -> usize {
+        match self {
+            NpyDtype::F32 | NpyDtype::I32 => 4,
+            NpyDtype::F64 | NpyDtype::I64 => 8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NpyDtype::F32 => "f4",
+            NpyDtype::F64 => "f8",
+            NpyDtype::I32 => "i4",
+            NpyDtype::I64 => "i8",
+        }
+    }
+}
+
+/// Streaming `.npy` reader: header parsed and payload length validated
+/// at `open`, elements decoded on demand.
+pub struct NpyReader {
+    path: PathBuf,
+    file: File,
+    shape: Vec<usize>,
+    dtype: NpyDtype,
+    big_endian: bool,
+    data_start: u64,
+    count: usize,
+}
+
+/// Elements decoded per chunk by the whole-array readers (bounds the
+/// transient byte buffer at 512 KiB for f64).
+const CHUNK_ELEMS: usize = 1 << 16;
+
+impl NpyReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<NpyReader> {
+        let path = path.as_ref().to_path_buf();
+        let mut f = File::open(&path).map_err(|e| anyhow!("open {}: {e}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic[..6] != b"\x93NUMPY" {
+            bail!("not an npy file: {}", path.display());
+        }
+        let major = magic[6];
+        let (len_field, header_len) = if major == 1 {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            (2u64, u16::from_le_bytes(b) as usize)
+        } else {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            (4u64, u32::from_le_bytes(b) as usize)
+        };
+        let mut header = vec![0u8; header_len];
+        f.read_exact(&mut header)?;
+        let header = String::from_utf8(header)?;
+
+        let descr = extract_quoted(&header, "descr")
+            .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
+        if header.contains("'fortran_order': True") {
+            bail!("fortran-order npy unsupported: {}", path.display());
+        }
+        let (dtype, big_endian) = parse_descr(&descr)
+            .ok_or_else(|| anyhow!("unsupported npy dtype {descr:?}: {}", path.display()))?;
+        let shape = extract_shape(&header)?;
+
+        // Checked header arithmetic: a corrupt shape must error, not
+        // wrap in release builds and mis-slice the payload.
+        let count = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                anyhow!("npy shape {shape:?} overflows element count: {}", path.display())
+            })?;
+        let need = count.checked_mul(dtype.size()).ok_or_else(|| {
+            anyhow!("npy shape {shape:?} overflows payload size: {}", path.display())
+        })? as u64;
+
+        // The payload must match the header exactly: short blobs are
+        // truncated, longer ones misdeclared — both are corruption.
+        let data_start = 8 + len_field + header_len as u64;
+        let file_len = f.metadata()?.len();
+        let payload = file_len.saturating_sub(data_start);
+        if payload < need {
+            bail!(
+                "npy payload too short: {payload} bytes < {need} declared by shape {shape:?}: {}",
+                path.display()
+            );
+        }
+        if payload > need {
+            bail!(
+                "npy payload has {} trailing bytes beyond shape {shape:?} (corrupt or \
+                 misdeclared): {}",
+                payload - need,
+                path.display()
+            );
+        }
+
+        Ok(NpyReader {
+            path,
+            file: f,
+            shape,
+            dtype,
+            big_endian,
+            data_start,
+            count,
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> NpyDtype {
+        self.dtype
+    }
+
+    /// Total number of elements declared by the header.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Decode `n` elements starting at flat C-order element offset
+    /// `start`, as f64 regardless of the stored dtype.  This is the
+    /// block primitive: a row block is one contiguous call, a column
+    /// block is one call per row — either way the transient buffer is
+    /// the block, never the blob.
+    pub fn read_f64_at(&mut self, start: usize, n: usize) -> Result<Vec<f64>> {
+        if !start.checked_add(n).is_some_and(|e| e <= self.count) {
+            bail!(
+                "npy read [{start}, {start}+{n}) out of bounds ({} elements): {}",
+                self.count,
+                self.path.display()
+            );
+        }
+        let size = self.dtype.size();
+        self.file
+            .seek(SeekFrom::Start(self.data_start + (start * size) as u64))?;
+        let mut buf = vec![0u8; n * size];
+        self.file.read_exact(&mut buf)?;
+        let be = self.big_endian;
+        Ok(match self.dtype {
+            NpyDtype::F32 => decode(&buf, be, f32::from_le_bytes, f32::from_be_bytes)
+                .map(|x| x as f64)
+                .collect(),
+            NpyDtype::F64 => decode(&buf, be, f64::from_le_bytes, f64::from_be_bytes).collect(),
+            NpyDtype::I32 => decode(&buf, be, i32::from_le_bytes, i32::from_be_bytes)
+                .map(|x| x as f64)
+                .collect(),
+            NpyDtype::I64 => decode(&buf, be, i64::from_le_bytes, i64::from_be_bytes)
+                .map(|x| x as f64)
+                .collect(),
+        })
+    }
+
+    /// Decode the whole payload (chunked — no raw-byte copy of the blob
+    /// is ever held alongside the decoded vector).
+    pub fn read_all(&mut self) -> Result<NpyArray> {
+        self.file.seek(SeekFrom::Start(self.data_start))?;
+        let data = match self.dtype {
+            NpyDtype::F32 => NpyData::F32(read_typed(
+                &mut self.file,
+                self.count,
+                self.big_endian,
+                f32::from_le_bytes,
+                f32::from_be_bytes,
+            )?),
+            NpyDtype::F64 => NpyData::F64(read_typed(
+                &mut self.file,
+                self.count,
+                self.big_endian,
+                f64::from_le_bytes,
+                f64::from_be_bytes,
+            )?),
+            NpyDtype::I32 => NpyData::I32(read_typed(
+                &mut self.file,
+                self.count,
+                self.big_endian,
+                i32::from_le_bytes,
+                i32::from_be_bytes,
+            )?),
+            NpyDtype::I64 => NpyData::I64(read_typed(
+                &mut self.file,
+                self.count,
+                self.big_endian,
+                i64::from_le_bytes,
+                i64::from_be_bytes,
+            )?),
+        };
+        Ok(NpyArray {
+            shape: self.shape.clone(),
+            data,
+        })
+    }
+}
+
+/// Byte order + type code of a descr string.  `<`/`|`/`=` read as
+/// little-endian (this project never runs big-endian hosts), `>` as
+/// big-endian; both are decoded explicitly rather than falling through
+/// to "unsupported dtype".
+fn parse_descr(descr: &str) -> Option<(NpyDtype, bool)> {
+    let (order, code) = (descr.get(..1)?, descr.get(1..)?);
+    let big_endian = match order {
+        "<" | "|" | "=" => false,
+        ">" => true,
+        _ => return None,
+    };
+    let dtype = match code {
+        "f4" => NpyDtype::F32,
+        "f8" => NpyDtype::F64,
+        "i4" => NpyDtype::I32,
+        "i8" => NpyDtype::I64,
+        _ => return None,
+    };
+    Some((dtype, big_endian))
+}
+
+fn decode<T: Copy, const N: usize>(
+    buf: &[u8],
+    big_endian: bool,
+    from_le: fn([u8; N]) -> T,
+    from_be: fn([u8; N]) -> T,
+) -> impl Iterator<Item = T> + '_ {
+    let from = if big_endian { from_be } else { from_le };
+    buf.chunks_exact(N).map(move |c| from(c.try_into().unwrap()))
+}
+
+fn read_typed<T: Copy, const N: usize>(
+    f: &mut File,
+    count: usize,
+    big_endian: bool,
+    from_le: fn([u8; N]) -> T,
+    from_be: fn([u8; N]) -> T,
+) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = vec![0u8; CHUNK_ELEMS.min(count.max(1)) * N];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(CHUNK_ELEMS);
+        let b = &mut buf[..take * N];
+        f.read_exact(b)?;
+        out.extend(decode(b, big_endian, from_le, from_be));
+        left -= take;
+    }
+    Ok(out)
+}
+
+pub fn read_npy(path: impl AsRef<Path>) -> Result<NpyArray> {
+    NpyReader::open(path)?.read_all()
+}
+
+fn shape_tuple_str(shape: &[usize]) -> String {
+    match shape.len() {
         0 => "()".to_string(),
-        1 => format!("({},)", arr.shape[0]),
+        1 => format!("({},)", shape[0]),
         _ => format!(
             "({})",
-            arr.shape
+            shape
                 .iter()
                 .map(|d| d.to_string())
                 .collect::<Vec<_>>()
                 .join(", ")
         ),
-    };
+    }
+}
+
+/// Magic + version + length-prefixed padded header (v1.0 layout).
+fn header_bytes(descr: &str, shape: &[usize]) -> Vec<u8> {
     let mut header = format!(
-        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
-        arr.descr(),
-        shape_str
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {}, }}",
+        shape_tuple_str(shape)
     );
     // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64.
     let unpadded = 10 + header.len() + 1;
     let pad = (64 - unpadded % 64) % 64;
     header.push_str(&" ".repeat(pad));
     header.push('\n');
+    let mut out = b"\x93NUMPY\x01\x00".to_vec();
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out
+}
 
+pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
     let mut f = File::create(path.as_ref())
         .map_err(|e| anyhow!("create {}: {e}", path.as_ref().display()))?;
-    f.write_all(b"\x93NUMPY\x01\x00")?;
-    f.write_all(&(header.len() as u16).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
+    f.write_all(&header_bytes(arr.descr(), &arr.shape))?;
     match &arr.data {
         NpyData::F32(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
         NpyData::F64(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
@@ -151,31 +394,79 @@ pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
     Ok(())
 }
 
+/// Streaming `<f4` writer: header up front, payload appended in chunks,
+/// so blobs larger than memory can be generated without materializing
+/// them (the converse of [`NpyReader`]).
+pub struct NpyWriter {
+    file: File,
+    path: PathBuf,
+    total: usize,
+    written: usize,
+}
+
+impl NpyWriter {
+    pub fn create_f32(path: impl AsRef<Path>, shape: &[usize]) -> Result<NpyWriter> {
+        let path = path.as_ref().to_path_buf();
+        let total = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                anyhow!("npy shape {shape:?} overflows element count: {}", path.display())
+            })?;
+        let mut file = File::create(&path).map_err(|e| anyhow!("create {}: {e}", path.display()))?;
+        file.write_all(&header_bytes("<f4", shape))?;
+        Ok(NpyWriter {
+            file,
+            path,
+            total,
+            written: 0,
+        })
+    }
+
+    pub fn write_f32(&mut self, chunk: &[f32]) -> Result<()> {
+        if self.written + chunk.len() > self.total {
+            bail!(
+                "npy writer overflow: {} + {} > {} declared elements: {}",
+                self.written,
+                chunk.len(),
+                self.total,
+                self.path.display()
+            );
+        }
+        write_raw(&mut self.file, chunk, |x| x.to_le_bytes())?;
+        self.written += chunk.len();
+        Ok(())
+    }
+
+    /// Flush and verify the payload matches the declared shape exactly.
+    pub fn finish(mut self) -> Result<()> {
+        if self.written != self.total {
+            bail!(
+                "npy writer closed after {} of {} elements: {}",
+                self.written,
+                self.total,
+                self.path.display()
+            );
+        }
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
 fn write_raw<T: Copy, const N: usize>(
     f: &mut File,
     v: &[T],
     to_bytes: impl Fn(T) -> [u8; N],
 ) -> Result<()> {
-    let mut buf = Vec::with_capacity(v.len() * N);
-    for &x in v {
-        buf.extend_from_slice(&to_bytes(x));
+    let mut buf = Vec::with_capacity(v.len().min(CHUNK_ELEMS) * N);
+    for chunk in v.chunks(CHUNK_ELEMS) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&to_bytes(x));
+        }
+        f.write_all(&buf)?;
     }
-    f.write_all(&buf)?;
     Ok(())
-}
-
-fn bytes_to_vec<const N: usize, T>(
-    raw: &[u8],
-    count: usize,
-    from: impl Fn([u8; N]) -> T,
-) -> Result<Vec<T>> {
-    if raw.len() < count * N {
-        bail!("npy payload too short: {} < {}", raw.len(), count * N);
-    }
-    Ok(raw[..count * N]
-        .chunks_exact(N)
-        .map(|c| from(c.try_into().unwrap()))
-        .collect())
 }
 
 fn extract_quoted(header: &str, key: &str) -> Option<String> {
@@ -214,11 +505,29 @@ fn extract_shape(header: &str) -> Result<Vec<usize>> {
 mod tests {
     use super::*;
 
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Raw v1.0 npy bytes from a hand-built header + payload.
+    fn raw_npy(descr: &str, shape_str: &str, payload: &[u8]) -> Vec<u8> {
+        let header =
+            format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
+        let unpadded = 10 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        let full = format!("{}{}\n", header, " ".repeat(pad));
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend_from_slice(&(full.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(full.as_bytes());
+        bytes.extend_from_slice(payload);
+        bytes
+    }
+
     #[test]
     fn roundtrip_f32_2d() {
-        let dir = std::env::temp_dir().join("metis_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("a.npy");
+        let p = test_dir("metis_npy_test").join("a.npy");
         let arr = NpyArray::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, -6.5]);
         write_npy(&p, &arr).unwrap();
         let back = read_npy(&p).unwrap();
@@ -228,8 +537,7 @@ mod tests {
 
     #[test]
     fn roundtrip_scalar_and_1d() {
-        let dir = std::env::temp_dir().join("metis_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = test_dir("metis_npy_test");
         for (shape, n) in [(vec![], 1usize), (vec![5], 5)] {
             let p = dir.join(format!("s{}.npy", shape.len()));
             let arr = NpyArray::i32(shape.clone(), (0..n as i32).collect());
@@ -244,23 +552,155 @@ mod tests {
         // Golden bytes produced by numpy 2.x: np.save of arange(4, f4).
         // Header layout differs slightly (version padding) — construct the
         // canonical numpy header to guard parser assumptions.
-        let header =
-            "{'descr': '<f4', 'fortran_order': False, 'shape': (4,), }".to_string();
-        let unpadded = 10 + header.len() + 1;
-        let pad = (64 - unpadded % 64) % 64;
-        let full = format!("{}{}\n", header, " ".repeat(pad));
-        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
-        bytes.extend_from_slice(&(full.len() as u16).to_le_bytes());
-        bytes.extend_from_slice(full.as_bytes());
+        let mut payload = Vec::new();
         for x in [0f32, 1.0, 2.0, 3.0] {
-            bytes.extend_from_slice(&x.to_le_bytes());
+            payload.extend_from_slice(&x.to_le_bytes());
         }
-        let dir = std::env::temp_dir().join("metis_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("golden.npy");
-        std::fs::write(&p, &bytes).unwrap();
+        let p = test_dir("metis_npy_test").join("golden.npy");
+        std::fs::write(&p, raw_npy("<f4", "(4,)", &payload)).unwrap();
         let arr = read_npy(&p).unwrap();
         assert_eq!(arr.shape, vec![4]);
         assert_eq!(arr.to_f32(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn overflowing_shape_is_rejected() {
+        // Regression: count * elem_size used to be an unchecked multiply
+        // that wraps in release builds and mis-slices the payload.  A
+        // shape whose element count overflows usize must be a clear
+        // error instead.
+        let p = test_dir("metis_npy_corrupt").join("overflow.npy");
+        std::fs::write(
+            &p,
+            raw_npy("<f4", "(9223372036854775807, 16)", &[0u8; 8]),
+        )
+        .unwrap();
+        let err = read_npy(&p).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "got: {err}");
+        assert!(err.contains("overflow.npy"), "error must name the path: {err}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        // Regression: payloads longer than count * size were silently
+        // truncated-accepted; a misdeclared shape must error.
+        let mut payload = Vec::new();
+        for x in [1f32, 2.0, 3.0, 4.0] {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        payload.extend_from_slice(&[0xAB, 0xCD, 0xEF]); // corrupt tail
+        let p = test_dir("metis_npy_corrupt").join("trailing.npy");
+        std::fs::write(&p, raw_npy("<f4", "(4,)", &payload)).unwrap();
+        let err = read_npy(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "got: {err}");
+        assert!(err.contains("trailing.npy"), "error must name the path: {err}");
+    }
+
+    #[test]
+    fn short_payload_is_rejected_with_path() {
+        let p = test_dir("metis_npy_corrupt").join("short.npy");
+        std::fs::write(&p, raw_npy("<f4", "(4,)", &[0u8; 7])).unwrap();
+        let err = read_npy(&p).unwrap_err().to_string();
+        assert!(err.contains("too short"), "got: {err}");
+        assert!(err.contains("short.npy"), "error must name the path: {err}");
+    }
+
+    #[test]
+    fn big_endian_descrs_decode() {
+        // Regression: '>f4' used to fall through to "unsupported dtype";
+        // big-endian payloads now byte-swap explicitly.
+        let dir = test_dir("metis_npy_be");
+        let mut payload = Vec::new();
+        for x in [1.5f32, -2.25, 0.0, 8.0] {
+            payload.extend_from_slice(&x.to_be_bytes());
+        }
+        let p = dir.join("be_f4.npy");
+        std::fs::write(&p, raw_npy(">f4", "(2, 2)", &payload)).unwrap();
+        let arr = read_npy(&p).unwrap();
+        assert_eq!(arr.to_f32(), vec![1.5, -2.25, 0.0, 8.0]);
+
+        let mut payload = Vec::new();
+        for x in [-7i64, 1 << 40] {
+            payload.extend_from_slice(&x.to_be_bytes());
+        }
+        let p = dir.join("be_i8.npy");
+        std::fs::write(&p, raw_npy(">i8", "(2,)", &payload)).unwrap();
+        let arr = read_npy(&p).unwrap();
+        assert_eq!(arr.data, NpyData::I64(vec![-7, 1 << 40]));
+    }
+
+    #[test]
+    fn byte_order_irrelevant_descrs_accepted_for_all_dtypes() {
+        // The dtype matrix is consistent: '|' (and '=') parse for every
+        // supported code, not just '|f4'.
+        let dir = test_dir("metis_npy_pipe");
+        for (descr, payload, want) in [
+            ("|f8", 2.5f64.to_le_bytes().to_vec(), NpyData::F64(vec![2.5])),
+            ("|i4", 9i32.to_le_bytes().to_vec(), NpyData::I32(vec![9])),
+            ("|i8", (-3i64).to_le_bytes().to_vec(), NpyData::I64(vec![-3])),
+            ("=f4", 4.5f32.to_le_bytes().to_vec(), NpyData::F32(vec![4.5])),
+        ] {
+            let p = dir.join(format!("{}.npy", descr.replace(['|', '='], "x")));
+            std::fs::write(&p, raw_npy(descr, "(1,)", &payload)).unwrap();
+            let arr = read_npy(&p).unwrap();
+            assert_eq!(arr.data, want, "{descr}");
+        }
+        // Unknown orders/codes still fail loudly.
+        let p = dir.join("bad.npy");
+        std::fs::write(&p, raw_npy("<c8", "(1,)", &[0u8; 8])).unwrap();
+        assert!(read_npy(&p).unwrap_err().to_string().contains("unsupported"));
+    }
+
+    #[test]
+    fn reader_block_reads_match_whole_array() {
+        let p = test_dir("metis_npy_stream").join("blocks.npy");
+        let (rows, cols) = (7usize, 10usize);
+        let data: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0).collect();
+        write_npy(&p, &NpyArray::f32(vec![rows, cols], data.clone())).unwrap();
+
+        let mut r = NpyReader::open(&p).unwrap();
+        assert_eq!(r.shape(), &[rows, cols]);
+        assert_eq!(r.dtype(), NpyDtype::F32);
+        assert_eq!(r.len(), rows * cols);
+        // Row block: contiguous.
+        let rowblk = r.read_f64_at(2 * cols, 3 * cols).unwrap();
+        for (i, x) in rowblk.iter().enumerate() {
+            assert_eq!(*x, data[2 * cols + i] as f64);
+        }
+        // Column block [c0, c0+w): one strided call per row.
+        let (c0, w) = (4usize, 3usize);
+        for row in 0..rows {
+            let blk = r.read_f64_at(row * cols + c0, w).unwrap();
+            for (j, x) in blk.iter().enumerate() {
+                assert_eq!(*x, data[row * cols + c0 + j] as f64);
+            }
+        }
+        // Out-of-bounds reads error instead of wrapping.
+        assert!(r.read_f64_at(rows * cols - 1, 2).is_err());
+        assert!(r.read_f64_at(usize::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn streaming_writer_roundtrips_and_checks_counts() {
+        let dir = test_dir("metis_npy_stream");
+        let p = dir.join("written.npy");
+        let mut w = NpyWriter::create_f32(&p, &[6, 4]).unwrap();
+        for chunk in (0..24).map(|i| i as f32).collect::<Vec<_>>().chunks(5) {
+            w.write_f32(chunk).unwrap();
+        }
+        w.finish().unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.shape, vec![6, 4]);
+        assert_eq!(back.to_f32(), (0..24).map(|i| i as f32).collect::<Vec<_>>());
+
+        // Underfilled writer refuses to finish...
+        let p2 = dir.join("underfilled.npy");
+        let mut w = NpyWriter::create_f32(&p2, &[3, 3]).unwrap();
+        w.write_f32(&[1.0; 4]).unwrap();
+        assert!(w.finish().unwrap_err().to_string().contains("4 of 9"));
+        // ...and overfilling is rejected at write time.
+        let p3 = dir.join("overfilled.npy");
+        let mut w = NpyWriter::create_f32(&p3, &[2]).unwrap();
+        assert!(w.write_f32(&[1.0; 3]).unwrap_err().to_string().contains("overflow"));
     }
 }

@@ -8,10 +8,11 @@ use metis::linalg::jacobi_svd;
 use metis::metis::{
     gradient_split, pipeline, quantizer, train_native, train_native_with, weight_split,
     DecompStrategy, GradStepConfig, MetisQuantConfig, NativeTrainConfig, Optim, PipelineConfig,
-    StepReport,
+    SigmaRef, StepReport,
 };
 use metis::tensor::Matrix;
 use metis::util::json::Json;
+use metis::util::npy::NpyWriter;
 use metis::util::prng::Rng;
 
 fn cfg(threads: usize) -> PipelineConfig {
@@ -26,6 +27,8 @@ fn cfg(threads: usize) -> PipelineConfig {
         measure_sigma: true,
         sigma_dim_cap: 128,
         seed: 11,
+        block_cols: 0,
+        sigma_ref: SigmaRef::Sampled,
     }
 }
 
@@ -94,6 +97,160 @@ fn pipeline_reports_are_thread_count_invariant() {
         assert_eq!(a.metis_sigma_err, b.metis_sigma_err);
         assert_eq!(a.direct_sigma_err, b.direct_sigma_err);
     }
+}
+
+#[test]
+fn blocked_pipeline_disk_and_mem_paths_agree() {
+    // The same checkpoint swept (a) resident, via load_checkpoint_dir,
+    // and (b) streaming, via scan_checkpoint_dir — with column blocking
+    // on, every (layer, block) unit must see the same bytes and the
+    // reports must match bit-for-bit, on any thread count.
+    let dir = std::env::temp_dir().join("metis_blocked_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(8);
+    for (name, m, n) in [("wide", 24usize, 96usize), ("square", 32, 32)] {
+        pipeline::planted_powerlaw(&mut rng, m, n, 1.5)
+            .save_npy(dir.join(format!("{name}.npy")))
+            .unwrap();
+    }
+    let mut c = cfg(3);
+    c.block_cols = 32; // "wide" fans out into 3 column blocks
+
+    let mem = pipeline::run(pipeline::load_checkpoint_dir(&dir).unwrap(), &c).unwrap();
+    let disk = pipeline::run_specs(pipeline::scan_checkpoint_dir(&dir).unwrap(), &c).unwrap();
+    let mut c1 = c;
+    c1.threads = 1;
+    let disk1 = pipeline::run_specs(pipeline::scan_checkpoint_dir(&dir).unwrap(), &c1).unwrap();
+    assert_eq!(mem.reports.len(), 2);
+    for ((a, b), d1) in mem.reports.iter().zip(&disk.reports).zip(&disk1.reports) {
+        for r in [b, d1] {
+            assert_eq!(a.name, r.name);
+            assert_eq!((a.rows, a.cols), (r.rows, r.cols));
+            assert_eq!(a.k, r.k);
+            assert_eq!(a.metis_rel_err, r.metis_rel_err);
+            assert_eq!(a.direct_rel_err, r.direct_rel_err);
+            assert_eq!(a.metis_underflow, r.metis_underflow);
+            assert_eq!(a.metis_sigma_err, r.metis_sigma_err);
+            assert_eq!(a.direct_sigma_err, r.direct_sigma_err);
+        }
+    }
+}
+
+#[test]
+fn streamed_blocked_sweep_reports_finite_sampled_sigma_above_cap() {
+    // A streamed layer above --sigma-cap, sharded into column blocks:
+    // σ columns come back finite through the sampled reference (they
+    // were silently NaN before), the Metis path still wins them on an
+    // anisotropic layer, and the blocked+sampled pipeline stays
+    // thread-count invariant end-to-end.
+    let dir = std::env::temp_dir().join("metis_sampled_sigma_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(17);
+    pipeline::planted_powerlaw(&mut rng, 40, 120, 1.5)
+        .save_npy(dir.join("w.npy"))
+        .unwrap();
+    let mut c = cfg(4);
+    c.sigma_dim_cap = 16; // every 40×40 block is "large"
+    c.block_cols = 40;
+    c.sigma_ref = SigmaRef::Sampled;
+    let res = pipeline::run_specs(pipeline::scan_checkpoint_dir(&dir).unwrap(), &c).unwrap();
+    assert_eq!(res.reports.len(), 1);
+    let r = &res.reports[0];
+    assert!(r.metis_sigma_err.is_finite() && r.metis_sigma_err > 0.0, "NaN σ: {r:?}");
+    assert!(r.direct_sigma_err.is_finite() && r.direct_sigma_err > 0.0);
+    assert!(r.metis_sigma_tail.is_finite() && r.direct_sigma_tail.is_finite());
+    assert!(
+        r.metis_sigma_err < r.direct_sigma_err,
+        "sampled σ-err metis {} !< direct {}",
+        r.metis_sigma_err,
+        r.direct_sigma_err
+    );
+    let mut c1 = c;
+    c1.threads = 1;
+    let r1 = pipeline::run_specs(pipeline::scan_checkpoint_dir(&dir).unwrap(), &c1).unwrap();
+    assert_eq!(r.metis_sigma_err, r1.reports[0].metis_sigma_err);
+    assert_eq!(r.metis_rel_err, r1.reports[0].metis_rel_err);
+    // --sigma-ref full keeps the historical NaN above the cap.
+    let mut cf = c;
+    cf.sigma_ref = SigmaRef::Full;
+    let rf = pipeline::run_specs(pipeline::scan_checkpoint_dir(&dir).unwrap(), &cf).unwrap();
+    assert!(rf.reports[0].metis_sigma_err.is_nan());
+    assert_eq!(rf.reports[0].metis_rel_err, r.metis_rel_err);
+}
+
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+#[test]
+#[ignore = "4096x4096 streaming sweep — run in the release CI job"]
+fn blocked_4k_layer_streams_with_bounded_memory() {
+    // The acceptance scenario: a paper-scale 4096² layer, generated
+    // row-by-row through the streaming writer (never resident), swept
+    // through quantize→measure→report as 8 streamed 4096×512 column
+    // blocks with the sampled σ reference.  The job log gets a VmHWM
+    // note so memory regressions on this path are visible in CI.
+    let dir = std::env::temp_dir().join("metis_4k_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w4096.npy");
+    let n = 4096usize;
+    {
+        let mut w = NpyWriter::create_f32(&path, &[n, n]).unwrap();
+        let mut rng = Rng::new(42);
+        let mut row = vec![0f32; n];
+        for _ in 0..n {
+            for x in row.iter_mut() {
+                *x = rng.gauss_f32(0.0, 1.0);
+            }
+            w.write_f32(&row).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    let specs = pipeline::scan_checkpoint_dir(&dir).unwrap();
+    assert_eq!(specs.len(), 1);
+    assert_eq!((specs[0].rows, specs[0].cols), (n, n));
+    let c = PipelineConfig {
+        quant: MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::SparseSample,
+            rho: 0.05,
+            max_rank: 32,
+        },
+        threads: 4,
+        measure_sigma: true,
+        sigma_dim_cap: 256,
+        seed: 1,
+        block_cols: 512,
+        sigma_ref: SigmaRef::Sampled,
+    };
+    let res = pipeline::run_specs(specs, &c).unwrap();
+    assert_eq!(res.reports.len(), 1);
+    let r = &res.reports[0];
+    assert_eq!((r.rows, r.cols), (n, n));
+    assert!(r.k >= 1);
+    assert!(r.metis_rel_err.is_finite() && r.metis_rel_err > 0.0);
+    assert!(r.direct_rel_err.is_finite() && r.direct_rel_err > 0.0);
+    // The headline fix: σ columns are finite via the sampled reference
+    // where the full-Jacobi path had to skip (NaN).
+    assert!(r.metis_sigma_err.is_finite(), "σ went NaN on the 4k layer");
+    assert!(r.direct_sigma_err.is_finite());
+    match peak_rss_kb() {
+        Some(kb) => println!(
+            "RSS note: VmHWM {:.0} MB after streaming the 4096x4096 sweep \
+             ({} blocks of 4096x512, {:.0} ms; f32 blob itself is 64 MB)",
+            kb as f64 / 1024.0,
+            n / 512,
+            res.wall_ms
+        ),
+        None => println!("RSS note: /proc/self/status unavailable on this platform"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
