@@ -1,187 +1,255 @@
-//! §Perf hot-path microbenchmarks — the numbers EXPERIMENTS.md §Perf
-//! tracks before/after each optimization:
+//! §Perf hot-path kernel benchmarks → `BENCH_PERF.json`.
 //!
-//! * L3: per-step cost breakdown of the coordinator hot loop —
-//!   batch generation, literal conversion, PJRT execute, output fetch;
-//! * L1: standalone Pallas kernel artifacts (quantize / qgemm) exec time;
-//! * substrates: Rust matmul GFLOP/s, Jacobi SVD, block quantizer
-//!   throughput (these bound the analysis benches, not the train path).
+//! Paired old/new rows for every kernel this layer replaced, so the
+//! repo finally records a perf trajectory (the acceptance bar of the
+//! kernel-overhaul PR and the seed of all future BENCH_* diffs):
+//!
+//! * GEMM GFLOP/s at 64²/256²/1024² — pre-kernel scalar ikj
+//!   (`kernels::matmul_ref`) vs the tiled serial kernel vs the shipped
+//!   kernel layer (pool-parallel above the flop threshold);
+//! * Jacobi SVD 256² wall time — preserved 3-dot reference vs the
+//!   incremental-norm sweep;
+//! * block-quantizer throughput — per-block-`Vec` reference vs the
+//!   fused single-walk path, flat slices and the strided axis-0
+//!   matrix walk;
+//! * end-to-end `metis train-native` per-step time — the whole W4A4G4
+//!   step loop under `kernels::set_reference_mode` (pre-PR kernels on
+//!   the persistent pool) vs the shipped kernels.
+//!
+//! Pure Rust — no artifacts or PJRT needed.  Writes the JSON next to
+//! the repo root so CI can upload it as the perf-trajectory artifact.
 
-use metis::bench::{artifacts_dir, fmt_f, time_fn, Table};
-use metis::coordinator::{ExperimentConfig, Trainer};
-use metis::data::corpus::{Corpus, CorpusConfig};
-use metis::data::BatchIterator;
+use metis::bench::{fmt_f, fmt_ratio, time_fn, Table};
 use metis::formats::{self, Format};
-use metis::linalg::jacobi_svd;
-use metis::runtime::{Engine, HostValue};
+use metis::linalg::{kernels, svd};
+use metis::metis::{NativeTrainConfig, Optim};
 use metis::tensor::Matrix;
+use metis::util::json::Json;
 use metis::util::prng::Rng;
-use metis::util::timer::Stopwatch;
+
+fn gflops(dim: usize, ms: f64) -> f64 {
+    2.0 * (dim as f64).powi(3) / (ms / 1e3) / 1e9
+}
+
+fn melems(n: usize, ms: f64) -> f64 {
+    n as f64 / (ms / 1e3) / 1e6
+}
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::new(artifacts_dir())?;
-
-    // --- L1 kernels -----------------------------------------------------
     let mut rng = Rng::new(0);
-    let data: Vec<f32> = (0..256 * 256).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
-    let hv = HostValue::F32 {
-        shape: vec![256, 256],
-        data: data.clone(),
-    };
+    let mut json: Vec<(&str, Json)> = vec![
+        ("schema", Json::str("metis-perf-hotpath-v1")),
+        (
+            "pool_workers",
+            Json::num(metis::util::workpool::WorkPool::global().workers() as f64),
+        ),
+        (
+            "note",
+            Json::str(
+                "paired old/new kernel rows; 'ref' = pre-kernel-layer \
+                 implementations via kernels::set_reference_mode",
+            ),
+        ),
+    ];
+
+    // --- 1. GEMM family ---------------------------------------------------
     let mut t1 = Table::new(
-        "L1 — standalone kernel artifacts (256x256, PJRT CPU)",
-        &["artifact", "mean ms", "p95 ms", "MB/s eff"],
+        "GEMM f64 — scalar ikj vs tiled kernel vs kernel layer (pool)",
+        &["dim", "naive GF/s", "tiled GF/s", "kernel GF/s", "speedup"],
     );
-    for name in [
-        "quantize__mxfp4__256x256",
-        "quantize__nvfp4__256x256",
-        "quantize__fp8__256x256",
-        "dual_range__256x256",
-    ] {
-        let st = time_fn(2, 10, || {
-            engine.run(name, &[hv.clone()]).unwrap();
+    let mut gemm_rows = Vec::new();
+    for dim in [64usize, 256, 1024] {
+        let a = Matrix::gaussian(&mut rng, dim, dim, 1.0);
+        let b = Matrix::gaussian(&mut rng, dim, dim, 1.0);
+        let (warm, iters) = if dim <= 256 { (2, 8) } else { (1, 3) };
+        let st_ref = time_fn(warm, iters, || {
+            std::hint::black_box(kernels::matmul_ref(&a, &b));
         });
-        let mbs = (256.0 * 256.0 * 4.0) / (st.mean() / 1e3) / 1e6;
+        let st_tiled = time_fn(warm, iters, || {
+            std::hint::black_box(kernels::matmul_serial(&a, &b));
+        });
+        let st_kernel = time_fn(warm, iters, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let (gn, gt, gk) = (
+            gflops(dim, st_ref.mean()),
+            gflops(dim, st_tiled.mean()),
+            gflops(dim, st_kernel.mean()),
+        );
         t1.row(vec![
-            name.into(),
-            fmt_f(st.mean(), 2),
-            fmt_f(st.percentile(95.0), 2),
-            fmt_f(mbs, 0),
+            format!("{dim}"),
+            fmt_f(gn, 2),
+            fmt_f(gt, 2),
+            fmt_f(gk, 2),
+            fmt_ratio(gk, gn),
         ]);
+        gemm_rows.push(Json::obj(vec![
+            ("dim", Json::num(dim as f64)),
+            ("naive_gflops", Json::num_or_null(gn)),
+            ("tiled_gflops", Json::num_or_null(gt)),
+            ("kernel_gflops", Json::num_or_null(gk)),
+            ("speedup_tiled", Json::num_or_null(gt / gn)),
+            ("speedup_kernel", Json::num_or_null(gk / gn)),
+        ]));
     }
-    let w_hv = HostValue::F32 {
-        shape: vec![256, 256],
-        data: (0..256 * 256).map(|_| rng.gauss_f32(0.0, 0.1)).collect(),
-    };
-    let st = time_fn(2, 10, || {
-        engine
-            .run("qgemm__nvfp4__256", &[hv.clone(), w_hv.clone()])
-            .unwrap();
-    });
-    let gflops = 2.0 * 256f64.powi(3) / (st.mean() / 1e3) / 1e9;
-    t1.row(vec![
-        "qgemm__nvfp4__256".into(),
-        fmt_f(st.mean(), 2),
-        fmt_f(st.percentile(95.0), 2),
-        format!("{gflops:.1} GF/s"),
-    ]);
     t1.print();
+    json.push(("gemm", Json::Arr(gemm_rows)));
 
-    // --- L3 step breakdown ------------------------------------------------
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = "tiny".into();
-    cfg.mode = "nvfp4_metis".into();
-    cfg.steps = 1;
-    cfg.out_dir = std::env::temp_dir()
-        .join("metis_perf")
-        .to_string_lossy()
-        .into_owned();
-    let trainer = Trainer::new(&engine, cfg)?;
-    let artifact = engine
-        .manifest
-        .name_for("train_step", "tiny", "nvfp4_metis", 8);
-    let seq = engine.manifest.models["tiny"].seq_len;
-    let corpus = Corpus::new(CorpusConfig::new(engine.manifest.models["tiny"].vocab, 7));
-    let mut it = BatchIterator::new(&corpus, 8, seq, 0);
-
-    // warm compile
-    let w = Stopwatch::start();
-    engine.load(&artifact)?;
-    let compile_s = w.secs();
-
-    let mut gen_ms = metis::util::timer::Stats::default();
-    let mut conv_ms = metis::util::timer::Stats::default();
-    let mut exec_ms = metis::util::timer::Stats::default();
-    for step in 0..12 {
-        let w = Stopwatch::start();
-        let tokens = it.next_batch();
-        gen_ms.add(w.ms());
-
-        let tok_hv = HostValue::I32 {
-            shape: vec![8, seq + 1],
-            data: tokens,
-        };
-        let step_hv = HostValue::scalar_i32(step);
-        let seed_hv = HostValue::scalar_i32(0);
-        let lr_hv = HostValue::scalar_f32(1e-3);
-        let mut inputs: Vec<&HostValue> = trainer.state.iter().collect();
-        inputs.push(&tok_hv);
-        inputs.push(&step_hv);
-        inputs.push(&seed_hv);
-        inputs.push(&lr_hv);
-
-        // conversion timing (same marshaling run() performs)
-        let w = Stopwatch::start();
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|h| h.to_literal().unwrap())
-            .collect();
-        conv_ms.add(w.ms());
-        drop(lits);
-
-        let w = Stopwatch::start();
-        let _ = engine.run(&artifact, &inputs)?;
-        exec_ms.add(w.ms());
-    }
+    // --- 2. Jacobi SVD 256² ----------------------------------------------
+    // Symmetric settings for both rows (same warmup + iteration count)
+    // so the recorded speedup is a fair old/new pair.
+    let a = metis::metis::pipeline::planted_powerlaw(&mut rng, 256, 256, 1.5);
+    let st_ref = time_fn(1, 2, || {
+        std::hint::black_box(svd::jacobi_svd_ref(&a));
+    });
+    let st_fast = time_fn(1, 2, || {
+        std::hint::black_box(svd::jacobi_svd(&a));
+    });
+    // Both paths must agree on the spectrum they were timed producing.
+    let (s_ref, s_fast) = (svd::jacobi_svd_ref(&a).s, svd::jacobi_svd(&a).s);
+    let sigma_dev = s_ref
+        .iter()
+        .zip(&s_fast)
+        .map(|(x, y)| (x - y).abs() / x.max(1e-300))
+        .fold(0.0f64, f64::max);
+    assert!(sigma_dev < 1e-8, "jacobi fast/ref σ deviation {sigma_dev:.2e}");
     let mut t2 = Table::new(
-        "L3 — coordinator hot-loop breakdown (tiny/nvfp4_metis, b8)",
-        &["phase", "mean ms", "p95 ms", "share of step"],
+        "Jacobi SVD 256x256 — 3-dot reference vs incremental-norm sweep",
+        &["variant", "wall ms", "speedup"],
     );
-    let total = exec_ms.mean();
+    t2.row(vec!["reference".into(), fmt_f(st_ref.mean(), 1), "1.0x".into()]);
     t2.row(vec![
-        "batch generation (loader)".into(),
-        fmt_f(gen_ms.mean(), 2),
-        fmt_f(gen_ms.percentile(95.0), 2),
-        format!("{:.1}%", 100.0 * gen_ms.mean() / total),
-    ]);
-    t2.row(vec![
-        "literal marshaling (in)".into(),
-        fmt_f(conv_ms.mean(), 2),
-        fmt_f(conv_ms.percentile(95.0), 2),
-        format!("{:.1}%", 100.0 * conv_ms.mean() / total),
-    ]);
-    t2.row(vec![
-        "run() = marshal+execute+fetch".into(),
-        fmt_f(exec_ms.mean(), 2),
-        fmt_f(exec_ms.percentile(95.0), 2),
-        "100%".into(),
-    ]);
-    t2.row(vec![
-        "one-time XLA compile".into(),
-        fmt_f(compile_s * 1e3, 0),
-        "—".into(),
-        format!("= {:.0} steps", compile_s * 1e3 / total),
+        "incremental".into(),
+        fmt_f(st_fast.mean(), 1),
+        fmt_ratio(st_ref.mean(), st_fast.mean()),
     ]);
     t2.print();
+    json.push((
+        "jacobi_256",
+        Json::obj(vec![
+            ("ref_ms", Json::num_or_null(st_ref.mean())),
+            ("fast_ms", Json::num_or_null(st_fast.mean())),
+            ("speedup", Json::num_or_null(st_ref.mean() / st_fast.mean())),
+            ("max_sigma_rel_dev", Json::num_or_null(sigma_dev)),
+        ]),
+    ));
 
-    // --- substrates ---------------------------------------------------------
+    // --- 3. fused vs naive block quantization -----------------------------
+    let n_elems = 1usize << 20;
+    let xs: Vec<f32> = (0..n_elems).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let mut out = vec![0.0f32; n_elems];
+    let st_qref = time_fn(2, 8, || {
+        std::hint::black_box(formats::quantize_block_ref(Format::Mxfp4, &xs));
+    });
+    let st_qfused = time_fn(2, 8, || {
+        formats::quantize_slice_into(Format::Mxfp4, &xs, &mut out);
+        std::hint::black_box(&out);
+    });
+    let wq = Matrix::gaussian(&mut rng, 1024, 1024, 1.0);
+    let st_a0ref = time_fn(1, 4, || {
+        std::hint::black_box(formats::quantize_matrix_along_ref(Format::Nvfp4, &wq, 0));
+    });
+    let st_a0 = time_fn(1, 4, || {
+        std::hint::black_box(formats::quantize_matrix_along(Format::Nvfp4, &wq, 0));
+    });
     let mut t3 = Table::new(
-        "substrates — Rust-side analysis primitives",
-        &["op", "mean ms", "throughput"],
+        "block quantization — per-block-Vec reference vs fused walk",
+        &["op", "ref Melem/s", "fused Melem/s", "speedup"],
     );
-    let a = Matrix::gaussian(&mut rng, 256, 256, 1.0);
-    let b = Matrix::gaussian(&mut rng, 256, 256, 1.0);
-    let st = time_fn(2, 8, || {
-        std::hint::black_box(a.matmul(&b));
-    });
     t3.row(vec![
-        "matmul 256³ (f64)".into(),
-        fmt_f(st.mean(), 2),
-        format!("{:.2} GF/s", 2.0 * 256f64.powi(3) / (st.mean() / 1e3) / 1e9),
+        "mxfp4 flat 1M".into(),
+        fmt_f(melems(n_elems, st_qref.mean()), 0),
+        fmt_f(melems(n_elems, st_qfused.mean()), 0),
+        fmt_ratio(st_qref.mean(), st_qfused.mean()),
     ]);
-    let st = time_fn(1, 3, || {
-        std::hint::black_box(jacobi_svd(&a));
-    });
-    t3.row(vec!["jacobi_svd 256x256".into(), fmt_f(st.mean(), 1), "—".into()]);
-    let xs: Vec<f32> = (0..1 << 20).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
-    let st = time_fn(2, 8, || {
-        std::hint::black_box(formats::quantize_block(Format::Mxfp4, &xs));
-    });
     t3.row(vec![
-        "mxfp4 block quantize 1M elems".into(),
-        fmt_f(st.mean(), 2),
-        format!("{:.0} Melem/s", 1.048e6 / (st.mean() / 1e3) / 1e6),
+        "nvfp4 axis-0 1024²".into(),
+        fmt_f(melems(1 << 20, st_a0ref.mean()), 0),
+        fmt_f(melems(1 << 20, st_a0.mean()), 0),
+        fmt_ratio(st_a0ref.mean(), st_a0.mean()),
     ]);
     t3.print();
+    json.push((
+        "quantize",
+        Json::obj(vec![
+            ("flat_ref_melem_s", Json::num_or_null(melems(n_elems, st_qref.mean()))),
+            ("flat_fused_melem_s", Json::num_or_null(melems(n_elems, st_qfused.mean()))),
+            ("flat_speedup", Json::num_or_null(st_qref.mean() / st_qfused.mean())),
+            ("axis0_ref_melem_s", Json::num_or_null(melems(1 << 20, st_a0ref.mean()))),
+            ("axis0_fused_melem_s", Json::num_or_null(melems(1 << 20, st_a0.mean()))),
+            ("axis0_speedup", Json::num_or_null(st_a0ref.mean() / st_a0.mean())),
+        ]),
+    ));
+
+    // --- 4. end-to-end train-native step ----------------------------------
+    let cfg = NativeTrainConfig {
+        n_layers: 2,
+        d_model: 64,
+        steps: 6,
+        batch: 32,
+        lr: 0.02,
+        warmup: 2,
+        seed: 11,
+        threads: 4,
+        optim: Optim::Sgd,
+        ..NativeTrainConfig::default()
+    };
+    kernels::set_reference_mode(true);
+    let res_ref = metis::metis::train_native(&cfg)?;
+    kernels::set_reference_mode(false);
+    let res_new = metis::metis::train_native(&cfg)?;
+    let (ref_step, new_step) = (
+        res_ref.wall_ms / cfg.steps as f64,
+        res_new.wall_ms / cfg.steps as f64,
+    );
+    // Same loop, same streams: the kernels must not change the math
+    // beyond summation-order noise.
+    let loss_dev = (res_ref.final_loss() - res_new.final_loss()).abs()
+        / res_ref.final_loss().abs().max(1e-300);
+    let mut t4 = Table::new(
+        "train-native step (2 layers, d64, b32, 4 threads)",
+        &["kernels", "ms/step", "final loss", "speedup"],
+    );
+    t4.row(vec![
+        "pre-PR (reference)".into(),
+        fmt_f(ref_step, 1),
+        fmt_f(res_ref.final_loss(), 5),
+        "1.0x".into(),
+    ]);
+    t4.row(vec![
+        "kernel layer".into(),
+        fmt_f(new_step, 1),
+        fmt_f(res_new.final_loss(), 5),
+        fmt_ratio(ref_step, new_step),
+    ]);
+    t4.print();
+    json.push((
+        "train_native_step",
+        Json::obj(vec![
+            ("ref_ms_per_step", Json::num_or_null(ref_step)),
+            ("kernel_ms_per_step", Json::num_or_null(new_step)),
+            ("speedup", Json::num_or_null(ref_step / new_step)),
+            ("final_loss_rel_dev", Json::num_or_null(loss_dev)),
+            (
+                "cfg",
+                Json::obj(vec![
+                    ("n_layers", Json::num(cfg.n_layers as f64)),
+                    ("d_model", Json::num(cfg.d_model as f64)),
+                    ("steps", Json::num(cfg.steps as f64)),
+                    ("batch", Json::num(cfg.batch as f64)),
+                    ("threads", Json::num(cfg.threads as f64)),
+                ]),
+            ),
+        ]),
+    ));
+
+    // --- emit -------------------------------------------------------------
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits under the repo root")
+        .join("BENCH_PERF.json");
+    let doc = Json::obj(json);
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

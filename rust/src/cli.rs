@@ -133,7 +133,14 @@ USAGE:
       timings); --out mirrors the stream to a file.
 
 Artifacts default to ./artifacts (built by `make artifacts`);
-override with --artifacts or METIS_ARTIFACTS.";
+override with --artifacts or METIS_ARTIFACTS.
+
+Perf trajectory: `cargo bench --bench perf_hotpath` measures the
+kernel layer against the preserved pre-kernel implementations (GEMM
+GFLOP/s at 64²/256²/1024², Jacobi-256² wall time, fused-vs-naive
+quantizer throughput, end-to-end train-native step time) and writes
+the paired old/new rows to BENCH_PERF.json at the repo root; CI
+uploads it per commit as the `bench-perf` artifact.";
 
 pub fn artifacts_flag(args: &Args) -> String {
     args.flags

@@ -19,7 +19,9 @@ impl BlockQuantizer {
         Self { fmt }
     }
 
-    /// Quantize a 1-D block in place semantics (returns new vec).
+    /// Quantize a 1-D block in place semantics (returns new vec).  The
+    /// pre-kernel per-block path, kept as the reference oracle the
+    /// fused [`quantize_slice_into`] is pinned against.
     pub fn quantize_block_vec(&self, xs: &[f32]) -> Vec<f32> {
         let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         let s = self.fmt.scale(amax);
@@ -27,8 +29,33 @@ impl BlockQuantizer {
     }
 }
 
-/// Quantize a flat slice blockwise (contiguous blocks of fmt.block()).
-pub fn quantize_block(fmt: Format, xs: &[f32]) -> Vec<f32> {
+/// Largest block width across formats — the stack-buffer bound of the
+/// strided axis-0 path.
+const MAX_BLOCK: usize = 128;
+
+/// Fused blockwise quantization: one walk over `xs` finding each
+/// block's scale and writing the clamped/cast values straight into the
+/// caller-provided `out` — no per-block allocation (the pre-kernel path
+/// collected a fresh `Vec` per 16/32-element block).  Bit-identical to
+/// composing [`BlockQuantizer::quantize_block_vec`] per chunk.
+pub fn quantize_slice_into(fmt: Format, xs: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len(), "quantize_slice_into length mismatch");
+    let block = fmt.block();
+    for (xc, oc) in xs.chunks(block).zip(out.chunks_mut(block)) {
+        let mut amax = 0.0f32;
+        for &x in xc {
+            amax = amax.max(x.abs());
+        }
+        let s = fmt.scale(amax);
+        for (&x, o) in xc.iter().zip(oc.iter_mut()) {
+            *o = fmt.elem(x / s) * s;
+        }
+    }
+}
+
+/// The pre-kernel `quantize_block` (per-block `Vec` + `extend`) — the
+/// "old" row of the perf bench pair.
+pub fn quantize_block_ref(fmt: Format, xs: &[f32]) -> Vec<f32> {
     let q = BlockQuantizer::new(fmt);
     let mut out = Vec::with_capacity(xs.len());
     for chunk in xs.chunks(fmt.block()) {
@@ -37,23 +64,88 @@ pub fn quantize_block(fmt: Format, xs: &[f32]) -> Vec<f32> {
     out
 }
 
+/// Quantize a flat slice blockwise (contiguous blocks of fmt.block()).
+pub fn quantize_block(fmt: Format, xs: &[f32]) -> Vec<f32> {
+    if crate::linalg::kernels::reference_mode() {
+        return quantize_block_ref(fmt, xs);
+    }
+    let mut out = vec![0.0f32; xs.len()];
+    quantize_slice_into(fmt, xs, &mut out);
+    out
+}
+
 /// Quantize a matrix with scale blocks along `axis` (0 = down columns,
 /// 1 = along rows).  Axis 1 matches activation quantization (blocks along
 /// K for X·W); axis 0 matches weight quantization.
+///
+/// Axis 1 streams each row through the fused quantizer with one scratch
+/// row (f64→f32 cast fused into the same walk); axis 0 strides each
+/// column directly through a stack block buffer instead of paying two
+/// full transposes and an f32 copy of the whole matrix.  Both paths are
+/// bit-identical to the historical implementation (same per-element op
+/// sequence in the same order).
 pub fn quantize_matrix_along(fmt: Format, a: &Matrix, axis: usize) -> Matrix {
+    if crate::linalg::kernels::reference_mode() {
+        return quantize_matrix_along_ref(fmt, a, axis);
+    }
+    let (rows, cols) = (a.rows, a.cols);
+    let mut out = Matrix::zeros(rows, cols);
+    match axis {
+        1 => {
+            let mut xrow = vec![0.0f32; cols];
+            let mut qrow = vec![0.0f32; cols];
+            for r in 0..rows {
+                let arow = &a.data[r * cols..(r + 1) * cols];
+                for (x, &v) in xrow.iter_mut().zip(arow) {
+                    *x = v as f32;
+                }
+                quantize_slice_into(fmt, &xrow, &mut qrow);
+                for (o, &q) in out.data[r * cols..(r + 1) * cols].iter_mut().zip(&qrow) {
+                    *o = q as f64;
+                }
+            }
+        }
+        0 => {
+            let block = fmt.block();
+            debug_assert!(block <= MAX_BLOCK);
+            let mut xbuf = [0.0f32; MAX_BLOCK];
+            let mut qbuf = [0.0f32; MAX_BLOCK];
+            for c in 0..cols {
+                let mut r0 = 0;
+                while r0 < rows {
+                    let len = block.min(rows - r0);
+                    for (i, x) in xbuf[..len].iter_mut().enumerate() {
+                        *x = a.data[(r0 + i) * cols + c] as f32;
+                    }
+                    quantize_slice_into(fmt, &xbuf[..len], &mut qbuf[..len]);
+                    for (i, &q) in qbuf[..len].iter().enumerate() {
+                        out.data[(r0 + i) * cols + c] = q as f64;
+                    }
+                    r0 += len;
+                }
+            }
+        }
+        _ => panic!("axis must be 0 or 1"),
+    }
+    out
+}
+
+/// The pre-kernel `quantize_matrix_along` (whole-matrix f32 copy; axis
+/// 0 via transpose → rows → transpose) — perf-bench baseline.
+pub fn quantize_matrix_along_ref(fmt: Format, a: &Matrix, axis: usize) -> Matrix {
     let f32s: Vec<f32> = a.data.iter().map(|&x| x as f32).collect();
     match axis {
         1 => {
             let mut out = Vec::with_capacity(f32s.len());
             for r in 0..a.rows {
                 let row = &f32s[r * a.cols..(r + 1) * a.cols];
-                out.extend(quantize_block(fmt, row));
+                out.extend(quantize_block_ref(fmt, row));
             }
             Matrix::from_vec(a.rows, a.cols, out.iter().map(|&x| x as f64).collect())
         }
         0 => {
             let t = a.transpose();
-            quantize_matrix_along(fmt, &t, 1).transpose()
+            quantize_matrix_along_ref(fmt, &t, 1).transpose()
         }
         _ => panic!("axis must be 0 or 1"),
     }
@@ -137,6 +229,41 @@ mod tests {
         // Same small values alone survive (scale adapts down).
         let q2 = quantize_block(Format::Mxfp4, &vec![0.01f32; 32]);
         assert!(q2[5] != 0.0);
+    }
+
+    #[test]
+    fn fused_path_is_bit_identical_to_reference() {
+        // The fused single-walk quantizer and the historical per-block
+        // Vec path must agree bit-for-bit, including partial tail
+        // blocks; same for both matrix axes (the strided axis-0 walk
+        // replaces two transposes).
+        let mut rng = Rng::new(7);
+        for fmt in [Format::Mxfp4, Format::Nvfp4, Format::Fp8, Format::PaperFp4] {
+            for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 127, 128, 129, 1000] {
+                let xs: Vec<f32> = (0..len).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+                assert_eq!(quantize_block(fmt, &xs), quantize_block_ref(fmt, &xs), "{len}");
+            }
+            for (m, n) in [(1, 7), (5, 1), (13, 40), (33, 17), (64, 48)] {
+                let a = Matrix::gaussian(&mut rng, m, n, 1.5);
+                for axis in [0, 1] {
+                    assert_eq!(
+                        quantize_matrix_along(fmt, &a, axis),
+                        quantize_matrix_along_ref(fmt, &a, axis),
+                        "{} {m}x{n} axis {axis}",
+                        fmt.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_slice_into_writes_caller_buffer() {
+        let mut rng = Rng::new(8);
+        let xs: Vec<f32> = (0..100).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let mut out = vec![9.0f32; 100];
+        quantize_slice_into(Format::Nvfp4, &xs, &mut out);
+        assert_eq!(out, quantize_block(Format::Nvfp4, &xs));
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Register-blocked GEMM kernel family — the numeric hot path of every
+//! decomposition in the crate.
+//!
+//! The pre-kernel `Matrix::matmul` was a branchy scalar ikj loop whose
+//! inner axpy re-loads and re-stores a whole C row once per k step.
+//! The kernels here use the classic three-level blocking of
+//! high-performance GEMM, restricted to safe, autovectorizable Rust:
+//!
+//! * **register tile** — an `MR`×`NR` accumulator block held in fixed
+//!   arrays across the whole k loop, so C traffic drops from O(m·n·k)
+//!   to O(m·n).  The fully-unrolled microkernel body (constant `MR`/
+//!   `NR` bounds, `chunks_exact` + fixed-size-array views, no
+//!   per-element branches) is the shape LLVM's SROA + SLP pipeline
+//!   reliably turns into vector FMA chains;
+//! * **k blocking** — panels of at most `KC` contraction steps, with
+//!   the A panel packed into a `kc`×`MR` scratch so the microkernel
+//!   reads both operands contiguously;
+//! * **row-range parallelism** — products above [`PAR_FLOPS`] split
+//!   their output rows across the persistent [`WorkPool`]; each range
+//!   is computed by the identical serial code on disjoint output
+//!   slices, so the result is bit-identical to the serial kernel for
+//!   any worker count.
+//!
+//! The fused-transpose variants [`matmul_at_b`] (AᵀB) and
+//! [`matmul_a_bt`] (ABᵀ) run the same microkernel behind different
+//! panel packers, so `qr`/`rsvd`/`split`/`sampler`/`trainstate` stop
+//! materializing `transpose()` copies on their hot paths.
+//!
+//! [`set_reference_mode`] routes every dispatch through the preserved
+//! pre-kernel implementations ([`matmul_ref`] and friends) — the
+//! paired old/new rows of `benches/perf_hotpath.rs` and the oracle the
+//! property tests pin the tiled kernels against.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::tensor::Matrix;
+use crate::util::workpool::WorkPool;
+
+/// Microkernel rows (output rows accumulated in registers).
+pub const MR: usize = 4;
+/// Microkernel columns — two 4-wide vector lanes per row on AVX2.
+pub const NR: usize = 8;
+/// Contraction panel depth: `KC`·`MR` packed A floats ≈ 8 KB, L1-sized.
+const KC: usize = 256;
+/// 2·m·n·k threshold above which a product fans its output rows across
+/// the persistent pool (256³ and up qualify; 64³ stays serial).
+const PAR_FLOPS: usize = 4_000_000;
+
+static REFERENCE: AtomicBool = AtomicBool::new(false);
+
+/// Route [`matmul`]/[`matmul_at_b`]/[`matmul_a_bt`] (and the fused
+/// block quantizer, which checks the same flag) through the preserved
+/// pre-kernel implementations.  Bench-only: the perf bench flips this
+/// to record paired old/new rows in one process.  Global and
+/// process-wide — do not toggle concurrently with live kernel calls.
+pub fn set_reference_mode(on: bool) {
+    REFERENCE.store(on, Ordering::SeqCst);
+}
+
+/// Whether the bench-only reference dispatch is active.
+pub fn reference_mode() -> bool {
+    REFERENCE.load(Ordering::Relaxed)
+}
+
+// -- reference (pre-kernel) implementations ------------------------------
+
+/// The pre-kernel `Matrix::matmul`: scalar ikj with the historical
+/// `a_ip == 0` skip.  Kept verbatim as the perf baseline and the
+/// property-test oracle.  Note the skip suppresses NaN/∞ propagation
+/// from `b` on exact-zero `a` entries — the shipping [`matmul`] does
+/// not (see the `zero_times_nan_poisons_product` regression test).
+pub fn matmul_ref(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for p in 0..k {
+            let a_ip = a.data[i * k + p];
+            if a_ip == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += a_ip * bj;
+            }
+        }
+    }
+    c
+}
+
+// -- shared microkernel ---------------------------------------------------
+
+/// acc += Apanel · Bpanel over one `kc`-deep contraction window.
+/// `apack` is `kc`×`MR` (row-padded with zeros), `b` holds `NR`-wide
+/// row strips at stride `ldb`.  Constant-bound inner loops over
+/// fixed-size array views: LLVM keeps `acc` in registers and emits
+/// `MR`·`NR`-lane FMA chains.
+#[inline(always)]
+fn microkernel(kc: usize, apack: &[f64], b: &[f64], ldb: usize, acc: &mut [[f64; NR]; MR]) {
+    for (p, ap) in apack.chunks_exact(MR).take(kc).enumerate() {
+        let bp: &[f64; NR] = b[p * ldb..p * ldb + NR].try_into().unwrap();
+        for (accr, &arp) in acc.iter_mut().zip(ap) {
+            for (cq, &bq) in accr.iter_mut().zip(bp) {
+                *cq += arp * bq;
+            }
+        }
+    }
+}
+
+/// Accumulate a finished register tile into `mr`×`nr` of C.
+#[inline(always)]
+fn flush_acc(
+    acc: &[[f64; NR]; MR],
+    c: &mut [f64],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    for (rr, accr) in acc.iter().enumerate().take(mr) {
+        let crow = &mut c[(i0 + rr) * ldc + j0..(i0 + rr) * ldc + j0 + nr];
+        for (cj, &aj) in crow.iter_mut().zip(accr.iter()) {
+            *cj += aj;
+        }
+    }
+}
+
+/// How an A panel is gathered into the packed `kc`×`MR` scratch.
+#[derive(Clone, Copy)]
+enum APack<'a> {
+    /// A stored row-major `r`×`lda`: `a[(i0+rr)·lda + p0+p]`.
+    Rows { a: &'a [f64], lda: usize },
+    /// A read transposed from a row-major `k`×`lda` matrix (the AᵀB
+    /// variant): `a[(p0+p)·lda + i0+rr]` — contiguous `MR` runs.
+    Cols { a: &'a [f64], lda: usize },
+}
+
+impl APack<'_> {
+    #[inline]
+    fn pack(&self, i0: usize, mr: usize, p0: usize, kc: usize, apack: &mut [f64]) {
+        match *self {
+            APack::Rows { a, lda } => {
+                for (p, dst) in apack.chunks_exact_mut(MR).take(kc).enumerate() {
+                    for (rr, d) in dst.iter_mut().enumerate() {
+                        *d = if rr < mr { a[(i0 + rr) * lda + p0 + p] } else { 0.0 };
+                    }
+                }
+            }
+            APack::Cols { a, lda } => {
+                for (p, dst) in apack.chunks_exact_mut(MR).take(kc).enumerate() {
+                    let src = &a[(p0 + p) * lda + i0..(p0 + p) * lda + i0 + mr];
+                    dst[..mr].copy_from_slice(src);
+                    for d in dst[mr..].iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One kc-deep blocked pass: C[rows i_begin..i_end] += Apanel·Bpanel.
+/// `bwin` is the `kc`×`n` window of B (row-major, stride `n`), `c` the
+/// full m×n output.
+fn kc_pass(
+    apanel: APack<'_>,
+    rows: std::ops::Range<usize>,
+    p0: usize,
+    kc: usize,
+    bwin: &[f64],
+    n: usize,
+    c: &mut [f64],
+) {
+    debug_assert!(kc <= KC);
+    let mut apack = [0.0f64; KC * MR];
+    let mut bpad = [0.0f64; KC * NR];
+    let mut i0 = rows.start;
+    while i0 < rows.end {
+        let mr = MR.min(rows.end - i0);
+        apanel.pack(i0, mr, p0, kc, &mut apack);
+        let mut j0 = 0;
+        while j0 + NR <= n {
+            let mut acc = [[0.0f64; NR]; MR];
+            microkernel(kc, &apack, &bwin[j0..], n, &mut acc);
+            flush_acc(&acc, c, n, i0, j0, mr, NR);
+            j0 += NR;
+        }
+        if j0 < n {
+            let nr = n - j0;
+            for (p, dst) in bpad.chunks_exact_mut(NR).take(kc).enumerate() {
+                dst[..nr].copy_from_slice(&bwin[p * n + j0..p * n + j0 + nr]);
+                for d in dst[nr..].iter_mut() {
+                    *d = 0.0;
+                }
+            }
+            let mut acc = [[0.0f64; NR]; MR];
+            microkernel(kc, &apack, &bpad, NR, &mut acc);
+            flush_acc(&acc, c, n, i0, j0, mr, nr);
+        }
+        i0 += MR;
+    }
+}
+
+/// Serial tiled GEMM over an output row range: C[rows] += A[rows]·B.
+/// `a` row-major m×k, `b` row-major k×n, `c` row-major m×n.
+fn gemm_rows(
+    a: &[f64],
+    k: usize,
+    b: &[f64],
+    n: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f64],
+) {
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        kc_pass(
+            APack::Rows { a, lda: k },
+            rows.clone(),
+            p0,
+            kc,
+            &b[p0 * n..],
+            n,
+            c,
+        );
+        p0 += KC;
+    }
+}
+
+/// Serial tiled AᵀB: C rows 0..cols.len() of `c` are columns `cols` of
+/// the k×m row-major `a`.
+fn gemm_at_cols(
+    a: &[f64],
+    k: usize,
+    m: usize,
+    b: &[f64],
+    n: usize,
+    cols: std::ops::Range<usize>,
+    c: &mut [f64],
+) {
+    let count = cols.end - cols.start;
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        kc_pass(
+            APack::Cols {
+                a: &a[cols.start..],
+                lda: m,
+            },
+            0..count,
+            p0,
+            kc,
+            &b[p0 * n..],
+            n,
+            c,
+        );
+        p0 += KC;
+    }
+}
+
+/// Serial tiled ABᵀ over an output row range.  `a` row-major m×k, `b`
+/// row-major n×k; each kc window transpose-packs the B panel once so
+/// the shared microkernel streams it like a plain GEMM.
+fn gemm_bt_rows(
+    a: &[f64],
+    k: usize,
+    b: &[f64],
+    n: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f64],
+) {
+    let mut bpanel = vec![0.0f64; KC.min(k.max(1)) * n];
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        // bpanel[p][j] = b[j][p0+p] — kc×n row-major view of Bᵀ.
+        for j in 0..n {
+            let src = &b[j * k + p0..j * k + p0 + kc];
+            for (p, &x) in src.iter().enumerate() {
+                bpanel[p * n + j] = x;
+            }
+        }
+        kc_pass(
+            APack::Rows { a, lda: k },
+            rows.clone(),
+            p0,
+            kc,
+            &bpanel,
+            n,
+            c,
+        );
+        p0 += KC;
+    }
+}
+
+/// Split `m` output rows into `parts` MR-aligned chunks and run `f`
+/// over each on the persistent pool (serial when `parts == 1`).  Each
+/// chunk is the identical serial computation on a disjoint C slice, so
+/// the output is bit-identical for any pool size.
+fn run_row_partitioned<F>(m: usize, n: usize, flops: usize, c: &mut [f64], f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
+{
+    let pool = WorkPool::global();
+    let parts = if flops >= PAR_FLOPS {
+        (pool.workers() + 1).min(m.div_ceil(MR))
+    } else {
+        1
+    };
+    if parts <= 1 {
+        f(0..m, c);
+        return;
+    }
+    let rows_per = m.div_ceil(parts).next_multiple_of(MR);
+    pool.scoped(|scope| {
+        let f = &f;
+        let mut c_rest = c;
+        let mut i0 = 0;
+        while i0 < m {
+            let r = rows_per.min(m - i0);
+            let (c_chunk, c_next) = std::mem::take(&mut c_rest).split_at_mut(r * n);
+            c_rest = c_next;
+            let rows = i0..i0 + r;
+            scope.execute(move || f(rows, c_chunk));
+            i0 += r;
+        }
+    });
+}
+
+// -- public entry points --------------------------------------------------
+
+/// C = A·B through the tiled kernel (pool-parallel above
+/// [`PAR_FLOPS`]).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    if reference_mode() {
+        return matmul_ref(a, b);
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let flops = 2 * m * n * k;
+    run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
+        // cslice covers exactly `rows`; rebase the range to it.
+        let base = rows.start;
+        gemm_rows(
+            &a.data[base * k..rows.end * k],
+            k,
+            &b.data,
+            n,
+            0..rows.end - base,
+            cslice,
+        );
+    });
+    c
+}
+
+/// C = Aᵀ·B without materializing Aᵀ (a: k×m, b: k×n → C m×n).
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at_b dim mismatch");
+    if reference_mode() {
+        return matmul_ref(&a.transpose(), b);
+    }
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let flops = 2 * m * n * k;
+    run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
+        gemm_at_cols(&a.data, k, m, &b.data, n, rows, cslice);
+    });
+    c
+}
+
+/// C = A·Bᵀ without materializing Bᵀ (a: m×k, b: n×k → C m×n).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt dim mismatch");
+    if reference_mode() {
+        return matmul_ref(a, &b.transpose());
+    }
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let flops = 2 * m * n * k;
+    run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
+        let base = rows.start;
+        gemm_bt_rows(
+            &a.data[base * k..rows.end * k],
+            k,
+            &b.data,
+            n,
+            0..rows.end - base,
+            cslice,
+        );
+    });
+    c
+}
+
+/// Serial tiled GEMM (no pool dispatch) — exposed for the perf bench's
+/// single-thread row and kernel-level tests.
+pub fn matmul_serial(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    if m > 0 && n > 0 && k > 0 {
+        gemm_rows(&a.data, k, &b.data, n, 0..m, &mut c.data);
+    }
+    c
+}
+
+// -- vector primitives ----------------------------------------------------
+
+/// Chunked multi-accumulator dot product: four independent partial sums
+/// keep the FMA chains pipelined (the one-accumulator loop is bound by
+/// add latency).  Summation order differs from the naive loop — callers
+/// relying on exact historical bit patterns should not (none do).
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let xc = x.chunks_exact(4);
+    let yc = y.chunks_exact(4);
+    let mut tail = 0.0;
+    for (&xi, &yi) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += xi * yi;
+    }
+    for (xs, ys) in xc.zip(yc) {
+        for (a, (&xi, &yi)) in acc.iter_mut().zip(xs.iter().zip(ys)) {
+            *a += xi * yi;
+        }
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// y += alpha · x.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+        let denom = want.frob_norm().max(1e-300);
+        got.sub(want).frob_norm() / denom
+    }
+
+    #[test]
+    fn tiled_matches_reference_across_shapes() {
+        let mut rng = Rng::new(0);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (1, 7, 5),
+            (5, 7, 1),
+            (3, 1, 9),
+            (4, 8, 8),
+            (5, 9, 11),
+            (17, 33, 29),
+            (64, 64, 64),
+            (31, 257, 63),
+        ] {
+            let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+            let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+            let want = matmul_ref(&a, &b);
+            assert!(rel_err(&matmul(&a, &b), &want) < 1e-12, "{m}x{k}x{n}");
+            assert!(rel_err(&matmul_serial(&a, &b), &want) < 1e-12, "{m}x{k}x{n} serial");
+        }
+    }
+
+    #[test]
+    fn k_zero_and_empty_edges() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        assert_eq!(matmul_at_b(&Matrix::zeros(0, 3), &Matrix::zeros(0, 2)).data, vec![0.0; 6]);
+        assert_eq!(matmul_a_bt(&Matrix::zeros(2, 0), &Matrix::zeros(5, 0)).data, vec![0.0; 10]);
+    }
+
+    #[test]
+    fn fused_transpose_variants_match_composed_reference() {
+        let mut rng = Rng::new(1);
+        for (k, m, n) in [(1, 3, 2), (9, 4, 6), (33, 17, 21), (70, 40, 24)] {
+            let a = Matrix::gaussian(&mut rng, k, m, 1.0);
+            let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+            let want = matmul_ref(&a.transpose(), &b);
+            assert!(rel_err(&matmul_at_b(&a, &b), &want) < 1e-12, "at_b {k}x{m}x{n}");
+
+            let a2 = Matrix::gaussian(&mut rng, m, k, 1.0);
+            let b2 = Matrix::gaussian(&mut rng, n, k, 1.0);
+            let want2 = matmul_ref(&a2, &b2.transpose());
+            assert!(rel_err(&matmul_a_bt(&a2, &b2), &want2) < 1e-12, "a_bt {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn pool_parallel_path_is_bit_identical_to_serial() {
+        // 160³ > PAR_FLOPS/2… pick a size safely above the threshold so
+        // the pool path actually engages, then require *exact* equality
+        // with the serial kernel: the row partition computes the same
+        // splits in the same order.
+        let mut rng = Rng::new(2);
+        let d = 160; // 2·160³ ≈ 8.2 Mflop ≥ PAR_FLOPS
+        let a = Matrix::gaussian(&mut rng, d, d, 1.0);
+        let b = Matrix::gaussian(&mut rng, d, d, 1.0);
+        let par = matmul(&a, &b);
+        let ser = matmul_serial(&a, &b);
+        assert_eq!(par, ser);
+    }
+
+    // NOTE: `set_reference_mode` is deliberately not unit-tested — the
+    // flag is process-global and `cargo test` runs tests concurrently,
+    // so toggling it here would race the equality assertions of other
+    // tests.  The perf bench exercises the dispatch single-threaded.
+
+    #[test]
+    fn dot_and_axpy_match_naive() {
+        let mut rng = Rng::new(4);
+        for len in [0, 1, 3, 4, 7, 64, 129] {
+            let x: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let y: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let got = dot(&x, &y);
+            assert!((got - want).abs() <= 1e-12 * want.abs().max(1.0), "len {len}");
+            let mut z = y.clone();
+            axpy(0.5, &x, &mut z);
+            for ((zi, yi), xi) in z.iter().zip(&y).zip(&x) {
+                assert_eq!(*zi, yi + 0.5 * xi);
+            }
+        }
+    }
+}

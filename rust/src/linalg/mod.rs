@@ -3,10 +3,12 @@
 //! behind every spectral analysis in the paper (Figs. 1–5, 8) and the
 //! Rust-side mirror of the decomposition the training graph performs.
 
+pub mod kernels;
 pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
+pub use kernels::{dot, matmul_at_b, matmul_a_bt};
 pub use qr::{householder_qr, QrResult};
 pub use rsvd::randomized_svd;
 pub use svd::{jacobi_svd, SvdResult};

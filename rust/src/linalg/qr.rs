@@ -2,7 +2,15 @@
 //!
 //! Used by the randomized SVD range finder and as the orthonormalisation
 //! oracle in property tests for the graph-side CholeskyQR2.
+//!
+//! Hot-path layout: the factorization works on a contiguous
+//! **column-major copy**, so every reflector dot and update
+//! (`vᵀ·col`, `col -= c·v`) runs on cache-dense slices through the
+//! chunked kernel primitives instead of striding the row-major matrix
+//! — QR sits under every range finder in `rsvd`/`split`/`sampler`, so
+//! this is one of the hottest loops in the crate.
 
+use crate::linalg::kernels::{axpy, dot};
 use crate::tensor::Matrix;
 
 pub struct QrResult {
@@ -14,76 +22,77 @@ pub struct QrResult {
 pub fn householder_qr(a: &Matrix) -> QrResult {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "thin QR requires m >= n (got {m}x{n})");
-    let mut r = a.clone();
-    // Store reflectors v_k in a workspace matrix (m x n).
+
+    // Column-major working copy of A.
+    let mut rc = vec![0.0f64; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * n..(i + 1) * n];
+        for (j, &x) in arow.iter().enumerate() {
+            rc[j * m + i] = x;
+        }
+    }
+    // Reflectors v_k (each only uses entries k..m).
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
 
     for k in 0..n {
-        // Build reflector for column k below the diagonal.
-        let mut norm2 = 0.0;
-        for i in k..m {
-            let x = r.at(i, k);
-            norm2 += x * x;
-        }
-        let norm = norm2.sqrt();
+        let (norm, akk) = {
+            let ck = &rc[k * m..(k + 1) * m];
+            (dot(&ck[k..], &ck[k..]).sqrt(), ck[k])
+        };
         let mut v = vec![0.0; m];
-        let akk = r.at(k, k);
         let alpha = if akk >= 0.0 { -norm } else { norm };
         if norm == 0.0 {
             vs.push(v);
             continue;
         }
         v[k] = akk - alpha;
-        for i in (k + 1)..m {
-            v[i] = r.at(i, k);
-        }
-        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        v[(k + 1)..m].copy_from_slice(&rc[k * m + k + 1..(k + 1) * m]);
+        let vnorm2 = dot(&v[k..], &v[k..]);
         if vnorm2 == 0.0 {
             vs.push(v);
             continue;
         }
-        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..], column by column.
         for j in k..n {
-            let mut dot = 0.0;
-            for i in k..m {
-                dot += v[i] * r.at(i, j);
-            }
-            let c = 2.0 * dot / vnorm2;
-            for i in k..m {
-                r[(i, j)] -= c * v[i];
-            }
+            let cj = &mut rc[j * m..(j + 1) * m];
+            let c = 2.0 * dot(&v[k..], &cj[k..]) / vnorm2;
+            axpy(-c, &v[k..], &mut cj[k..]);
         }
         vs.push(v);
     }
 
-    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
-    let mut q = Matrix::zeros(m, n);
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity,
+    // in the same column-major layout.
+    let mut qc = vec![0.0f64; m * n];
     for j in 0..n {
-        q[(j, j)] = 1.0;
+        qc[j * m + j] = 1.0;
     }
     for k in (0..n).rev() {
         let v = &vs[k];
-        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        let vnorm2 = dot(&v[k..], &v[k..]);
         if vnorm2 == 0.0 {
             continue;
         }
         for j in 0..n {
-            let mut dot = 0.0;
-            for i in k..m {
-                dot += v[i] * q.at(i, j);
-            }
-            let c = 2.0 * dot / vnorm2;
-            for i in k..m {
-                q[(i, j)] -= c * v[i];
-            }
+            let cj = &mut qc[j * m..(j + 1) * m];
+            let c = 2.0 * dot(&v[k..], &cj[k..]) / vnorm2;
+            axpy(-c, &v[k..], &mut cj[k..]);
         }
     }
 
-    // Zero the strictly-lower part of R's top block and truncate.
+    // Scatter back to row-major: Q (m×n) and the upper-triangular R.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        let cj = &qc[j * m..(j + 1) * m];
+        for (i, &x) in cj.iter().enumerate() {
+            q[(i, j)] = x;
+        }
+    }
     let mut r_out = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in i..n {
-            r_out[(i, j)] = r.at(i, j);
+    for j in 0..n {
+        let cj = &rc[j * m..(j + 1) * m];
+        for (i, &x) in cj.iter().enumerate().take(j + 1) {
+            r_out[(i, j)] = x;
         }
     }
     QrResult { q, r: r_out }
@@ -95,7 +104,7 @@ mod tests {
     use crate::util::prng::Rng;
 
     fn ortho_err(q: &Matrix) -> f64 {
-        let qtq = q.transpose().matmul(q);
+        let qtq = q.matmul_at_b(q);
         let mut err: f64 = 0.0;
         for i in 0..qtq.rows {
             for j in 0..qtq.cols {
@@ -109,7 +118,7 @@ mod tests {
     #[test]
     fn qr_reconstructs_and_is_orthonormal() {
         let mut rng = Rng::new(0);
-        for (m, n) in [(8, 8), (40, 12), (100, 3)] {
+        for (m, n) in [(8, 8), (40, 12), (100, 3), (5, 1), (1, 1)] {
             let a = Matrix::gaussian(&mut rng, m, n, 1.0);
             let QrResult { q, r } = householder_qr(&a);
             assert!(ortho_err(&q) < 1e-10, "{m}x{n} ortho");

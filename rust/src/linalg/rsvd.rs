@@ -24,10 +24,10 @@ pub fn randomized_svd(
     let omega = Matrix::gaussian(rng, n, l, 1.0);
     let mut q = householder_qr(&a.matmul(&omega)).q;
     for _ in 0..power_iters {
-        let z = householder_qr(&a.transpose().matmul(&q)).q;
+        let z = householder_qr(&a.matmul_at_b(&q)).q; // Aᵀ·Q fused
         q = householder_qr(&a.matmul(&z)).q;
     }
-    let b = q.transpose().matmul(a); // l×n
+    let b = q.matmul_at_b(a); // Qᵀ·A, l×n, no transpose copy
     let small = jacobi_svd(&b);
     // U = Q · U_small, truncated to k.
     let u_full = q.matmul(&small.u);
@@ -85,7 +85,7 @@ mod tests {
         let s: Vec<f64> = (1..=r).map(|i| (i as f64).powf(-1.5) * 10.0).collect();
         let q1 = householder_qr(&Matrix::gaussian(rng, m, r, 1.0)).q;
         let q2 = householder_qr(&Matrix::gaussian(rng, n, r, 1.0)).q;
-        q1.scale_cols(&s).matmul(&q2.transpose())
+        q1.scale_cols(&s).matmul_a_bt(&q2)
     }
 
     #[test]

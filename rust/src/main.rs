@@ -388,7 +388,7 @@ fn cmd_quant(args: &Args) -> Result<()> {
     let s: Vec<f64> = (1..=r).map(|i| 10.0 * (i as f64).powf(-1.2)).collect();
     let q1 = householder_qr(&Matrix::gaussian(&mut rng, rows, r, 1.0)).q;
     let q2 = householder_qr(&Matrix::gaussian(&mut rng, cols, r, 1.0)).q;
-    let w = q1.scale_cols(&s).matmul(&q2.transpose());
+    let w = q1.scale_cols(&s).matmul_a_bt(&q2);
 
     let q = formats::quantize_matrix_along(fmt, &w, 0);
     let st = formats::blockq::quant_stats(&w, &q);

@@ -32,9 +32,9 @@
 //! element-space error stats of both paths and the σ-spectrum
 //! distortion metrics the split is designed to win.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread;
+use std::sync::{mpsc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -49,6 +49,7 @@ use crate::util::json::Json;
 use crate::util::npy::NpyReader;
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
+use crate::util::workpool::WorkPool;
 
 /// fold_in domains under each layer's `fold_in(index)` stream, disjoint
 /// from `synthetic_model`'s plain `fold_in(i)` data streams.
@@ -402,6 +403,17 @@ fn process_block(
 
 fn process_unit(spec: &LayerSpec, u: Unit, cfg: &PipelineConfig) -> Result<BlockOut> {
     let wb = spec.read_cols(u.c0, u.width)?;
+    // Validate up front: a NaN/∞ weight used to surface as a panic deep
+    // inside the Jacobi sweep (σ sort), killing the worker and aborting
+    // the whole sweep.  Now it is a per-layer error with a name on it.
+    if !wb.data.iter().all(|x| x.is_finite()) {
+        bail!(
+            "non-finite weight values in columns [{}, {}) — quantization \
+             and σ measurement require finite inputs",
+            u.c0,
+            u.c0 + u.width
+        );
+    }
     let layer_stream = Rng::new(cfg.seed).fold_in(u.layer as u64);
     let mut quant_rng = if u.single {
         layer_stream.fold_in(QUANT_DOMAIN)
@@ -523,29 +535,38 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
     // output order is unchanged either way.
     units.sort_by_key(|u| (specs[u.layer].rows * u.width, u.layer, u.block));
 
+    // Shard (layer, block) units over the persistent process-wide pool
+    // (shared with `TrainState::step_with`): `threads` drain-loop jobs
+    // pull from one queue, so `--threads` still caps this sweep's
+    // concurrency without re-spawning OS threads per call.  Jobs borrow
+    // `specs`/`queue` directly — the scope joins them before returning.
     let threads = cfg.threads.max(1).min(n_units);
-    let specs = Arc::new(specs);
-    let queue = Arc::new(Mutex::new(units));
+    let queue = Mutex::new(units);
     let (tx, rx) = mpsc::channel::<(usize, usize, Result<BlockOut>)>();
-    let mut handles = Vec::with_capacity(threads);
-    for _ in 0..threads {
-        let specs = Arc::clone(&specs);
-        let queue = Arc::clone(&queue);
-        let tx = tx.clone();
-        let cfg = *cfg;
-        handles.push(thread::spawn(move || loop {
-            let unit = queue.lock().unwrap().pop();
-            match unit {
-                None => break,
-                Some(u) => {
-                    let out = process_unit(&specs[u.layer], u, &cfg);
-                    if tx.send((u.layer, u.block, out)).is_err() {
-                        break;
+    WorkPool::global().scoped(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let (queue, specs, cfg) = (&queue, &specs, *cfg);
+            scope.execute(move || loop {
+                let unit = queue.lock().unwrap().pop();
+                match unit {
+                    None => break,
+                    Some(u) => {
+                        // A panic would poison the scope; surface it as
+                        // this unit's error instead so the sweep fails
+                        // with a layer name attached.
+                        let out = catch_unwind(AssertUnwindSafe(|| {
+                            process_unit(&specs[u.layer], u, &cfg)
+                        }))
+                        .unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked")));
+                        if tx.send((u.layer, u.block, out)).is_err() {
+                            break;
+                        }
                     }
                 }
-            }
-        }));
-    }
+            });
+        }
+    });
     drop(tx);
 
     let mut per_layer: Vec<Vec<(usize, BlockOut)>> = (0..n_layers).map(|_| Vec::new()).collect();
@@ -562,9 +583,6 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
                 }
             }
         }
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow!("pipeline worker panicked"))?;
     }
     if let Some(e) = first_err {
         return Err(e);
@@ -690,7 +708,7 @@ pub fn planted_powerlaw(rng: &mut Rng, m: usize, n: usize, power: f64) -> Matrix
     let s: Vec<f64> = (1..=r).map(|i| 10.0 * (i as f64).powf(-power)).collect();
     let q1 = householder_qr(&Matrix::gaussian(rng, m, r, 1.0)).q;
     let q2 = householder_qr(&Matrix::gaussian(rng, n, r, 1.0)).q;
-    q1.scale_cols(&s).matmul(&q2.transpose())
+    q1.scale_cols(&s).matmul_a_bt(&q2)
 }
 
 /// Synthetic transformer-shaped parameter set (4 matrices per block:
@@ -883,6 +901,33 @@ mod tests {
     #[test]
     fn empty_input_is_an_error() {
         assert!(run(Vec::new(), &small_cfg(1)).is_err());
+    }
+
+    #[test]
+    fn non_finite_layer_is_an_error_not_a_panic() {
+        // Regression: a NaN weight used to blow up as a sort panic deep
+        // in the Jacobi sweep, killing a pool worker and failing the
+        // run with no layer attribution.  It must now come back as a
+        // named per-layer error.
+        let mut rng = Rng::new(0);
+        let mut w = Matrix::gaussian(&mut rng, 12, 10, 1.0);
+        w[(3, 4)] = f64::NAN;
+        let layers = vec![
+            Layer {
+                name: "good".into(),
+                w: Matrix::gaussian(&mut rng, 12, 10, 1.0),
+            },
+            Layer {
+                name: "poisoned".into(),
+                w,
+            },
+        ];
+        let mut cfg = small_cfg(2);
+        cfg.measure_sigma = true;
+        let err = run(layers, &cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("poisoned"), "error names the layer: {msg}");
+        assert!(msg.contains("non-finite"), "error names the cause: {msg}");
     }
 
     #[test]

@@ -131,7 +131,7 @@ pub fn sparse_sample_svd(a: &Matrix, k: usize, oversample: usize, rng: &mut Rng)
     // Lift: one subspace refinement through A.
     let b = a.matmul(&v_l); // m×l
     let q = householder_qr(&b).q; // m×l, l ≤ m
-    let c = q.transpose().matmul(a); // l×n
+    let c = q.matmul_at_b(a); // Qᵀ·A, l×n, no transpose copy
     let small = jacobi_svd(&c); // u: l×l, v: n×l
     let u_full = q.matmul(&small.u); // m×l
 

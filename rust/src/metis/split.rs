@@ -116,11 +116,11 @@ pub fn gradient_split(
     let omega = Matrix::gaussian(rng, n, j, 1.0);
     let mut p = householder_qr(&dn.matmul(&omega)).q; // (l, j)
     for _ in 0..power_iters {
-        let z = householder_qr(&dn.transpose().matmul(&p)).q; // (n, j)
+        let z = householder_qr(&dn.matmul_at_b(&p)).q; // Dᵀ·P, (n, j)
         p = householder_qr(&dn.matmul(&z)).q;
     }
 
-    let b = p.transpose().matmul(&dn); // (j, n)
+    let b = p.matmul_at_b(&dn); // Pᵀ·D, (j, n), no transpose copy
     let residual = dn.sub(&p.matmul(&b)).scale(scale);
 
     // Rotate the basis onto singular directions: exact small SVD of B.

@@ -33,7 +33,6 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
-use std::thread;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -47,6 +46,7 @@ use crate::tensor::Matrix;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
+use crate::util::workpool::WorkPool;
 
 /// Stream-domain tags keeping the trainstate RNG streams disjoint from
 /// `synthetic_model`'s `fold_in(i)` and the pipeline's
@@ -112,13 +112,9 @@ impl PackedWeight {
     /// re-quantized.  O(mnk) — same order as the per-step Eq. 6 split,
     /// so the refresh never dominates a step.
     pub fn refresh(&mut self, fmt: Format) {
-        let a = self.uq.transpose().matmul(&self.master); // k×n
+        let a = self.uq.matmul_at_b(&self.master); // Q(U)ᵀ·W fused, k×n
         for (i, s) in self.s.iter_mut().enumerate() {
-            let mut acc = 0.0;
-            for c in 0..self.master.cols {
-                acc += a.at(i, c) * self.vtq.at(i, c);
-            }
-            *s = acc;
+            *s = crate::linalg::kernels::dot(a.row(i), self.vtq.row(i));
         }
         let low = self.uq.scale_cols(&self.s).matmul(&self.vtq);
         self.rq = quantize_matrix_along(fmt, &self.master.sub(&low), 0);
@@ -414,10 +410,12 @@ impl TrainState {
     /// (loss, raw gradient wrt the effective weight); the state applies
     /// the `GradStep`, the optimizer update, and the packing refresh.
     ///
-    /// Layers are sharded over a scoped worker pool pulling from a
-    /// shared index queue.  Each (layer, step) computation draws from
-    /// its own seed stream and the report aggregates in layer order, so
-    /// the result is bit-identical for any `threads`.
+    /// Layers are sharded over the persistent [`WorkPool`] (constructed
+    /// once per process, shared with `pipeline::run_specs`) pulling
+    /// from a shared index queue — no per-step thread spawn/join.  Each
+    /// (layer, step) computation draws from its own seed stream and the
+    /// report aggregates in layer order, so the result is bit-identical
+    /// for any `threads`.
     pub fn step_with<F>(&mut self, lr: f64, threads: usize, grad_fn: &F) -> StepReport
     where
         F: Fn(usize, &PackedWeight, &mut Rng) -> (f64, Matrix) + Sync,
@@ -438,11 +436,11 @@ impl TrainState {
             .collect();
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, LayerStepStats)>();
-        thread::scope(|scope| {
+        WorkPool::global().scoped(|scope| {
             for _ in 0..threads {
                 let tx = tx.clone();
-                let (slots, next) = (&slots, &next);
-                scope.spawn(move || loop {
+                let (slots, next, grad_fn) = (&slots, &next, &grad_fn);
+                scope.execute(move || loop {
                     let idx = next.fetch_add(1, Ordering::Relaxed);
                     if idx >= n {
                         break;
@@ -612,7 +610,7 @@ pub fn train_native_with(
         // teacher shares the quantized activations.
         let diff = xq.matmul(&pw.effective().sub(&targets[idx]));
         let loss = 0.5 * diff.frob_norm().powi(2) / batch as f64;
-        let d = xq.transpose().matmul(&diff).scale(1.0 / batch as f64);
+        let d = xq.matmul_at_b(&diff).scale(1.0 / batch as f64);
         (loss, d)
     };
 

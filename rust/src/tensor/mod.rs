@@ -87,35 +87,52 @@ impl Matrix {
 
     // -- basic ops -----------------------------------------------------------
 
+    /// Cache-blocked transpose: both source rows and destination rows
+    /// are touched in 32×32 tiles, so one side no longer strides a full
+    /// cache line per element on large matrices.
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self.at(r, c);
+        const TB: usize = 32;
+        let (rows, cols) = (self.rows, self.cols);
+        let mut t = Matrix::zeros(cols, rows);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + TB).min(rows);
+            let mut c0 = 0;
+            while c0 < cols {
+                let c1 = (c0 + TB).min(cols);
+                for r in r0..r1 {
+                    let src = &self.data[r * cols + c0..r * cols + c1];
+                    for (c, &x) in src.iter().enumerate() {
+                        t.data[(c0 + c) * rows + r] = x;
+                    }
+                }
+                c0 = c1;
             }
+            r0 = r1;
         }
         t
     }
 
-    /// C = A·B with k-blocked inner loops (cache-friendly ikj order).
+    /// C = A·B through the register-blocked kernel layer
+    /// ([`crate::linalg::kernels`]); large products fan output rows
+    /// across the persistent work pool (bit-identical to the serial
+    /// kernel for any pool size).  Unlike the historical scalar loop,
+    /// exact zeros in `self` do *not* short-circuit — `0·NaN` from `b`
+    /// propagates as NaN, as IEEE multiplication requires.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut c = Matrix::zeros(m, n);
-        for i in 0..m {
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a_ip = self.data[i * k + p];
-                if a_ip == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[p * n..(p + 1) * n];
-                for (cj, &bj) in crow.iter_mut().zip(brow) {
-                    *cj += a_ip * bj;
-                }
-            }
-        }
-        c
+        crate::linalg::kernels::matmul(self, b)
+    }
+
+    /// C = selfᵀ·B without materializing the transpose (self: k×m,
+    /// b: k×n → C: m×n).
+    pub fn matmul_at_b(&self, b: &Matrix) -> Matrix {
+        crate::linalg::kernels::matmul_at_b(self, b)
+    }
+
+    /// C = self·Bᵀ without materializing the transpose (self: m×k,
+    /// b: n×k → C: m×n).
+    pub fn matmul_a_bt(&self, b: &Matrix) -> Matrix {
+        crate::linalg::kernels::matmul_a_bt(self, b)
     }
 
     pub fn scale(&self, s: f64) -> Matrix {
@@ -256,8 +273,53 @@ mod tests {
     #[test]
     fn transpose_involution() {
         let mut rng = Rng::new(0);
-        let a = Matrix::gaussian(&mut rng, 7, 3, 1.0);
-        assert_eq!(a.transpose().transpose(), a);
+        // Shapes straddling the 32-tile boundary of the blocked kernel.
+        for (m, n) in [(7, 3), (32, 32), (33, 31), (1, 65), (100, 40)] {
+            let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (n, m));
+            for r in 0..m {
+                for c in 0..n {
+                    assert_eq!(t.at(c, r), a.at(r, c));
+                }
+            }
+            assert_eq!(t.transpose(), a);
+        }
+    }
+
+    #[test]
+    fn zero_times_nan_poisons_product() {
+        // Regression: the historical matmul skipped `a_ip == 0` rows,
+        // silently suppressing NaN/∞ propagation from `b`.  IEEE says
+        // 0·NaN = NaN and the kernel must agree.
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![2.0, 0.0]]);
+        let b = Matrix::from_rows(&[vec![f64::NAN, 5.0], vec![1.0, f64::INFINITY]]);
+        let c = a.matmul(&b);
+        // Row 0: 0·NaN + 1·1 → NaN in column 0; 0·5 + 1·∞ → ∞.
+        assert!(c.at(0, 0).is_nan(), "0·NaN must poison the dot product");
+        assert!(c.at(0, 1).is_infinite());
+        // Row 1: 2·NaN → NaN; 2·5 + 0·∞ → NaN (0·∞ is NaN too).
+        assert!(c.at(1, 0).is_nan());
+        assert!(c.at(1, 1).is_nan(), "0·∞ must poison the dot product");
+    }
+
+    #[test]
+    fn fused_transpose_matmuls_match_composition() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::gaussian(&mut rng, 9, 5, 1.0);
+        let b = Matrix::gaussian(&mut rng, 9, 6, 1.0);
+        let got = a.matmul_at_b(&b);
+        let want = a.transpose().matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        let c = Matrix::gaussian(&mut rng, 4, 7, 1.0);
+        let d = Matrix::gaussian(&mut rng, 8, 7, 1.0);
+        let got = c.matmul_a_bt(&d);
+        let want = c.matmul(&d.transpose());
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -6,3 +6,4 @@ pub mod npy;
 pub mod prng;
 pub mod timer;
 pub mod toml;
+pub mod workpool;

@@ -1,0 +1,364 @@
+//! Persistent scoped worker pool — the one thread pool behind every
+//! sharded hot path.
+//!
+//! Before this module, `pipeline::run_specs` and `TrainState::step_with`
+//! each re-spawned a scoped `std::thread` pool per call (per training
+//! *step*, on the native loop).  The pool here is constructed once
+//! ([`WorkPool::global`]) and shared: callers open a [`WorkPool::scoped`]
+//! region, submit borrowing closures, and the region joins them all
+//! before returning — the same lifetime contract as
+//! `std::thread::scope`, minus the per-call spawn/join cost.
+//!
+//! Scheduling is work-stealing-ish, channel-pool style: submitted jobs
+//! land on one shared FIFO; idle workers pull from it, and the thread
+//! that opened the scope *helps* by running its own batch's queued jobs
+//! while it waits.  Two properties follow:
+//!
+//! * **no idle submitter** — with zero pool workers (or all of them
+//!   busy) the scope still completes, executed entirely by the
+//!   submitting thread;
+//! * **nested scopes cannot deadlock** — a job may itself open a scope
+//!   (the kernel layer's parallel GEMM does, inside pipeline workers);
+//!   its sub-jobs either get picked up by idle workers or are run by
+//!   the waiting submitter.  Helpers only run jobs of their *own*
+//!   batch, so the dependency graph stays the acyclic nesting order.
+//!
+//! Determinism: the pool adds none and removes none.  Every caller
+//! derives per-work-unit `fold_in` RNG streams and reassembles results
+//! in unit order, so *which* thread runs a unit never changes any
+//! number — the bit-identity guarantees of the pipeline and the native
+//! training loop carry over unchanged.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One submitted job plus the batch it belongs to.
+struct Task {
+    job: Job,
+    batch: Arc<Batch>,
+}
+
+/// Completion state of one scoped region.
+struct Batch {
+    /// Jobs submitted and not yet finished (queued or running).
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicUsize,
+    /// First caught panic payload — re-thrown by `scoped` so the
+    /// original message/location survives the pool hop.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Batch {
+    fn new() -> Batch {
+        Batch {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicUsize::new(0),
+            payload: Mutex::new(None),
+        }
+    }
+}
+
+struct PoolShared {
+    /// (FIFO of queued tasks, shutdown flag).
+    queue: Mutex<(VecDeque<Task>, bool)>,
+    available: Condvar,
+}
+
+/// Run one task and mark it complete.  The job box is consumed (and its
+/// captures dropped) *before* the pending count is decremented — that
+/// ordering is what lets [`WorkPool::scoped`] promise that no borrow
+/// escapes the scope.
+fn run_task(task: Task) {
+    let Task { job, batch } = task;
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+        batch.panicked.fetch_add(1, Ordering::SeqCst);
+        let mut slot = batch.payload.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    let mut pending = batch.pending.lock().unwrap();
+    *pending -= 1;
+    if *pending == 0 {
+        batch.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.0.pop_front() {
+                    break t;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        run_task(task);
+    }
+}
+
+/// A persistent pool of worker threads executing scoped jobs.
+pub struct WorkPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkPool {
+    /// Spawn a pool with `workers` threads.  Zero is legal: every scope
+    /// then runs on the submitting thread (useful for tests).
+    pub fn new(workers: usize) -> WorkPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("metis-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("workpool: failed to spawn worker")
+            })
+            .collect();
+        WorkPool { shared, workers }
+    }
+
+    /// The process-wide pool, created on first use with
+    /// `available_parallelism - 1` workers (the scope-opening thread is
+    /// the +1: it always helps).
+    pub fn global() -> &'static WorkPool {
+        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = thread::available_parallelism().map_or(2, |x| x.get());
+            WorkPool::new(n.saturating_sub(1).max(1))
+        })
+    }
+
+    /// Worker thread count (the submitting thread adds one more lane of
+    /// effective parallelism on top).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Open a scoped region: `f` may submit jobs borrowing data that
+    /// outlives the `scoped` call; every job is joined before `scoped`
+    /// returns (on the success *and* the unwind path).  Panics if any
+    /// job panicked — callers that need an `Err` instead should catch
+    /// inside the job.
+    pub fn scoped<'pool, 'scope, F, R>(&'pool self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'pool, 'scope>) -> R,
+    {
+        let batch = Arc::new(Batch::new());
+        let scope = Scope {
+            pool: self,
+            batch: Arc::clone(&batch),
+            _marker: PhantomData,
+        };
+        let r = {
+            // The guard joins the batch when dropped, so the wait also
+            // happens if `f` unwinds mid-submission.
+            let _guard = WaitGuard {
+                pool: self,
+                batch: &batch,
+            };
+            f(&scope)
+        };
+        if batch.panicked.load(Ordering::SeqCst) > 0 {
+            // Re-throw the first job's payload so the original panic
+            // message and location survive the pool hop.
+            match batch.payload.lock().unwrap().take() {
+                Some(payload) => std::panic::resume_unwind(payload),
+                None => panic!("workpool: a scoped job panicked"),
+            }
+        }
+        r
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Submission handle passed to the closure of [`WorkPool::scoped`].
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkPool,
+    batch: Arc<Batch>,
+    /// Invariant over 'scope, like `std::thread::scope`'s marker.
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'_, 'scope> {
+    /// Queue a job.  It may run on any pool worker or on the submitting
+    /// thread while it waits in the scope join.
+    pub fn execute<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the job only lives until the end of the enclosing
+        // `scoped` call — `WaitGuard` blocks (helping) until the pool
+        // has consumed and dropped every job of this batch, on both the
+        // return and the unwind path, so no 'scope borrow is ever used
+        // after 'scope ends.  This is the `scoped_threadpool` lifetime
+        // erasure; only the fat-pointer lifetime changes.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        *self.batch.pending.lock().unwrap() += 1;
+        {
+            let mut q = self.pool.shared.queue.lock().unwrap();
+            q.0.push_back(Task {
+                job,
+                batch: Arc::clone(&self.batch),
+            });
+        }
+        self.pool.shared.available.notify_one();
+    }
+}
+
+/// Joins a batch on drop: first helps by running the batch's queued
+/// jobs on the current thread, then blocks until in-flight ones finish.
+struct WaitGuard<'a> {
+    pool: &'a WorkPool,
+    batch: &'a Arc<Batch>,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        loop {
+            let task = {
+                let mut q = self.pool.shared.queue.lock().unwrap();
+                let pos = q.0.iter().position(|t| Arc::ptr_eq(&t.batch, self.batch));
+                pos.and_then(|i| q.0.remove(i))
+            };
+            match task {
+                Some(t) => run_task(t),
+                None => break,
+            }
+        }
+        // No queued jobs of this batch remain and none can be added
+        // (submission requires &Scope, which is gone by the time the
+        // guard drops) — wait out the in-flight ones.
+        let mut pending = self.batch.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.batch.done.wait(pending).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scoped_jobs_all_run_and_borrow_locals() {
+        let pool = WorkPool::new(3);
+        let mut out = vec![0u64; 64];
+        pool.scoped(|scope| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                scope.execute(move || *slot = (i * i) as u64);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_on_the_submitter() {
+        let pool = WorkPool::new(0);
+        let hits = AtomicU64::new(0);
+        pool.scoped(|scope| {
+            for _ in 0..8 {
+                scope.execute(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        let pool = WorkPool::new(2);
+        let total = AtomicU64::new(0);
+        let pool = &pool;
+        pool.scoped(|outer| {
+            for _ in 0..4 {
+                outer.execute(|| {
+                    // A job opening its own scope on the same pool must
+                    // not deadlock even with every worker busy.
+                    pool.scoped(|inner| {
+                        for _ in 0..4 {
+                            inner.execute(|| {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn panicked_job_propagates_after_join() {
+        let pool = WorkPool::new(1);
+        let ran = Arc::new(AtomicU64::new(0));
+        let ran2 = Arc::clone(&ran);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.execute(|| panic!("boom"));
+                scope.execute(move || {
+                    ran2.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }));
+        let payload = result.expect_err("job panic must propagate");
+        // The original payload survives the pool hop (not a generic
+        // "a scoped job panicked" wrapper).
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+        // The sibling job still ran to completion before the panic.
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        // And the pool survives for the next scope.
+        let ok = AtomicU64::new(0);
+        pool.scoped(|scope| {
+            scope.execute(|| {
+                ok.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = WorkPool::global() as *const _;
+        let b = WorkPool::global() as *const _;
+        assert_eq!(a, b);
+        assert!(WorkPool::global().workers() >= 1);
+    }
+}

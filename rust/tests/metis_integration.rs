@@ -357,6 +357,34 @@ fn native_loop_loss_curve_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn shared_pool_interleaves_pipeline_and_training_without_crosstalk() {
+    // The pipeline and the native loop now share one persistent
+    // process-wide WorkPool.  Interleaving sweeps and training runs —
+    // and running them concurrently from two OS threads — must leave
+    // every report bit-identical to the isolated runs: the pool carries
+    // no per-caller state, and all RNG streams derive per work unit.
+    let sweep = || pipeline::run(pipeline::synthetic_model(1, 16, 5), &cfg(3)).unwrap();
+    let train = || {
+        let mut c = native_cfg(2);
+        c.steps = 4;
+        c.d_model = 16;
+        train_native(&c).unwrap()
+    };
+    let (base_sweep, base_train) = (sweep(), train());
+    let (again_train, again_sweep) = std::thread::scope(|s| {
+        let t = s.spawn(train);
+        let p = s.spawn(sweep);
+        (t.join().unwrap(), p.join().unwrap())
+    });
+    assert_eq!(base_train.losses(), again_train.losses());
+    for (a, b) in base_sweep.reports.iter().zip(&again_sweep.reports) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.metis_rel_err, b.metis_rel_err);
+        assert_eq!(a.metis_sigma_err, b.metis_sigma_err);
+    }
+}
+
+#[test]
 fn native_loop_with_periodic_repack_stays_deterministic() {
     // The full Eq. 3 re-pack draws from the same per-(layer, step)
     // stream inside the workers — sharding must not reorder it.

@@ -3,7 +3,7 @@
 //! cases from a deterministic PRNG; failure messages carry the seed.
 
 use metis::formats::{self, codecs, Format};
-use metis::linalg::{householder_qr, jacobi_svd, randomized_svd};
+use metis::linalg::{householder_qr, jacobi_svd, kernels, randomized_svd};
 use metis::metis::{pipeline::planted_powerlaw, quantizer, weight_split, DecompStrategy};
 use metis::spectral;
 use metis::tensor::Matrix;
@@ -86,6 +86,100 @@ fn prop_quant_never_increases_amax_much() {
                 amax_q <= amax_x * 1.2 + 1e-6,
                 "{}: amax grew {amax_x} -> {amax_q} (seed {s})",
                 fmt.name()
+            );
+        }
+    }
+}
+
+// -- kernels --------------------------------------------------------------------
+
+#[test]
+fn prop_tiled_gemm_matches_naive_reference() {
+    // The tiled/pool kernel family pinned to the preserved scalar
+    // reference across random shapes, including the degenerate ones the
+    // register tiling must pad around: 1×n, m×1, k=0, and every
+    // non-multiple-of-tile edge the random draw lands on.
+    for s in 0..40u64 {
+        let mut rng = seed(s);
+        let (m, k, n) = match s % 5 {
+            0 => (1, 1 + rng.usize(40), 1 + rng.usize(40)), // 1×n row
+            1 => (1 + rng.usize(40), 1 + rng.usize(40), 1), // m×1 col
+            2 => (1 + rng.usize(20), 0, 1 + rng.usize(20)), // k = 0
+            _ => (1 + rng.usize(70), 1 + rng.usize(70), 1 + rng.usize(70)),
+        };
+        let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+        let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+        let want = kernels::matmul_ref(&a, &b);
+        for (name, got) in [
+            ("matmul", a.matmul(&b)),
+            ("serial", kernels::matmul_serial(&a, &b)),
+            ("at_b", a.transpose().matmul_at_b(&b)),
+            ("a_bt", a.matmul_a_bt(&b.transpose())),
+        ] {
+            assert_eq!((got.rows, got.cols), (m, n), "seed {s} {name}");
+            let err = got.sub(&want).frob_norm() / want.frob_norm().max(1e-300);
+            assert!(err < 1e-12, "seed {s} {name} {m}x{k}x{n}: {err:.2e}");
+        }
+    }
+}
+
+#[test]
+fn prop_fused_quantizer_bit_identical_to_naive() {
+    // Exact equality (not tolerance): the fused single-walk quantizer
+    // performs the same f32 ops in the same order as the per-block-Vec
+    // reference, for random lengths and both matrix axes.
+    for s in 0..60u64 {
+        let mut rng = seed(s);
+        let fmt = Format::ALL[rng.usize(Format::ALL.len())];
+        let len = rng.usize(400);
+        let xs: Vec<f32> = (0..len).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        assert_eq!(
+            formats::quantize_block(fmt, &xs),
+            formats::quantize_block_ref(fmt, &xs),
+            "seed {s} {} len {len}",
+            fmt.name()
+        );
+        let (m, n) = (1 + rng.usize(50), 1 + rng.usize(50));
+        let a = Matrix::gaussian(&mut rng, m, n, 1.5);
+        let axis = rng.usize(2);
+        assert_eq!(
+            formats::quantize_matrix_along(fmt, &a, axis),
+            formats::quantize_matrix_along_ref(fmt, &a, axis),
+            "seed {s} {} {m}x{n} axis {axis}",
+            fmt.name()
+        );
+    }
+}
+
+#[test]
+fn prop_blocked_transpose_is_exact() {
+    for s in 0..40u64 {
+        let mut rng = seed(s);
+        let (m, n) = (1 + rng.usize(90), 1 + rng.usize(90));
+        let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+        let t = a.transpose();
+        for r in 0..m {
+            for c in 0..n {
+                assert_eq!(t.at(c, r), a.at(r, c), "seed {s} {m}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_jacobi_matches_reference_spectrum() {
+    // The incremental-norm sweep pinned against the preserved 3-dot
+    // reference across random shapes (both orientations).
+    for s in 0..12u64 {
+        let mut rng = seed(s);
+        let (m, n) = (2 + rng.usize(28), 2 + rng.usize(28));
+        let a = Matrix::gaussian(&mut rng, m, n, 1.0);
+        let fast = jacobi_svd(&a);
+        let oracle = metis::linalg::svd::jacobi_svd_ref(&a);
+        for (i, (x, y)) in fast.s.iter().zip(&oracle.s).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-9 * y.max(1.0),
+                "seed {s} {m}x{n} σ{i}: {x} vs {y}"
             );
         }
     }
