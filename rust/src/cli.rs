@@ -83,8 +83,24 @@ USAGE:
                   [--warmup N] [--seed N] [--config FILE] [--downstream]
                   [--checkpoint-every N] [--eval-every N] [--out DIR]
       Train via the AOT train_step artifact; logs runs/<name>/log.jsonl.
+  metis eval      [CKPT_DIR] [--fmt mxfp4|nvfp4|fp8|paper_fp4]
+                  [--strategy full|rsvd|sparse_sample|random_project]
+                  [--rho F] [--max-rank N] [--seed N] [--threads N]
+                  [--block-cols N] [--sigma-cap N] [--eval-split DIR]
+                  [--batches N] [--batch N] [--layers N] [--d-model N]
+                  [--out report.jsonl]
+      Native held-out eval harness (no PJRT needed): pack a checkpoint
+      dir of .npy weights (or, without CKPT_DIR, the synthetic model)
+      through the Eq. 3 split and run a forward-only held-out pass —
+      held-out loss + perplexity, per-layer σ-distortion of the packed
+      weights vs their high-precision masters, quantized-vs-master
+      logit divergence — as one JSONL row, bit-identical for any
+      --threads.  Held-out activations come from --eval-split (a dir of
+      (b, d) / stacked (N, b, d) .npy batches, matched to layers by
+      width d) or from deterministic eval-only probe streams.
   metis eval      --model NAME --mode MODE --ckpt DIR [--downstream]
-      Held-out loss (+ optional GLUE-like probes) for a checkpoint.
+      Legacy artifact path: held-out loss (+ optional GLUE-like probes)
+      for a checkpoint via the AOT eval_step artifact.
   metis analyze   --npy FILE [--k N]
       Spectral report for a weight matrix: spectrum head, elbow fraction,
       participation ratio, Popoviciu bound, quantization impact.
@@ -121,16 +137,24 @@ USAGE:
                   [--threads N] [--rho F] [--max-rank N] [--grad-rank N]
                   [--power-iters N] [--lr F] [--warmup N] [--seed N]
                   [--optim sgd|adam] [--repack-every N] [--no-adaptive]
-                  [--out steps.jsonl]
+                  [--block-cols N] [--eval-every N] [--eval-split DIR]
+                  [--eval-batches N] [--eval-batch N] [--sigma-cap N]
+                  [--out steps.jsonl] [--eval-out evals.jsonl]
       Pure-Rust W4A4G4 training loop, no PJRT needed: a synthetic
       anisotropic model is packed once via the Eq. 3 split (quantized
-      factors, high-precision S), then every step runs quantized probe
-      activations forward and the Eq. 6 randomized gradient split +
-      §3.2 adaptive spectral LR + sub-distribution quantization before
-      the optimizer update, sharded over --threads workers (loss curves
-      are bit-identical for any thread count).  Emits one JSON object
-      per step on stdout (loss, per-layer σ̃ rescale stats, split
+      factors, high-precision S; layers wider than --block-cols pack as
+      streamed per-column-block splits), then every step runs quantized
+      probe activations forward and the Eq. 6 randomized gradient split
+      + §3.2 adaptive spectral LR + sub-distribution quantization
+      before the optimizer update, sharded over --threads workers (loss
+      curves are bit-identical for any thread count).  Emits one JSON
+      object per step on stdout (loss, per-layer σ̃ rescale stats, split
       timings); --out mirrors the stream to a file.
+      --eval-every N interleaves held-out eval rows every N steps: the
+      fidelity curve of the packed weights (held-out loss/perplexity vs
+      the planted targets, per-layer σ-distortion vs the masters, logit
+      divergence) over --eval-split batches or deterministic eval-only
+      probe streams; --eval-out mirrors the eval rows to a file.
 
 Artifacts default to ./artifacts (built by `make artifacts`);
 override with --artifacts or METIS_ARTIFACTS.

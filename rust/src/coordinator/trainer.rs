@@ -14,7 +14,7 @@ use crate::coordinator::schedule::Schedule;
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::BatchIterator;
 use crate::metis::trainstate::{GradStepConfig, Optim, TrainState};
-use crate::metis::{Layer, MetisQuantConfig};
+use crate::metis::{LayerSpec, MetisQuantConfig};
 use crate::runtime::{Engine, HostValue};
 use crate::tensor::Matrix;
 use crate::util::json::Json;
@@ -297,13 +297,20 @@ impl<'e> Trainer<'e> {
     /// `(L, m, n)` parameters unstack into L layers (the same layout
     /// `load_checkpoint_dir` handles).  Vectors/scalars (biases, norms)
     /// stay full-precision in the flat state vector and are skipped.
+    ///
+    /// Packing goes through the streamed `LayerSpec` path: wide layers
+    /// split into `block_cols`-column packing blocks fanned across
+    /// `threads` workers, so paper-scale parameter sets never
+    /// materialize whole-matrix split workspaces at init.
     pub fn pack_weights(
         &self,
         quant: &MetisQuantConfig,
         grad: GradStepConfig,
         optim: Optim,
+        block_cols: usize,
+        threads: usize,
     ) -> Result<TrainState> {
-        let mut layers: Vec<Layer> = Vec::new();
+        let mut specs: Vec<LayerSpec> = Vec::new();
         for (name, hv) in self.param_names.iter().zip(self.params()) {
             let (shape, data) = match hv {
                 HostValue::F32 { shape, data } => (shape, data),
@@ -311,23 +318,28 @@ impl<'e> Trainer<'e> {
             };
             match shape[..] {
                 [m, n] if m >= 2 && n >= 2 => {
-                    layers.push(Layer {
-                        name: name.clone(),
-                        w: Matrix::from_f32(m, n, data),
-                    });
+                    specs.push(LayerSpec::mem(name.clone(), Matrix::from_f32(m, n, data)));
                 }
                 [stack, m, n] if m >= 2 && n >= 2 => {
                     for l in 0..stack {
-                        layers.push(Layer {
-                            name: format!("{name}.{l}"),
-                            w: Matrix::from_f32(m, n, &data[l * m * n..(l + 1) * m * n]),
-                        });
+                        specs.push(LayerSpec::mem(
+                            format!("{name}.{l}"),
+                            Matrix::from_f32(m, n, &data[l * m * n..(l + 1) * m * n]),
+                        ));
                     }
                 }
                 _ => {}
             }
         }
-        TrainState::init(layers, *quant, grad, optim, self.cfg.seed)
+        TrainState::init_specs(
+            specs,
+            *quant,
+            grad,
+            optim,
+            self.cfg.seed,
+            block_cols,
+            threads,
+        )
     }
 
     /// Held-out loss averaged over `n` deterministic eval batches.

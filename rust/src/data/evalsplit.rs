@@ -1,0 +1,169 @@
+//! Held-out validation-split loader: a directory of `.npy` activation
+//! batches, scanned header-only and streamed on demand through
+//! [`NpyReader`] — the data side of the native loop's eval harness.
+//!
+//! Layout contract (mirrors `scan_checkpoint_dir`'s for weights):
+//!
+//! * a 2-D `(b, d)` blob is one batch of `b` probe activations of
+//!   width `d`;
+//! * a 3-D `(N, b, d)` blob — the layout JAX-stacked eval shards use —
+//!   unstacks into N batches named `<stem>.<i>`;
+//! * 1-D vectors and scalars are skipped.
+//!
+//! Batches are sorted by file name, so the split order (and therefore
+//! every reduction over it) is deterministic.  A batch applies to every
+//! layer whose input dimension equals its width `d`, which lets one
+//! split directory serve models whose layers disagree on input width
+//! (e.g. the 4·d_model rows of an FFN-out projection).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Matrix;
+use crate::util::npy::{NpyReader, ReaderCache};
+
+/// One held-out batch: shape known from the scan, payload streamed at
+/// use through the worker's [`ReaderCache`].
+#[derive(Clone, Debug)]
+pub struct EvalBatchSpec {
+    pub name: String,
+    /// Probe activations in the batch.
+    pub rows: usize,
+    /// Activation width — matched against layer input dims.
+    pub cols: usize,
+    path: PathBuf,
+    /// Flat element offset within the payload (`i·b·d` for member i of
+    /// a stacked blob).
+    base_elem: usize,
+}
+
+impl EvalBatchSpec {
+    /// Materialize the batch as a rows×cols matrix.
+    pub fn read(&self, cache: &mut ReaderCache) -> Result<Matrix> {
+        let rdr = cache.reader(&self.path)?;
+        let data = rdr.read_f64_at(self.base_elem, self.rows * self.cols)?;
+        let x = Matrix::from_vec(self.rows, self.cols, data);
+        if !x.data.iter().all(|v| v.is_finite()) {
+            bail!(
+                "non-finite activation values in eval batch {}: {}",
+                self.name,
+                self.path.display()
+            );
+        }
+        Ok(x)
+    }
+}
+
+/// Scan every `.npy` batch under `dir` without reading any payload.
+pub fn scan_eval_split(dir: impl AsRef<Path>) -> Result<Vec<EvalBatchSpec>> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("read eval split dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "npy"))
+        .collect();
+    paths.sort();
+    let mut out = Vec::new();
+    for path in paths {
+        let rdr = NpyReader::open(&path).with_context(|| format!("batch {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        match rdr.shape() {
+            &[rows, cols] if rows >= 1 && cols >= 2 => out.push(EvalBatchSpec {
+                name,
+                rows,
+                cols,
+                path,
+                base_elem: 0,
+            }),
+            &[stack, rows, cols] if rows >= 1 && cols >= 2 => {
+                for i in 0..stack {
+                    out.push(EvalBatchSpec {
+                        name: format!("{name}.{i}"),
+                        rows,
+                        cols,
+                        path: path.clone(),
+                        base_elem: i * rows * cols,
+                    });
+                }
+            }
+            _ => continue, // scalars, 1-D vectors, degenerate widths
+        }
+    }
+    if out.is_empty() {
+        bail!(
+            "no 2-D or stacked 3-D .npy activation batches under {}",
+            dir.display()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::npy::{write_npy, NpyArray};
+    use crate::util::prng::Rng;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn scan_unstacks_and_filters() {
+        let dir = test_dir("metis_evalsplit_scan");
+        let mut rng = Rng::new(0);
+        let flat = Matrix::gaussian(&mut rng, 4, 8, 1.0);
+        write_npy(
+            dir.join("b_flat.npy"),
+            &NpyArray::f32(vec![4, 8], flat.data.iter().map(|&v| v as f32).collect()),
+        )
+        .unwrap();
+        // A stacked shard of 3 batches.
+        let stacked: Vec<f32> = (0..3 * 2 * 8).map(|i| i as f32 * 0.25).collect();
+        write_npy(dir.join("a_stack.npy"), &NpyArray::f32(vec![3, 2, 8], stacked.clone())).unwrap();
+        // Vectors and scalars are skipped.
+        write_npy(dir.join("v.npy"), &NpyArray::f32(vec![8], vec![0.0; 8])).unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+
+        let specs = scan_eval_split(&dir).unwrap();
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        // Name-sorted: the stacked shard comes first.
+        assert_eq!(names, vec!["a_stack.0", "a_stack.1", "a_stack.2", "b_flat"]);
+        let mut cache = ReaderCache::new();
+        for (i, spec) in specs[..3].iter().enumerate() {
+            assert_eq!((spec.rows, spec.cols), (2, 8));
+            let x = spec.read(&mut cache).unwrap();
+            assert_eq!(x.data[0], stacked[i * 16] as f64);
+        }
+        assert_eq!(cache.opens(), 1, "stacked members share one reader");
+        let x = specs[3].read(&mut cache).unwrap();
+        for (a, b) in x.data.iter().zip(&flat.data) {
+            assert_eq!(*a, *b as f32 as f64);
+        }
+
+        // An empty dir is an error, not an empty split.
+        let empty = test_dir("metis_evalsplit_empty");
+        assert!(scan_eval_split(&empty).is_err());
+    }
+
+    #[test]
+    fn non_finite_batches_are_rejected_by_name() {
+        let dir = test_dir("metis_evalsplit_nan");
+        write_npy(
+            dir.join("bad.npy"),
+            &NpyArray::f32(vec![2, 4], vec![1.0, f32::NAN, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0]),
+        )
+        .unwrap();
+        let specs = scan_eval_split(&dir).unwrap();
+        let err = specs[0].read(&mut ReaderCache::new()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("non-finite") && msg.contains("bad"), "{msg}");
+    }
+}

@@ -1,10 +1,14 @@
-//! Data substrate: the synthetic corpus that stands in for DCLM and the
-//! six GLUE-shaped downstream probe tasks (DESIGN.md §4 Substitutions).
+//! Data substrate: the synthetic corpus that stands in for DCLM, the
+//! six GLUE-shaped downstream probe tasks (DESIGN.md §4 Substitutions),
+//! and the streamed held-out validation-split loader of the native
+//! loop's eval harness.
 
 pub mod batcher;
 pub mod corpus;
+pub mod evalsplit;
 pub mod tasks;
 
 pub use batcher::BatchIterator;
 pub use corpus::{Corpus, CorpusConfig};
+pub use evalsplit::{scan_eval_split, EvalBatchSpec};
 pub use tasks::{Task, TaskExample, TaskKind, ALL_TASKS};

@@ -8,12 +8,13 @@ use anyhow::{bail, Result};
 
 use metis::cli::{artifacts_flag, Args, USAGE};
 use metis::coordinator::{eval_downstream, ExperimentConfig, Trainer};
+use metis::data::evalsplit::scan_eval_split;
 use metis::data::tasks::ALL_TASKS;
 use metis::formats::{self, Format};
 use metis::linalg::{householder_qr, jacobi_svd};
 use metis::metis::{
-    pipeline, trainstate, DecompStrategy, GradStepConfig, LayerSpec, MetisQuantConfig,
-    NativeTrainConfig, Optim, PipelineConfig, SigmaRef,
+    pipeline, trainstate, DecompStrategy, EvalConfig, EvalState, GradStepConfig, LayerSpec,
+    MetisQuantConfig, NativeEvent, NativeTrainConfig, Optim, PipelineConfig, SigmaRef,
 };
 use metis::runtime::Engine;
 use metis::spectral;
@@ -127,6 +128,25 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    // Two eval paths share the subcommand: `metis eval <ckpt-dir>` (or
+    // plain `metis eval` for the synthetic model) runs the native
+    // held-out harness — no artifacts or PJRT needed; the legacy
+    // `--model/--mode/--ckpt` flag form keeps driving the artifact
+    // path.
+    if args.positional.len() > 1 {
+        return cmd_eval_native(args, Some(args.positional[1].as_str()));
+    }
+    // Any legacy-only flag/switch routes to the legacy path (so e.g.
+    // `--mode X --ckpt DIR` or a bare `--downstream` without --model
+    // still errors loudly about --model instead of silently evaluating
+    // a synthetic model).
+    let legacy = ["model", "mode", "ckpt"]
+        .iter()
+        .any(|k| args.flags.contains_key(*k))
+        || args.switch("downstream");
+    if !legacy {
+        return cmd_eval_native(args, None);
+    }
     let engine = Engine::new(artifacts_flag(args))?;
     let model = args.req("model")?;
     let mode = args.req("mode")?;
@@ -162,6 +182,101 @@ fn cmd_eval(args: &Args) -> Result<()> {
                                  cfg.corpus_seed, &ALL_TASKS)? {
             println!("  {:<7} acc {:.1}%", r.task.name(), 100.0 * r.accuracy);
         }
+    }
+    Ok(())
+}
+
+/// The native held-out eval harness: pack a checkpoint (or the
+/// synthetic model) through the Eq. 3 split and measure held-out
+/// loss/perplexity, per-layer σ-distortion of the packed weights vs
+/// their masters, and quantized-vs-master logit divergence — one JSONL
+/// row, bit-identical for any thread count.
+fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
+    let fmt = Format::from_name(&args.str("fmt", "nvfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt (mxfp4|nvfp4|fp8|paper_fp4)"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --strategy (full|rsvd|sparse_sample|random_project)")
+        })?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let quant = MetisQuantConfig {
+        fmt,
+        strategy,
+        rho: args.f64("rho", 0.1)?,
+        max_rank: args.usize("max-rank", 64)?,
+    };
+    let seed = args.usize("seed", 0)? as u64;
+    let cfg = EvalConfig {
+        threads: args.usize("threads", default_threads)?,
+        batch: args.usize("batch", 32)?,
+        batches: args.usize("batches", 4)?,
+        seed,
+        sigma_dim_cap: args.usize("sigma-cap", 256)?,
+        block_cols: args.usize("block-cols", 1024)?,
+        fmt,
+    };
+    let specs: Vec<LayerSpec> = match ckpt {
+        Some(dir) => {
+            eprintln!("scanning checkpoint {dir} (streaming) ...");
+            pipeline::scan_checkpoint_dir(dir)?
+        }
+        None => {
+            let n_layers = args.usize("layers", 2)?;
+            let d_model = args.usize("d-model", 64)?;
+            eprintln!("no checkpoint: synthetic model ({n_layers} blocks, d_model {d_model})");
+            pipeline::synthetic_model(n_layers, d_model, seed)
+                .into_iter()
+                .map(|l| LayerSpec::mem(l.name, l.w))
+                .collect()
+        }
+    };
+    let harness = match args.flags.get("eval-split") {
+        Some(dir) => EvalState::with_split(cfg, scan_eval_split(dir)?)?,
+        None => EvalState::synthetic(cfg)?,
+    };
+    let rep = harness.eval_specs(&specs, &quant, seed, None)?;
+    println!("{}", rep.to_json());
+
+    let mut table = metis::bench::Table::new(
+        "held-out fidelity of the packed weights",
+        &["layer", "loss", "logit-div", "σ-err", "σ-tail"],
+    );
+    let f = |x: f64| {
+        if x.is_finite() {
+            format!("{x:.4}")
+        } else {
+            "—".to_string()
+        }
+    };
+    for l in &rep.layers {
+        table.row(vec![
+            l.name.clone(),
+            f(l.loss),
+            f(l.logit_div),
+            f(l.sigma_err),
+            f(l.sigma_tail),
+        ]);
+    }
+    table.print();
+    eprintln!(
+        "held-out loss {:.4} (ppl {:.3}) | logit divergence {:.4} | {} batches | {:.0} ms on {} threads",
+        rep.heldout_loss,
+        rep.perplexity,
+        rep.logit_div,
+        rep.batches,
+        rep.eval_ms,
+        cfg.threads.max(1)
+    );
+    if let Some(out) = args.flags.get("out") {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(out, format!("{}\n", rep.to_json()))?;
+        eprintln!("report: {out}");
     }
     Ok(())
 }
@@ -348,21 +463,67 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         },
         optim,
         repack_every: args.usize("repack-every", 0)?,
+        pack_block_cols: args.usize("block-cols", 1024)?,
     };
 
-    // One JSON object per step on stdout: the per-step loop is the
-    // product here, so the report stream *is* the primary output.
-    let res = trainstate::train_native_with(&cfg, &mut |rep| println!("{}", rep.to_json()))?;
+    // Held-out eval harness (--eval-every N): fidelity rows stream
+    // interleaved with the step rows, over --eval-split batches or
+    // deterministic synthetic probes from eval-only streams.
+    let eval_every = args.usize("eval-every", 0)?;
+    if eval_every == 0 {
+        for k in ["eval-split", "eval-out", "eval-batches", "eval-batch"] {
+            if args.flags.contains_key(k) {
+                anyhow::bail!("--{k} has no effect without --eval-every N");
+            }
+        }
+    }
+    let harness = if eval_every > 0 {
+        let ecfg = EvalConfig {
+            threads: cfg.threads,
+            batch: args.usize("eval-batch", 32)?,
+            batches: args.usize("eval-batches", 4)?,
+            seed: cfg.seed,
+            sigma_dim_cap: args.usize("sigma-cap", 256)?,
+            block_cols: cfg.pack_block_cols,
+            fmt,
+        };
+        Some(match args.flags.get("eval-split") {
+            Some(dir) => EvalState::with_split(ecfg, scan_eval_split(dir)?)?,
+            None => EvalState::synthetic(ecfg)?,
+        })
+    } else {
+        None
+    };
+
+    // One JSON object per step (and per eval) on stdout: the per-step
+    // loop is the product here, so the report stream *is* the primary
+    // output.
+    let res = trainstate::train_native_evented(
+        &cfg,
+        harness.as_ref().map(|h| (eval_every, h)),
+        &mut |ev| match ev {
+            NativeEvent::Step(rep) => println!("{}", rep.to_json()),
+            NativeEvent::Eval(er) => println!("{}", er.to_json()),
+        },
+    )?;
     if let Some(out) = args.flags.get("out") {
         res.write_jsonl(out)?;
+    }
+    if let Some(out) = args.flags.get("eval-out") {
+        res.write_eval_jsonl(out)?;
     }
     println!(
         "{}",
         Json::obj(vec![
             ("event", Json::str("done")),
             ("steps", Json::num(res.reports.len() as f64)),
+            ("evals", Json::num(res.evals.len() as f64)),
             ("first_loss", Json::num_or_null(res.first_loss())),
             ("final_loss", Json::num_or_null(res.final_loss())),
+            (
+                "final_heldout_loss",
+                Json::num_or_null(res.evals.last().map_or(f64::NAN, |e| e.heldout_loss)),
+            ),
             ("wall_ms", Json::num_or_null(res.wall_ms)),
             ("threads", Json::num(res.threads as f64)),
             ("fmt", Json::str(fmt.name())),

@@ -1,0 +1,839 @@
+//! Held-out evaluation harness for the native W4A4G4 loop.
+//!
+//! The paper's headline claim is a *fidelity* claim — FP4 training
+//! tracks BF16 to within 0.4% train loss and 0.1% downstream accuracy —
+//! and FP4 regressions are known to surface on **held-out** metrics
+//! long before the training loss moves.  The step loop only reports
+//! train loss; this module is the missing measurement:
+//!
+//! * **Held-out loss / perplexity** — the training objective evaluated
+//!   on a validation split the step loop never sees: either a directory
+//!   of `.npy` activation batches streamed through
+//!   [`crate::data::evalsplit`], or deterministic synthetic probes
+//!   drawn from eval-only `fold_in` streams (disjoint from every
+//!   training stream, so the split is genuinely held out and fixed
+//!   across the run — successive evals are comparable points on one
+//!   fidelity curve).
+//! * **Per-layer packing fidelity** — σ-spectrum distortion of the
+//!   packed effective weights against their high-precision masters
+//!   (exact Jacobi under `sigma_dim_cap`, the §3.1 sampled spectrum
+//!   above it), plus the quantized-vs-master logit divergence
+//!   ‖Q(X)·Ŵ − Q(X)·W‖_F / ‖Q(X)·W‖_F on the held-out activations.
+//!
+//! Sharding: forward-only (layer, column-block) work units over the
+//! persistent [`WorkPool`], popped largest-first, with per-worker
+//! reader caches and per-unit `fold_in` streams; reductions consume
+//! blocks in column order and layers in index order, so every reported
+//! value is **bit-identical for any thread count**.
+//!
+//! Two entry points share the machinery: [`EvalState::eval_train_state`]
+//! measures a live [`TrainState`] mid-run (`--eval-every` inside
+//! `train-native`), [`EvalState::eval_specs`] packs a checkpoint on the
+//! fly (`metis eval <ckpt>`) using the same per-(layer, block) pack
+//! streams as `TrainState::init_specs`, so a standalone eval of a
+//! checkpoint measures exactly the packing training would start from.
+
+use std::borrow::Cow;
+use std::sync::{mpsc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::evalsplit::EvalBatchSpec;
+use crate::formats::{quantize_matrix_along, Format};
+use crate::linalg::jacobi_svd;
+use crate::metis::pipeline::{column_blocks, LayerSpec, SIGMA_SAMPLE_MIN_K};
+use crate::metis::quantizer::{
+    quantize_split, sigma_distortion, sigma_distortion_vs, MetisQuantConfig,
+};
+use crate::metis::sampler::sampled_spectrum;
+use crate::metis::split::weight_split;
+use crate::metis::trainstate::{pack_stream, TrainState};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::util::npy::ReaderCache;
+use crate::util::prng::Rng;
+use crate::util::timer::Stopwatch;
+use crate::util::workpool::WorkPool;
+
+/// Top-level stream domains of the eval harness, disjoint from the
+/// trainstate pack/step/target domains and `synthetic_model`'s plain
+/// `fold_in(i)` streams.
+const EVAL_DATA_DOMAIN: u64 = 0x4d45_5449_5345_5644; // "METISEVD"
+const EVAL_SIGMA_DOMAIN: u64 = 0x4d45_5449_5345_5653; // "METISEVS"
+
+/// Static configuration of one eval harness.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalConfig {
+    /// Worker threads (clamped to ≥ 1; never changes any value).
+    pub threads: usize,
+    /// Rows per synthetic probe batch (ignored for disk splits).
+    pub batch: usize,
+    /// Synthetic batches per layer (ignored for disk splits).
+    pub batches: usize,
+    /// Seed of the held-out data + σ-sampling streams.
+    pub seed: u64,
+    /// Blocks with min(m, width) above this measure σ via the §3.1
+    /// sampled spectrum instead of exact Jacobi (keeps eval O(mnk)).
+    pub sigma_dim_cap: usize,
+    /// Column-block size for the pack-on-the-fly path (checkpoint
+    /// evals); live train states reuse their own packing blocks.
+    pub block_cols: usize,
+    /// Activation quantization format (the A4 of W4A4G4).
+    pub fmt: Format,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            batch: 32,
+            batches: 4,
+            seed: 0,
+            sigma_dim_cap: 256,
+            block_cols: 1024,
+            fmt: Format::Nvfp4,
+        }
+    }
+}
+
+/// Where the held-out activations come from.
+pub enum EvalData {
+    /// Deterministic Gaussian probes from eval-only `fold_in` streams.
+    Synthetic,
+    /// Scanned `.npy` batches (see [`crate::data::evalsplit`]), each
+    /// streamed on demand through the worker's reader cache.  A layer
+    /// uses every batch whose width matches its input dimension.
+    Split(Vec<EvalBatchSpec>),
+}
+
+/// Per-layer entry of one eval row.
+#[derive(Clone, Debug)]
+pub struct EvalLayerStats {
+    pub name: String,
+    /// Held-out task loss of this layer (vs the planted targets when
+    /// evaluating a training run, vs the high-precision master — the
+    /// pure quantization gap — for standalone checkpoint evals).
+    pub loss: f64,
+    /// ‖Q(X)·Ŵ − Q(X)·W‖_F / ‖Q(X)·W‖_F over the held-out batches.
+    pub logit_div: f64,
+    /// Mean relative σ error of the packed weight vs its master
+    /// (width-weighted across column blocks), and the tail-half mean.
+    pub sigma_err: f64,
+    pub sigma_tail: f64,
+}
+
+impl EvalLayerStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("loss", Json::num_or_null(self.loss)),
+            ("logit_div", Json::num_or_null(self.logit_div)),
+            ("sigma_err", Json::num_or_null(self.sigma_err)),
+            ("sigma_tail", Json::num_or_null(self.sigma_tail)),
+        ])
+    }
+}
+
+/// One held-out eval row (JSONL-able).  Every numeric field except
+/// `eval_ms` is bit-identical for any thread count.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// Training step the eval ran after (None for standalone evals).
+    pub step: Option<usize>,
+    /// Mean per-layer held-out loss, accumulated in layer order.
+    pub heldout_loss: f64,
+    /// exp(held-out loss) — the perplexity-shaped transform of the
+    /// regression objective (serialized null if it overflows).
+    pub perplexity: f64,
+    /// Global quantized-vs-master logit divergence.
+    pub logit_div: f64,
+    /// Batches per layer (synthetic) or total split batches (disk).
+    pub batches: usize,
+    pub eval_ms: f64,
+    pub layers: Vec<EvalLayerStats>,
+}
+
+impl EvalReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("eval")),
+            (
+                "step",
+                match self.step {
+                    Some(s) => Json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("heldout_loss", Json::num_or_null(self.heldout_loss)),
+            ("perplexity", Json::num_or_null(self.perplexity)),
+            ("logit_div", Json::num_or_null(self.logit_div)),
+            ("batches", Json::num(self.batches as f64)),
+            ("ms", Json::num_or_null(self.eval_ms)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The weight side of one eval: either a live train state (masters +
+/// already-packed effective weights) or checkpoint specs packed on the
+/// fly per (layer, block) unit.
+enum Source<'a> {
+    Packed {
+        state: &'a TrainState,
+        targets: Option<&'a [Matrix]>,
+    },
+    Specs {
+        specs: &'a [LayerSpec],
+        quant: MetisQuantConfig,
+        pack_seed: u64,
+        block_cols: usize,
+    },
+}
+
+impl Source<'_> {
+    fn quant(&self) -> MetisQuantConfig {
+        match self {
+            Source::Packed { state, .. } => state.quant,
+            Source::Specs { quant, .. } => *quant,
+        }
+    }
+
+    /// (name, rows, cols) of every layer, in layer order.
+    fn geometry(&self) -> Vec<(String, usize, usize)> {
+        match self {
+            Source::Packed { state, .. } => state
+                .layers
+                .iter()
+                .map(|pw| (pw.name.clone(), pw.master.rows, pw.master.cols))
+                .collect(),
+            Source::Specs { specs, .. } => specs
+                .iter()
+                .map(|s| (s.name.clone(), s.rows, s.cols))
+                .collect(),
+        }
+    }
+
+    /// Column partition of one layer: live states reuse their packing
+    /// blocks (σ fidelity is then measured per *actual* packed block),
+    /// spec sources partition per the eval config.
+    fn blocks(&self, layer: usize) -> Vec<(usize, usize)> {
+        match self {
+            Source::Packed { state, .. } => state.layers[layer]
+                .blocks
+                .iter()
+                .map(|b| (b.c0, b.width()))
+                .collect(),
+            Source::Specs {
+                specs, block_cols, ..
+            } => column_blocks(specs[layer].cols, *block_cols),
+        }
+    }
+
+    /// Materialize (master block, packed effective block, teacher
+    /// block) for one unit.  Teacher None ⇒ the master itself.
+    /// Single-block live-state layers borrow straight from the train
+    /// state — no whole-matrix copies per unit.
+    fn block(
+        &self,
+        u: EvalUnit,
+        cache: &mut ReaderCache,
+    ) -> Result<(Cow<'_, Matrix>, Cow<'_, Matrix>, Option<Cow<'_, Matrix>>)> {
+        fn take(w: &Matrix, single: bool, c0: usize, width: usize) -> Cow<'_, Matrix> {
+            if single {
+                Cow::Borrowed(w)
+            } else {
+                Cow::Owned(w.col_block(c0, width))
+            }
+        }
+        match self {
+            Source::Packed { state, targets } => {
+                let pw = &state.layers[u.layer];
+                let single = pw.blocks.len() == 1;
+                Ok((
+                    take(&pw.master, single, u.c0, u.width),
+                    take(pw.effective(), single, u.c0, u.width),
+                    targets.map(|t| take(&t[u.layer], single, u.c0, u.width)),
+                ))
+            }
+            Source::Specs {
+                specs,
+                quant,
+                pack_seed,
+                ..
+            } => {
+                let wb = specs[u.layer].read_cols(u.c0, u.width, cache)?;
+                if !wb.data.iter().all(|x| x.is_finite()) {
+                    bail!(
+                        "non-finite weight values in columns [{}, {}) — eval \
+                         requires finite inputs",
+                        u.c0,
+                        u.c0 + u.width
+                    );
+                }
+                let mut rng = pack_stream(*pack_seed, u.layer, u.block, u.single);
+                let k = quant.rank(wb.min_dim());
+                let split = weight_split(&wb, k, quant.strategy, &mut rng);
+                let eff = quantize_split(&split, quant.fmt);
+                Ok((Cow::Owned(wb), Cow::Owned(eff), None))
+            }
+        }
+    }
+}
+
+/// One (layer, column-block) forward-only eval unit.
+#[derive(Clone, Copy, Debug)]
+struct EvalUnit {
+    layer: usize,
+    block: usize,
+    c0: usize,
+    width: usize,
+    single: bool,
+}
+
+/// Raw per-unit measurement, reduced per layer in block order.
+#[derive(Clone, Copy, Debug)]
+struct EvalBlockOut {
+    width: usize,
+    /// Σ over batches of 0.5‖Q(X)(Ŵ_b − T_b)‖²_F / batch_rows.
+    loss_sum: f64,
+    /// Σ ‖Q(X)Ŵ_b − Q(X)W_b‖²_F and Σ ‖Q(X)W_b‖²_F.
+    err2: f64,
+    ref2: f64,
+    sigma_err: f64,
+    sigma_tail: f64,
+}
+
+/// The held-out eval harness.
+pub struct EvalState {
+    pub cfg: EvalConfig,
+    data: EvalData,
+}
+
+impl EvalState {
+    /// Harness over deterministic synthetic probes.
+    pub fn synthetic(cfg: EvalConfig) -> Result<EvalState> {
+        if cfg.batch == 0 || cfg.batches == 0 {
+            bail!("eval: batch and batches must be > 0");
+        }
+        Ok(EvalState {
+            cfg,
+            data: EvalData::Synthetic,
+        })
+    }
+
+    /// Harness over a scanned on-disk validation split.
+    pub fn with_split(cfg: EvalConfig, batches: Vec<EvalBatchSpec>) -> Result<EvalState> {
+        if batches.is_empty() {
+            bail!("eval: the validation split has no batches");
+        }
+        Ok(EvalState {
+            cfg,
+            data: EvalData::Split(batches),
+        })
+    }
+
+    /// Number of batches a layer with `rows` input dims will see.
+    fn matching_batches(&self, rows: usize) -> Vec<usize> {
+        match &self.data {
+            EvalData::Synthetic => (0..self.cfg.batches).collect(),
+            EvalData::Split(specs) => specs
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.cols == rows)
+                .map(|(i, _)| i)
+                .collect(),
+        }
+    }
+
+    /// Verify every layer has at least one matching held-out batch.
+    /// `train-native` runs this before step 0, so a mismatched
+    /// `--eval-split` fails at startup instead of aborting a long run
+    /// at its first eval.
+    pub fn check_coverage<'a>(
+        &self,
+        layers: impl IntoIterator<Item = (&'a str, usize)>,
+    ) -> Result<()> {
+        for (name, rows) in layers {
+            if self.matching_batches(rows).is_empty() {
+                bail!(
+                    "eval: no batches of width {rows} for layer {name} in the \
+                     validation split"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize held-out batch `j` (an index into the layer's
+    /// matching list) for a layer with `rows` input dims.
+    fn batch(
+        &self,
+        layer: usize,
+        rows: usize,
+        j: usize,
+        matching: &[usize],
+        cache: &mut ReaderCache,
+    ) -> Result<Matrix> {
+        match &self.data {
+            EvalData::Synthetic => {
+                let mut rng = Rng::new(self.cfg.seed)
+                    .fold_in(EVAL_DATA_DOMAIN)
+                    .fold_in(layer as u64)
+                    .fold_in(j as u64);
+                Ok(Matrix::gaussian(&mut rng, self.cfg.batch, rows, 1.0))
+            }
+            EvalData::Split(specs) => specs[matching[j]].read(cache),
+        }
+    }
+
+    /// Evaluate a live train state (the `--eval-every` path).  With
+    /// `targets`, the held-out loss is the training objective on unseen
+    /// activations; without, it degenerates to the quantization gap.
+    pub fn eval_train_state(
+        &self,
+        state: &TrainState,
+        targets: Option<&[Matrix]>,
+        step: Option<usize>,
+    ) -> Result<EvalReport> {
+        if let Some(t) = targets {
+            if t.len() != state.layers.len() {
+                bail!("eval: {} targets for {} layers", t.len(), state.layers.len());
+            }
+        }
+        self.run(&Source::Packed { state, targets }, step)
+    }
+
+    /// Pack-and-evaluate checkpoint specs (the `metis eval <ckpt>`
+    /// path): each (layer, block) is packed on the fly from the same
+    /// stream `TrainState::init_specs` would use at `pack_seed`, so the
+    /// row measures the packing a training run would start from.
+    pub fn eval_specs(
+        &self,
+        specs: &[LayerSpec],
+        quant: &MetisQuantConfig,
+        pack_seed: u64,
+        step: Option<usize>,
+    ) -> Result<EvalReport> {
+        if specs.is_empty() {
+            bail!("eval: no layers to evaluate");
+        }
+        self.run(
+            &Source::Specs {
+                specs,
+                quant: *quant,
+                pack_seed,
+                block_cols: self.cfg.block_cols,
+            },
+            step,
+        )
+    }
+
+    fn run(&self, source: &Source<'_>, step: Option<usize>) -> Result<EvalReport> {
+        let watch = Stopwatch::start();
+        let geom = source.geometry();
+        let n_layers = geom.len();
+
+        // Per-layer matching batch lists, validated before any work is
+        // queued so a mismatched split fails with the layer named.
+        let mut matching: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
+        for (name, rows, _) in &geom {
+            let m = self.matching_batches(*rows);
+            if m.is_empty() {
+                bail!(
+                    "eval: no batches of width {rows} for layer {name} in the \
+                     validation split"
+                );
+            }
+            matching.push(m);
+        }
+
+        let mut units: Vec<EvalUnit> = Vec::new();
+        let mut blocks_per_layer = vec![0usize; n_layers];
+        for (i, (_, rows, cols)) in geom.iter().enumerate() {
+            if *cols == 0 || *rows == 0 {
+                bail!("eval: layer {} is empty", geom[i].0);
+            }
+            let blocks = source.blocks(i);
+            blocks_per_layer[i] = blocks.len();
+            let single = blocks.len() == 1;
+            for (b, (c0, width)) in blocks.into_iter().enumerate() {
+                units.push(EvalUnit {
+                    layer: i,
+                    block: b,
+                    c0,
+                    width,
+                    single,
+                });
+            }
+        }
+        let n_units = units.len();
+        // Largest-first pop order, deterministic ties.
+        units.sort_by_key(|u| (geom[u.layer].1 * u.width, u.layer, u.block));
+        let threads = self.cfg.threads.max(1).min(n_units);
+        let queue = Mutex::new(units);
+        let (tx, rx) = mpsc::channel::<(usize, usize, Result<EvalBlockOut>)>();
+        WorkPool::global().scoped(|scope| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let (queue, geom, matching) = (&queue, &geom, &matching);
+                scope.execute(move || {
+                    let mut cache = ReaderCache::new();
+                    loop {
+                        let unit = queue.lock().unwrap().pop();
+                        let Some(u) = unit else { break };
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            self.process_unit(source, u, geom[u.layer].1, matching, &mut cache)
+                        }))
+                        .unwrap_or_else(|_| Err(anyhow!("eval worker panicked")));
+                        if tx.send((u.layer, u.block, out)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+
+        let mut per_layer: Vec<Vec<(usize, EvalBlockOut)>> =
+            (0..n_layers).map(|_| Vec::new()).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut n_got = 0usize;
+        for (layer, block, out) in rx.iter() {
+            n_got += 1;
+            match out {
+                Ok(o) => per_layer[layer].push((block, o)),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("layer {} (block {block})", geom[layer].0)));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if n_got != n_units {
+            bail!("eval: {n_got} of {n_units} work units reported");
+        }
+
+        // Block-ordered reduction per layer, layer-ordered aggregation —
+        // this is what makes the row thread-count invariant.
+        let mut layers = Vec::with_capacity(n_layers);
+        let (mut loss_acc, mut err2_acc, mut ref2_acc) = (0.0f64, 0.0f64, 0.0f64);
+        for (i, mut blocks) in per_layer.into_iter().enumerate() {
+            blocks.sort_by_key(|(b, _)| *b);
+            if blocks.len() != blocks_per_layer[i] {
+                bail!(
+                    "eval: layer {} reassembled {} of {} blocks",
+                    geom[i].0,
+                    blocks.len(),
+                    blocks_per_layer[i]
+                );
+            }
+            let n_batches = matching[i].len() as f64;
+            let cols = geom[i].2 as f64;
+            let (mut loss, mut err2, mut ref2) = (0.0f64, 0.0f64, 0.0f64);
+            let (mut sig, mut tail) = (0.0f64, 0.0f64);
+            for (_, b) in &blocks {
+                loss += b.loss_sum;
+                err2 += b.err2;
+                ref2 += b.ref2;
+                sig += b.sigma_err * b.width as f64;
+                tail += b.sigma_tail * b.width as f64;
+            }
+            loss /= n_batches;
+            loss_acc += loss;
+            err2_acc += err2;
+            ref2_acc += ref2;
+            layers.push(EvalLayerStats {
+                name: geom[i].0.clone(),
+                loss,
+                logit_div: (err2 / ref2.max(1e-300)).sqrt(),
+                sigma_err: sig / cols,
+                sigma_tail: tail / cols,
+            });
+        }
+        let heldout_loss = loss_acc / n_layers as f64;
+        Ok(EvalReport {
+            step,
+            heldout_loss,
+            perplexity: heldout_loss.exp(),
+            logit_div: (err2_acc / ref2_acc.max(1e-300)).sqrt(),
+            batches: match &self.data {
+                EvalData::Synthetic => self.cfg.batches,
+                EvalData::Split(specs) => specs.len(),
+            },
+            eval_ms: watch.ms(),
+            layers,
+        })
+    }
+
+    /// Forward-only measurement of one (layer, column-block) unit.
+    ///
+    /// Every block of a layer re-materializes and re-quantizes the same
+    /// held-out batches — a deliberate trade: it keeps work units fully
+    /// independent (no cross-unit sharing to coordinate, bit-identity
+    /// by construction), and the duplicated Q(X) cost is O(b·m) per
+    /// unit against the O(b·m·width) GEMMs that dominate it.
+    fn process_unit(
+        &self,
+        source: &Source<'_>,
+        u: EvalUnit,
+        rows: usize,
+        matching: &[Vec<usize>],
+        cache: &mut ReaderCache,
+    ) -> Result<EvalBlockOut> {
+        let (wb, effb, tb) = source.block(u, cache)?;
+        let mut loss_sum = 0.0f64;
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for j in 0..matching[u.layer].len() {
+            let x = self.batch(u.layer, rows, j, &matching[u.layer], cache)?;
+            if x.cols != wb.rows {
+                bail!(
+                    "eval batch width {} does not match layer input dim {}",
+                    x.cols,
+                    wb.rows
+                );
+            }
+            let xq = quantize_matrix_along(self.cfg.fmt, &x, 1); // A4 along contraction
+            let y = xq.matmul(&wb);
+            let yh = xq.matmul(&effb);
+            let d = yh.sub(&y);
+            err2 += d.frob_norm().powi(2);
+            ref2 += y.frob_norm().powi(2);
+            // Teacher defaults to the master (d is then the residual) —
+            // the same quadratic objective as the training step.
+            let resid = match &tb {
+                Some(t) => yh.sub(&xq.matmul(t)),
+                None => d,
+            };
+            loss_sum += 0.5 * resid.frob_norm().powi(2) / x.rows as f64;
+        }
+
+        // σ-distortion of the packed block against its master: exact
+        // Jacobi under the cap, §3.1 sampled spectra on both sides above
+        // it (O(mnk), finite at any size).
+        let min_dim = wb.min_dim();
+        let (sigma_err, sigma_tail) = if min_dim <= self.cfg.sigma_dim_cap {
+            sigma_distortion(&jacobi_svd(&wb).s, &effb)
+        } else {
+            let k = source
+                .quant()
+                .rank(min_dim)
+                .max(SIGMA_SAMPLE_MIN_K)
+                .min(min_dim);
+            let srng = Rng::new(self.cfg.seed)
+                .fold_in(EVAL_SIGMA_DOMAIN)
+                .fold_in(u.layer as u64)
+                .fold_in(u.block as u64);
+            let reference = sampled_spectrum(&wb, k, &mut srng.fold_in(0));
+            let packed = sampled_spectrum(&effb, k, &mut srng.fold_in(1));
+            sigma_distortion_vs(&reference, &packed)
+        };
+        Ok(EvalBlockOut {
+            width: u.width,
+            loss_sum,
+            err2,
+            ref2,
+            sigma_err,
+            sigma_tail,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metis::pipeline::{planted_powerlaw, synthetic_model};
+    use crate::metis::sampler::DecompStrategy;
+    use crate::metis::trainstate::{GradStepConfig, Optim, TrainState};
+    use crate::util::npy::{write_npy, NpyArray};
+
+    fn quant() -> MetisQuantConfig {
+        MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::SparseSample,
+            rho: 0.15,
+            max_rank: 16,
+        }
+    }
+
+    fn mem_specs(seed: u64) -> Vec<LayerSpec> {
+        synthetic_model(1, 16, seed)
+            .into_iter()
+            .map(|l| LayerSpec::mem(l.name, l.w))
+            .collect()
+    }
+
+    #[test]
+    fn eval_specs_reports_finite_fidelity_columns() {
+        let es = EvalState::synthetic(EvalConfig {
+            threads: 2,
+            batches: 3,
+            batch: 8,
+            ..EvalConfig::default()
+        })
+        .unwrap();
+        let rep = es.eval_specs(&mem_specs(5), &quant(), 5, None).unwrap();
+        assert_eq!(rep.layers.len(), 4);
+        assert!(rep.step.is_none());
+        assert!(rep.heldout_loss.is_finite() && rep.heldout_loss > 0.0);
+        assert!(rep.perplexity > 1.0);
+        assert!(rep.logit_div.is_finite() && rep.logit_div > 0.0 && rep.logit_div < 1.0);
+        for l in &rep.layers {
+            // No targets: the held-out loss is the pure quantization gap.
+            assert!(l.loss.is_finite() && l.loss > 0.0, "{}", l.name);
+            assert!(l.logit_div > 0.0 && l.logit_div < 1.0, "{}", l.name);
+            assert!(l.sigma_err.is_finite() && l.sigma_err > 0.0, "{}", l.name);
+            assert!(l.sigma_tail.is_finite(), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn eval_rows_are_bit_identical_for_any_thread_count() {
+        let cfg = |threads| EvalConfig {
+            threads,
+            batches: 3,
+            batch: 8,
+            block_cols: 24, // the 16×64 ffn_in fans out into 3 blocks
+            sigma_dim_cap: 8, // blocks above the cap exercise sampled σ
+            ..EvalConfig::default()
+        };
+        let r1 = EvalState::synthetic(cfg(1))
+            .unwrap()
+            .eval_specs(&mem_specs(9), &quant(), 9, Some(3))
+            .unwrap();
+        let r4 = EvalState::synthetic(cfg(4))
+            .unwrap()
+            .eval_specs(&mem_specs(9), &quant(), 9, Some(3))
+            .unwrap();
+        assert_eq!(r1.step, Some(3));
+        assert_eq!(r1.heldout_loss, r4.heldout_loss);
+        assert_eq!(r1.perplexity, r4.perplexity);
+        assert_eq!(r1.logit_div, r4.logit_div);
+        assert_eq!(r1.layers.len(), r4.layers.len());
+        for (a, b) in r1.layers.iter().zip(&r4.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.logit_div, b.logit_div);
+            assert_eq!(a.sigma_err, b.sigma_err);
+            assert_eq!(a.sigma_tail, b.sigma_tail);
+        }
+    }
+
+    #[test]
+    fn eval_train_state_measures_targets_and_masters() {
+        let specs = mem_specs(7);
+        let targets: Vec<Matrix> = synthetic_model(1, 16, 123)
+            .into_iter()
+            .map(|l| l.w)
+            .collect();
+        let state = TrainState::init_specs(
+            specs,
+            quant(),
+            GradStepConfig::default(),
+            Optim::Sgd,
+            7,
+            0,
+            1,
+        )
+        .unwrap();
+        let es = EvalState::synthetic(EvalConfig {
+            batches: 2,
+            batch: 8,
+            threads: 2,
+            ..EvalConfig::default()
+        })
+        .unwrap();
+        // Against unrelated targets, the held-out loss dominates the
+        // quantization gap by far.
+        let vs_targets = es
+            .eval_train_state(&state, Some(targets.as_slice()), Some(0))
+            .unwrap();
+        let vs_master = es.eval_train_state(&state, None, Some(0)).unwrap();
+        assert_eq!(vs_targets.step, Some(0));
+        assert!(vs_targets.heldout_loss > 10.0 * vs_master.heldout_loss);
+        // Fidelity columns don't depend on the teacher.
+        assert_eq!(vs_targets.logit_div, vs_master.logit_div);
+        for (a, b) in vs_targets.layers.iter().zip(&vs_master.layers) {
+            assert_eq!(a.sigma_err, b.sigma_err);
+        }
+        // Target count mismatch is an error.
+        assert!(es.eval_train_state(&state, Some(&targets[..2]), None).is_err());
+    }
+
+    #[test]
+    fn eval_report_jsonl_roundtrips() {
+        let es = EvalState::synthetic(EvalConfig {
+            batches: 2,
+            batch: 8,
+            ..EvalConfig::default()
+        })
+        .unwrap();
+        let rep = es.eval_specs(&mem_specs(3), &quant(), 3, Some(12)).unwrap();
+        let line = rep.to_json().to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("event").unwrap().as_str().unwrap(), "eval");
+        assert_eq!(j.req("step").unwrap().as_usize().unwrap(), 12);
+        assert!(j.req("heldout_loss").unwrap().as_f64().unwrap().is_finite());
+        assert!(j.req("perplexity").unwrap().as_f64().unwrap() > 0.0);
+        let layers = j.req("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 4);
+        assert!(layers[0].req("sigma_err").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn split_batches_match_layers_by_width() {
+        // A split with batches at two widths: the d16 layers (rows 16)
+        // use the 16-wide batches, the 64-row ffn_out uses the 64-wide
+        // one; a layer with no matching batch is a named error.
+        let dir = std::env::temp_dir().join("metis_eval_split");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(1);
+        for (name, b, d) in [("x16_a", 6usize, 16usize), ("x16_b", 4, 16), ("x64", 5, 64)] {
+            let x = Matrix::gaussian(&mut rng, b, d, 1.0);
+            write_npy(
+                dir.join(format!("{name}.npy")),
+                &NpyArray::f32(vec![b, d], x.data.iter().map(|&v| v as f32).collect()),
+            )
+            .unwrap();
+        }
+        let batches = crate::data::evalsplit::scan_eval_split(&dir).unwrap();
+        assert_eq!(batches.len(), 3);
+        let es = EvalState::with_split(EvalConfig::default(), batches).unwrap();
+        let rep = es.eval_specs(&mem_specs(2), &quant(), 2, None).unwrap();
+        assert_eq!(rep.batches, 3);
+        for l in &rep.layers {
+            assert!(l.loss.is_finite() && l.loss > 0.0, "{}", l.name);
+        }
+
+        // A 24-row layer has no matching batch width in this split.
+        let mut rng2 = Rng::new(2);
+        let odd = vec![LayerSpec::mem("odd", planted_powerlaw(&mut rng2, 24, 16, 1.5))];
+        let es2 = EvalState::with_split(
+            EvalConfig::default(),
+            crate::data::evalsplit::scan_eval_split(&dir).unwrap(),
+        )
+        .unwrap();
+        let err = es2.eval_specs(&odd, &quant(), 0, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("odd") && msg.contains("width 24"), "{msg}");
+    }
+
+    #[test]
+    fn degenerate_configs_error() {
+        assert!(EvalState::synthetic(EvalConfig {
+            batches: 0,
+            ..EvalConfig::default()
+        })
+        .is_err());
+        assert!(EvalState::with_split(EvalConfig::default(), Vec::new()).is_err());
+        let es = EvalState::synthetic(EvalConfig::default()).unwrap();
+        assert!(es.eval_specs(&[], &quant(), 0, None).is_err());
+    }
+}

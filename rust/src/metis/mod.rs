@@ -20,10 +20,17 @@
 //!   streaming `.npy` specs so paper-scale matrices sweep through with
 //!   bounded memory;
 //! * [`trainstate`] — the splits on the training hot path: init-time
-//!   Eq. 3 packing into [`trainstate::PackedWeight`]s, per-step Eq. 6
-//!   gradient splits via [`trainstate::GradStep`], and the sharded
-//!   native step loop behind `metis train-native`.
+//!   Eq. 3 packing into [`trainstate::PackedWeight`]s (streamed column
+//!   block by column block from `LayerSpec`s, bounded-memory), per-step
+//!   Eq. 6 gradient splits via [`trainstate::GradStep`], and the
+//!   sharded native step loop behind `metis train-native`;
+//! * [`eval`] — the held-out fidelity harness: forward-only sharded
+//!   eval passes over a validation split (held-out loss/perplexity,
+//!   per-layer σ-distortion of the packed weights vs their masters,
+//!   quantized-vs-master logit divergence), behind `metis eval` and
+//!   `train-native --eval-every`.
 
+pub mod eval;
 pub mod lr;
 pub mod pipeline;
 pub mod quantizer;
@@ -31,10 +38,11 @@ pub mod sampler;
 pub mod split;
 pub mod trainstate;
 
+pub use eval::{EvalConfig, EvalData, EvalLayerStats, EvalReport, EvalState};
 pub use lr::{adaptive_rescale, rescale_stats, RescaleStats};
 pub use pipeline::{
-    load_checkpoint_dir, run_specs, scan_checkpoint_dir, synthetic_model, Layer, LayerReport,
-    LayerSource, LayerSpec, NpySlice, PipelineConfig, PipelineResult, SigmaRef,
+    column_blocks, load_checkpoint_dir, run_specs, scan_checkpoint_dir, synthetic_model, Layer,
+    LayerReport, LayerSource, LayerSpec, NpySlice, PipelineConfig, PipelineResult, SigmaRef,
 };
 pub use quantizer::{
     compare, quantize_grad_split, quantize_split, sigma_distortion, sigma_distortion_vs,
@@ -43,6 +51,6 @@ pub use quantizer::{
 pub use sampler::{decompose, sampled_spectrum, sparse_sample_svd, DecompStrategy};
 pub use split::{gradient_split, weight_split, GradSplit, WeightSplit};
 pub use trainstate::{
-    train_native, train_native_with, GradStep, GradStepConfig, NativeRunResult, NativeTrainConfig,
-    Optim, PackedWeight, StepReport, TrainState,
+    train_native, train_native_evented, train_native_with, GradStep, GradStepConfig, NativeEvent,
+    NativeRunResult, NativeTrainConfig, Optim, PackedBlock, PackedWeight, StepReport, TrainState,
 };

@@ -46,7 +46,7 @@ use crate::metis::sampler::{sampled_spectrum, DecompStrategy};
 use crate::metis::split::split_from_svd;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
-use crate::util::npy::NpyReader;
+use crate::util::npy::{NpyReader, ReaderCache};
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
 use crate::util::workpool::WorkPool;
@@ -66,7 +66,26 @@ const BLOCK_DOMAIN: u64 = u64::MAX - 2;
 
 /// Sampled σ references never use fewer than this many spectrum points,
 /// so the tail-half column stays meaningful at tiny split ranks.
-const SIGMA_SAMPLE_MIN_K: usize = 8;
+/// Shared with the eval harness so `metis eval` σ columns are computed
+/// on the same footing as the pipeline's.
+pub(crate) const SIGMA_SAMPLE_MIN_K: usize = 8;
+
+/// Column partition of a `cols`-wide layer into blocks of at most
+/// `block_cols` columns: `(c0, width)` pairs in column order, one
+/// full-width pair when blocking is off or unnecessary.  The single
+/// source of block geometry for the pipeline, the streamed packer and
+/// the eval harness, so their (layer, block) units always line up.
+pub fn column_blocks(cols: usize, block_cols: usize) -> Vec<(usize, usize)> {
+    if block_cols == 0 || cols <= block_cols {
+        return vec![(0, cols)];
+    }
+    (0..cols.div_ceil(block_cols))
+        .map(|b| {
+            let c0 = b * block_cols;
+            (c0, cols.min(c0 + block_cols) - c0)
+        })
+        .collect()
+}
 
 /// One named weight matrix fed to the pipeline.
 pub struct Layer {
@@ -151,9 +170,18 @@ impl NpySlice {
     /// Materialize the column block [c0, c0+width) of the rows×cols
     /// slice: one contiguous read when the block spans every column,
     /// one strided read per row otherwise.  Either way the transient
-    /// footprint is the block, never the blob.
-    fn read_cols(&self, rows: usize, cols: usize, c0: usize, width: usize) -> Result<Matrix> {
-        let mut rdr = NpyReader::open(&self.path)?;
+    /// footprint is the block, never the blob — and the open reader is
+    /// reused through the caller's per-worker [`ReaderCache`] instead
+    /// of reopening the blob once per (layer, block) unit.
+    fn read_cols(
+        &self,
+        rows: usize,
+        cols: usize,
+        c0: usize,
+        width: usize,
+        cache: &mut ReaderCache,
+    ) -> Result<Matrix> {
+        let rdr = cache.reader(&self.path)?;
         let data = if c0 == 0 && width == cols {
             rdr.read_f64_at(self.base_elem, rows * cols)?
         } else {
@@ -194,17 +222,23 @@ impl LayerSpec {
         }
     }
 
-    /// Materialize the column block [c0, c0+width).
-    fn read_cols(&self, c0: usize, width: usize) -> Result<Matrix> {
+    /// Materialize the column block [c0, c0+width), reusing the
+    /// worker's open reader for disk-backed sources.
+    pub(crate) fn read_cols(
+        &self,
+        c0: usize,
+        width: usize,
+        cache: &mut ReaderCache,
+    ) -> Result<Matrix> {
         match &self.source {
             LayerSource::Mem(w) => Ok(w.col_block(c0, width)),
-            LayerSource::Npy(slice) => slice.read_cols(self.rows, self.cols, c0, width),
+            LayerSource::Npy(slice) => slice.read_cols(self.rows, self.cols, c0, width, cache),
         }
     }
 
-    /// Materialize the whole layer.
+    /// Materialize the whole layer (one-shot reader, no cache needed).
     pub fn read_all(&self) -> Result<Matrix> {
-        self.read_cols(0, self.cols)
+        self.read_cols(0, self.cols, &mut ReaderCache::new())
     }
 }
 
@@ -401,8 +435,13 @@ fn process_block(
     }
 }
 
-fn process_unit(spec: &LayerSpec, u: Unit, cfg: &PipelineConfig) -> Result<BlockOut> {
-    let wb = spec.read_cols(u.c0, u.width)?;
+fn process_unit(
+    spec: &LayerSpec,
+    u: Unit,
+    cfg: &PipelineConfig,
+    cache: &mut ReaderCache,
+) -> Result<BlockOut> {
+    let wb = spec.read_cols(u.c0, u.width, cache)?;
     // Validate up front: a NaN/∞ weight used to surface as a panic deep
     // inside the Jacobi sweep (σ sort), killing the worker and aborting
     // the whole sweep.  Now it is a per-layer error with a name on it.
@@ -504,25 +543,16 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
     let mut units: Vec<Unit> = Vec::new();
     let mut blocks_per_layer = vec![0usize; n_layers];
     for (i, spec) in specs.iter().enumerate() {
-        let nb = if cfg.block_cols == 0 || spec.cols <= cfg.block_cols {
-            1
-        } else {
-            spec.cols.div_ceil(cfg.block_cols)
-        };
-        blocks_per_layer[i] = nb;
-        for b in 0..nb {
-            let c0 = b * cfg.block_cols;
-            let width = if nb == 1 {
-                spec.cols
-            } else {
-                spec.cols.min(c0 + cfg.block_cols) - c0
-            };
+        let blocks = column_blocks(spec.cols, cfg.block_cols);
+        blocks_per_layer[i] = blocks.len();
+        let single = blocks.len() == 1;
+        for (b, (c0, width)) in blocks.into_iter().enumerate() {
             units.push(Unit {
                 layer: i,
                 block: b,
                 c0,
                 width,
-                single: nb == 1,
+                single,
             });
         }
     }
@@ -547,20 +577,26 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
         for _ in 0..threads {
             let tx = tx.clone();
             let (queue, specs, cfg) = (&queue, &specs, *cfg);
-            scope.execute(move || loop {
-                let unit = queue.lock().unwrap().pop();
-                match unit {
-                    None => break,
-                    Some(u) => {
-                        // A panic would poison the scope; surface it as
-                        // this unit's error instead so the sweep fails
-                        // with a layer name attached.
-                        let out = catch_unwind(AssertUnwindSafe(|| {
-                            process_unit(&specs[u.layer], u, &cfg)
-                        }))
-                        .unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked")));
-                        if tx.send((u.layer, u.block, out)).is_err() {
-                            break;
+            scope.execute(move || {
+                // One reader cache per worker drain loop: every blob a
+                // worker touches is opened once, however many (layer,
+                // block) units of it the worker pulls.
+                let mut cache = ReaderCache::new();
+                loop {
+                    let unit = queue.lock().unwrap().pop();
+                    match unit {
+                        None => break,
+                        Some(u) => {
+                            // A panic would poison the scope; surface it
+                            // as this unit's error instead so the sweep
+                            // fails with a layer name attached.
+                            let out = catch_unwind(AssertUnwindSafe(|| {
+                                process_unit(&specs[u.layer], u, &cfg, &mut cache)
+                            }))
+                            .unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked")));
+                            if tx.send((u.layer, u.block, out)).is_err() {
+                                break;
+                            }
                         }
                     }
                 }
@@ -1035,14 +1071,18 @@ mod tests {
         // read off disk matches the resident copy bit-for-bit.
         let specs = scan_checkpoint_dir(&dir).unwrap();
         assert_eq!(specs.len(), stack);
+        // One cache across every spec: all three stacked slices share a
+        // blob, so the whole loop costs a single open.
+        let mut cache = ReaderCache::new();
         for (spec, want) in specs.iter().zip(&mats) {
             assert_eq!((spec.rows, spec.cols), (m, n));
             let full = spec.read_all().unwrap();
             let err = full.sub(want).frob_norm();
             assert!(err < 1e-6, "{}: disk read diverges {err:.2e}", spec.name);
-            let blk = spec.read_cols(2, 3).unwrap();
+            let blk = spec.read_cols(2, 3, &mut cache).unwrap();
             assert_eq!(blk, want_block(want, 2, 3), "{}", spec.name);
         }
+        assert_eq!(cache.opens(), 1, "stacked slices share one reader");
     }
 
     fn want_block(w: &Matrix, c0: usize, width: usize) -> Matrix {

@@ -38,12 +38,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::schedule::Schedule;
 use crate::formats::{quantize_matrix_along, Format};
+use crate::metis::eval::{EvalReport, EvalState};
 use crate::metis::lr::rescale_stats;
-use crate::metis::pipeline::{synthetic_model, Layer};
+use crate::metis::pipeline::{column_blocks, synthetic_model, Layer, LayerSource, LayerSpec};
 use crate::metis::quantizer::{quantize_grad_split, MetisQuantConfig};
 use crate::metis::split::{gradient_split, weight_split};
 use crate::tensor::Matrix;
 use crate::util::json::Json;
+use crate::util::npy::ReaderCache;
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
 use crate::util::workpool::WorkPool;
@@ -54,80 +56,176 @@ use crate::util::workpool::WorkPool;
 const PACK_DOMAIN: u64 = 0x4d45_5449_5350_4143; // "METISPAC"
 const STEP_DOMAIN: u64 = 0x4d45_5449_5353_5445; // "METISSTE"
 const TARGET_DOMAIN: u64 = 0x4d45_5449_5354_4152; // "METISTAR"
+/// Sub-domain of a layer's pack stream for its column blocks (only
+/// multi-block layers use it — single-block layers keep the historical
+/// per-layer stream, so unblocked packings stay bit-identical to
+/// earlier releases).
+const PACK_BLOCK_DOMAIN: u64 = 0x4d45_5449_5350_424b; // "METISPBK"
 
-/// One parameter matrix in packed Eq. 3 form: W ≈ Q(U) S Q(Vᵀ) + Q(W_R)
-/// with S and the optimizer-owned master copy kept high-precision.
+/// The RNG stream an init-time Eq. 3 packing draws from: the layer's
+/// `fold_in` stream for single-block layers (the historical layout), a
+/// per-(layer, block) sub-stream otherwise.  One function shared by
+/// [`TrainState::init_specs`] and the eval harness's pack-on-the-fly
+/// path, so `metis eval <ckpt>` measures exactly the packing
+/// `train-native` would start from at the same seed.
+pub(crate) fn pack_stream(seed: u64, layer: usize, block: usize, single: bool) -> Rng {
+    let layer_stream = Rng::new(seed).fold_in(PACK_DOMAIN).fold_in(layer as u64);
+    if single {
+        layer_stream
+    } else {
+        layer_stream
+            .fold_in(PACK_BLOCK_DOMAIN)
+            .fold_in(block as u64)
+    }
+}
+
+/// One column block of a packed weight: W_b ≈ Q(U_b) S_b Q(V_bᵀ) with
+/// the block residual folded into the cached effective weight.  S stays
+/// high-precision (Eq. 5 exempts it).
+pub struct PackedBlock {
+    /// First column of this block within the layer.
+    pub c0: usize,
+    /// Quantized left factor Q(U), m×k.
+    pub uq: Matrix,
+    /// High-precision spectrum of the block split.
+    pub s: Vec<f64>,
+    /// Quantized right factor Q(Vᵀ), k×width.
+    pub vtq: Matrix,
+}
+
+impl PackedBlock {
+    /// Column count of the block.
+    pub fn width(&self) -> usize {
+        self.vtq.cols
+    }
+}
+
+/// Eq. 3 split + Eq. 5 quantization of one column block, returning the
+/// frozen-basis factors and the effective block Q(U) S Q(Vᵀ) + Q(W_R)
+/// (the residual is not stored: refresh/repack recompute it from the
+/// master, so keeping it would only double the resident footprint).
+fn pack_block(
+    wb: &Matrix,
+    c0: usize,
+    quant: &MetisQuantConfig,
+    rng: &mut Rng,
+) -> (PackedBlock, Matrix) {
+    let k = quant.rank(wb.min_dim());
+    let split = weight_split(wb, k, quant.strategy, rng);
+    let (uq, vtq, rq) = crate::metis::quantizer::quantize_split_parts(&split, quant.fmt);
+    let eff = uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq);
+    (
+        PackedBlock {
+            c0,
+            uq,
+            s: split.svd.s,
+            vtq,
+        },
+        eff,
+    )
+}
+
+/// One parameter matrix in packed Eq. 3 form, per column block:
+/// W ≈ [Q(U_b) S_b Q(V_bᵀ) + Q(W_{R,b})]_b with S and the
+/// optimizer-owned master copy kept high-precision.  Narrow layers are
+/// one block (bit-identical to the pre-blocking packing); layers wider
+/// than the packing block size split into independent per-block Eq. 3
+/// splits, which is what lets init stream them from disk column block
+/// by column block instead of materializing split workspaces for the
+/// whole matrix.
 pub struct PackedWeight {
     pub name: String,
     /// High-precision master weight — what the optimizer updates.
     pub master: Matrix,
-    /// Quantized left factor Q(U), m×k.
-    pub uq: Matrix,
-    /// High-precision spectrum (Eq. 5 exempts S from quantization).
-    pub s: Vec<f64>,
-    /// Quantized right factor Q(Vᵀ), k×n.
-    pub vtq: Matrix,
-    /// Quantized residual Q(W_R), m×n.
-    pub rq: Matrix,
-    /// Cached effective weight Q(U) S Q(Vᵀ) + Q(W_R) — the low-rank
-    /// GEMM is already paid by pack/refresh, so the per-step forward
-    /// never recomputes it.
+    /// Column-partition packings, in column order.
+    pub blocks: Vec<PackedBlock>,
+    /// Cached effective weight (all blocks assembled) — the low-rank
+    /// GEMMs are already paid by pack/refresh, so the per-step forward
+    /// never recomputes them.
     eff: Matrix,
 }
 
 impl PackedWeight {
     /// Init-time Eq. 3 packing through the configured strategy, then
     /// Eq. 5 sub-distribution quantization of the factors (the same
-    /// `quantize_split_parts` layout the pipeline measures).
+    /// `quantize_split_parts` layout the pipeline measures).  Always a
+    /// single block — the streamed multi-block path is
+    /// [`TrainState::init_specs`].
     pub fn pack(name: String, w: Matrix, quant: &MetisQuantConfig, rng: &mut Rng) -> PackedWeight {
-        let k = quant.rank(w.min_dim());
-        let split = weight_split(&w, k, quant.strategy, rng);
-        let (uq, vtq, rq) = crate::metis::quantizer::quantize_split_parts(&split, quant.fmt);
-        let eff = uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq);
+        let (blk, eff) = pack_block(&w, 0, quant, rng);
         PackedWeight {
             name,
-            uq,
-            s: split.svd.s,
-            vtq,
-            rq,
+            blocks: vec![blk],
             eff,
             master: w,
         }
     }
 
-    /// Split rank k of the packing.
+    /// Largest split rank k across the column blocks.
     pub fn rank(&self) -> usize {
-        self.s.len()
+        self.blocks.iter().map(|b| b.s.len()).max().unwrap_or(0)
     }
 
-    /// The effective W4 weight the forward GEMMs consume:
-    /// Q(U) S Q(Vᵀ) + Q(W_R) (cached; refreshed by pack/refresh/repack).
+    /// The effective W4 weight the forward GEMMs consume (cached;
+    /// refreshed by pack/refresh/repack).
     pub fn effective(&self) -> &Matrix {
         &self.eff
     }
 
     /// Re-fit the packing to the current master against the *frozen*
-    /// init-time basis: S ← diag(Q(U)ᵀ W Q(Vᵀ)ᵀ) (the per-component
-    /// bilinear coefficient), then the residual W − Q(U) S Q(Vᵀ) is
-    /// re-quantized.  O(mnk) — same order as the per-step Eq. 6 split,
-    /// so the refresh never dominates a step.
+    /// init-time basis, per block: S_b ← diag(Q(U_b)ᵀ W_b Q(V_bᵀ)ᵀ)
+    /// (the per-component bilinear coefficient), then the block residual
+    /// W_b − Q(U_b) S_b Q(V_bᵀ) is re-quantized.  O(mnk) total — same
+    /// order as the per-step Eq. 6 split, so the refresh never dominates
+    /// a step.
     pub fn refresh(&mut self, fmt: Format) {
-        let a = self.uq.matmul_at_b(&self.master); // Q(U)ᵀ·W fused, k×n
-        for (i, s) in self.s.iter_mut().enumerate() {
-            *s = crate::linalg::kernels::dot(a.row(i), self.vtq.row(i));
+        let single = self.blocks.len() == 1;
+        let (master, eff) = (&self.master, &mut self.eff);
+        for blk in &mut self.blocks {
+            // The col_block copy is skipped for single-block layers —
+            // the historical path ran straight off the master.
+            let mb_store;
+            let mb = if single {
+                master
+            } else {
+                mb_store = master.col_block(blk.c0, blk.width());
+                &mb_store
+            };
+            let a = blk.uq.matmul_at_b(mb); // Q(U)ᵀ·W_b fused, k×width
+            for (i, s) in blk.s.iter_mut().enumerate() {
+                *s = crate::linalg::kernels::dot(a.row(i), blk.vtq.row(i));
+            }
+            let low = blk.uq.scale_cols(&blk.s).matmul(&blk.vtq);
+            let rq = quantize_matrix_along(fmt, &mb.sub(&low), 0);
+            let eff_b = low.add(&rq);
+            if single {
+                *eff = eff_b;
+            } else {
+                eff.set_col_block(blk.c0, &eff_b);
+            }
         }
-        let low = self.uq.scale_cols(&self.s).matmul(&self.vtq);
-        self.rq = quantize_matrix_along(fmt, &self.master.sub(&low), 0);
-        self.eff = low.add(&self.rq);
     }
 
     /// Full Eq. 3 re-decomposition of the current master (the paper's
     /// periodic weight re-split; `TrainState` calls this every
-    /// `repack_every` steps when enabled).
+    /// `repack_every` steps when enabled).  Single-block layers consume
+    /// `rng` directly (the historical stream); multi-block layers
+    /// re-pack each block from a per-block sub-stream of it.
     pub fn repack(&mut self, quant: &MetisQuantConfig, rng: &mut Rng) {
-        let name = std::mem::take(&mut self.name);
-        let master = std::mem::replace(&mut self.master, Matrix::zeros(0, 0));
-        *self = PackedWeight::pack(name, master, quant, rng);
+        if self.blocks.len() == 1 {
+            let (blk, eff) = pack_block(&self.master, 0, quant, rng);
+            self.blocks = vec![blk];
+            self.eff = eff;
+            return;
+        }
+        let base = rng.fold_in(PACK_BLOCK_DOMAIN);
+        for (b, blk) in self.blocks.iter_mut().enumerate() {
+            let mb = self.master.col_block(blk.c0, blk.width());
+            let mut sub = base.fold_in(b as u64);
+            let (packed, eff_b) = pack_block(&mb, blk.c0, quant, &mut sub);
+            self.eff.set_col_block(blk.c0, &eff_b);
+            *blk = packed;
+        }
     }
 }
 
@@ -366,9 +464,69 @@ pub struct TrainState {
     pub step: usize,
 }
 
+/// One (layer, column-block) packing work unit of [`TrainState::init_specs`].
+#[derive(Clone, Copy, Debug)]
+struct PackUnit {
+    layer: usize,
+    block: usize,
+    c0: usize,
+    width: usize,
+    single: bool,
+}
+
+/// What a packing unit sends back for reassembly: the packed factors,
+/// the effective column block, and — for disk-backed sources only —
+/// the master block it materialized (resident sources keep their
+/// matrix in the spec and move it into the master at assembly).
+struct PackUnitOut {
+    packed: PackedBlock,
+    master_b: Option<Matrix>,
+    eff_b: Matrix,
+}
+
+/// Materialize and pack one (layer, column-block) unit from its spec.
+/// Single-block resident layers are packed borrowing the spec's matrix
+/// in place — no transient whole-matrix copy, matching the historical
+/// resident path.
+fn pack_unit(
+    spec: &LayerSpec,
+    u: PackUnit,
+    quant: &MetisQuantConfig,
+    seed: u64,
+    cache: &mut ReaderCache,
+) -> Result<PackUnitOut> {
+    let wb: std::borrow::Cow<'_, Matrix> = match (&spec.source, u.single) {
+        (LayerSource::Mem(w), true) => std::borrow::Cow::Borrowed(w),
+        _ => std::borrow::Cow::Owned(spec.read_cols(u.c0, u.width, cache)?),
+    };
+    // A NaN/∞ weight would otherwise surface as a panic deep inside the
+    // split's Jacobi sweep; make it a named per-layer error instead.
+    if !wb.data.iter().all(|x| x.is_finite()) {
+        bail!(
+            "non-finite weight values in columns [{}, {}) — Eq. 3 packing \
+             requires finite inputs",
+            u.c0,
+            u.c0 + u.width
+        );
+    }
+    let mut rng = pack_stream(seed, u.layer, u.block, u.single);
+    let (packed, eff_b) = pack_block(&wb, u.c0, quant, &mut rng);
+    let master_b = match &spec.source {
+        LayerSource::Npy(_) => Some(wb.into_owned()),
+        LayerSource::Mem(_) => None,
+    };
+    Ok(PackUnitOut {
+        packed,
+        master_b,
+        eff_b,
+    })
+}
+
 impl TrainState {
-    /// Init-time Eq. 3 packing of every layer (per-layer
-    /// `fold_in`-derived streams, deterministic in `seed`).
+    /// Init-time Eq. 3 packing of every resident layer (per-layer
+    /// `fold_in`-derived streams, deterministic in `seed`) — the
+    /// unblocked, single-threaded wrapper around [`Self::init_specs`];
+    /// packings are bit-identical to the pre-streaming releases.
     pub fn init(
         layers: Vec<Layer>,
         quant: MetisQuantConfig,
@@ -376,22 +534,172 @@ impl TrainState {
         optim: Optim,
         seed: u64,
     ) -> Result<TrainState> {
-        if layers.is_empty() {
+        let specs = layers
+            .into_iter()
+            .map(|l| LayerSpec::mem(l.name, l.w))
+            .collect();
+        Self::init_specs(specs, quant, grad, optim, seed, 0, 1)
+    }
+
+    /// Bounded-memory init-time packing: consume layer specs column
+    /// block by column block through the streaming reader, sharded over
+    /// the persistent [`WorkPool`].  Work units are popped largest-first
+    /// for load balance and reassembled block-ordered, with per-worker
+    /// reader caches so each blob is opened at most once per worker.
+    /// Peak transient memory is one split workspace per worker (a few
+    /// column blocks) instead of the full-matrix split workspaces of
+    /// the resident path; the masters and cached effective weights stay
+    /// resident, as the optimizer and forward path require.
+    ///
+    /// Determinism: single-block layers pack from the historical
+    /// per-layer stream, blocked layers from per-(layer, block)
+    /// sub-streams ([`pack_stream`]), and reassembly writes disjoint
+    /// column ranges — the resulting state is bit-identical for any
+    /// `threads`.
+    pub fn init_specs(
+        specs: Vec<LayerSpec>,
+        quant: MetisQuantConfig,
+        grad: GradStepConfig,
+        optim: Optim,
+        seed: u64,
+        block_cols: usize,
+        threads: usize,
+    ) -> Result<TrainState> {
+        if specs.is_empty() {
             bail!("trainstate: no weight matrices to pack");
         }
-        let base = Rng::new(seed).fold_in(PACK_DOMAIN);
-        let mut packed = Vec::with_capacity(layers.len());
-        let mut opt = Vec::with_capacity(layers.len());
-        for (idx, layer) in layers.into_iter().enumerate() {
-            if layer.w.min_dim() == 0 {
-                bail!("trainstate: layer {} is empty", layer.name);
+        let mut units: Vec<PackUnit> = Vec::new();
+        let mut blocks_per_layer = vec![0usize; specs.len()];
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.rows == 0 || spec.cols == 0 {
+                bail!("trainstate: layer {} is empty", spec.name);
             }
-            let mut rng = base.fold_in(idx as u64);
-            opt.push(optim.slot(layer.w.rows, layer.w.cols));
-            packed.push(PackedWeight::pack(layer.name, layer.w, &quant, &mut rng));
+            let blocks = column_blocks(spec.cols, block_cols);
+            blocks_per_layer[i] = blocks.len();
+            let single = blocks.len() == 1;
+            for (b, (c0, width)) in blocks.into_iter().enumerate() {
+                units.push(PackUnit {
+                    layer: i,
+                    block: b,
+                    c0,
+                    width,
+                    single,
+                });
+            }
+        }
+        let n_units = units.len();
+        // Largest-first queue (`pop` takes the tail → sort ascending),
+        // ties broken on (layer, block) for a deterministic schedule.
+        units.sort_by_key(|u| (specs[u.layer].rows * u.width, u.layer, u.block));
+        let threads = threads.max(1).min(n_units);
+        let queue = Mutex::new(units);
+        let (tx, rx) = mpsc::channel::<(usize, usize, Result<PackedBlock>)>();
+
+        // Reassembly targets: workers write their master/effective
+        // column blocks straight into these (disjoint ranges, so
+        // arrival order is irrelevant to the bits and nothing buffers
+        // whole-matrix copies in the channel — only the small packed
+        // factors travel back).  Resident (Mem) specs need no master
+        // buffer at all: the spec's own matrix *becomes* the master
+        // after the scope, so the resident path never holds a second
+        // whole-matrix copy.
+        let masters: Vec<Mutex<Matrix>> = specs
+            .iter()
+            .map(|s| match s.source {
+                LayerSource::Npy(_) => Mutex::new(Matrix::zeros(s.rows, s.cols)),
+                LayerSource::Mem(_) => Mutex::new(Matrix::zeros(0, 0)),
+            })
+            .collect();
+        let effs: Vec<Mutex<Matrix>> = specs
+            .iter()
+            .map(|s| Mutex::new(Matrix::zeros(s.rows, s.cols)))
+            .collect();
+
+        WorkPool::global().scoped(|scope| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let (queue, specs, quant) = (&queue, &specs, &quant);
+                let (masters, effs) = (&masters, &effs);
+                scope.execute(move || {
+                    let mut cache = ReaderCache::new();
+                    loop {
+                        let unit = queue.lock().unwrap().pop();
+                        let Some(u) = unit else { break };
+                        let run = || -> Result<PackedBlock> {
+                            let o = pack_unit(&specs[u.layer], u, quant, seed, &mut cache)?;
+                            if let Some(mb) = &o.master_b {
+                                masters[u.layer].lock().unwrap().set_col_block(u.c0, mb);
+                            }
+                            effs[u.layer].lock().unwrap().set_col_block(u.c0, &o.eff_b);
+                            Ok(o.packed)
+                        };
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run))
+                            .unwrap_or_else(|_| Err(anyhow!("packing worker panicked")));
+                        if tx.send((u.layer, u.block, out)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+
+        let mut packed_blocks: Vec<Vec<(usize, PackedBlock)>> =
+            (0..specs.len()).map(|_| Vec::new()).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut n_got = 0usize;
+        for (layer, block, out) in rx.iter() {
+            n_got += 1;
+            match out {
+                Ok(p) => packed_blocks[layer].push((block, p)),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("layer {} (block {block})", specs[layer].name)));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if n_got != n_units {
+            bail!("trainstate: {n_got} of {n_units} packing units reported");
+        }
+
+        let mut layers = Vec::with_capacity(specs.len());
+        let mut opt = Vec::with_capacity(specs.len());
+        for (i, ((spec, mut blocks), (master, eff))) in specs
+            .into_iter()
+            .zip(packed_blocks)
+            .zip(masters.into_iter().zip(effs))
+            .enumerate()
+        {
+            blocks.sort_by_key(|(b, _)| *b);
+            if blocks.len() != blocks_per_layer[i] {
+                bail!(
+                    "trainstate: layer {} reassembled {} of {} blocks",
+                    spec.name,
+                    blocks.len(),
+                    blocks_per_layer[i]
+                );
+            }
+            opt.push(optim.slot(spec.rows, spec.cols));
+            let master = match spec.source {
+                // The resident spec's matrix is the master — moved, not
+                // copied.
+                LayerSource::Mem(w) => w,
+                LayerSource::Npy(_) => master.into_inner().unwrap(),
+            };
+            layers.push(PackedWeight {
+                name: spec.name,
+                master,
+                blocks: blocks.into_iter().map(|(_, p)| p).collect(),
+                eff: eff.into_inner().unwrap(),
+            });
         }
         Ok(TrainState {
-            layers: packed,
+            layers,
             opt,
             quant,
             grad,
@@ -511,6 +819,10 @@ pub struct NativeTrainConfig {
     pub grad: GradStepConfig,
     pub optim: Optim,
     pub repack_every: usize,
+    /// Column-block size of the init-time packing (0 = one block per
+    /// layer).  Narrow layers always pack as a single block, so the
+    /// default only changes behavior for layers wider than it.
+    pub pack_block_cols: usize,
 }
 
 impl Default for NativeTrainConfig {
@@ -528,13 +840,23 @@ impl Default for NativeTrainConfig {
             grad: GradStepConfig::default(),
             optim: Optim::Sgd,
             repack_every: 0,
+            pack_block_cols: 1024,
         }
     }
+}
+
+/// Everything the native loop streams out: step reports plus (when the
+/// eval harness is wired in) held-out eval reports.
+pub enum NativeEvent<'a> {
+    Step(&'a StepReport),
+    Eval(&'a EvalReport),
 }
 
 /// Whole-run result of the native loop.
 pub struct NativeRunResult {
     pub reports: Vec<StepReport>,
+    /// Held-out eval rows, in emission order (empty without `--eval-every`).
+    pub evals: Vec<EvalReport>,
     pub wall_ms: f64,
     pub threads: usize,
     pub diverged: bool,
@@ -556,23 +878,38 @@ impl NativeRunResult {
 
     /// Write one JSON object per step.
     pub fn write_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
-            }
-        }
-        let mut out = String::new();
-        for r in &self.reports {
-            out.push_str(&r.to_json().to_string());
-            out.push('\n');
-        }
-        std::fs::write(path, out).map_err(|e| anyhow!("write {}: {e}", path.display()))
+        write_jsonl_lines(path, self.reports.iter().map(|r| r.to_json()))
+    }
+
+    /// Write one JSON object per held-out eval row — the fidelity curve
+    /// that streams alongside the training curve.
+    pub fn write_eval_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_jsonl_lines(path, self.evals.iter().map(|e| e.to_json()))
     }
 }
 
-/// Run the native W4A4G4 loop, invoking `on_step` as each step report
-/// is produced (the CLI streams them as JSONL).
+/// Write an iterator of JSON values as JSONL, creating parent dirs.
+pub(crate) fn write_jsonl_lines(
+    path: impl AsRef<Path>,
+    rows: impl Iterator<Item = Json>,
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&r.to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).map_err(|e| anyhow!("write {}: {e}", path.display()))
+}
+
+/// Run the native W4A4G4 loop, invoking `on_event` as each step report
+/// — and, when `eval = Some((every, harness))`, each held-out eval
+/// report — is produced (the CLI streams them as JSONL).
 ///
 /// The objective is a per-layer quantized-activation regression: probe
 /// activations X are drawn per (layer, step), quantized along the
@@ -581,9 +918,15 @@ impl NativeRunResult {
 /// planted target matrix, so the measurable gap isolates the W4/G4
 /// path.  Gradients are exact for this quadratic objective:
 /// D = Q(X)ᵀ (Q(X)·Ŵ − Q(X)·W*) / b.
-pub fn train_native_with(
+///
+/// Held-out evals run after every `every`-th step over the harness's
+/// split (which never overlaps the per-step probe streams), measuring
+/// the task loss of the packed weights on unseen activations plus the
+/// fidelity of the packing against the high-precision masters.
+pub fn train_native_evented(
     cfg: &NativeTrainConfig,
-    on_step: &mut dyn FnMut(&StepReport),
+    eval: Option<(usize, &EvalState)>,
+    on_event: &mut dyn FnMut(&NativeEvent),
 ) -> Result<NativeRunResult> {
     if cfg.steps == 0 || cfg.n_layers == 0 || cfg.batch == 0 {
         bail!("train-native: steps, layers and batch must all be > 0");
@@ -592,13 +935,33 @@ pub fn train_native_with(
         bail!("train-native: d-model must be >= 2");
     }
     let watch = Stopwatch::start();
-    let init = synthetic_model(cfg.n_layers, cfg.d_model, cfg.seed);
+    let init = synthetic_model(cfg.n_layers, cfg.d_model, cfg.seed)
+        .into_iter()
+        .map(|l| LayerSpec::mem(l.name, l.w))
+        .collect();
     let targets: Vec<Matrix> = synthetic_model(cfg.n_layers, cfg.d_model, cfg.seed ^ TARGET_DOMAIN)
         .into_iter()
         .map(|l| l.w)
         .collect();
-    let mut state = TrainState::init(init, cfg.quant, cfg.grad, cfg.optim, cfg.seed)?
-        .with_repack_every(cfg.repack_every);
+    let mut state = TrainState::init_specs(
+        init,
+        cfg.quant,
+        cfg.grad,
+        cfg.optim,
+        cfg.seed,
+        cfg.pack_block_cols,
+        cfg.threads,
+    )?
+    .with_repack_every(cfg.repack_every);
+    // Fail a mismatched eval split here, before any step burns compute.
+    if let Some((_, harness)) = eval {
+        harness.check_coverage(
+            state
+                .layers
+                .iter()
+                .map(|pw| (pw.name.as_str(), pw.master.rows)),
+        )?;
+    }
     let sched = Schedule::new(cfg.lr, cfg.warmup, cfg.steps);
 
     let (batch, act_fmt) = (cfg.batch, cfg.quant.fmt);
@@ -615,22 +978,43 @@ pub fn train_native_with(
     };
 
     let mut reports = Vec::with_capacity(cfg.steps);
+    let mut evals = Vec::new();
     let mut diverged = false;
     for step in 0..cfg.steps {
         let report = state.step_with(sched.lr_at(step), cfg.threads, &grad_fn);
         let bad = !report.loss.is_finite();
-        on_step(&report);
+        on_event(&NativeEvent::Step(&report));
         reports.push(report);
         if bad {
             diverged = true;
             break;
         }
+        if let Some((every, harness)) = eval {
+            if every > 0 && (step + 1) % every == 0 {
+                let er = harness.eval_train_state(&state, Some(targets.as_slice()), Some(step))?;
+                on_event(&NativeEvent::Eval(&er));
+                evals.push(er);
+            }
+        }
     }
     Ok(NativeRunResult {
         reports,
+        evals,
         wall_ms: watch.ms(),
         threads: cfg.threads.max(1),
         diverged,
+    })
+}
+
+/// [`train_native_evented`] without the eval harness, step reports only.
+pub fn train_native_with(
+    cfg: &NativeTrainConfig,
+    on_step: &mut dyn FnMut(&StepReport),
+) -> Result<NativeRunResult> {
+    train_native_evented(cfg, None, &mut |ev| {
+        if let NativeEvent::Step(rep) = ev {
+            on_step(rep);
+        }
     })
 }
 
@@ -670,12 +1054,12 @@ mod tests {
         let mut rng = Rng::new(1);
         let w = planted(&mut rng, 40, 32, 1.5);
         let mut pw = PackedWeight::pack("w".into(), w.clone(), &quant(), &mut rng);
-        let s0 = pw.s.clone();
+        let s0 = pw.blocks[0].s.clone();
         // Scale the master: the diag projection is linear, so S scales
         // with it and the effective weight follows within quant error.
         pw.master = w.scale(1.5);
         pw.refresh(Format::Nvfp4);
-        for (a, b) in pw.s.iter().zip(&s0) {
+        for (a, b) in pw.blocks[0].s.iter().zip(&s0) {
             // S entries track 1.5×(projection of w), which matches the
             // original singular values up to factor-quantization noise.
             assert!((a - 1.5 * b).abs() / (1.5 * b.abs()).max(1e-12) < 0.25, "{a} vs 1.5*{b}");
@@ -697,6 +1081,106 @@ mod tests {
         let rel = pw.effective().sub(&pw.master).frob_norm() / pw.master.frob_norm();
         assert!(rel < 0.2, "post-repack effective error: {rel:.3}");
         assert_eq!(pw.rank(), 5); // ceil(0.15 * 32)
+    }
+
+    #[test]
+    fn blocked_init_packs_per_column_block_and_stays_accurate() {
+        // A wide layer streamed through init_specs with small packing
+        // blocks: per-block Eq. 3 splits, effective weight within the
+        // quantization error class of the unblocked packing, and the
+        // refresh/repack paths operating per block.
+        let mut rng = Rng::new(5);
+        let w = planted(&mut rng, 32, 96, 1.5);
+        let spec = LayerSpec::mem("wide", w.clone());
+        let mut state = TrainState::init_specs(
+            vec![spec],
+            quant(),
+            GradStepConfig::default(),
+            Optim::Sgd,
+            7,
+            32,
+            2,
+        )
+        .unwrap();
+        let pw = &state.layers[0];
+        assert_eq!(pw.blocks.len(), 3);
+        assert_eq!(
+            pw.blocks.iter().map(|b| (b.c0, b.width())).collect::<Vec<_>>(),
+            vec![(0, 32), (32, 32), (64, 32)]
+        );
+        assert_eq!(pw.master, w);
+        let rel = pw.effective().sub(&w).frob_norm() / w.frob_norm();
+        assert!(rel > 0.0 && rel < 0.2, "blocked packing error: {rel:.3}");
+
+        // Refresh tracks a scaled master per block.
+        let pw = &mut state.layers[0];
+        pw.master = w.scale(2.0);
+        pw.refresh(Format::Nvfp4);
+        let rel = pw.effective().sub(&pw.master).frob_norm() / pw.master.frob_norm();
+        assert!(rel < 0.2, "post-refresh blocked error: {rel:.3}");
+        // Repack keeps the block partition and re-fits the basis.
+        let mut step_rng = Rng::new(9);
+        pw.repack(&quant(), &mut step_rng);
+        assert_eq!(pw.blocks.len(), 3);
+        let rel = pw.effective().sub(&pw.master).frob_norm() / pw.master.frob_norm();
+        assert!(rel < 0.2, "post-repack blocked error: {rel:.3}");
+    }
+
+    #[test]
+    fn init_specs_is_thread_and_block_source_invariant() {
+        // Same specs, 1 vs 4 packing threads → bit-identical state; and
+        // single-block init_specs matches the historical init() exactly.
+        let layers = || synthetic_model(1, 24, 3);
+        let specs = || -> Vec<LayerSpec> {
+            layers()
+                .into_iter()
+                .map(|l| LayerSpec::mem(l.name, l.w))
+                .collect()
+        };
+        let g = GradStepConfig::default();
+        let a = TrainState::init_specs(specs(), quant(), g, Optim::Sgd, 11, 16, 1).unwrap();
+        let b = TrainState::init_specs(specs(), quant(), g, Optim::Sgd, 11, 16, 4).unwrap();
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.master, y.master);
+            assert_eq!(x.effective(), y.effective());
+            assert_eq!(x.blocks.len(), y.blocks.len());
+            for (bx, by) in x.blocks.iter().zip(&y.blocks) {
+                assert_eq!(bx.s, by.s);
+                assert_eq!(bx.uq, by.uq);
+                assert_eq!(bx.vtq, by.vtq);
+            }
+        }
+        let old = TrainState::init(layers(), quant(), g, Optim::Sgd, 11).unwrap();
+        let single = TrainState::init_specs(specs(), quant(), g, Optim::Sgd, 11, 0, 4).unwrap();
+        for (x, y) in old.layers.iter().zip(&single.layers) {
+            assert_eq!(x.effective(), y.effective());
+            assert_eq!(x.blocks[0].s, y.blocks[0].s);
+        }
+    }
+
+    #[test]
+    fn init_specs_rejects_non_finite_layers_by_name() {
+        let mut rng = Rng::new(0);
+        let mut w = Matrix::gaussian(&mut rng, 12, 10, 1.0);
+        w[(2, 3)] = f64::INFINITY;
+        let specs = vec![
+            LayerSpec::mem("ok", Matrix::gaussian(&mut rng, 12, 10, 1.0)),
+            LayerSpec::mem("poisoned", w),
+        ];
+        let err = TrainState::init_specs(
+            specs,
+            quant(),
+            GradStepConfig::default(),
+            Optim::Sgd,
+            0,
+            0,
+            2,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("poisoned"), "error names the layer: {msg}");
+        assert!(msg.contains("non-finite"), "error names the cause: {msg}");
     }
 
     #[test]
@@ -793,6 +1277,7 @@ mod tests {
             grad: GradStepConfig::default(),
             optim: Optim::Sgd,
             repack_every: 0,
+            pack_block_cols: 1024,
         };
         let mut seen = 0usize;
         let res = train_native_with(&cfg, &mut |_| seen += 1).unwrap();
@@ -830,6 +1315,7 @@ mod tests {
             grad: GradStepConfig::default(),
             optim: Optim::adam(),
             repack_every: 0,
+            pack_block_cols: 1024,
         };
         let res = train_native(&cfg).unwrap();
         assert!(!res.diverged);

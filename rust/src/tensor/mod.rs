@@ -179,6 +179,24 @@ impl Matrix {
         out
     }
 
+    /// Write `block` (rows×width) into the column range [c0, c0+width)
+    /// — the converse of [`Matrix::col_block`], used for block-ordered
+    /// reassembly of streamed column blocks.
+    pub fn set_col_block(&mut self, c0: usize, block: &Matrix) {
+        assert_eq!(block.rows, self.rows, "set_col_block row mismatch");
+        assert!(
+            c0 + block.cols <= self.cols,
+            "set_col_block [{c0}, {}) out of range for {} cols",
+            c0 + block.cols,
+            self.cols
+        );
+        for r in 0..self.rows {
+            let at = r * self.cols + c0;
+            self.data[at..at + block.cols]
+                .copy_from_slice(&block.data[r * block.cols..(r + 1) * block.cols]);
+        }
+    }
+
     /// Scale column j by s[j] (diag right-multiply).
     pub fn scale_cols(&self, s: &[f64]) -> Matrix {
         assert_eq!(s.len(), self.cols);
@@ -346,6 +364,21 @@ mod tests {
         }
         // Full-width block is the identity copy.
         assert_eq!(a.col_block(0, 8), a);
+    }
+
+    #[test]
+    fn set_col_block_reassembles_partitions() {
+        // col_block → set_col_block over a column partition is the
+        // identity — the contract block-ordered packing reassembly
+        // relies on.
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(&mut rng, 6, 11, 1.0);
+        let mut out = Matrix::zeros(6, 11);
+        for c0 in (0..11).step_by(4) {
+            let width = 4.min(11 - c0);
+            out.set_col_block(c0, &a.col_block(c0, width));
+        }
+        assert_eq!(out, a);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! multiply, and payloads must match the declared size *exactly* — both
 //! truncated and trailing bytes are rejected with the offending path.
 
+use std::collections::HashMap;
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -347,6 +348,63 @@ fn read_typed<T: Copy, const N: usize>(
 
 pub fn read_npy(path: impl AsRef<Path>) -> Result<NpyArray> {
     NpyReader::open(path)?.read_all()
+}
+
+/// Open readers a [`ReaderCache`] holds at most — keeps per-worker fd
+/// usage bounded on checkpoint dirs with thousands of blobs (the Linux
+/// soft limit is commonly 1024, shared across all workers).
+const READER_CACHE_CAP: usize = 64;
+
+/// Per-worker LRU pool of open [`NpyReader`]s keyed by path.
+///
+/// Blocked sweeps touch the same blob once per (layer, block) work unit;
+/// opening the file anew each time re-reads and re-validates the header
+/// and costs an open(2) per unit (thousands of them on checkpoint dirs
+/// with many blobs).  Each pool worker owns one cache for the duration
+/// of its drain loop, so a blob is reopened only after
+/// [`READER_CACHE_CAP`] other blobs displaced it.  Never shared across
+/// threads — the readers seek.
+#[derive(Default)]
+pub struct ReaderCache {
+    readers: HashMap<PathBuf, NpyReader>,
+    /// Least-recently-used path first.
+    order: std::collections::VecDeque<PathBuf>,
+    opens: usize,
+}
+
+impl ReaderCache {
+    pub fn new() -> ReaderCache {
+        ReaderCache::default()
+    }
+
+    /// The cached reader for `path`, opening (header parse + payload
+    /// validation) only when not already cached; evicts the
+    /// least-recently-used reader beyond [`READER_CACHE_CAP`].
+    pub fn reader(&mut self, path: &Path) -> Result<&mut NpyReader> {
+        if self.readers.contains_key(path) {
+            self.order.retain(|p| p != path);
+            self.order.push_back(path.to_path_buf());
+        } else {
+            if self.readers.len() >= READER_CACHE_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.readers.remove(&old);
+                }
+            }
+            let rdr = NpyReader::open(path)?;
+            self.readers.insert(path.to_path_buf(), rdr);
+            self.order.push_back(path.to_path_buf());
+            self.opens += 1;
+        }
+        Ok(self
+            .readers
+            .get_mut(path)
+            .expect("reader present after insert"))
+    }
+
+    /// Total open(2)+header-parse operations this cache has performed.
+    pub fn opens(&self) -> usize {
+        self.opens
+    }
 }
 
 fn shape_tuple_str(shape: &[usize]) -> String {
@@ -678,6 +736,60 @@ mod tests {
         // Out-of-bounds reads error instead of wrapping.
         assert!(r.read_f64_at(rows * cols - 1, 2).is_err());
         assert!(r.read_f64_at(usize::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn reader_cache_opens_each_blob_once() {
+        // Regression (ROADMAP PR 3 leftover): blocked sweeps reopened
+        // the same blob per (layer, block) unit.  A per-worker cache
+        // must hand back one persistent reader per path.
+        let dir = test_dir("metis_npy_cache");
+        let pa = dir.join("a.npy");
+        let pb = dir.join("b.npy");
+        write_npy(&pa, &NpyArray::f32(vec![2, 3], vec![1.0; 6])).unwrap();
+        write_npy(&pb, &NpyArray::f32(vec![4], vec![2.0; 4])).unwrap();
+        let mut cache = ReaderCache::new();
+        for _ in 0..5 {
+            let r = cache.reader(&pa).unwrap();
+            assert_eq!(r.shape(), &[2, 3]);
+            assert_eq!(r.read_f64_at(0, 2).unwrap(), vec![1.0, 1.0]);
+        }
+        assert_eq!(cache.opens(), 1, "same path must reuse the open reader");
+        assert_eq!(cache.reader(&pb).unwrap().shape(), &[4]);
+        assert_eq!(cache.opens(), 2);
+        // Errors (missing blob) surface without poisoning the cache.
+        assert!(cache.reader(&dir.join("missing.npy")).is_err());
+        assert_eq!(cache.opens(), 2);
+        assert_eq!(cache.reader(&pa).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn reader_cache_bounds_open_handles() {
+        // The cache is an LRU with a hard cap: a dir with more blobs
+        // than READER_CACHE_CAP must not accumulate unbounded open fds
+        // (EMFILE regression guard) — old entries are evicted and
+        // reopened on return.
+        let dir = test_dir("metis_npy_cache_cap");
+        let n = READER_CACHE_CAP + 6;
+        let paths: Vec<PathBuf> = (0..n)
+            .map(|i| {
+                let p = dir.join(format!("b{i:03}.npy"));
+                write_npy(&p, &NpyArray::f32(vec![1], vec![i as f32])).unwrap();
+                p
+            })
+            .collect();
+        let mut cache = ReaderCache::new();
+        for p in &paths {
+            cache.reader(p).unwrap();
+        }
+        assert_eq!(cache.opens(), n);
+        assert!(cache.readers.len() <= READER_CACHE_CAP);
+        // The first blob was evicted → touching it again reopens it
+        // (and still reads correctly); the most recent one is a hit.
+        assert_eq!(cache.reader(&paths[0]).unwrap().read_f64_at(0, 1).unwrap(), vec![0.0]);
+        assert_eq!(cache.opens(), n + 1);
+        cache.reader(&paths[n - 1]).unwrap();
+        assert_eq!(cache.opens(), n + 1, "recent entry must be a cache hit");
     }
 
     #[test]

@@ -355,6 +355,141 @@ mod tests {
     }
 
     #[test]
+    fn nested_scope_panic_propagates_at_the_inner_scope_only() {
+        // A panic inside a *nested* scope must unwind out of the inner
+        // `scoped` call (where the job logically belongs), be catchable
+        // there, and leave the outer scope to complete normally.
+        let pool = WorkPool::new(2);
+        let pool = &pool;
+        let outer_done = AtomicU64::new(0);
+        let inner_caught = AtomicU64::new(0);
+        pool.scoped(|outer| {
+            for i in 0..4 {
+                let (outer_done, inner_caught) = (&outer_done, &inner_caught);
+                outer.execute(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        pool.scoped(|inner| {
+                            inner.execute(move || {
+                                if i == 2 {
+                                    panic!("inner boom {i}");
+                                }
+                            });
+                        });
+                    }));
+                    if r.is_err() {
+                        inner_caught.fetch_add(1, Ordering::SeqCst);
+                    }
+                    outer_done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(outer_done.load(Ordering::SeqCst), 4);
+        assert_eq!(inner_caught.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn string_panic_payloads_survive_the_pool_hop() {
+        // panic! with a formatted (String) payload — the common case in
+        // numeric code — must come back verbatim, not as the generic
+        // wrapper message.
+        let pool = WorkPool::new(1);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.execute(|| panic!("layer {} went NaN", 7));
+            });
+        }));
+        let payload = result.expect_err("panic must propagate");
+        assert_eq!(
+            payload.downcast_ref::<String>().map(String::as_str),
+            Some("layer 7 went NaN")
+        );
+    }
+
+    #[test]
+    fn first_of_several_panics_wins_and_all_jobs_join() {
+        let pool = WorkPool::new(0); // submitter runs every job, in order
+        let ran = AtomicU64::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                for i in 0..4 {
+                    let ran = &ran;
+                    scope.execute(move || {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                        panic!("boom {i}");
+                    });
+                }
+            });
+        }));
+        let payload = result.expect_err("panics must propagate");
+        // Zero-worker pools run jobs in submission order on the waiting
+        // thread, so "first caught" is deterministic here.
+        assert_eq!(
+            payload.downcast_ref::<String>().map(String::as_str),
+            Some("boom 0")
+        );
+        // Every sibling still ran to completion before the re-throw.
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn unwinding_submitter_still_joins_its_jobs() {
+        // The scope closure itself panics after submitting: the
+        // WaitGuard must still run/join every submitted job before the
+        // unwind escapes, so no borrow outlives the scope.
+        let pool = WorkPool::new(1);
+        let ran = Arc::new(AtomicU64::new(0));
+        let result = {
+            let ran = Arc::clone(&ran);
+            catch_unwind(AssertUnwindSafe(|| {
+                pool.scoped(|scope| {
+                    for _ in 0..8 {
+                        let ran = Arc::clone(&ran);
+                        scope.execute(move || {
+                            ran.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    panic!("submitter unwinds");
+                });
+            }))
+        };
+        assert!(result.is_err());
+        assert_eq!(ran.load(Ordering::SeqCst), 8, "jobs must be joined on unwind");
+        // The pool survives for the next scope.
+        let ok = AtomicU64::new(0);
+        pool.scoped(|scope| {
+            scope.execute(|| {
+                ok.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn zero_worker_nested_scopes_complete() {
+        // With no pool workers at all, nested scopes are executed
+        // entirely by the (helping) submitting threads — the
+        // no-idle-submitter guarantee composed twice.
+        let pool = WorkPool::new(0);
+        let pool = &pool;
+        let total = AtomicU64::new(0);
+        pool.scoped(|outer| {
+            for _ in 0..3 {
+                let total = &total;
+                outer.execute(move || {
+                    pool.scoped(|inner| {
+                        for _ in 0..3 {
+                            inner.execute(|| {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
     fn global_pool_is_shared_and_sized() {
         let a = WorkPool::global() as *const _;
         let b = WorkPool::global() as *const _;

@@ -3,12 +3,14 @@
 //! speedup sanity, and cross-validation of the split+quantize numerics
 //! against the semantics documented in python/compile/metis.py.
 
+use metis::data::evalsplit::scan_eval_split;
 use metis::formats::{self, Format};
 use metis::linalg::jacobi_svd;
 use metis::metis::{
-    gradient_split, pipeline, quantizer, train_native, train_native_with, weight_split,
-    DecompStrategy, GradStepConfig, MetisQuantConfig, NativeTrainConfig, Optim, PipelineConfig,
-    SigmaRef, StepReport,
+    gradient_split, pipeline, quantizer, train_native, train_native_evented, train_native_with,
+    weight_split, DecompStrategy, EvalConfig, EvalState, GradStepConfig, LayerSpec,
+    MetisQuantConfig, NativeEvent, NativeTrainConfig, Optim, PipelineConfig, SigmaRef, StepReport,
+    TrainState,
 };
 use metis::tensor::Matrix;
 use metis::util::json::Json;
@@ -190,10 +192,12 @@ fn peak_rss_kb() -> Option<u64> {
 #[ignore = "4096x4096 streaming sweep — run in the release CI job"]
 fn blocked_4k_layer_streams_with_bounded_memory() {
     // The acceptance scenario: a paper-scale 4096² layer, generated
-    // row-by-row through the streaming writer (never resident), swept
-    // through quantize→measure→report as 8 streamed 4096×512 column
-    // blocks with the sampled σ reference.  The job log gets a VmHWM
-    // note so memory regressions on this path are visible in CI.
+    // row-by-row through the streaming writer (never resident), (a)
+    // packed through the streamed init-time Eq. 3 path as 4096×512
+    // column blocks, then (b) swept through quantize→measure→report as
+    // 8 streamed column blocks with the sampled σ reference.  The job
+    // log gets a VmHWM note after each phase so memory regressions on
+    // either streaming path are visible in CI.
     let dir = std::env::temp_dir().join("metis_4k_ckpt");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
@@ -212,6 +216,67 @@ fn blocked_4k_layer_streams_with_bounded_memory() {
         w.finish().unwrap();
     }
 
+    // --- phase (a): streamed init-time packing --------------------------
+    // Runs first so its VmHWM reading is not masked by the sweep's.
+    // Resident by design: the f64 master + cached effective weight
+    // (2 × 128 MB); transient: one 4096×512 split workspace per worker.
+    // The pre-streaming path materialized whole-matrix split workspaces
+    // (residual + low-rank + effective + factor copies ≈ 5 × 128 MB on
+    // top), so the envelope below fails if init regresses to it.
+    {
+        let specs = pipeline::scan_checkpoint_dir(&dir).unwrap();
+        let quant = MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::SparseSample,
+            rho: 0.05,
+            max_rank: 32,
+        };
+        let watch = std::time::Instant::now();
+        // 2 packing workers: enough to prove sharding, small enough
+        // that the per-worker block workspaces keep the envelope well
+        // under the ≈ 770 MB the whole-matrix packing path peaks at.
+        let state = TrainState::init_specs(
+            specs,
+            quant,
+            GradStepConfig::default(),
+            Optim::Sgd,
+            1,
+            512,
+            2,
+        )
+        .unwrap();
+        assert_eq!(state.layers.len(), 1);
+        let pw = &state.layers[0];
+        assert_eq!(pw.blocks.len(), n / 512);
+        assert_eq!((pw.master.rows, pw.master.cols), (n, n));
+        // Accuracy probe on one column block (a whole-matrix sub would
+        // add a 128 MB transient right before the RSS reading).
+        let rel = pw.effective().col_block(0, 512).sub(&pw.master.col_block(0, 512)).frob_norm()
+            / pw.master.col_block(0, 512).frob_norm();
+        assert!(rel.is_finite() && rel > 0.0 && rel < 0.5, "packing error: {rel:.3}");
+        match peak_rss_kb() {
+            Some(kb) => {
+                let mb = kb as f64 / 1024.0;
+                println!(
+                    "RSS note: VmHWM {mb:.0} MB after streamed 4096x4096 packed init \
+                     ({} blocks of 4096x512, {:.0} ms; master+effective resident = 256 MB)",
+                    n / 512,
+                    watch.elapsed().as_secs_f64() * 1e3,
+                );
+                // PR 3 streaming envelope: master + effective (256 MB)
+                // plus per-worker block workspaces — a regression to
+                // whole-matrix split workspaces (≥ 5 extra 128 MB
+                // buffers, ≈ 770 MB+) trips this.
+                assert!(
+                    mb < 640.0,
+                    "packed init VmHWM {mb:.0} MB exceeds the streaming envelope"
+                );
+            }
+            None => println!("RSS note: /proc/self/status unavailable on this platform"),
+        }
+    }
+
+    // --- phase (b): streamed quantize→measure→report sweep --------------
     let specs = pipeline::scan_checkpoint_dir(&dir).unwrap();
     assert_eq!(specs.len(), 1);
     assert_eq!((specs[0].rows, specs[0].cols), (n, n));
@@ -323,6 +388,7 @@ fn native_cfg(threads: usize) -> NativeTrainConfig {
         },
         optim: Optim::Sgd,
         repack_every: 0,
+        pack_block_cols: 1024,
     }
 }
 
@@ -432,6 +498,249 @@ fn native_loop_streams_valid_jsonl_reports() {
     let text = std::fs::read_to_string(&path).unwrap();
     assert_eq!(text.lines().count(), 6);
     assert_eq!(text.lines().next().unwrap(), lines[0]);
+}
+
+#[test]
+fn train_native_eval_every_streams_heldout_rows() {
+    // The tentpole wiring: --eval-every N interleaves held-out eval
+    // rows with the step rows.  The fidelity curve must be valid JSONL,
+    // decrease as the masters converge on the planted targets, and be
+    // bit-identical across thread counts (every field except the wall
+    // time).
+    let cfg = |threads| NativeTrainConfig {
+        n_layers: 1,
+        d_model: 24,
+        steps: 12,
+        batch: 16,
+        lr: 0.03,
+        warmup: 2,
+        seed: 9,
+        threads,
+        quant: MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::SparseSample,
+            rho: 0.15,
+            max_rank: 16,
+        },
+        grad: GradStepConfig::default(),
+        optim: Optim::Sgd,
+        repack_every: 0,
+        pack_block_cols: 1024,
+    };
+    let ecfg = |threads| EvalConfig {
+        threads,
+        batch: 16,
+        batches: 3,
+        seed: 9,
+        sigma_dim_cap: 256,
+        block_cols: 1024,
+        fmt: Format::Nvfp4,
+    };
+    let run = |threads| {
+        let harness = EvalState::synthetic(ecfg(threads)).unwrap();
+        let mut lines: Vec<String> = Vec::new();
+        let res = train_native_evented(&cfg(threads), Some((4, &harness)), &mut |ev| {
+            if let NativeEvent::Eval(er) = ev {
+                lines.push(er.to_json().to_string());
+            }
+        })
+        .unwrap();
+        (res, lines)
+    };
+    let (r1, lines1) = run(1);
+    let (r3, _) = run(3);
+
+    assert_eq!(r1.evals.len(), 3); // steps 3, 7, 11
+    assert_eq!(lines1.len(), 3);
+    for (i, line) in lines1.iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.req("event").unwrap().as_str().unwrap(), "eval");
+        assert_eq!(j.req("step").unwrap().as_usize().unwrap(), 4 * i + 3);
+        assert!(j.req("heldout_loss").unwrap().as_f64().unwrap().is_finite());
+        let layers = j.req("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 4);
+        for l in layers {
+            assert!(l.req("sigma_err").unwrap().as_f64().unwrap() > 0.0);
+            assert!(l.req("logit_div").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+    // Fidelity curve: held-out loss falls as the masters converge.
+    assert!(
+        r1.evals.last().unwrap().heldout_loss < r1.evals[0].heldout_loss,
+        "held-out loss did not decrease: {} -> {}",
+        r1.evals[0].heldout_loss,
+        r1.evals.last().unwrap().heldout_loss
+    );
+    // Thread-count bit-identity of every value (eval_ms excepted).
+    assert_eq!(r1.losses(), r3.losses());
+    for (a, b) in r1.evals.iter().zip(&r3.evals) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.heldout_loss, b.heldout_loss);
+        assert_eq!(a.perplexity, b.perplexity);
+        assert_eq!(a.logit_div, b.logit_div);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name);
+            assert_eq!(la.loss, lb.loss);
+            assert_eq!(la.logit_div, lb.logit_div);
+            assert_eq!(la.sigma_err, lb.sigma_err);
+            assert_eq!(la.sigma_tail, lb.sigma_tail);
+        }
+    }
+    // write_eval_jsonl mirrors the streamed rows.
+    let dir = std::env::temp_dir().join("metis_native_eval");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("evals.jsonl");
+    r1.write_eval_jsonl(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 3);
+}
+
+#[test]
+fn eval_loss_is_bit_identical_for_1_vs_4_workers_on_the_same_split() {
+    // The satellite contract: the same on-disk validation split, 1 vs 4
+    // eval workers → bit-identical eval loss (and every other value).
+    let dir = std::env::temp_dir().join("metis_eval_split_threads");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(31);
+    // Widths matching the d16 synthetic model: rows 16 (qkv/attn/ffn_in)
+    // and 64 (ffn_out).
+    for (name, b, d) in [("x16", 8usize, 16usize), ("x64", 6, 64)] {
+        Matrix::gaussian(&mut rng, b, d, 1.0)
+            .save_npy(dir.join(format!("{name}.npy")))
+            .unwrap();
+    }
+    let specs = || -> Vec<LayerSpec> {
+        pipeline::synthetic_model(1, 16, 7)
+            .into_iter()
+            .map(|l| LayerSpec::mem(l.name, l.w))
+            .collect()
+    };
+    let quant = MetisQuantConfig {
+        fmt: Format::PaperFp4,
+        strategy: DecompStrategy::SparseSample,
+        rho: 0.15,
+        max_rank: 16,
+    };
+    let run = |threads| {
+        let cfg = EvalConfig {
+            threads,
+            block_cols: 24, // wide layers fan out into several units
+            sigma_dim_cap: 8, // exercises the sampled σ reference too
+            ..EvalConfig::default()
+        };
+        EvalState::with_split(cfg, scan_eval_split(&dir).unwrap())
+            .unwrap()
+            .eval_specs(&specs(), &quant, 7, None)
+            .unwrap()
+    };
+    let (r1, r4) = (run(1), run(4));
+    assert_eq!(r1.heldout_loss, r4.heldout_loss, "eval loss diverged across workers");
+    assert_eq!(r1.perplexity, r4.perplexity);
+    assert_eq!(r1.logit_div, r4.logit_div);
+    for (a, b) in r1.layers.iter().zip(&r4.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.sigma_err, b.sigma_err);
+    }
+    // And the rows are meaningful: finite, positive fidelity columns.
+    assert!(r1.heldout_loss.is_finite() && r1.heldout_loss > 0.0);
+    assert!(r1.logit_div > 0.0 && r1.logit_div < 1.0);
+
+    // A mismatched split must fail train-native at startup — before a
+    // single step runs — not at the first scheduled eval.
+    let bad_cfg = NativeTrainConfig {
+        n_layers: 1,
+        d_model: 24, // no 24- or 96-wide batches in this split
+        steps: 8,
+        seed: 1,
+        ..NativeTrainConfig::default()
+    };
+    let harness = EvalState::with_split(EvalConfig::default(), scan_eval_split(&dir).unwrap())
+        .unwrap();
+    let mut steps_seen = 0usize;
+    let err = train_native_evented(&bad_cfg, Some((4, &harness)), &mut |ev| {
+        if matches!(ev, NativeEvent::Step(_)) {
+            steps_seen += 1;
+        }
+    })
+    .unwrap_err();
+    assert_eq!(steps_seen, 0, "mismatched split must fail before step 0");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("width 24"), "{msg}");
+}
+
+#[test]
+fn streamed_packed_init_from_disk_matches_resident_packing() {
+    // init_specs over a scanned checkpoint dir (streamed column blocks,
+    // 3 threads) must produce the same packed state as the same
+    // matrices packed resident — and training from it must behave
+    // identically.
+    let dir = std::env::temp_dir().join("metis_packed_init_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(23);
+    let mats: Vec<(String, Matrix)> = [("wide", 24usize, 72usize), ("square", 32, 32)]
+        .into_iter()
+        .map(|(name, m, n)| {
+            let w = pipeline::planted_powerlaw(&mut rng, m, n, 1.5);
+            w.save_npy(dir.join(format!("{name}.npy"))).unwrap();
+            (name.to_string(), w)
+        })
+        .collect();
+    let quant = MetisQuantConfig {
+        fmt: Format::Nvfp4,
+        strategy: DecompStrategy::SparseSample,
+        rho: 0.12,
+        max_rank: 24,
+    };
+    let g = GradStepConfig::default();
+    let disk = TrainState::init_specs(
+        pipeline::scan_checkpoint_dir(&dir).unwrap(),
+        quant,
+        g,
+        Optim::Sgd,
+        5,
+        32,
+        3,
+    )
+    .unwrap();
+    // Resident copy: identical f32-roundtripped payloads via mem specs.
+    let mem_specs: Vec<LayerSpec> = pipeline::scan_checkpoint_dir(&dir)
+        .unwrap()
+        .iter()
+        .map(|s| LayerSpec::mem(s.name.clone(), s.read_all().unwrap()))
+        .collect();
+    let mem = TrainState::init_specs(mem_specs, quant, g, Optim::Sgd, 5, 32, 1).unwrap();
+    assert_eq!(disk.layers.len(), 2);
+    // Name-sorted scan: "square" first, then "wide" (3 blocks).
+    assert_eq!(disk.layers[0].name, "square");
+    assert_eq!(disk.layers[0].blocks.len(), 1);
+    assert_eq!(disk.layers[1].blocks.len(), 3);
+    for ((d, m), (_, want)) in disk.layers.iter().zip(&mem.layers).zip(
+        mats.iter()
+            .filter(|(n, _)| n.as_str() == "square")
+            .chain(mats.iter().filter(|(n, _)| n.as_str() == "wide")),
+    ) {
+        assert_eq!(d.name, m.name);
+        assert_eq!(d.master, m.master);
+        assert_eq!(d.effective(), m.effective());
+        // The master is the f32 roundtrip of what was written.
+        let err = d
+            .master
+            .sub(&Matrix::from_f32(
+                want.rows,
+                want.cols,
+                &want.data.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            ))
+            .frob_norm();
+        assert!(err < 1e-12, "{}: master diverges from blob: {err:.2e}", d.name);
+        for (bd, bm) in d.blocks.iter().zip(&m.blocks) {
+            assert_eq!(bd.s, bm.s);
+            assert_eq!(bd.uq, bm.uq);
+            assert_eq!(bd.vtq, bm.vtq);
+        }
+    }
 }
 
 #[test]

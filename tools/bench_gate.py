@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate for BENCH_PERF.json.
+
+Compares a freshly generated BENCH_PERF.json against the committed
+baseline and fails (exit 1) if any *paired new/old throughput ratio*
+regresses by more than the threshold (default 15%).
+
+What is compared: BENCH_PERF.json records paired old/new kernel rows —
+each `speedup` field is the new-kernel/old-kernel throughput ratio
+measured on the *same machine in the same run*, so comparing speedups
+across runs is machine-portable in a way absolute GFLOP/s numbers are
+not (CI runners differ from whatever produced the baseline).  A fresh
+speedup falling below `threshold × baseline speedup` means the
+optimized kernel lost ground against its own preserved reference — a
+genuine code regression, not runner noise about absolute throughput.
+
+Usage:
+    bench_gate.py --baseline OLD.json --current NEW.json [--threshold 0.85]
+    bench_gate.py --self-test
+
+The self-test exercises the gate against synthetic fixtures (identical
+docs pass; a >15% regression fails; improvements and null metrics
+don't) and is wired into CI so the gate itself is continuously tested.
+"""
+
+import argparse
+import copy
+import json
+import sys
+
+# (human label, path) of every gated ratio metric.  Paths step through
+# dicts by key; a ("gemm", dim) pair selects the gemm row whose "dim"
+# field matches.
+GATED_METRICS = [
+    ("gemm 64² tiled speedup", (("gemm", 64), "speedup_tiled")),
+    ("gemm 64² kernel speedup", (("gemm", 64), "speedup_kernel")),
+    ("gemm 256² tiled speedup", (("gemm", 256), "speedup_tiled")),
+    ("gemm 256² kernel speedup", (("gemm", 256), "speedup_kernel")),
+    ("gemm 1024² tiled speedup", (("gemm", 1024), "speedup_tiled")),
+    ("gemm 1024² kernel speedup", (("gemm", 1024), "speedup_kernel")),
+    ("jacobi 256² speedup", ("jacobi_256", "speedup")),
+    ("quantize flat speedup", ("quantize", "flat_speedup")),
+    ("quantize axis-0 speedup", ("quantize", "axis0_speedup")),
+    ("train-native step speedup", ("train_native_step", "speedup")),
+]
+
+
+def lookup(doc, path):
+    """Resolve a metric path; None when absent/null/non-numeric."""
+    node = doc
+    for part in path:
+        if isinstance(part, tuple):  # ("gemm", dim) row selector
+            key, dim = part
+            rows = node.get(key)
+            if not isinstance(rows, list):
+                return None
+            node = next((r for r in rows if r.get("dim") == dim), None)
+        elif isinstance(node, dict):
+            node = node.get(part)
+        else:
+            return None
+        if node is None:
+            return None
+    return node if isinstance(node, (int, float)) else None
+
+
+def gate(baseline, current, threshold):
+    """Compare gated metrics; returns (regressions, rows) where rows are
+    (label, old, new, ratio, status) for the report table."""
+    regressions = []
+    rows = []
+    for label, path in GATED_METRICS:
+        old = lookup(baseline, path)
+        new = lookup(current, path)
+        if old is None or new is None or old <= 0:
+            rows.append((label, old, new, None, "skipped (missing/null)"))
+            continue
+        ratio = new / old
+        if ratio < threshold:
+            status = f"REGRESSION ({(1 - ratio) * 100:.1f}% below baseline)"
+            regressions.append(label)
+        else:
+            status = "ok"
+        rows.append((label, old, new, ratio, status))
+    return regressions, rows
+
+
+def print_report(rows, threshold):
+    fmt = lambda x: "-" if x is None else f"{x:.3f}"
+    width = max(len(r[0]) for r in rows)
+    print(f"bench gate (fail below {threshold:.2f}x of baseline):")
+    for label, old, new, ratio, status in rows:
+        print(
+            f"  {label:<{width}}  baseline {fmt(old):>7}  "
+            f"current {fmt(new):>7}  ratio {fmt(ratio):>6}  {status}"
+        )
+
+
+def run_gate(baseline_path, current_path, threshold):
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+    regressions, rows = gate(baseline, current, threshold)
+    print_report(rows, threshold)
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} gated metric(s) regressed >"
+              f"{(1 - threshold) * 100:.0f}%: {', '.join(regressions)}")
+        return 1
+    compared = sum(1 for r in rows if r[3] is not None)
+    if compared == 0:
+        print("\nFAIL: no gated metrics were comparable — schema drift?")
+        return 1
+    print(f"\nPASS: {compared} gated metric(s) within threshold")
+    return 0
+
+
+def fixture():
+    """A miniature BENCH_PERF.json with every gated metric present."""
+    return {
+        "schema": "metis-perf-hotpath-v1",
+        "gemm": [
+            {"dim": 64, "speedup_tiled": 2.0, "speedup_kernel": 2.0},
+            {"dim": 256, "speedup_tiled": 2.5, "speedup_kernel": 3.5},
+            {"dim": 1024, "speedup_tiled": 1.8, "speedup_kernel": 2.7},
+        ],
+        "jacobi_256": {"speedup": 1.9},
+        "quantize": {"flat_speedup": 1.2, "axis0_speedup": None},
+        "train_native_step": {"speedup": 3.7},
+    }
+
+
+def self_test():
+    failures = []
+
+    def check(name, cond):
+        print(f"  self-test {name}: {'ok' if cond else 'FAILED'}")
+        if not cond:
+            failures.append(name)
+
+    base = fixture()
+    # 1. Identical baseline/current must pass.
+    regs, _ = gate(base, copy.deepcopy(base), 0.85)
+    check("identical docs pass", regs == [])
+
+    # 2. A synthetic >15% regression on one paired ratio must fail.
+    regressed = copy.deepcopy(base)
+    regressed["gemm"][1]["speedup_kernel"] = base["gemm"][1]["speedup_kernel"] * 0.80
+    regs, _ = gate(base, regressed, 0.85)
+    check(">15% regression fails", regs == ["gemm 256² kernel speedup"])
+
+    # 3. A regression on a non-gemm metric is also caught.
+    regressed = copy.deepcopy(base)
+    regressed["train_native_step"]["speedup"] = 3.7 * 0.5
+    regs, _ = gate(base, regressed, 0.85)
+    check("step-speedup regression fails", regs == ["train-native step speedup"])
+
+    # 4. A <15% dip and improvements must pass.
+    wobbly = copy.deepcopy(base)
+    wobbly["jacobi_256"]["speedup"] = 1.9 * 0.90
+    wobbly["gemm"][0]["speedup_tiled"] = 4.0
+    regs, _ = gate(base, wobbly, 0.85)
+    check("small dip + improvements pass", regs == [])
+
+    # 5. Nulls / missing metrics are skipped, never spurious failures.
+    sparse = copy.deepcopy(base)
+    sparse["quantize"]["flat_speedup"] = None
+    del sparse["jacobi_256"]
+    regs, rows = gate(base, sparse, 0.85)
+    skipped = [r for r in rows if r[4].startswith("skipped")]
+    check("nulls and missing skip", regs == [] and len(skipped) == 3)
+
+    # 6. Totally incomparable docs fail the run (schema-drift guard) —
+    # exercised through gate(): zero comparable rows.
+    regs, rows = gate({}, {}, 0.85)
+    check(
+        "schema drift detected",
+        regs == [] and all(r[3] is None for r in rows),
+    )
+
+    if failures:
+        print(f"self-test FAILED: {failures}")
+        return 1
+    print("self-test passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", help="committed BENCH_PERF.json")
+    ap.add_argument("--current", help="freshly generated BENCH_PERF.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.85,
+        help="fail when current/baseline ratio drops below this (default 0.85 = >15%% regression)",
+    )
+    ap.add_argument("--self-test", action="store_true", help="run the gate's own fixtures")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.baseline or not args.current:
+        ap.error("--baseline and --current are required (or use --self-test)")
+    sys.exit(run_gate(args.baseline, args.current, args.threshold))
+
+
+if __name__ == "__main__":
+    main()
