@@ -243,6 +243,52 @@ fn main() -> anyhow::Result<()> {
         ]),
     ));
 
+    // --- 5. observability overhead ----------------------------------------
+    // Same train-native loop with span/metric recording off vs on; the
+    // off/on wall ratio is the tracing-overhead row the bench gate
+    // holds to an absolute floor (contract: <= 1% overhead when
+    // enabled).  Ring buffers and counters are reset between runs so
+    // the enabled run pays full recording cost, and the losses must
+    // stay bit-identical — recording never touches the math.
+    metis::obs::set_enabled(false);
+    let res_off = metis::metis::train_native(&cfg)?;
+    metis::obs::MetricsRegistry::reset();
+    metis::obs::reset_trace();
+    metis::obs::set_enabled(true);
+    let res_on = metis::metis::train_native(&cfg)?;
+    metis::obs::set_enabled(false);
+    let trace_events = metis::obs::drain_trace().total_events();
+    assert!(
+        res_off.losses() == res_on.losses(),
+        "tracing changed the loss stream"
+    );
+    assert!(trace_events > 0, "enabled run recorded no spans");
+    let (off_step, on_step) = (
+        res_off.wall_ms / cfg.steps as f64,
+        res_on.wall_ms / cfg.steps as f64,
+    );
+    let mut t5 = Table::new(
+        "observability overhead (same train-native loop, tracing off vs on)",
+        &["tracing", "ms/step", "spans", "off/on"],
+    );
+    t5.row(vec!["off".into(), fmt_f(off_step, 1), "0".into(), "1.0x".into()]);
+    t5.row(vec![
+        "on".into(),
+        fmt_f(on_step, 1),
+        format!("{trace_events}"),
+        fmt_ratio(off_step, on_step),
+    ]);
+    t5.print();
+    json.push((
+        "obs_overhead",
+        Json::obj(vec![
+            ("off_ms_per_step", Json::num_or_null(off_step)),
+            ("on_ms_per_step", Json::num_or_null(on_step)),
+            ("speedup", Json::num_or_null(off_step / on_step)),
+            ("trace_events", Json::num(trace_events as f64)),
+        ]),
+    ));
+
     // --- emit -------------------------------------------------------------
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -88,7 +88,8 @@ USAGE:
                   [--rho F] [--max-rank N] [--seed N] [--threads N]
                   [--block-cols N] [--sigma-cap N] [--eval-split DIR]
                   [--batches N] [--batch N] [--layers N] [--d-model N]
-                  [--out report.jsonl]
+                  [--out report.jsonl] [--trace-out trace.json]
+                  [--metrics-out metrics.json]
       Native held-out eval harness (no PJRT needed): pack a checkpoint
       dir of .npy weights (or, without CKPT_DIR, the synthetic model)
       through the Eq. 3 split and run a forward-only held-out pass —
@@ -111,7 +112,8 @@ USAGE:
                   [--threads N] [--rho F] [--max-rank N] [--seed N]
                   [--layers N] [--d-model N] [--sigma-cap N] [--no-sigma]
                   [--sigma-ref sampled|full] [--block-cols N]
-                  [--out report.jsonl]
+                  [--out report.jsonl] [--trace-out trace.json]
+                  [--metrics-out metrics.json]
       Pure-Rust Metis pipeline: sweep a checkpoint dir of .npy weights
       (or, without --ckpt, a synthetic anisotropic model of --layers
       transformer blocks at width --d-model) through the Eq. 3 split +
@@ -140,6 +142,7 @@ USAGE:
                   [--block-cols N] [--eval-every N] [--eval-split DIR]
                   [--eval-batches N] [--eval-batch N] [--sigma-cap N]
                   [--out steps.jsonl] [--eval-out evals.jsonl]
+                  [--trace-out trace.json] [--metrics-out metrics.json]
       Pure-Rust W4A4G4 training loop, no PJRT needed: a synthetic
       anisotropic model is packed once via the Eq. 3 split (quantized
       factors, high-precision S; layers wider than --block-cols pack as
@@ -155,6 +158,28 @@ USAGE:
       the planted targets, per-layer σ-distortion vs the masters, logit
       divergence) over --eval-split batches or deterministic eval-only
       probe streams; --eval-out mirrors the eval rows to a file.
+  metis trace summarize DIR
+      Offline observability join: read a run's run.json manifest,
+      Chrome trace (trace.json), metrics.json snapshot and every
+      *.jsonl stream under DIR, and print per-phase wall/CPU
+      breakdowns, the top slowest (layer, block) units, and per-stream
+      event counts + seq ranges.
+
+Observability: eval / quantize-model / train-native accept
+--trace-out FILE and --metrics-out FILE.  Either flag turns on
+process-wide span + metric recording (off by default, <= 1% overhead
+when on, bit-identical outputs either way).  --trace-out writes a
+Chrome trace-event JSON loadable in Perfetto / chrome://tracing with
+per-worker rows of pipeline/pack/train/eval unit spans down to
+kernel-level GEMM and Jacobi phases; --metrics-out writes a stamped
+snapshot of the typed counters (quantizer clip/underflow per format,
+GEMM GFLOP/s per shape class, workpool queue depth + helper steals,
+reader-cache hit/miss, sigma-distortion running max, packed bytes),
+and train-native additionally interleaves a metrics row every 10
+steps.  A run.json manifest (run_id, command, seed, config, build
+info, stream file list) is written next to the artifacts; every JSONL
+row of the run carries the same run_id plus schema_version and a
+monotonic seq for offline joining.
 
 Artifacts default to ./artifacts (built by `make artifacts`);
 override with --artifacts or METIS_ARTIFACTS.

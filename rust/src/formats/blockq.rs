@@ -41,6 +41,10 @@ const MAX_BLOCK: usize = 128;
 pub fn quantize_slice_into(fmt: Format, xs: &[f32], out: &mut [f32]) {
     assert_eq!(xs.len(), out.len(), "quantize_slice_into length mismatch");
     let block = fmt.block();
+    // Per-element clip/underflow tallies are a second read-only walk,
+    // gated so disabled runs keep the historical single-pass loop.
+    let observe = crate::obs::enabled();
+    let (mut underflow, mut clip) = (0u64, 0u64);
     for (xc, oc) in xs.chunks(block).zip(out.chunks_mut(block)) {
         let mut amax = 0.0f32;
         for &x in xc {
@@ -50,6 +54,19 @@ pub fn quantize_slice_into(fmt: Format, xs: &[f32], out: &mut [f32]) {
         for (&x, o) in xc.iter().zip(oc.iter_mut()) {
             *o = fmt.elem(x / s) * s;
         }
+        if observe {
+            let lim = s * fmt.elem_max();
+            for (&x, &q) in xc.iter().zip(oc.iter()) {
+                underflow += u64::from(x != 0.0 && q == 0.0);
+                clip += u64::from(x.abs() > lim);
+            }
+        }
+    }
+    if observe {
+        let m = crate::obs::metrics::metrics();
+        m.quant_elems.add(fmt, xs.len() as u64);
+        m.quant_underflow.add(fmt, underflow);
+        m.quant_clip.add(fmt, clip);
     }
 }
 

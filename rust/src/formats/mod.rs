@@ -54,6 +54,17 @@ impl Format {
         }
     }
 
+    /// Dense index of this format in [`Format::ALL`] order — used by
+    /// per-format metric arrays (`obs::metrics::PerFormat`).
+    pub fn index(&self) -> usize {
+        match self {
+            Format::Mxfp4 => 0,
+            Format::Nvfp4 => 1,
+            Format::Fp8 => 2,
+            Format::PaperFp4 => 3,
+        }
+    }
+
     pub fn from_name(s: &str) -> Option<Format> {
         match s {
             "mxfp4" => Some(Format::Mxfp4),

@@ -25,6 +25,7 @@ pub mod data;
 pub mod formats;
 pub mod linalg;
 pub mod metis;
+pub mod obs;
 pub mod probe;
 pub mod runtime;
 pub mod spectral;

@@ -331,6 +331,37 @@ where
 
 // -- public entry points --------------------------------------------------
 
+/// Observability probe for one GEMM dispatch: samples achieved GFLOP/s
+/// into the per-shape-class histograms and opens a `"gemm"` span for
+/// pool-sized products.  `None` (zero-cost) while recording is off —
+/// the timing itself is the gated part, so disabled runs never call
+/// `Instant::now` here.
+struct GemmProbe {
+    flops: usize,
+    t0: std::time::Instant,
+    _span: Option<crate::obs::span::Span>,
+}
+
+impl GemmProbe {
+    #[inline]
+    fn start(flops: usize) -> Option<GemmProbe> {
+        if !crate::obs::enabled() {
+            return None;
+        }
+        Some(GemmProbe {
+            flops,
+            t0: std::time::Instant::now(),
+            _span: (flops >= PAR_FLOPS).then(|| crate::obs::span::span("gemm")),
+        })
+    }
+}
+
+impl Drop for GemmProbe {
+    fn drop(&mut self) {
+        crate::obs::metrics::record_gemm(self.flops, self.t0.elapsed().as_secs_f64());
+    }
+}
+
 /// C = A·B through the tiled kernel (pool-parallel above
 /// [`PAR_FLOPS`]).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -344,6 +375,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
         return c;
     }
     let flops = 2 * m * n * k;
+    let _probe = GemmProbe::start(flops);
     run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
         // cslice covers exactly `rows`; rebase the range to it.
         let base = rows.start;
@@ -371,6 +403,7 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
         return c;
     }
     let flops = 2 * m * n * k;
+    let _probe = GemmProbe::start(flops);
     run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
         gemm_at_cols(&a.data, k, m, &b.data, n, rows, cslice);
     });
@@ -389,6 +422,7 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
         return c;
     }
     let flops = 2 * m * n * k;
+    let _probe = GemmProbe::start(flops);
     run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
         let base = rows.start;
         gemm_bt_rows(

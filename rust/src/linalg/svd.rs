@@ -93,6 +93,10 @@ pub fn jacobi_svd(a: &Matrix) -> SvdResult {
     if kernels::reference_mode() {
         return jacobi_svd_ref(a);
     }
+    // Span only the nontrivial decompositions — tiny factorizations
+    // (Gram cleanups, test matrices) would flood the rings.
+    let _span = (crate::obs::enabled() && a.rows.min(a.cols) >= 32)
+        .then(|| crate::obs::span::span("jacobi"));
     let transposed = a.rows < a.cols;
     let (m, n) = if transposed {
         (a.cols, a.rows)

@@ -40,11 +40,145 @@ fn run(argv: &[String]) -> Result<()> {
         Some("quant") => cmd_quant(&args),
         Some("quantize-model") => cmd_quantize_model(&args),
         Some("train-native") => cmd_train_native(&args),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
         }
         Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// `metis trace summarize <run-dir>` — offline join of a run's
+/// trace.json / metrics.json / run.json / *.jsonl streams into
+/// per-phase wall+CPU breakdowns and top slowest units.
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("summarize") => {
+            let dir = args.positional.get(2).map(String::as_str).unwrap_or(".");
+            print!("{}", metis::obs::summarize_dir(dir)?);
+            Ok(())
+        }
+        _ => bail!("usage: metis trace summarize <run-dir>"),
+    }
+}
+
+/// Shared `--trace-out` / `--metrics-out` handling for the heavyweight
+/// subcommands.  Constructing the sink turns process-wide span + gated
+/// metric recording on when either flag is present; [`ObsSink::finish`]
+/// drains the artifacts at run end and writes a `run.json` manifest
+/// tying the run's stream files together.
+struct ObsSink {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+}
+
+fn obs_sink(args: &Args) -> ObsSink {
+    let sink = ObsSink {
+        trace_out: args.flags.get("trace-out").cloned(),
+        metrics_out: args.flags.get("metrics-out").cloned(),
+    };
+    if sink.active() {
+        metis::obs::set_enabled(true);
+    }
+    sink
+}
+
+impl ObsSink {
+    fn active(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+
+    /// Drain the trace + metrics artifacts and write the run manifest
+    /// next to the first artifact path.  `streams` lists the JSONL
+    /// stream files this run wrote, so `metis trace summarize` can join
+    /// them offline.
+    fn finish(&self, cmd: &str, seed: u64, config: Json, streams: &[String]) -> Result<()> {
+        if !self.active() {
+            return Ok(());
+        }
+        let mut files: Vec<String> = streams.to_vec();
+        if let Some(path) = &self.trace_out {
+            metis::obs::drain_trace().write_chrome(path)?;
+            eprintln!("trace: {path}");
+            files.push(path.clone());
+        }
+        if let Some(path) = &self.metrics_out {
+            write_json_line(path, &stamped_metrics_row())?;
+            eprintln!("metrics: {path}");
+            files.push(path.clone());
+        }
+        let anchor = self
+            .trace_out
+            .as_ref()
+            .or(self.metrics_out.as_ref())
+            .expect("active sink has at least one artifact path");
+        let manifest = metis::obs::stamp(
+            "run_manifest",
+            metis::obs::schema::RUN_MANIFEST,
+            vec![
+                ("cmd", Json::str(cmd)),
+                (
+                    "argv",
+                    Json::Arr(std::env::args().skip(1).map(|a| Json::str(&a)).collect()),
+                ),
+                ("seed", Json::num(seed as f64)),
+                ("config", config),
+                (
+                    "build",
+                    Json::obj(vec![
+                        ("pkg_version", Json::str(metis::version())),
+                        (
+                            "git_sha",
+                            match option_env!("METIS_BUILD_GIT_SHA") {
+                                Some(sha) => Json::str(sha),
+                                None => Json::Null,
+                            },
+                        ),
+                    ]),
+                ),
+                (
+                    "streams",
+                    Json::Arr(files.iter().map(|f| Json::str(f)).collect()),
+                ),
+            ],
+        );
+        let run_path = match std::path::Path::new(anchor).parent() {
+            Some(dir) if !dir.as_os_str().is_empty() => dir.join("run.json"),
+            _ => std::path::PathBuf::from("run.json"),
+        };
+        write_json_line(&run_path, &manifest)?;
+        eprintln!("run manifest: {}", run_path.display());
+        Ok(())
+    }
+}
+
+fn write_json_line(path: impl AsRef<std::path::Path>, j: &Json) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{j}\n"))?;
+    Ok(())
+}
+
+/// Stamped `event: "metrics"` row wrapping the registry snapshot —
+/// written to `--metrics-out` at run end and emitted periodically in
+/// the train-native step stream.
+fn stamped_metrics_row() -> Json {
+    match metis::obs::metrics_snapshot() {
+        Json::Obj(kvs) => metis::obs::stamp(
+            "metrics",
+            metis::obs::schema::METRICS,
+            kvs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+        ),
+        other => metis::obs::stamp(
+            "metrics",
+            metis::obs::schema::METRICS,
+            vec![("snapshot", other)],
+        ),
     }
 }
 
@@ -217,6 +351,7 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         block_cols: args.usize("block-cols", 1024)?,
         fmt,
     };
+    let sink = obs_sink(args);
     let specs: Vec<LayerSpec> = match ckpt {
         Some(dir) => {
             eprintln!("scanning checkpoint {dir} (streaming) ...");
@@ -269,6 +404,7 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         rep.eval_ms,
         cfg.threads.max(1)
     );
+    let mut streams = Vec::new();
     if let Some(out) = args.flags.get("out") {
         if let Some(dir) = std::path::Path::new(out).parent() {
             if !dir.as_os_str().is_empty() {
@@ -277,7 +413,24 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         }
         std::fs::write(out, format!("{}\n", rep.to_json()))?;
         eprintln!("report: {out}");
+        streams.push(out.clone());
     }
+    sink.finish(
+        "eval",
+        seed,
+        Json::obj(vec![
+            ("fmt", Json::str(fmt.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("rho", Json::num(quant.rho)),
+            ("max_rank", Json::num(quant.max_rank as f64)),
+            ("threads", Json::num(cfg.threads as f64)),
+            ("batch", Json::num(cfg.batch as f64)),
+            ("batches", Json::num(cfg.batches as f64)),
+            ("block_cols", Json::num(cfg.block_cols as f64)),
+            ("sigma_cap", Json::num(cfg.sigma_dim_cap as f64)),
+        ]),
+        &streams,
+    )?;
     Ok(())
 }
 
@@ -340,6 +493,7 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
         block_cols: args.usize("block-cols", 1024)?,
         sigma_ref,
     };
+    let sink = obs_sink(args);
 
     let specs: Vec<LayerSpec> = if let Some(dir) = args.flags.get("ckpt") {
         // Headers only: payloads stream off disk column-block by
@@ -421,10 +575,28 @@ fn cmd_quantize_model(args: &Args) -> Result<()> {
             sig_d / sig_m.max(1e-12)
         );
     }
+    let mut streams = Vec::new();
     if let Some(out) = args.flags.get("out") {
         res.write_jsonl(out)?;
         println!("report: {out}");
+        streams.push(out.clone());
     }
+    sink.finish(
+        "quantize-model",
+        cfg.seed,
+        Json::obj(vec![
+            ("fmt", Json::str(fmt.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("rho", Json::num(cfg.quant.rho)),
+            ("max_rank", Json::num(cfg.quant.max_rank as f64)),
+            ("threads", Json::num(cfg.threads as f64)),
+            ("block_cols", Json::num(cfg.block_cols as f64)),
+            ("sigma_cap", Json::num(cfg.sigma_dim_cap as f64)),
+            ("sigma_ref", Json::str(cfg.sigma_ref.name())),
+            ("measure_sigma", Json::Bool(cfg.measure_sigma)),
+        ]),
+        &streams,
+    )?;
     Ok(())
 }
 
@@ -465,6 +637,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         repack_every: args.usize("repack-every", 0)?,
         pack_block_cols: args.usize("block-cols", 1024)?,
     };
+    let sink = obs_sink(args);
 
     // Held-out eval harness (--eval-every N): fidelity rows stream
     // interleaved with the step rows, over --eval-split batches or
@@ -497,41 +670,74 @@ fn cmd_train_native(args: &Args) -> Result<()> {
 
     // One JSON object per step (and per eval) on stdout: the per-step
     // loop is the product here, so the report stream *is* the primary
-    // output.
+    // output.  With --metrics-out, a stamped metrics row rides along
+    // every 10 steps so the counters are observable mid-run.
+    let periodic_metrics = sink.metrics_out.is_some();
     let res = trainstate::train_native_evented(
         &cfg,
         harness.as_ref().map(|h| (eval_every, h)),
         &mut |ev| match ev {
-            NativeEvent::Step(rep) => println!("{}", rep.to_json()),
+            NativeEvent::Step(rep) => {
+                println!("{}", rep.to_json());
+                if periodic_metrics && (rep.step + 1) % 10 == 0 {
+                    println!("{}", stamped_metrics_row());
+                }
+            }
             NativeEvent::Eval(er) => println!("{}", er.to_json()),
         },
     )?;
+    let mut streams = Vec::new();
     if let Some(out) = args.flags.get("out") {
         res.write_jsonl(out)?;
+        streams.push(out.clone());
     }
     if let Some(out) = args.flags.get("eval-out") {
         res.write_eval_jsonl(out)?;
+        streams.push(out.clone());
     }
     println!(
         "{}",
+        metis::obs::stamp(
+            "done",
+            metis::obs::schema::DONE,
+            vec![
+                ("steps", Json::num(res.reports.len() as f64)),
+                ("evals", Json::num(res.evals.len() as f64)),
+                ("first_loss", Json::num_or_null(res.first_loss())),
+                ("final_loss", Json::num_or_null(res.final_loss())),
+                (
+                    "final_heldout_loss",
+                    Json::num_or_null(res.evals.last().map_or(f64::NAN, |e| e.heldout_loss)),
+                ),
+                ("wall_ms", Json::num_or_null(res.wall_ms)),
+                ("threads", Json::num(res.threads as f64)),
+                ("fmt", Json::str(fmt.name())),
+                ("strategy", Json::str(strategy.name())),
+                ("optim", Json::str(optim.name())),
+                ("diverged", Json::Bool(res.diverged)),
+            ]
+        )
+    );
+    sink.finish(
+        "train-native",
+        cfg.seed,
         Json::obj(vec![
-            ("event", Json::str("done")),
-            ("steps", Json::num(res.reports.len() as f64)),
-            ("evals", Json::num(res.evals.len() as f64)),
-            ("first_loss", Json::num_or_null(res.first_loss())),
-            ("final_loss", Json::num_or_null(res.final_loss())),
-            (
-                "final_heldout_loss",
-                Json::num_or_null(res.evals.last().map_or(f64::NAN, |e| e.heldout_loss)),
-            ),
-            ("wall_ms", Json::num_or_null(res.wall_ms)),
-            ("threads", Json::num(res.threads as f64)),
+            ("layers", Json::num(cfg.n_layers as f64)),
+            ("d_model", Json::num(cfg.d_model as f64)),
+            ("steps", Json::num(cfg.steps as f64)),
+            ("batch", Json::num(cfg.batch as f64)),
+            ("lr", Json::num(cfg.lr)),
+            ("warmup", Json::num(cfg.warmup as f64)),
+            ("threads", Json::num(cfg.threads as f64)),
             ("fmt", Json::str(fmt.name())),
             ("strategy", Json::str(strategy.name())),
             ("optim", Json::str(optim.name())),
-            ("diverged", Json::Bool(res.diverged)),
-        ])
-    );
+            ("repack_every", Json::num(cfg.repack_every as f64)),
+            ("pack_block_cols", Json::num(cfg.pack_block_cols as f64)),
+            ("eval_every", Json::num(eval_every as f64)),
+        ]),
+        &streams,
+    )?;
     if res.diverged {
         anyhow::bail!("native training diverged (non-finite loss)");
     }

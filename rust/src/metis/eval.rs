@@ -154,9 +154,13 @@ pub struct EvalReport {
 }
 
 impl EvalReport {
+    /// Stamped JSONL row (`event: "eval"`, schema v2 — v1 rows carried
+    /// the `event` key but no `run_id`/`schema_version`/`seq` identity).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("event", Json::str("eval")),
+        crate::obs::stamp(
+            "eval",
+            crate::obs::schema::EVAL,
+            vec![
             (
                 "step",
                 match self.step {
@@ -173,7 +177,8 @@ impl EvalReport {
                 "layers",
                 Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
             ),
-        ])
+        ],
+        )
     }
 }
 
@@ -587,6 +592,7 @@ impl EvalState {
         matching: &[Vec<usize>],
         cache: &mut ReaderCache,
     ) -> Result<EvalBlockOut> {
+        let _span = crate::obs::span_ab("eval.unit", u.layer as i64, u.block as i64);
         let (wb, effb, tb) = source.block(u, cache)?;
         let mut loss_sum = 0.0f64;
         let (mut err2, mut ref2) = (0.0f64, 0.0f64);

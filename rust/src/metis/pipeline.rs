@@ -268,8 +268,13 @@ pub struct LayerReport {
 }
 
 impl LayerReport {
+    /// Stamped JSONL row (`event: "layer_report"`, schema v2 — v1 rows
+    /// lacked the `run_id`/`schema_version`/`seq` identity).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        crate::obs::stamp(
+            "layer_report",
+            crate::obs::schema::LAYER_REPORT,
+            vec![
             ("name", Json::str(&self.name)),
             ("rows", Json::num(self.rows as f64)),
             ("cols", Json::num(self.cols as f64)),
@@ -435,23 +440,91 @@ fn process_block(
     }
 }
 
+/// A unit failure tagged with the phase that produced it, so the error
+/// row can say *where* in read → validate → quantize the unit died.
+type UnitResult = std::result::Result<BlockOut, (&'static str, anyhow::Error)>;
+
+/// Structured per-unit failure — everything the JSONL `error` row
+/// carries.  Built by the collector from the failing [`Unit`] plus the
+/// phase-tagged error the worker sent back.
+pub struct UnitError {
+    pub layer: String,
+    pub layer_index: usize,
+    pub block: usize,
+    pub c0: usize,
+    pub width: usize,
+    /// `read` | `validate` | `quantize`.
+    pub phase: &'static str,
+    pub message: String,
+}
+
+impl UnitError {
+    /// Stamped JSONL row (`event: "error"`) naming the unit and phase.
+    pub fn to_json(&self) -> Json {
+        crate::obs::stamp(
+            "error",
+            crate::obs::schema::ERROR,
+            vec![
+                ("layer", Json::str(&self.layer)),
+                ("layer_index", Json::num(self.layer_index as f64)),
+                ("block", Json::num(self.block as f64)),
+                ("c0", Json::num(self.c0 as f64)),
+                ("width", Json::num(self.width as f64)),
+                ("phase", Json::str(self.phase)),
+                ("message", Json::str(&self.message)),
+            ],
+        )
+    }
+
+    /// Fold the structured row into an `anyhow` error: human-readable
+    /// context line on top, machine-readable JSONL row as the root
+    /// cause, so callers logging `{err:#}` emit both.
+    fn into_error(self) -> anyhow::Error {
+        let ctx = format!(
+            "layer {} (block {}, cols [{}, {})) failed in phase {}",
+            self.layer,
+            self.block,
+            self.c0,
+            self.c0 + self.width,
+            self.phase
+        );
+        anyhow!("{}", self.to_json()).context(ctx)
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
 fn process_unit(
     spec: &LayerSpec,
     u: Unit,
     cfg: &PipelineConfig,
     cache: &mut ReaderCache,
-) -> Result<BlockOut> {
-    let wb = spec.read_cols(u.c0, u.width, cache)?;
+) -> UnitResult {
+    let _span = crate::obs::span_ab("pipeline.unit", u.layer as i64, u.block as i64);
+    let wb = spec
+        .read_cols(u.c0, u.width, cache)
+        .map_err(|e| ("read", e))?;
     // Validate up front: a NaN/∞ weight used to surface as a panic deep
     // inside the Jacobi sweep (σ sort), killing the worker and aborting
     // the whole sweep.  Now it is a per-layer error with a name on it.
     if !wb.data.iter().all(|x| x.is_finite()) {
-        bail!(
-            "non-finite weight values in columns [{}, {}) — quantization \
-             and σ measurement require finite inputs",
-            u.c0,
-            u.c0 + u.width
-        );
+        return Err((
+            "validate",
+            anyhow!(
+                "non-finite weight values in columns [{}, {}) — quantization \
+                 and σ measurement require finite inputs",
+                u.c0,
+                u.c0 + u.width
+            ),
+        ));
     }
     let layer_stream = Rng::new(cfg.seed).fold_in(u.layer as u64);
     let mut quant_rng = if u.single {
@@ -460,15 +533,20 @@ fn process_unit(
         layer_stream.fold_in(BLOCK_DOMAIN).fold_in(u.block as u64)
     };
     let sigma_rng = layer_stream.fold_in(SIGMA_DOMAIN).fold_in(u.block as u64);
-    Ok(process_block(
-        &wb,
-        cfg.quant,
-        cfg.measure_sigma,
-        cfg.sigma_dim_cap,
-        cfg.sigma_ref,
-        &mut quant_rng,
-        &sigma_rng,
-    ))
+    // A panic here would poison the pool scope; surface it as this
+    // unit's quantize-phase error instead.
+    catch_unwind(AssertUnwindSafe(|| {
+        process_block(
+            &wb,
+            cfg.quant,
+            cfg.measure_sigma,
+            cfg.sigma_dim_cap,
+            cfg.sigma_ref,
+            &mut quant_rng,
+            &sigma_rng,
+        )
+    }))
+    .map_err(|p| ("quantize", anyhow!("panic during quantize: {}", panic_message(&*p))))
 }
 
 /// Reassemble one layer's report from its column blocks, in block
@@ -572,7 +650,7 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
     // `specs`/`queue` directly — the scope joins them before returning.
     let threads = cfg.threads.max(1).min(n_units);
     let queue = Mutex::new(units);
-    let (tx, rx) = mpsc::channel::<(usize, usize, Result<BlockOut>)>();
+    let (tx, rx) = mpsc::channel::<(Unit, UnitResult)>();
     WorkPool::global().scoped(|scope| {
         for _ in 0..threads {
             let tx = tx.clone();
@@ -587,14 +665,8 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
                     match unit {
                         None => break,
                         Some(u) => {
-                            // A panic would poison the scope; surface it
-                            // as this unit's error instead so the sweep
-                            // fails with a layer name attached.
-                            let out = catch_unwind(AssertUnwindSafe(|| {
-                                process_unit(&specs[u.layer], u, &cfg, &mut cache)
-                            }))
-                            .unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked")));
-                            if tx.send((u.layer, u.block, out)).is_err() {
+                            let out = process_unit(&specs[u.layer], u, &cfg, &mut cache);
+                            if tx.send((u, out)).is_err() {
                                 break;
                             }
                         }
@@ -608,14 +680,24 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
     let mut per_layer: Vec<Vec<(usize, BlockOut)>> = (0..n_layers).map(|_| Vec::new()).collect();
     let mut n_got = 0usize;
     let mut first_err: Option<anyhow::Error> = None;
-    for (layer, block, out) in rx.iter() {
+    for (u, out) in rx.iter() {
         n_got += 1;
         match out {
-            Ok(o) => per_layer[layer].push((block, o)),
-            Err(e) => {
+            Ok(o) => per_layer[u.layer].push((u.block, o)),
+            Err((phase, e)) => {
                 if first_err.is_none() {
-                    first_err =
-                        Some(e.context(format!("layer {} (block {block})", specs[layer].name)));
+                    first_err = Some(
+                        UnitError {
+                            layer: specs[u.layer].name.clone(),
+                            layer_index: u.layer,
+                            block: u.block,
+                            c0: u.c0,
+                            width: u.width,
+                            phase,
+                            message: format!("{e:#}"),
+                        }
+                        .into_error(),
+                    );
                 }
             }
         }
@@ -642,12 +724,16 @@ pub fn run_specs(specs: Vec<LayerSpec>, cfg: &PipelineConfig) -> Result<Pipeline
             );
         }
         let spec = &specs[i];
-        reports.push(reduce_blocks(
+        let rep = reduce_blocks(
             spec.name.clone(),
             spec.rows,
             spec.cols,
             blocks.into_iter().map(|(_, o)| o).collect(),
-        ));
+        );
+        // Running max of per-layer σ distortion (NaN = skipped, ignored
+        // by the gauge) — lands in the metrics.json snapshot.
+        crate::obs::metrics::metrics().sigma_err_max.record(rep.metis_sigma_err);
+        reports.push(rep);
     }
     Ok(PipelineResult {
         reports,
@@ -964,6 +1050,75 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("poisoned"), "error names the layer: {msg}");
         assert!(msg.contains("non-finite"), "error names the cause: {msg}");
+    }
+
+    #[test]
+    fn unit_errors_carry_block_and_phase_in_the_jsonl_row() {
+        // Satellite of the observability issue: a failing unit's error
+        // must embed a machine-readable JSONL `error` row naming the
+        // layer, block index, column range and failing phase.
+        let mut rng = Rng::new(0);
+        let mut w = Matrix::gaussian(&mut rng, 12, 20, 1.0);
+        w[(3, 13)] = f64::NAN; // second 8-column block: cols [8, 16)
+        let layers = vec![Layer {
+            name: "poisoned".into(),
+            w,
+        }];
+        let mut cfg = small_cfg(2);
+        cfg.block_cols = 8;
+        let err = run(layers, &cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        // Human context line.
+        assert!(msg.contains("layer poisoned"), "{msg}");
+        assert!(msg.contains("block 1"), "{msg}");
+        assert!(msg.contains("cols [8, 16)"), "{msg}");
+        assert!(msg.contains("phase validate"), "{msg}");
+        // Machine-readable root cause: a stamped, parseable error row.
+        let row_text = &msg[msg.find("{\"event\":\"error\"").expect("embedded error row")..];
+        let row = Json::parse(row_text).unwrap();
+        assert_eq!(row.req("layer").unwrap().as_str().unwrap(), "poisoned");
+        assert_eq!(row.req("block").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(row.req("c0").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(row.req("width").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(row.req("phase").unwrap().as_str().unwrap(), "validate");
+        assert!(row
+            .req("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("non-finite"));
+        assert!(row.req("run_id").unwrap().as_str().is_ok());
+        assert!(row.req("seq").unwrap().as_usize().is_ok());
+    }
+
+    #[test]
+    fn reports_bit_identical_with_tracing_enabled() {
+        // The observability guarantee: turning spans + gated metrics on
+        // must not perturb a single reported bit.  Blocked + σ-measured
+        // config so the jacobi/gemm/pipeline.unit instrumentation all
+        // actually fire while enabled.
+        let mut cfg = small_cfg(4);
+        cfg.block_cols = 8;
+        cfg.measure_sigma = true;
+        let _guard = crate::obs::span::test_lock();
+        crate::obs::set_enabled(false);
+        let off = run(synthetic_model(1, 16, 9), &cfg).unwrap();
+        crate::obs::set_enabled(true);
+        let on = run(synthetic_model(1, 16, 9), &cfg).unwrap();
+        crate::obs::set_enabled(false);
+        assert_eq!(off.reports.len(), on.reports.len());
+        for (a, b) in off.reports.iter().zip(&on.reports) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.metis_rel_err, b.metis_rel_err);
+            assert_eq!(a.direct_rel_err, b.direct_rel_err);
+            assert_eq!(a.metis_underflow, b.metis_underflow);
+            assert_eq!(a.direct_underflow, b.direct_underflow);
+            assert_eq!(a.metis_sigma_err, b.metis_sigma_err);
+            assert_eq!(a.direct_sigma_err, b.direct_sigma_err);
+            assert_eq!(a.metis_sigma_tail, b.metis_sigma_tail);
+            assert_eq!(a.direct_sigma_tail, b.direct_sigma_tail);
+        }
     }
 
     #[test]

@@ -113,6 +113,11 @@ fn pack_block(
     let k = quant.rank(wb.min_dim());
     let split = weight_split(wb, k, quant.strategy, rng);
     let (uq, vtq, rq) = crate::metis::quantizer::quantize_split_parts(&split, quant.fmt);
+    // Factor payload actually produced by this packing (f64 elements of
+    // Q(U), S, Q(Vᵀ)) — the residual lives only in the effective cache.
+    crate::obs::metrics::metrics()
+        .packed_bytes
+        .add(8 * (uq.data.len() + split.svd.s.len() + vtq.data.len()) as u64);
     let eff = uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq);
     (
         PackedBlock {
@@ -436,18 +441,23 @@ pub struct StepReport {
 }
 
 impl StepReport {
+    /// Stamped JSONL row (`event: "step"`, schema v2 — v1 rows carried
+    /// the `event` key but no `run_id`/`schema_version`/`seq` identity).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("event", Json::str("step")),
-            ("step", Json::num(self.step as f64)),
-            ("loss", Json::num_or_null(self.loss)),
-            ("lr", Json::num(self.lr)),
-            ("ms", Json::num_or_null(self.step_ms)),
-            (
-                "layers",
-                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
-            ),
-        ])
+        crate::obs::stamp(
+            "step",
+            crate::obs::schema::STEP,
+            vec![
+                ("step", Json::num(self.step as f64)),
+                ("loss", Json::num_or_null(self.loss)),
+                ("lr", Json::num(self.lr)),
+                ("ms", Json::num_or_null(self.step_ms)),
+                (
+                    "layers",
+                    Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+                ),
+            ],
+        )
     }
 }
 
@@ -495,6 +505,7 @@ fn pack_unit(
     seed: u64,
     cache: &mut ReaderCache,
 ) -> Result<PackUnitOut> {
+    let _span = crate::obs::span_ab("pack.unit", u.layer as i64, u.block as i64);
     let wb: std::borrow::Cow<'_, Matrix> = match (&spec.source, u.single) {
         (LayerSource::Mem(w), true) => std::borrow::Cow::Borrowed(w),
         _ => std::borrow::Cow::Owned(spec.read_cols(u.c0, u.width, cache)?),
@@ -732,6 +743,7 @@ impl TrainState {
         let threads = threads.max(1).min(n);
         let watch = Stopwatch::start();
         let step = self.step;
+        let _span = crate::obs::span("train.step");
         let (seed, quant, grad_cfg, repack_every) =
             (self.seed, self.quant, self.grad, self.repack_every);
 
@@ -754,6 +766,7 @@ impl TrainState {
                         break;
                     }
                     let mut slot = slots[idx].lock().unwrap();
+                    let _span = crate::obs::span_ab("train.layer", idx as i64, -1);
                     let (pw, opt) = &mut *slot;
                     let pw: &mut PackedWeight = pw;
                     let opt: &mut OptimSlot = opt;
@@ -1320,6 +1333,42 @@ mod tests {
         let res = train_native(&cfg).unwrap();
         assert!(!res.diverged);
         assert!(res.final_loss() < res.first_loss());
+    }
+
+    #[test]
+    fn training_bit_identical_with_tracing_enabled() {
+        // Spans + gated metrics on must not move a single loss bit —
+        // blocked packing and a repack step so pack.unit / train.layer
+        // instrumentation all fire while enabled.
+        let cfg = NativeTrainConfig {
+            n_layers: 1,
+            d_model: 16,
+            steps: 4,
+            batch: 8,
+            lr: 0.03,
+            warmup: 1,
+            seed: 5,
+            threads: 2,
+            quant: quant(),
+            grad: GradStepConfig::default(),
+            optim: Optim::Sgd,
+            repack_every: 2,
+            pack_block_cols: 8,
+        };
+        let _guard = crate::obs::span::test_lock();
+        crate::obs::set_enabled(false);
+        let off = train_native(&cfg).unwrap();
+        crate::obs::set_enabled(true);
+        let on = train_native(&cfg).unwrap();
+        crate::obs::set_enabled(false);
+        assert_eq!(off.losses(), on.losses());
+        for (a, b) in off.reports.iter().zip(&on.reports) {
+            for (x, y) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(x.loss, y.loss);
+                assert_eq!(x.t1, y.t1);
+                assert_eq!(x.captured, y.captured);
+            }
+        }
     }
 
     #[test]

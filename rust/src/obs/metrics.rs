@@ -1,0 +1,438 @@
+//! Typed process-wide metrics: counters, running-max gauges and
+//! fixed-bucket histograms, snapshotted to `metrics.json` / periodic
+//! JSONL rows.
+//!
+//! Everything lives in one static [`MetricsRegistry`] of lock-free
+//! atomics — recording is a single relaxed RMW, so cheap sites
+//! (cache hit/miss, steal counts) stay always-on, while per-element
+//! sites (quantizer clip/underflow scans) and timed sites (GEMM
+//! GFLOP/s) additionally gate on [`crate::obs::enabled`].  Metrics
+//! observe counts and wall time only — they never feed back into the
+//! numerics, which is why bit-identity is unaffected (DESIGN.md §11).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::formats::Format;
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Running maximum over non-negative finite f64 samples (bit order ==
+/// numeric order for non-negative IEEE doubles, so `fetch_max` works).
+#[derive(Default)]
+pub struct MaxGauge(AtomicU64);
+
+impl MaxGauge {
+    pub const fn new() -> MaxGauge {
+        MaxGauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn record(&self, x: f64) {
+        if x.is_finite() && x >= 0.0 {
+            self.0.fetch_max(x.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Histogram bucket slots: up to 8 finite upper bounds + overflow.
+const HIST_SLOTS: usize = 9;
+
+/// Fixed-bucket histogram: `bounds` are inclusive upper edges, the
+/// last slot catches everything above.  `sum` is accumulated in fixed
+/// point (micro-units) so recording stays a pair of relaxed adds.
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: [AtomicU64; HIST_SLOTS],
+    n: AtomicU64,
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new(bounds: &'static [f64]) -> Histogram {
+        assert!(bounds.len() < HIST_SLOTS, "at most 8 bucket bounds");
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            bounds,
+            counts: [ZERO; HIST_SLOTS],
+            n: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        let micro = (x.max(0.0) * 1e6).min(u64::MAX as f64) as u64;
+        self.sum_micro.fetch_add(micro, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.n.store(0, Ordering::Relaxed);
+        self.sum_micro.store(0, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::with_capacity(self.bounds.len() + 1);
+        for (i, &b) in self.bounds.iter().enumerate() {
+            buckets.push(Json::obj(vec![
+                ("le", Json::num(b)),
+                ("n", Json::num(self.counts[i].load(Ordering::Relaxed) as f64)),
+            ]));
+        }
+        buckets.push(Json::obj(vec![
+            ("le", Json::Null),
+            (
+                "n",
+                Json::num(self.counts[self.bounds.len()].load(Ordering::Relaxed) as f64),
+            ),
+        ]));
+        Json::obj(vec![
+            ("n", Json::num(self.count() as f64)),
+            ("mean", Json::num_or_null(self.mean())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Per-[`Format`] counter bank, indexed by [`Format::index`].
+pub struct PerFormat(pub [Counter; 4]);
+
+impl PerFormat {
+    pub const fn new() -> PerFormat {
+        PerFormat([Counter::new(), Counter::new(), Counter::new(), Counter::new()])
+    }
+
+    #[inline]
+    pub fn add(&self, fmt: Format, n: u64) {
+        self.0[fmt.index()].add(n);
+    }
+
+    pub fn get(&self, fmt: Format) -> u64 {
+        self.0[fmt.index()].get()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.0.iter().map(Counter::get).sum()
+    }
+
+    fn reset(&self) {
+        for c in &self.0 {
+            c.reset();
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(
+            Format::ALL
+                .iter()
+                .map(|f| (f.name().to_string(), Json::num(self.get(*f) as f64)))
+                .collect(),
+        )
+    }
+}
+
+impl Default for PerFormat {
+    fn default() -> Self {
+        PerFormat::new()
+    }
+}
+
+/// The full typed metric set (one static instance — see [`metrics`]).
+pub struct Metrics {
+    /// Elements seen / flushed-to-zero / saturated by the fused block
+    /// quantizer, per format (counted only while observability is on —
+    /// the scan is per-element).
+    pub quant_elems: PerFormat,
+    pub quant_underflow: PerFormat,
+    pub quant_clip: PerFormat,
+    /// GEMM dispatches and achieved GFLOP/s per shape class
+    /// (small < 2·10⁶ flops ≤ medium < 2·10⁸ ≤ large); timed only
+    /// while observability is on.
+    pub gemm_calls: Counter,
+    pub gemm_gflops_small: Histogram,
+    pub gemm_gflops_medium: Histogram,
+    pub gemm_gflops_large: Histogram,
+    /// Workpool activity: executed jobs, tasks a waiter stole back
+    /// (helper-runs-own-batch), and queue depth observed at submit.
+    pub pool_jobs: Counter,
+    pub pool_helper_steals: Counter,
+    pub pool_queue_depth: Histogram,
+    /// `ReaderCache` open-reader reuse.
+    pub reader_cache_hits: Counter,
+    pub reader_cache_misses: Counter,
+    /// Running max of per-layer Metis σ-distortion across the run.
+    pub sigma_err_max: MaxGauge,
+    /// Bytes resident in Eq. 3 packed factors (Q(U), S, Q(Vᵀ)).
+    pub packed_bytes: Counter,
+    /// Bytes written through `NpyWriter`.
+    pub npy_bytes_written: Counter,
+}
+
+static GFLOPS_BOUNDS: [f64; 8] = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+static DEPTH_BOUNDS: [f64; 8] = [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+
+static METRICS: Metrics = Metrics {
+    quant_elems: PerFormat::new(),
+    quant_underflow: PerFormat::new(),
+    quant_clip: PerFormat::new(),
+    gemm_calls: Counter::new(),
+    gemm_gflops_small: Histogram::new(&GFLOPS_BOUNDS),
+    gemm_gflops_medium: Histogram::new(&GFLOPS_BOUNDS),
+    gemm_gflops_large: Histogram::new(&GFLOPS_BOUNDS),
+    pool_jobs: Counter::new(),
+    pool_helper_steals: Counter::new(),
+    pool_queue_depth: Histogram::new(&DEPTH_BOUNDS),
+    reader_cache_hits: Counter::new(),
+    reader_cache_misses: Counter::new(),
+    sigma_err_max: MaxGauge::new(),
+    packed_bytes: Counter::new(),
+    npy_bytes_written: Counter::new(),
+};
+
+/// The process-wide metric set.
+#[inline]
+pub fn metrics() -> &'static Metrics {
+    &METRICS
+}
+
+/// Namespace over the static metric set: snapshot / reset.
+pub struct MetricsRegistry;
+
+impl MetricsRegistry {
+    pub fn global() -> &'static Metrics {
+        &METRICS
+    }
+
+    /// Point-in-time JSON snapshot (the body of `metrics.json` and the
+    /// periodic `"event":"metrics"` rows).
+    pub fn snapshot() -> Json {
+        let m = &METRICS;
+        Json::obj(vec![
+            (
+                "quantizer",
+                Json::obj(vec![
+                    ("elems", m.quant_elems.to_json()),
+                    ("underflow", m.quant_underflow.to_json()),
+                    ("clip", m.quant_clip.to_json()),
+                ]),
+            ),
+            (
+                "gemm",
+                Json::obj(vec![
+                    ("calls", Json::num(m.gemm_calls.get() as f64)),
+                    ("gflops_small", m.gemm_gflops_small.to_json()),
+                    ("gflops_medium", m.gemm_gflops_medium.to_json()),
+                    ("gflops_large", m.gemm_gflops_large.to_json()),
+                ]),
+            ),
+            (
+                "workpool",
+                Json::obj(vec![
+                    ("jobs", Json::num(m.pool_jobs.get() as f64)),
+                    ("helper_steals", Json::num(m.pool_helper_steals.get() as f64)),
+                    ("queue_depth", m.pool_queue_depth.to_json()),
+                ]),
+            ),
+            (
+                "reader_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(m.reader_cache_hits.get() as f64)),
+                    ("misses", Json::num(m.reader_cache_misses.get() as f64)),
+                ]),
+            ),
+            ("sigma_err_max", Json::num_or_null(m.sigma_err_max.get())),
+            ("packed_bytes", Json::num(m.packed_bytes.get() as f64)),
+            (
+                "npy_bytes_written",
+                Json::num(m.npy_bytes_written.get() as f64),
+            ),
+        ])
+    }
+
+    /// Zero every metric (bench/tests only).
+    pub fn reset() {
+        let m = &METRICS;
+        m.quant_elems.reset();
+        m.quant_underflow.reset();
+        m.quant_clip.reset();
+        m.gemm_calls.reset();
+        m.gemm_gflops_small.reset();
+        m.gemm_gflops_medium.reset();
+        m.gemm_gflops_large.reset();
+        m.pool_jobs.reset();
+        m.pool_helper_steals.reset();
+        m.pool_queue_depth.reset();
+        m.reader_cache_hits.reset();
+        m.reader_cache_misses.reset();
+        m.sigma_err_max.reset();
+        m.packed_bytes.reset();
+        m.npy_bytes_written.reset();
+    }
+}
+
+/// Snapshot shorthand ([`MetricsRegistry::snapshot`]).
+pub fn metrics_snapshot() -> Json {
+    MetricsRegistry::snapshot()
+}
+
+/// Route one GEMM's achieved throughput into its shape-class histogram.
+#[inline]
+pub fn record_gemm(flops: usize, secs: f64) {
+    let m = metrics();
+    m.gemm_calls.incr();
+    if secs <= 0.0 {
+        return;
+    }
+    let gflops = flops as f64 / secs / 1e9;
+    let h = if flops < 2_000_000 {
+        &m.gemm_gflops_small
+    } else if flops < 200_000_000 {
+        &m.gemm_gflops_medium
+    } else {
+        &m.gemm_gflops_large
+    };
+    h.record(gflops);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = MaxGauge::new();
+        g.record(0.25);
+        g.record(0.125);
+        g.record(f64::NAN); // ignored
+        g.record(-1.0); // ignored
+        assert_eq!(g.get(), 0.25);
+    }
+
+    #[test]
+    fn histogram_buckets_and_mean() {
+        static BOUNDS: [f64; 3] = [1.0, 2.0, 4.0];
+        let h = Histogram::new(&BOUNDS);
+        for x in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.record(x);
+        }
+        h.record(f64::INFINITY); // ignored
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 21.2).abs() < 1e-6);
+        let j = h.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 4);
+        let ns: Vec<i64> = buckets
+            .iter()
+            .map(|b| b.get("n").unwrap().as_i64().unwrap())
+            .collect();
+        // 0.5, 1.0 ≤ 1 | 1.5 ≤ 2 | 3.0 ≤ 4 | 100.0 overflows.
+        assert_eq!(ns, vec![2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn per_format_indexing_covers_all() {
+        let p = PerFormat::new();
+        for f in Format::ALL {
+            p.add(f, 2);
+        }
+        assert_eq!(p.total(), 8);
+        let j = p.to_json();
+        for f in Format::ALL {
+            assert_eq!(j.get(f.name()).unwrap().as_i64().unwrap(), 2);
+        }
+    }
+
+    #[test]
+    fn snapshot_parses_and_has_sections() {
+        let snap = MetricsRegistry::snapshot();
+        let parsed = Json::parse(&snap.to_string()).unwrap();
+        for key in ["quantizer", "gemm", "workpool", "reader_cache", "packed_bytes"] {
+            assert!(parsed.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn gemm_shape_classes_route() {
+        // Distinct flop counts land in the intended histograms — use
+        // the shared static registry but only assert deltas.
+        let m = metrics();
+        let (s0, m0, l0) = (
+            m.gemm_gflops_small.count(),
+            m.gemm_gflops_medium.count(),
+            m.gemm_gflops_large.count(),
+        );
+        record_gemm(1_000, 1e-6);
+        record_gemm(50_000_000, 1e-3);
+        record_gemm(2_000_000_000, 1.0);
+        assert_eq!(m.gemm_gflops_small.count(), s0 + 1);
+        assert_eq!(m.gemm_gflops_medium.count(), m0 + 1);
+        assert_eq!(m.gemm_gflops_large.count(), l0 + 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! Process-wide observability: spans, typed metrics, run correlation.
+//!
+//! Three cooperating pieces, all off by default and allocation-free on
+//! the hot path when enabled (see DESIGN.md §11):
+//!
+//! * [`span`] — lock-free per-thread span recorders.  Every recording
+//!   thread (main + the persistent [`crate::util::workpool`] workers)
+//!   owns a preallocated ring buffer of fixed-size [`span::SpanEvent`]s;
+//!   a [`span::Span`] guard stamps start/stop timestamps, parent ids
+//!   and `(layer, block)`-style unit labels with no allocation and no
+//!   shared-lock traffic.  [`span::drain_trace`] merges the rings into
+//!   a single Chrome trace-event JSON (`chrome://tracing` / Perfetto).
+//! * [`metrics`] — a static [`metrics::MetricsRegistry`] of typed
+//!   counters, running-max gauges and fixed-bucket histograms
+//!   (quantizer clip/underflow per format, GEMM GFLOP/s per shape
+//!   class, workpool queue depth + helper steals, `ReaderCache`
+//!   hit/miss, σ-distortion running max, packed bytes), snapshotted to
+//!   `metrics.json` at run end and as periodic rows in the step JSONL.
+//! * [`run`] — process-wide run identity: every JSONL row is stamped
+//!   with `run_id` + `schema_version` + a monotonic `seq`, and the CLI
+//!   writes a `run.json` manifest tying the stream files together.
+//!
+//! Recording never touches numerics: spans and counters observe wall
+//! time and event counts only, so every bit-identity / thread-
+//! invariance contract holds with observability on or off.
+
+pub mod metrics;
+pub mod run;
+pub mod span;
+pub mod summarize;
+
+pub use metrics::{metrics, metrics_snapshot, Counter, Histogram, MaxGauge, MetricsRegistry};
+pub use run::{run, schema, stamp, RunContext};
+pub use span::{
+    drain_trace, enabled, reset_trace, set_enabled, span, span_ab, Span, SpanEvent, TraceData,
+    WorkerTrace,
+};
+pub use summarize::summarize_dir;

@@ -1,0 +1,122 @@
+//! Run identity + JSONL stamping: `run_id`, per-stream
+//! `schema_version`, and a process-wide monotonic `seq`.
+//!
+//! Every JSONL row the crate emits (pipeline layer reports, train
+//! steps, eval rows, error rows, metrics rows, the final `done`
+//! object) is stamped through [`stamp`], so offline tooling
+//! (`tools/validate_events.py`, `metis trace summarize`) can join the
+//! streams of one run and order events across files.  The `run_id` is
+//! minted once per process — time + pid, overridable via the
+//! `METIS_RUN_ID` environment variable for external correlation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::json::Json;
+
+/// Per-stream schema versions.  Streams that predate the observability
+/// subsystem (layer reports, steps, evals) bump to 2 with the
+/// `run_id`/`schema_version`/`seq` stamping; new streams start at 1.
+pub mod schema {
+    pub const LAYER_REPORT: u32 = 2;
+    pub const STEP: u32 = 2;
+    pub const EVAL: u32 = 2;
+    pub const ERROR: u32 = 1;
+    pub const METRICS: u32 = 1;
+    pub const DONE: u32 = 1;
+    pub const RUN_MANIFEST: u32 = 1;
+    pub const TRACE: u32 = 1;
+}
+
+/// Process-wide run identity: one `run_id` and one monotonic `seq`
+/// counter shared by every stream (so rows are totally ordered across
+/// files of the same run).
+pub struct RunContext {
+    pub run_id: String,
+    seq: AtomicU64,
+}
+
+impl RunContext {
+    /// Next sequence number (monotonic across all streams).
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+fn mint_run_id() -> String {
+    if let Ok(id) = std::env::var("METIS_RUN_ID") {
+        if !id.is_empty() {
+            return id;
+        }
+    }
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    format!(
+        "{:08x}-{:05x}-{:04x}",
+        now.as_secs() as u32,
+        now.subsec_micros(),
+        std::process::id() & 0xffff
+    )
+}
+
+/// The process run context (minted on first use).
+pub fn run() -> &'static RunContext {
+    static CTX: OnceLock<RunContext> = OnceLock::new();
+    CTX.get_or_init(|| RunContext {
+        run_id: mint_run_id(),
+        seq: AtomicU64::new(0),
+    })
+}
+
+/// Build a stamped JSONL row: `event`, `schema_version`, `run_id` and
+/// `seq` lead, then the caller's fields in order.
+pub fn stamp(event: &str, schema_version: u32, fields: Vec<(&str, Json)>) -> Json {
+    let ctx = run();
+    let mut kvs: Vec<(String, Json)> = Vec::with_capacity(fields.len() + 4);
+    kvs.push(("event".to_string(), Json::str(event)));
+    kvs.push((
+        "schema_version".to_string(),
+        Json::num(schema_version as f64),
+    ));
+    kvs.push(("run_id".to_string(), Json::str(&ctx.run_id)));
+    kvs.push(("seq".to_string(), Json::num(ctx.next_seq() as f64)));
+    for (k, v) in fields {
+        kvs.push((k.to_string(), v));
+    }
+    Json::Obj(kvs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamp_leads_with_identity_and_monotonic_seq() {
+        let a = stamp("step", schema::STEP, vec![("loss", Json::num(1.0))]);
+        let b = stamp("eval", schema::EVAL, vec![]);
+        let keys: Vec<&str> = a
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(&keys[..4], &["event", "schema_version", "run_id", "seq"]);
+        assert_eq!(a.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(a.get("schema_version").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(
+            a.get("run_id").unwrap().as_str().unwrap(),
+            b.get("run_id").unwrap().as_str().unwrap()
+        );
+        assert!(
+            b.get("seq").unwrap().as_i64().unwrap() > a.get("seq").unwrap().as_i64().unwrap()
+        );
+        assert_eq!(a.get("loss").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn run_id_is_nonempty_and_stable() {
+        assert!(!run().run_id.is_empty());
+        assert_eq!(run().run_id, run().run_id);
+    }
+}

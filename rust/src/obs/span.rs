@@ -1,0 +1,561 @@
+//! Lock-free per-thread span recording → Chrome trace-event JSON.
+//!
+//! Each recording thread lazily registers one [`Ring`]: a preallocated
+//! slab of [`SpanEvent`] slots plus an atomic publish cursor.  Opening
+//! a [`Span`] stamps a strictly-monotonic per-thread start timestamp,
+//! a dense per-thread id and the parent id from a thread-local stack;
+//! dropping it writes one fixed-size event into the owner's ring — no
+//! allocation, no locks, one release store.  When a ring is full,
+//! further events are counted as dropped and the drained trace carries
+//! a `truncated` flag in its header.
+//!
+//! Single-writer protocol: slots below `len` are written exactly once
+//! by the owning thread before the release store of `len`; a drainer
+//! acquire-loads `len` and reads only below it.  [`drain_trace`] is
+//! therefore safe at any time, though a snapshot taken mid-scope can
+//! miss spans still open.  [`reset_trace`] (bench/tests) must only run
+//! while recorders are quiescent.
+
+use std::cell::{Cell, OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Events one thread can hold before truncation (fixed at ring
+/// creation; override per thread via [`init_thread_ring`]).
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+/// Deepest tracked span nesting; deeper spans record parent −1.
+const MAX_DEPTH: usize = 64;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+static NEXT_TID: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_registry() -> MutexGuard<'static, Vec<Arc<Ring>>> {
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Turn observability recording on/off process-wide.  Off (default):
+/// every probe site reduces to one relaxed load + branch.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin t=0 before the first span
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether observability recording is on.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One completed span, fixed-size (the ring slot type).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Phase name (`"pipeline.unit"`, `"gemm"`, …) — static, no alloc.
+    pub name: &'static str,
+    /// Start, nanoseconds since the process trace epoch; strictly
+    /// increasing per thread in id order.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Unit labels, e.g. `(layer, block)`; −1 = unset.
+    pub a: i64,
+    pub b: i64,
+    /// Dense per-thread span id (creation order).
+    pub id: u32,
+    /// Id of the enclosing span on the same thread, −1 at top level.
+    pub parent: i32,
+}
+
+impl SpanEvent {
+    const EMPTY: SpanEvent = SpanEvent {
+        name: "",
+        start_ns: 0,
+        dur_ns: 0,
+        a: -1,
+        b: -1,
+        id: 0,
+        parent: -1,
+    };
+}
+
+/// Per-thread recorder.  `slots[..len]` are published events (single
+/// writer, release/acquire on `len`); the `Cell`/`UnsafeCell` scratch
+/// below is touched only by the owning thread.
+struct Ring {
+    tid: usize,
+    thread_name: String,
+    slots: Box<[UnsafeCell<SpanEvent>]>,
+    len: AtomicUsize,
+    dropped: AtomicUsize,
+    // -- owner-thread-only state --
+    next_id: Cell<u32>,
+    last_start: Cell<u64>,
+    stack: UnsafeCell<[i32; MAX_DEPTH]>,
+    depth: Cell<usize>,
+}
+
+// SAFETY: cross-thread access is limited to `len`/`dropped` (atomics)
+// and `slots[i]` for `i < len`, which the owner fully wrote before the
+// release store publishing `i + 1`.  The Cell fields are owner-only.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn new(capacity: usize) -> Arc<Ring> {
+        let name = std::thread::current()
+            .name()
+            .unwrap_or("thread")
+            .to_string();
+        let ring = Arc::new(Ring {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            thread_name: name,
+            slots: (0..capacity.max(1))
+                .map(|_| UnsafeCell::new(SpanEvent::EMPTY))
+                .collect(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            next_id: Cell::new(0),
+            last_start: Cell::new(0),
+            stack: UnsafeCell::new([-1; MAX_DEPTH]),
+            depth: Cell::new(0),
+        });
+        lock_registry().push(Arc::clone(&ring));
+        ring
+    }
+
+    /// Owner-thread push of one completed event.
+    fn record(&self, ev: SpanEvent) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i < self.slots.len() {
+            // SAFETY: slot `i` is unpublished (i >= len seen by any
+            // reader) and only this thread writes this ring.
+            unsafe { *self.slots[i].get() = ev };
+            self.len.store(i + 1, Ordering::Release);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+thread_local! {
+    static RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+fn with_ring<R>(f: impl FnOnce(&Ring) -> R) -> R {
+    RING.with(|c| f(c.get_or_init(|| Ring::new(RING_CAP.load(Ordering::Relaxed)))))
+}
+
+/// Pre-create the calling thread's ring with an explicit capacity
+/// (tests exercise truncation through a tiny ring).  No-op if the
+/// thread already recorded; returns whether a fresh ring was made.
+pub fn init_thread_ring(capacity: usize) -> bool {
+    RING.with(|c| {
+        let mut fresh = false;
+        c.get_or_init(|| {
+            fresh = true;
+            Ring::new(capacity)
+        });
+        fresh
+    })
+}
+
+/// RAII span: created by [`span`]/[`span_ab`], records one event on
+/// drop.  `None` inside when recording is disabled — near-zero cost.
+/// Not `Send`: a guard must drop on the thread that opened it.
+#[must_use = "a span records on drop; bind it to a named guard"]
+pub struct Span(Option<OpenSpan>);
+
+struct OpenSpan {
+    name: &'static str,
+    a: i64,
+    b: i64,
+    id: u32,
+    parent: i32,
+    start_ns: u64,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+/// Open an unlabeled span.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_ab(name, -1, -1)
+}
+
+/// Open a span with `(a, b)` unit labels (typically `(layer, block)`).
+#[inline]
+pub fn span_ab(name: &'static str, a: i64, b: i64) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(with_ring(|r| {
+        let id = r.next_id.get();
+        r.next_id.set(id.wrapping_add(1));
+        let depth = r.depth.get();
+        // SAFETY: owner-thread-only scratch.
+        let stack = unsafe { &mut *r.stack.get() };
+        let parent = if depth == 0 {
+            -1
+        } else {
+            stack[(depth - 1).min(MAX_DEPTH - 1)]
+        };
+        if depth < MAX_DEPTH {
+            stack[depth] = id as i32;
+        }
+        r.depth.set(depth + 1);
+        // Strictly monotonic per-thread start timestamps, even when the
+        // clock granularity is coarser than span spacing.
+        let mut ts = now_ns();
+        if ts <= r.last_start.get() {
+            ts = r.last_start.get() + 1;
+        }
+        r.last_start.set(ts);
+        OpenSpan {
+            name,
+            a,
+            b,
+            id,
+            parent,
+            start_ns: ts,
+            _not_send: std::marker::PhantomData,
+        }
+    })))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(open) = self.0.take() else { return };
+        let end = now_ns();
+        with_ring(|r| {
+            r.depth.set(r.depth.get().saturating_sub(1));
+            r.record(SpanEvent {
+                name: open.name,
+                start_ns: open.start_ns,
+                dur_ns: end.saturating_sub(open.start_ns),
+                a: open.a,
+                b: open.b,
+                id: open.id,
+                parent: open.parent,
+            });
+        });
+    }
+}
+
+/// One thread's drained events.
+pub struct WorkerTrace {
+    pub tid: usize,
+    pub name: String,
+    pub dropped: usize,
+    pub events: Vec<SpanEvent>,
+}
+
+/// Merged snapshot of every registered ring.
+pub struct TraceData {
+    /// True when any ring overflowed (events were dropped) — also
+    /// surfaced as `otherData.truncated` in the Chrome JSON header.
+    pub truncated: bool,
+    pub workers: Vec<WorkerTrace>,
+}
+
+/// Snapshot all rings (does not reset them).
+pub fn drain_trace() -> TraceData {
+    let rings: Vec<Arc<Ring>> = lock_registry().clone();
+    let mut workers = Vec::with_capacity(rings.len());
+    let mut truncated = false;
+    for r in &rings {
+        let n = r.len.load(Ordering::Acquire).min(r.slots.len());
+        // SAFETY: slots below the acquired `len` are fully published.
+        let events = (0..n).map(|i| unsafe { *r.slots[i].get() }).collect();
+        let dropped = r.dropped.load(Ordering::Relaxed);
+        truncated |= dropped > 0;
+        workers.push(WorkerTrace {
+            tid: r.tid,
+            name: r.thread_name.clone(),
+            dropped,
+            events,
+        });
+    }
+    workers.sort_by_key(|w| w.tid);
+    TraceData { truncated, workers }
+}
+
+/// Zero every ring (bench/tests).  Only call while no spans are being
+/// recorded — concurrent recorders may republish stale slots.
+pub fn reset_trace() {
+    for r in lock_registry().iter() {
+        r.len.store(0, Ordering::Release);
+        r.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+impl TraceData {
+    /// Total events across workers.
+    pub fn total_events(&self) -> usize {
+        self.workers.iter().map(|w| w.events.len()).sum()
+    }
+
+    /// Chrome trace-event JSON (object form): `traceEvents` holds one
+    /// `ph:"M"` thread-name metadata record per worker plus `ph:"X"`
+    /// complete events (µs timestamps), and `otherData` is the header
+    /// carrying `run_id` / `schema_version` / `truncated`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut evs = Vec::with_capacity(self.total_events() + self.workers.len());
+        for w in &self.workers {
+            evs.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(w.tid as f64)),
+                ("name", Json::str("thread_name")),
+                ("args", Json::obj(vec![("name", Json::str(&w.name))])),
+            ]));
+            for e in &w.events {
+                let mut args = vec![
+                    ("id", Json::num(e.id as f64)),
+                    ("parent", Json::num(e.parent as f64)),
+                ];
+                if e.a >= 0 {
+                    args.push(("layer", Json::num(e.a as f64)));
+                }
+                if e.b >= 0 {
+                    args.push(("block", Json::num(e.b as f64)));
+                }
+                evs.push(Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(w.tid as f64)),
+                    ("name", Json::str(e.name)),
+                    ("cat", Json::str("metis")),
+                    ("ts", Json::num(e.start_ns as f64 / 1e3)),
+                    ("dur", Json::num(e.dur_ns as f64 / 1e3)),
+                    ("args", Json::obj(args)),
+                ]));
+            }
+        }
+        let dropped: usize = self.workers.iter().map(|w| w.dropped).sum();
+        Json::obj(vec![
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("schema_version", Json::num(crate::obs::schema::TRACE as f64)),
+                    ("run_id", Json::str(&crate::obs::run().run_id)),
+                    ("truncated", Json::Bool(self.truncated)),
+                    ("dropped_events", Json::num(dropped as f64)),
+                ]),
+            ),
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(evs)),
+        ])
+    }
+
+    /// Write the Chrome trace JSON, creating parent directories.
+    pub fn write_chrome(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_chrome_json()))?;
+        Ok(())
+    }
+}
+
+/// Serializes tests that flip the global recording flag (the flag is
+/// process-wide and `cargo test` runs tests concurrently).
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::workpool::WorkPool;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        let before = drain_trace().total_events();
+        {
+            let _s = span("obs.test.disabled");
+        }
+        assert_eq!(drain_trace().total_events(), before);
+    }
+
+    #[test]
+    fn nested_spans_link_parent_ids() {
+        let _g = test_lock();
+        set_enabled(true);
+        {
+            let _outer = span_ab("obs.test.link.outer", 3, -1);
+            let _inner = span_ab("obs.test.link.inner", 3, 7);
+        }
+        set_enabled(false);
+        let trace = drain_trace();
+        let mine: Vec<SpanEvent> = trace
+            .workers
+            .iter()
+            .flat_map(|w| w.events.iter().copied())
+            .filter(|e| e.name.starts_with("obs.test.link."))
+            .collect();
+        assert_eq!(mine.len(), 2);
+        let outer = mine.iter().find(|e| e.name.ends_with("outer")).unwrap();
+        let inner = mine.iter().find(|e| e.name.ends_with("inner")).unwrap();
+        assert_eq!(inner.parent, outer.id as i32);
+        assert_eq!(outer.parent, -1);
+        assert_eq!((inner.a, inner.b), (3, 7));
+        // Inner closed first, so it is recorded first but starts later.
+        assert!(inner.start_ns > outer.start_ns);
+        assert!(inner.dur_ns <= outer.dur_ns);
+    }
+
+    /// Satellite: N workers × nested scopes on the shared pool — the
+    /// drain holds every span exactly once (no drops, no duplicates)
+    /// and per-worker start timestamps are strictly monotonic in span
+    /// id order.
+    #[test]
+    fn concurrent_workers_nested_scopes_drain_exactly_once() {
+        let _g = test_lock();
+        set_enabled(true);
+        let pool = WorkPool::global();
+        const JOBS: usize = 24;
+        const INNER: i64 = 3;
+        pool.scoped(|scope| {
+            for j in 0..JOBS {
+                scope.execute(move || {
+                    let _outer = span_ab("obs.test.cc.outer", j as i64, -1);
+                    // Nested scope from inside a pool worker.
+                    WorkPool::global().scoped(|s2| {
+                        for i in 0..INNER {
+                            s2.execute(move || {
+                                let _inner = span_ab("obs.test.cc.inner", j as i64, i);
+                                std::hint::black_box(j + i as usize);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        set_enabled(false);
+        let trace = drain_trace();
+        let mut outer = 0usize;
+        let mut inner = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        for w in &trace.workers {
+            let mine: Vec<&SpanEvent> = w
+                .events
+                .iter()
+                .filter(|e| e.name.starts_with("obs.test.cc."))
+                .collect();
+            // No duplicated events: (tid, id) unique.
+            for e in &mine {
+                assert!(seen.insert((w.tid, e.id)), "duplicate span {:?}", e);
+            }
+            // Strictly monotonic per-worker start timestamps (id order
+            // is creation order on the worker).
+            let mut by_id: Vec<&&SpanEvent> = mine.iter().collect();
+            by_id.sort_by_key(|e| e.id);
+            for pair in by_id.windows(2) {
+                assert!(
+                    pair[1].start_ns > pair[0].start_ns,
+                    "non-monotonic start on tid {}: {:?} then {:?}",
+                    w.tid,
+                    pair[0],
+                    pair[1]
+                );
+            }
+            outer += mine.iter().filter(|e| e.name.ends_with("outer")).count();
+            inner += mine.iter().filter(|e| e.name.ends_with("inner")).count();
+        }
+        assert_eq!(outer, JOBS, "dropped/duplicated outer spans");
+        assert_eq!(inner, JOBS * INNER as usize, "dropped/duplicated inner spans");
+    }
+
+    /// Satellite: overflowing a ring sets the `truncated` flag in the
+    /// trace header (and counts the dropped events).
+    #[test]
+    fn ring_overflow_sets_truncated_flag() {
+        let _g = test_lock();
+        set_enabled(true);
+        let handle = std::thread::Builder::new()
+            .name("obs-overflow-probe".into())
+            .spawn(|| {
+                assert!(init_thread_ring(4), "probe thread ring already existed");
+                for i in 0..16 {
+                    let _s = span_ab("obs.test.overflow", i, -1);
+                }
+            })
+            .unwrap();
+        handle.join().unwrap();
+        set_enabled(false);
+        let trace = drain_trace();
+        assert!(trace.truncated, "overflowed ring must mark the trace truncated");
+        let probe = trace
+            .workers
+            .iter()
+            .find(|w| w.name == "obs-overflow-probe")
+            .expect("probe ring registered");
+        assert_eq!(probe.events.len(), 4, "ring keeps its first `capacity` events");
+        assert_eq!(probe.dropped, 12);
+        let header = trace.to_chrome_json();
+        assert!(header
+            .get("otherData")
+            .and_then(|o| o.get("truncated"))
+            .and_then(|t| t.as_bool().ok())
+            .unwrap());
+    }
+
+    #[test]
+    fn chrome_json_shape_parses_and_carries_events() {
+        let _g = test_lock();
+        set_enabled(true);
+        {
+            let _s = span_ab("obs.test.chrome", 1, 2);
+        }
+        set_enabled(false);
+        let doc = drain_trace().to_chrome_json();
+        // Round-trips through the JSON parser.
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let x = evs
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str().ok()) == Some("obs.test.chrome")
+            })
+            .expect("recorded event present");
+        assert_eq!(x.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(x.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(x.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            x.get("args").unwrap().get("layer").unwrap().as_i64().unwrap(),
+            1
+        );
+        assert!(evs.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str().ok()) == Some("M")
+        }));
+        assert!(parsed.get("otherData").unwrap().get("run_id").is_some());
+    }
+}

@@ -1,0 +1,328 @@
+//! Offline trace/stream joiner: `metis trace summarize <dir>`.
+//!
+//! Reads whatever a run left in a directory — `run.json`, `trace.json`
+//! (Chrome trace-event form), `metrics.json`, `*.jsonl` streams — and
+//! prints per-phase wall/CPU breakdowns, the top-k slowest units, and
+//! per-stream row inventories.  Pure post-processing: nothing here
+//! touches the recording hot path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Slowest spans to list.
+const TOP_K: usize = 10;
+
+#[derive(Default)]
+struct PhaseAgg {
+    count: usize,
+    cpu_ns: u64,
+    min_start: u64,
+    max_end: u64,
+}
+
+/// Summarize a run directory into a printable report.
+pub fn summarize_dir(dir: impl AsRef<Path>) -> Result<String> {
+    let dir = dir.as_ref();
+    let mut out = String::new();
+    let push = |out: &mut String, s: &str| {
+        out.push_str(s);
+        out.push('\n');
+    };
+
+    // -- run.json ----------------------------------------------------------
+    let manifest = dir.join("run.json");
+    if manifest.is_file() {
+        let doc = Json::parse(&std::fs::read_to_string(&manifest)?)
+            .with_context(|| format!("parsing {}", manifest.display()))?;
+        let s = |k: &str| {
+            doc.get(k)
+                .and_then(|v| v.as_str().ok())
+                .unwrap_or("?")
+                .to_string()
+        };
+        push(
+            &mut out,
+            &format!(
+                "run {} · cmd {} · seed {}",
+                s("run_id"),
+                s("cmd"),
+                doc.get("seed")
+                    .and_then(|v| v.as_i64().ok())
+                    .map_or("?".to_string(), |v| v.to_string())
+            ),
+        );
+        if let Some(streams) = doc.get("streams").and_then(|s| s.as_arr().ok()) {
+            for st in streams {
+                // The CLI manifest lists plain path strings; accept
+                // `{kind, path}` objects too for hand-written manifests.
+                let line = match st.as_str() {
+                    Ok(path) => format!("  stream {path}"),
+                    Err(_) => format!(
+                        "  stream {:<10} {}",
+                        st.get("kind").and_then(|v| v.as_str().ok()).unwrap_or("?"),
+                        st.get("path").and_then(|v| v.as_str().ok()).unwrap_or("?"),
+                    ),
+                };
+                push(&mut out, &line);
+            }
+        }
+    } else {
+        push(&mut out, &format!("no run.json in {}", dir.display()));
+    }
+
+    // -- trace.json: per-phase wall/CPU + top-k slowest units --------------
+    let trace = dir.join("trace.json");
+    if trace.is_file() {
+        let doc = Json::parse(&std::fs::read_to_string(&trace)?)
+            .with_context(|| format!("parsing {}", trace.display()))?;
+        if let Some(other) = doc.get("otherData") {
+            if other.get("truncated").and_then(|t| t.as_bool().ok()) == Some(true) {
+                push(&mut out, "WARNING: trace is truncated (ring overflow)");
+            }
+        }
+        let mut phases: BTreeMap<String, PhaseAgg> = BTreeMap::new();
+        // (dur_us, name, tid, layer, block)
+        let mut slowest: Vec<(f64, String, i64, i64, i64)> = Vec::new();
+        for ev in doc
+            .get("traceEvents")
+            .and_then(|e| e.as_arr().ok())
+            .unwrap_or(&[])
+        {
+            if ev.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+                continue;
+            }
+            let name = ev
+                .get("name")
+                .and_then(|n| n.as_str().ok())
+                .unwrap_or("?")
+                .to_string();
+            let ts = ev.get("ts").and_then(|t| t.as_f64().ok()).unwrap_or(0.0);
+            let dur = ev.get("dur").and_then(|d| d.as_f64().ok()).unwrap_or(0.0);
+            let agg = phases.entry(name.clone()).or_default();
+            if agg.count == 0 {
+                agg.min_start = (ts * 1e3) as u64;
+            } else {
+                agg.min_start = agg.min_start.min((ts * 1e3) as u64);
+            }
+            agg.max_end = agg.max_end.max(((ts + dur) * 1e3) as u64);
+            agg.count += 1;
+            agg.cpu_ns += (dur * 1e3) as u64;
+            let arg = |k: &str| {
+                ev.get("args")
+                    .and_then(|a| a.get(k))
+                    .and_then(|v| v.as_i64().ok())
+                    .unwrap_or(-1)
+            };
+            slowest.push((
+                dur,
+                name,
+                ev.get("tid").and_then(|t| t.as_i64().ok()).unwrap_or(-1),
+                arg("layer"),
+                arg("block"),
+            ));
+        }
+        if phases.is_empty() {
+            push(&mut out, "trace.json holds no complete (ph:X) events");
+        } else {
+            push(&mut out, "\nper-phase breakdown (CPU = summed span time across workers):");
+            push(
+                &mut out,
+                &format!(
+                    "  {:<16} {:>7} {:>12} {:>12} {:>10}",
+                    "phase", "count", "cpu ms", "wall ms", "mean ms"
+                ),
+            );
+            let mut rows: Vec<(&String, &PhaseAgg)> = phases.iter().collect();
+            rows.sort_by(|a, b| b.1.cpu_ns.cmp(&a.1.cpu_ns));
+            for (name, agg) in rows {
+                let cpu_ms = agg.cpu_ns as f64 / 1e6;
+                let wall_ms = agg.max_end.saturating_sub(agg.min_start) as f64 / 1e6;
+                push(
+                    &mut out,
+                    &format!(
+                        "  {:<16} {:>7} {:>12.2} {:>12.2} {:>10.3}",
+                        name,
+                        agg.count,
+                        cpu_ms,
+                        wall_ms,
+                        cpu_ms / agg.count as f64
+                    ),
+                );
+            }
+            slowest.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            push(&mut out, &format!("\ntop {} slowest units:", TOP_K.min(slowest.len())));
+            for (dur, name, tid, layer, block) in slowest.iter().take(TOP_K) {
+                let unit = if *layer >= 0 && *block >= 0 {
+                    format!("(layer {layer}, block {block})")
+                } else if *layer >= 0 {
+                    format!("(layer {layer})")
+                } else {
+                    String::new()
+                };
+                push(
+                    &mut out,
+                    &format!("  {:>10.3} ms  {:<16} tid {:<3} {}", dur / 1e3, name, tid, unit),
+                );
+            }
+        }
+    } else {
+        push(&mut out, &format!("no trace.json in {}", dir.display()));
+    }
+
+    // -- metrics.json ------------------------------------------------------
+    let metrics = dir.join("metrics.json");
+    if metrics.is_file() {
+        let doc = Json::parse(&std::fs::read_to_string(&metrics)?)
+            .with_context(|| format!("parsing {}", metrics.display()))?;
+        let n = |path: &[&str]| -> f64 {
+            let mut node = &doc;
+            for k in path {
+                match node.get(k) {
+                    Some(v) => node = v,
+                    None => return f64::NAN,
+                }
+            }
+            node.as_f64().unwrap_or(f64::NAN)
+        };
+        push(
+            &mut out,
+            &format!(
+                "\nmetrics: {} pool jobs ({} steals) · {} gemms · cache {}h/{}m · σ-err max {:.4}",
+                n(&["workpool", "jobs"]),
+                n(&["workpool", "helper_steals"]),
+                n(&["gemm", "calls"]),
+                n(&["reader_cache", "hits"]),
+                n(&["reader_cache", "misses"]),
+                n(&["sigma_err_max"]),
+            ),
+        );
+    }
+
+    // -- JSONL streams -----------------------------------------------------
+    let mut jsonl: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+        .collect();
+    jsonl.sort();
+    for path in &jsonl {
+        let text = std::fs::read_to_string(path)?;
+        let mut by_event: BTreeMap<String, usize> = BTreeMap::new();
+        let mut bad = 0usize;
+        let (mut seq_min, mut seq_max) = (i64::MAX, i64::MIN);
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            match Json::parse(line) {
+                Ok(row) => {
+                    let ev = row
+                        .get("event")
+                        .and_then(|e| e.as_str().ok())
+                        .unwrap_or("?")
+                        .to_string();
+                    *by_event.entry(ev).or_default() += 1;
+                    if let Some(s) = row.get("seq").and_then(|s| s.as_i64().ok()) {
+                        seq_min = seq_min.min(s);
+                        seq_max = seq_max.max(s);
+                    }
+                }
+                Err(_) => bad += 1,
+            }
+        }
+        let events: Vec<String> = by_event
+            .iter()
+            .map(|(k, v)| format!("{k}×{v}"))
+            .collect();
+        let seq = if seq_min <= seq_max {
+            format!("seq {seq_min}..{seq_max}")
+        } else {
+            "no seq".to_string()
+        };
+        push(
+            &mut out,
+            &format!(
+                "stream {}: {} [{}]{}",
+                path.file_name().and_then(|f| f.to_str()).unwrap_or("?"),
+                events.join(" "),
+                seq,
+                if bad > 0 {
+                    format!(" ({bad} unparseable lines)")
+                } else {
+                    String::new()
+                }
+            ),
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("metis-obs-sum-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn summarizes_trace_streams_and_manifest() {
+        let d = tmpdir("full");
+        std::fs::write(
+            d.join("run.json"),
+            r#"{"schema_version":1,"run_id":"r-1","cmd":"train-native","seed":7,
+                "streams":[{"kind":"step","path":"steps.jsonl","schema_version":2}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            d.join("trace.json"),
+            r#"{"otherData":{"truncated":false},"traceEvents":[
+                {"ph":"M","pid":1,"tid":0,"name":"thread_name","args":{"name":"main"}},
+                {"ph":"X","pid":1,"tid":0,"name":"pipeline.unit","ts":10.0,"dur":400.0,
+                 "args":{"id":0,"parent":-1,"layer":2,"block":1}},
+                {"ph":"X","pid":1,"tid":1,"name":"pipeline.unit","ts":20.0,"dur":100.0,
+                 "args":{"id":0,"parent":-1,"layer":0,"block":0}},
+                {"ph":"X","pid":1,"tid":1,"name":"jacobi","ts":25.0,"dur":50.0,
+                 "args":{"id":1,"parent":0}}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            d.join("steps.jsonl"),
+            "{\"event\":\"step\",\"seq\":4,\"step\":0}\n{\"event\":\"step\",\"seq\":6,\"step\":1}\n",
+        )
+        .unwrap();
+        let report = summarize_dir(&d).unwrap();
+        assert!(report.contains("run r-1"), "{report}");
+        assert!(report.contains("pipeline.unit"), "{report}");
+        assert!(report.contains("jacobi"), "{report}");
+        assert!(report.contains("(layer 2, block 1)"), "{report}");
+        assert!(report.contains("step×2"), "{report}");
+        assert!(report.contains("seq 4..6"), "{report}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn truncated_trace_is_flagged() {
+        let d = tmpdir("trunc");
+        std::fs::write(
+            d.join("trace.json"),
+            r#"{"otherData":{"truncated":true},"traceEvents":[]}"#,
+        )
+        .unwrap();
+        let report = summarize_dir(&d).unwrap();
+        assert!(report.contains("truncated"), "{report}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn empty_dir_is_not_an_error() {
+        let d = tmpdir("empty");
+        let report = summarize_dir(&d).unwrap();
+        assert!(report.contains("no run.json"), "{report}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -382,9 +382,11 @@ impl ReaderCache {
     /// least-recently-used reader beyond [`READER_CACHE_CAP`].
     pub fn reader(&mut self, path: &Path) -> Result<&mut NpyReader> {
         if self.readers.contains_key(path) {
+            crate::obs::metrics::metrics().reader_cache_hits.incr();
             self.order.retain(|p| p != path);
             self.order.push_back(path.to_path_buf());
         } else {
+            crate::obs::metrics::metrics().reader_cache_misses.incr();
             if self.readers.len() >= READER_CACHE_CAP {
                 if let Some(old) = self.order.pop_front() {
                     self.readers.remove(&old);
@@ -493,6 +495,9 @@ impl NpyWriter {
         }
         write_raw(&mut self.file, chunk, |x| x.to_le_bytes())?;
         self.written += chunk.len();
+        crate::obs::metrics::metrics()
+            .npy_bytes_written
+            .add(4 * chunk.len() as u64);
         Ok(())
     }
 

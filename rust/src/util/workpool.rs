@@ -78,11 +78,17 @@ struct PoolShared {
 /// escapes the scope.
 fn run_task(task: Task) {
     let Task { job, batch } = task;
-    if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-        batch.panicked.fetch_add(1, Ordering::SeqCst);
-        let mut slot = batch.payload.lock().unwrap();
-        if slot.is_none() {
-            *slot = Some(payload);
+    crate::obs::metrics::metrics().pool_jobs.incr();
+    {
+        // The span wraps only the job body (not the completion
+        // bookkeeping), so pool overhead stays out of phase timings.
+        let _span = crate::obs::span::span("pool.job");
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+            batch.panicked.fetch_add(1, Ordering::SeqCst);
+            let mut slot = batch.payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
         }
     }
     let mut pending = batch.pending.lock().unwrap();
@@ -230,6 +236,11 @@ impl<'scope> Scope<'_, 'scope> {
         *self.batch.pending.lock().unwrap() += 1;
         {
             let mut q = self.pool.shared.queue.lock().unwrap();
+            if crate::obs::enabled() {
+                crate::obs::metrics::metrics()
+                    .pool_queue_depth
+                    .record(q.0.len() as f64);
+            }
             q.0.push_back(Task {
                 job,
                 batch: Arc::clone(&self.batch),
@@ -255,7 +266,10 @@ impl Drop for WaitGuard<'_> {
                 pos.and_then(|i| q.0.remove(i))
             };
             match task {
-                Some(t) => run_task(t),
+                Some(t) => {
+                    crate::obs::metrics::metrics().pool_helper_steals.incr();
+                    run_task(t)
+                }
                 None => break,
             }
         }

@@ -18,9 +18,20 @@ Usage:
     bench_gate.py --baseline OLD.json --current NEW.json [--threshold 0.85]
     bench_gate.py --self-test
 
+Coverage contract: a metric that is present (non-null) in the committed
+baseline but absent from the fresh run FAILS by name — losing a bench
+row is a regression in measurement coverage, not a skip.  Only metrics
+the baseline itself doesn't carry are skipped.
+
+The tracing-overhead row (obs_overhead.speedup = disabled/enabled wall
+ratio) additionally carries an absolute floor: whatever the baseline
+recorded, enabled-observability overhead beyond the budget fails.
+
 The self-test exercises the gate against synthetic fixtures (identical
-docs pass; a >15% regression fails; improvements and null metrics
-don't) and is wired into CI so the gate itself is continuously tested.
+docs pass; a >15% regression fails; improvements and baseline-null
+metrics don't; baseline-present/current-missing fails; the absolute
+floor trips) and is wired into CI so the gate itself is continuously
+tested.
 """
 
 import argparse
@@ -42,7 +53,16 @@ GATED_METRICS = [
     ("quantize flat speedup", ("quantize", "flat_speedup")),
     ("quantize axis-0 speedup", ("quantize", "axis0_speedup")),
     ("train-native step speedup", ("train_native_step", "speedup")),
+    ("tracing overhead speedup", ("obs_overhead", "speedup")),
 ]
+
+# Absolute floors on top of the relative gate.  The tracing-overhead
+# ratio is disabled/enabled wall time of the same loop — ~1.0 by
+# construction — so a value below the floor means enabled observability
+# costs more than the budget, regardless of what the committed baseline
+# happened to record.  (Floor 0.95 = 5% budget: the contract is <= 1%
+# overhead; the margin absorbs CI-runner timing noise.)
+ABS_FLOORS = {"tracing overhead speedup": 0.95}
 
 
 def lookup(doc, path):
@@ -72,12 +92,27 @@ def gate(baseline, current, threshold):
     for label, path in GATED_METRICS:
         old = lookup(baseline, path)
         new = lookup(current, path)
-        if old is None or new is None or old <= 0:
-            rows.append((label, old, new, None, "skipped (missing/null)"))
+        if old is None or old <= 0:
+            # The committed baseline doesn't gate this metric — nothing
+            # is promised, nothing to compare.
+            rows.append((label, old, new, None, "skipped (no baseline)"))
+            continue
+        if new is None:
+            # The baseline promises this row; a fresh run that fails to
+            # produce it is a coverage regression, not a skip.
+            regressions.append(label)
+            rows.append(
+                (label, old, new, None,
+                 "MISSING (present in baseline, absent in current run)")
+            )
             continue
         ratio = new / old
+        floor = ABS_FLOORS.get(label)
         if ratio < threshold:
             status = f"REGRESSION ({(1 - ratio) * 100:.1f}% below baseline)"
+            regressions.append(label)
+        elif floor is not None and new < floor:
+            status = f"REGRESSION (absolute {new:.3f} below floor {floor:.2f})"
             regressions.append(label)
         else:
             status = "ok"
@@ -127,6 +162,7 @@ def fixture():
         "jacobi_256": {"speedup": 1.9},
         "quantize": {"flat_speedup": 1.2, "axis0_speedup": None},
         "train_native_step": {"speedup": 3.7},
+        "obs_overhead": {"speedup": 0.998},
     }
 
 
@@ -162,13 +198,32 @@ def self_test():
     regs, _ = gate(base, wobbly, 0.85)
     check("small dip + improvements pass", regs == [])
 
-    # 5. Nulls / missing metrics are skipped, never spurious failures.
+    # 5. A null in the *baseline* skips (nothing promised there) — but a
+    # metric the baseline carries that is null/absent in the fresh run
+    # must FAIL by name, not silently shrink coverage.
     sparse = copy.deepcopy(base)
     sparse["quantize"]["flat_speedup"] = None
     del sparse["jacobi_256"]
     regs, rows = gate(base, sparse, 0.85)
     skipped = [r for r in rows if r[4].startswith("skipped")]
-    check("nulls and missing skip", regs == [] and len(skipped) == 3)
+    missing = [r for r in rows if r[4].startswith("MISSING")]
+    check(
+        "current-missing fails, baseline-null skips",
+        sorted(regs) == ["jacobi 256² speedup", "quantize flat speedup"]
+        and len(skipped) == 1  # axis0_speedup: null in the baseline itself
+        and len(missing) == 2,
+    )
+
+    # 5b. Symmetric direction: a metric only the *current* run has (new
+    # coverage the baseline never promised) stays a skip, not a failure.
+    thin = copy.deepcopy(base)
+    del thin["obs_overhead"]
+    regs, rows = gate(thin, base, 0.85)
+    check(
+        "baseline-missing still skips",
+        regs == []
+        and any(r[0] == "tracing overhead speedup" and r[4].startswith("skipped") for r in rows),
+    )
 
     # 6. Totally incomparable docs fail the run (schema-drift guard) —
     # exercised through gate(): zero comparable rows.
@@ -177,6 +232,14 @@ def self_test():
         "schema drift detected",
         regs == [] and all(r[3] is None for r in rows),
     )
+
+    # 7. The tracing-overhead row carries an absolute floor: even when
+    # the committed baseline itself recorded excess overhead (so the
+    # relative ratio looks fine), a value under the floor fails.
+    slow = copy.deepcopy(base)
+    slow["obs_overhead"]["speedup"] = 0.90
+    regs, _ = gate(slow, copy.deepcopy(slow), 0.85)
+    check("tracing-overhead absolute floor trips", regs == ["tracing overhead speedup"])
 
     if failures:
         print(f"self-test FAILED: {failures}")

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Generate a tiny synthetic .npy checkpoint directory (stdlib only).
+
+CI needs a real on-disk checkpoint to exercise `metis quantize-model
+--ckpt` end to end — streamed column-block reads, ReaderCache hits,
+per-format quantizer counters — without vendoring numpy or shipping
+binary fixtures in the repo.  This writes `--layers` float32 matrices
+in the subset of the .npy v1 format the Rust reader consumes
+(C-order, `<f4`, 2-D) with deterministic anisotropic content: each
+column j is scaled by a decaying factor so within-block dynamic range
+is wide enough that sub-distribution quantization produces nonzero
+clip and underflow counts at FP4.
+
+Usage:
+    make_ckpt.py OUTDIR [--layers N] [--rows N] [--cols N] [--seed N]
+"""
+
+import argparse
+import math
+import os
+import random
+import struct
+import sys
+
+
+def npy_header(shape):
+    header = "{{'descr': '<f4', 'fortran_order': False, 'shape': ({}), }}".format(
+        ", ".join(str(d) for d in shape) + ("," if len(shape) == 1 else "")
+    )
+    base = 6 + 2 + 2  # magic + version + header-length field
+    pad = (64 - (base + len(header) + 1) % 64) % 64
+    header = header + " " * pad + "\n"
+    return b"\x93NUMPY\x01\x00" + struct.pack("<H", len(header)) + header.encode()
+
+
+def write_matrix(path, rows, cols, rng):
+    # Decaying per-column scale (~3 decades across the matrix) plus a
+    # few planted outliers: wide within-block dynamic range is what
+    # drives FP4 clip/underflow, which the nightly asserts are nonzero.
+    vals = []
+    for i in range(rows):
+        for j in range(cols):
+            scale = math.exp(-6.0 * j / max(cols - 1, 1))
+            x = rng.gauss(0.0, 1.0) * scale
+            if rng.random() < 0.002:
+                x *= 40.0
+            vals.append(x)
+    with open(path, "wb") as f:
+        f.write(npy_header((rows, cols)))
+        f.write(struct.pack(f"<{len(vals)}f", *vals))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("outdir")
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--rows", type=int, default=48)
+    ap.add_argument("--cols", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    rng = random.Random(args.seed)
+    for i in range(args.layers):
+        path = os.path.join(args.outdir, f"layer{i:02d}.npy")
+        write_matrix(path, args.rows, args.cols, rng)
+        print(f"wrote {path} ({args.rows}x{args.cols} <f4)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

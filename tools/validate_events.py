@@ -1,0 +1,368 @@
+#!/usr/bin/env python3
+"""Schema validator for metis run-correlated JSONL telemetry streams.
+
+Every JSONL row metis emits (layer_report / step / eval / metrics /
+error / done, plus the run.json manifest) is stamped with the same
+four-field envelope — event, schema_version, run_id, seq — followed by
+the event's own payload.  This tool checks, per file:
+
+  * every line parses as a single JSON object;
+  * the envelope is present and well-typed (event known, schema_version
+    the current integer for that event, run_id a non-empty string,
+    seq a non-negative integer);
+  * run_id is consistent across all rows of the file (one file = one
+    run — the correlation contract `metis trace summarize` relies on);
+  * seq is strictly increasing down the file (rows are re-stamped at
+    write time, so any plateau or reversal means interleaved writers
+    or a broken stamping path);
+  * the event payload carries its required fields with the right types
+    (numbers that may be unavailable — timings, σ-distortion on
+    skipped layers — are nullable; everything else is not).
+
+Files may mix event types freely: the train-native stdout stream
+interleaves step, eval, metrics and done rows in one file.
+
+Usage:
+    validate_events.py FILE [FILE ...]
+    validate_events.py --self-test
+
+Exit 0 when every file validates, 1 otherwise (each violation printed
+as `file:line: message`).  --self-test validates a known-good mixed
+stream and then confirms six corrupted variants each fail.
+"""
+
+import argparse
+import json
+import sys
+
+# Field type atoms: str / num / int / bool / list / dict, with a "?"
+# suffix marking nullable.  Every event also gets the envelope check.
+SCHEMAS = {
+    "layer_report": {
+        "version": 2,
+        "fields": {
+            "name": "str",
+            "rows": "int",
+            "cols": "int",
+            "k": "int",
+            "quant_ms": "num?",
+            "metis_rel_err": "num?",
+            "direct_rel_err": "num?",
+            "metis_underflow": "num?",
+            "direct_underflow": "num?",
+            "metis_sigma_err": "num?",
+            "direct_sigma_err": "num?",
+            "metis_sigma_tail": "num?",
+            "direct_sigma_tail": "num?",
+        },
+    },
+    "step": {
+        "version": 2,
+        "fields": {
+            "step": "int",
+            "loss": "num?",
+            "lr": "num",
+            "ms": "num?",
+            "layers": "list",
+        },
+    },
+    "eval": {
+        "version": 2,
+        "fields": {
+            "step": "int?",
+            "heldout_loss": "num?",
+            "perplexity": "num?",
+            "logit_div": "num?",
+            "batches": "int",
+            "ms": "num?",
+            "layers": "list",
+        },
+    },
+    "metrics": {
+        "version": 1,
+        "fields": {
+            "quantizer": "dict",
+            "gemm": "dict",
+            "workpool": "dict",
+            "reader_cache": "dict",
+            "sigma_err_max": "num?",
+            "packed_bytes": "num",
+            "npy_bytes_written": "num",
+        },
+    },
+    "error": {
+        "version": 1,
+        "fields": {
+            "layer": "str",
+            "layer_index": "int",
+            "block": "int",
+            "c0": "int",
+            "width": "int",
+            "phase": "str",
+            "message": "str",
+        },
+    },
+    "done": {
+        "version": 1,
+        "fields": {
+            "steps": "int",
+            "evals": "int",
+            "first_loss": "num?",
+            "final_loss": "num?",
+            "final_heldout_loss": "num?",
+            "wall_ms": "num?",
+            "threads": "int",
+            "fmt": "str",
+            "strategy": "str",
+            "optim": "str",
+            "diverged": "bool",
+        },
+    },
+    "run_manifest": {
+        "version": 1,
+        "fields": {
+            "cmd": "str",
+            "argv": "list",
+            "seed": "num",
+            "config": "dict",
+            "build": "dict",
+            "streams": "list",
+        },
+    },
+}
+
+
+def type_ok(value, spec):
+    """Check a value against a type atom (optionally nullable)."""
+    if spec.endswith("?"):
+        if value is None:
+            return True
+        spec = spec[:-1]
+    if spec == "str":
+        return isinstance(value, str)
+    if spec == "num":
+        return isinstance(value, (int, float)) and not isinstance(value, bool)
+    if spec == "int":
+        # JSON has no integer type; accept exact-valued floats (the
+        # emitter serializes counters through f64).
+        return (
+            isinstance(value, (int, float))
+            and not isinstance(value, bool)
+            and float(value) == int(value)
+        )
+    if spec == "bool":
+        return isinstance(value, bool)
+    if spec == "list":
+        return isinstance(value, list)
+    if spec == "dict":
+        return isinstance(value, dict)
+    raise AssertionError(f"unknown type spec {spec!r}")
+
+
+def validate_row(obj, errors, where, state):
+    """Envelope + payload checks for one parsed row.  `state` carries
+    the per-file run_id / last-seq continuity context."""
+    if not isinstance(obj, dict):
+        errors.append(f"{where}: row is not a JSON object")
+        return
+    event = obj.get("event")
+    if not isinstance(event, str):
+        errors.append(f"{where}: missing/non-string 'event'")
+        return
+    schema = SCHEMAS.get(event)
+    if schema is None:
+        errors.append(f"{where}: unknown event type {event!r}")
+        return
+
+    sv = obj.get("schema_version")
+    if not type_ok(sv, "int") or int(sv) < 1:
+        errors.append(f"{where}: schema_version must be an integer >= 1, got {sv!r}")
+    elif int(sv) != schema["version"]:
+        errors.append(
+            f"{where}: {event} schema_version {int(sv)} != expected {schema['version']}"
+        )
+
+    run_id = obj.get("run_id")
+    if not isinstance(run_id, str) or not run_id:
+        errors.append(f"{where}: missing/empty 'run_id'")
+    else:
+        if state["run_id"] is None:
+            state["run_id"] = run_id
+        elif run_id != state["run_id"]:
+            errors.append(
+                f"{where}: run_id {run_id!r} differs from the file's "
+                f"first run_id {state['run_id']!r}"
+            )
+
+    seq = obj.get("seq")
+    if not type_ok(seq, "int") or int(seq) < 0:
+        errors.append(f"{where}: seq must be a non-negative integer, got {seq!r}")
+    else:
+        seq = int(seq)
+        if state["last_seq"] is not None and seq <= state["last_seq"]:
+            errors.append(
+                f"{where}: seq {seq} not strictly greater than previous {state['last_seq']}"
+            )
+        state["last_seq"] = max(seq, state["last_seq"] or 0)
+
+    for field, spec in schema["fields"].items():
+        if field not in obj:
+            errors.append(f"{where}: {event} row missing field {field!r}")
+        elif not type_ok(obj[field], spec):
+            errors.append(
+                f"{where}: {event}.{field} has wrong type "
+                f"(want {spec}, got {obj[field]!r})"
+            )
+
+
+def validate_lines(lines, name):
+    """Validate an iterable of text lines as one stream; returns the
+    list of violation strings (empty = valid)."""
+    errors = []
+    state = {"run_id": None, "last_seq": None}
+    rows = 0
+    for lineno, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        where = f"{name}:{lineno}"
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{where}: malformed JSON ({e.msg})")
+            continue
+        rows += 1
+        validate_row(obj, errors, where, state)
+    if rows == 0:
+        errors.append(f"{name}: no event rows found")
+    return errors
+
+
+def validate_file(path):
+    with open(path, encoding="utf-8") as f:
+        return validate_lines(f, path)
+
+
+# --- self-test fixtures --------------------------------------------------
+
+def _valid_stream():
+    """A known-good mixed stream mirroring train-native stdout + the
+    pipeline's error row + the manifest."""
+    rid = "run-fixture"
+    env = lambda event, seq: {
+        "event": event,
+        "schema_version": SCHEMAS[event]["version"],
+        "run_id": rid,
+        "seq": seq,
+    }
+    rows = [
+        {**env("layer_report", 3), "name": "blk0.attn", "rows": 64, "cols": 64,
+         "k": 8, "quant_ms": 1.5, "metis_rel_err": 0.01, "direct_rel_err": 0.02,
+         "metis_underflow": 0.0, "direct_underflow": 0.1,
+         "metis_sigma_err": 0.001, "direct_sigma_err": None,
+         "metis_sigma_tail": 0.0, "direct_sigma_tail": None},
+        {**env("step", 7), "step": 0, "loss": 2.31, "lr": 0.01, "ms": 12.0,
+         "layers": []},
+        {**env("eval", 9), "step": 0, "heldout_loss": 2.4, "perplexity": 11.0,
+         "logit_div": 0.02, "batches": 4, "ms": 8.0, "layers": []},
+        {**env("metrics", 11), "quantizer": {}, "gemm": {}, "workpool": {},
+         "reader_cache": {}, "sigma_err_max": 0.01, "packed_bytes": 4096,
+         "npy_bytes_written": 0},
+        {**env("error", 12), "layer": "blk1.mlp", "layer_index": 1, "block": 2,
+         "c0": 16, "width": 8, "phase": "validate",
+         "message": "non-finite weight values"},
+        {**env("done", 15), "steps": 4, "evals": 1, "first_loss": 2.31,
+         "final_loss": 1.9, "final_heldout_loss": 2.4, "wall_ms": 60.0,
+         "threads": 2, "fmt": "mxfp4", "strategy": "rsvd", "optim": "sgd",
+         "diverged": False},
+        {**env("run_manifest", 16), "cmd": "train-native",
+         "argv": ["train-native", "--steps", "4"], "seed": 7,
+         "config": {"steps": 4}, "build": {"pkg_version": "0.1.0"},
+         "streams": ["steps.jsonl"]},
+    ]
+    return [json.dumps(r) for r in rows]
+
+
+def self_test():
+    failures = []
+
+    def check(name, cond):
+        print(f"  self-test {name}: {'ok' if cond else 'FAILED'}")
+        if not cond:
+            failures.append(name)
+
+    good = _valid_stream()
+    check("valid mixed stream passes", validate_lines(good, "good") == [])
+
+    def corrupt(name, mutate, expect):
+        rows = [json.loads(l) for l in good]
+        mutate(rows)
+        errs = validate_lines([json.dumps(r) for r in rows], name)
+        check(name, any(expect in e for e in errs))
+
+    corrupt(
+        "missing required field fails",
+        lambda r: r[1].pop("loss"),
+        "missing field 'loss'",
+    )
+    corrupt(
+        "wrong field type fails",
+        lambda r: r[5].__setitem__("diverged", "no"),
+        "wrong type",
+    )
+    corrupt(
+        "seq plateau fails",
+        lambda r: r[2].__setitem__("seq", r[1]["seq"]),
+        "not strictly greater",
+    )
+    corrupt(
+        "run_id mismatch fails",
+        lambda r: r[3].__setitem__("run_id", "other-run"),
+        "differs from the file's first run_id",
+    )
+    corrupt(
+        "unknown event fails",
+        lambda r: r[0].__setitem__("event", "mystery"),
+        "unknown event type",
+    )
+    corrupt(
+        "schema_version drift fails",
+        lambda r: r[4].__setitem__("schema_version", 99),
+        "!= expected",
+    )
+    errs = validate_lines(good[:3] + ["{not json"] + good[3:], "syntax")
+    check("malformed JSON line fails", any("malformed JSON" in e for e in errs))
+    check("empty stream fails", validate_lines([], "empty") != [])
+
+    if failures:
+        print(f"self-test FAILED: {failures}")
+        return 1
+    print("self-test passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="JSONL stream files to validate")
+    ap.add_argument(
+        "--self-test", action="store_true", help="run the validator's own fixtures"
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.files:
+        ap.error("pass at least one FILE (or use --self-test)")
+    bad = 0
+    for path in args.files:
+        errors = validate_file(path)
+        if errors:
+            bad += 1
+            for e in errors:
+                print(e)
+        else:
+            print(f"{path}: ok")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()
