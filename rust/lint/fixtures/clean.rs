@@ -1,0 +1,44 @@
+//! Self-test fixture: violates no rule.  Exercises the allowed shapes
+//! next to each rule's forbidden one — BTreeMap iteration, widening
+//! casts, documented unsafe, explicit atomic orderings, a `_ref`
+//! oracle with its dual-name test, and a schema-known stamp() event.
+//! Fixtures are lint inputs only; they are never compiled.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static HITS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn frob_ref(x: f64) -> f64 {
+    x * 2.0
+}
+
+pub fn frob(x: f64) -> f64 {
+    frob_ref(x)
+}
+
+pub fn report(by_layer: &BTreeMap<String, f64>) -> f64 {
+    // BTreeMap iterates in key order — deterministic, allowed.
+    let mut total = 0.0;
+    for (_name, v) in by_layer {
+        total += v;
+    }
+    let widened = 7u16 as u64 as f64; // widening casts are fine
+    HITS.fetch_add(1, Ordering::SeqCst);
+    let bytes = [0u8; 8];
+    // SAFETY: `bytes` is a live 8-byte stack array; reading 8 bytes
+    // from its base pointer is in bounds for its lifetime.
+    let _view = unsafe { std::slice::from_raw_parts(bytes.as_ptr(), 8) };
+    let row = stamp("step", schema::STEP, vec![("loss", total)]);
+    total + widened + row.len() as f64 + HITS.load(Ordering::SeqCst) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frob_matches_its_reference_oracle() {
+        assert_eq!(frob(3.0), frob_ref(3.0));
+    }
+}

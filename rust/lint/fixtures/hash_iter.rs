@@ -1,0 +1,13 @@
+//! Self-test fixture: violates exactly `hash-iter`.  Iterating a
+//! HashMap in a reduction path folds values in nondeterministic order
+//! — the bit-identity contract breaker the rule exists to catch.
+
+use std::collections::HashMap;
+
+pub fn fold_report(per_layer: HashMap<String, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_name, v) in &per_layer {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,12 @@
+//! Self-test fixture: violates exactly `missing-ordering` — an atomic
+//! access through a default-ordering helper hides the memory-ordering
+//! decision the reviewer needs to see.  (Fixtures are lint inputs,
+//! not compiled: std atomics have no such helper by design.)
+
+use std::sync::atomic::AtomicUsize;
+
+static JOBS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn jobs_seen() -> usize {
+    JOBS.load()
+}

@@ -1,0 +1,7 @@
+//! Self-test fixture: violates exactly `narrowing-cast`.  The PR 2
+//! seed bug class: a u64 seed truncated through `as i32` wraps
+//! silently instead of erroring.
+
+pub fn seed_lane(seed: u64) -> i32 {
+    seed as i32
+}

@@ -1,0 +1,15 @@
+//! Self-test fixture: violates exactly `ref-without-test`.  A `_ref`
+//! oracle whose rewrite has no exact-equality test referencing both
+//! names — the discipline that caught the PR 4 NaN-suppression bug.
+
+pub fn quantize_row_ref(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| x.round()).collect()
+}
+
+pub fn quantize_row(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    for x in xs {
+        out.push(x.round());
+    }
+    out
+}

@@ -1,0 +1,11 @@
+//! Self-test fixture: violates exactly `relaxed-outside-obs`.
+//! `Ordering::Relaxed` is reserved for the racy-by-design counters
+//! under rust/src/obs/; anywhere else it needs a justification.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static PENDING: AtomicUsize = AtomicUsize::new(0);
+
+pub fn pending() -> usize {
+    PENDING.load(Ordering::Relaxed)
+}

@@ -1,0 +1,7 @@
+//! Self-test fixture: violates exactly `undocumented-unsafe` — an
+//! unsafe block with no `// SAFETY:` comment above it.
+
+pub fn view(bytes: &[f32]) -> &[f32] {
+    let slice = unsafe { std::slice::from_raw_parts(bytes.as_ptr(), bytes.len()) };
+    slice
+}

@@ -1,0 +1,8 @@
+//! Self-test fixture: violates exactly `unknown-event`.  Every event
+//! name passed to `obs::run::stamp()` must exist in the
+//! tools/validate_events.py SCHEMAS table, or offline validation of
+//! the emitted JSONL stream silently never covers it.
+
+pub fn emit() -> String {
+    stamp("mystery_event", schema::MYSTERY_EVENT, vec![])
+}

@@ -1,0 +1,108 @@
+//! Shared allowlist (`rust/lint/allowlist.txt`): pipe-separated
+//! `rule | path-suffix | snippet | justification` lines.  Entries that
+//! match nothing are themselves findings (stale-allowlist) so the list
+//! cannot rot.  Mirrors load_allowlist/apply_allowlist in
+//! tools/lint_invariants.py.
+
+use crate::rules::Finding;
+
+pub struct Entry {
+    pub rule: String,
+    pub path: String,
+    pub snippet: String,
+    pub line: usize,
+    pub used: bool,
+}
+
+/// Parse `text` (already read from `display_path`).  Malformed lines
+/// become allowlist-format findings rather than aborting.
+pub fn parse(text: &str, display_path: &str) -> (Vec<Entry>, Vec<Finding>) {
+    let mut entries = Vec::new();
+    let mut errors = Vec::new();
+    for (i, raw) in text.split('\n').enumerate() {
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = s.split('|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            errors.push(Finding {
+                rule: "allowlist-format",
+                path: display_path.to_string(),
+                line: i + 1,
+                snippet: s.to_string(),
+                msg: "allowlist entries are `rule | path-suffix | snippet | \
+                      justification` (all four non-empty)"
+                    .to_string(),
+            });
+            continue;
+        }
+        entries.push(Entry {
+            rule: parts[0].to_string(),
+            path: parts[1].to_string(),
+            snippet: parts[2].to_string(),
+            line: i + 1,
+            used: false,
+        });
+    }
+    (entries, errors)
+}
+
+/// Drop findings matched by an entry; unused entries become
+/// stale-allowlist findings.
+pub fn apply(findings: Vec<Finding>, entries: &mut [Entry], allowlist_path: &str) -> Vec<Finding> {
+    let mut kept = Vec::new();
+    for f in findings {
+        let hit = entries.iter_mut().find(|e| {
+            e.rule == f.rule
+                && f.path.replace('\\', "/").ends_with(&e.path)
+                && f.snippet.contains(&e.snippet)
+        });
+        match hit {
+            Some(e) => e.used = true,
+            None => kept.push(f),
+        }
+    }
+    for e in entries.iter().filter(|e| !e.used) {
+        kept.push(Finding {
+            rule: "stale-allowlist",
+            path: allowlist_path.to_string(),
+            line: e.line,
+            snippet: format!("{} | {} | {}", e.rule, e.path, e.snippet),
+            msg: "allowlist entry matches no finding — remove it".to_string(),
+        });
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malformed_lines_are_format_errors() {
+        let (entries, errors) = parse("# comment\nrule | path\nok-rule | p.rs | snip | why\n", "a.txt");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(errors.len(), 1);
+        assert_eq!(errors[0].rule, "allowlist-format");
+        assert_eq!(errors[0].line, 2);
+    }
+
+    #[test]
+    fn suppression_and_staleness() {
+        let f = Finding {
+            rule: "narrowing-cast",
+            path: "rust/src/x.rs".to_string(),
+            line: 3,
+            snippet: "let a = b as i32;".to_string(),
+            msg: String::new(),
+        };
+        let (mut entries, _) = parse(
+            "narrowing-cast | src/x.rs | as i32 | why\nhash-iter | nope.rs | zzz | stale\n",
+            "a.txt",
+        );
+        let kept = apply(vec![f], &mut entries, "a.txt");
+        assert_eq!(kept.len(), 1, "{kept:?}");
+        assert_eq!(kept[0].rule, "stale-allowlist");
+    }
+}

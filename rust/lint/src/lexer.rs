@@ -1,0 +1,232 @@
+//! Scrubber: blank comment and string/char-literal contents so token
+//! scans cannot be fooled by code-shaped text, while keeping byte
+//! offsets (and thus line numbers) stable.  Comment text is collected
+//! per line for the `// SAFETY:` rule.  Mirrors `scrub()` in
+//! tools/lint_invariants.py — the two must classify identically or the
+//! CI halves disagree.
+
+use std::collections::BTreeMap;
+
+pub struct Scrubbed {
+    /// Source with comment and string/char contents replaced by spaces
+    /// (newlines kept, so offsets and line numbers are unchanged).
+    pub code: String,
+    /// 1-based line number -> concatenated comment text on that line.
+    pub comments: BTreeMap<usize, String>,
+}
+
+/// Byte-offset → 1-based line number lookup.
+pub struct LineIndex {
+    starts: Vec<usize>,
+}
+
+impl LineIndex {
+    pub fn new(text: &str) -> LineIndex {
+        let mut starts = vec![0];
+        for (i, c) in text.bytes().enumerate() {
+            if c == b'\n' {
+                starts.push(i + 1);
+            }
+        }
+        LineIndex { starts }
+    }
+
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+}
+
+fn blank(code: &mut [u8], a: usize, z: usize) {
+    let z = z.min(code.len());
+    for c in &mut code[a..z] {
+        if *c != b'\n' {
+            *c = b' ';
+        }
+    }
+}
+
+fn ident_before(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// Quote position + hash count for a raw/byte string prefix starting
+/// at `i` (`r"`, `r#"`, `b"`, `br"`, `br#"` …), if one starts here.
+fn raw_prefix(b: &[u8], i: usize) -> Option<(usize, usize, bool)> {
+    let n = b.len();
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == b'b' {
+        j += 1;
+        if j < n && b[j] == b'r' {
+            raw = true;
+            j += 1;
+        }
+    } else if b[j] == b'r' {
+        raw = true;
+        j += 1;
+    } else {
+        return None;
+    }
+    let mut hashes = 0;
+    while raw && j < n && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && b[j] == b'"' {
+        Some((j, hashes, raw))
+    } else {
+        None
+    }
+}
+
+/// Blank a quoted (escape-aware) string starting at `start`; returns
+/// the offset just past the closing quote.
+fn scan_string(b: &[u8], code: &mut [u8], start: usize, quote: u8) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        if b[j] == b'\\' {
+            j += 2;
+        } else if b[j] == quote {
+            blank(code, start + 1, j);
+            return j + 1;
+        } else {
+            j += 1;
+        }
+    }
+    blank(code, start + 1, n);
+    n
+}
+
+/// Blank a raw string whose opening quote is at `quote_at`, closed by
+/// `"` followed by `hashes` `#`s.
+fn scan_raw(b: &[u8], code: &mut [u8], quote_at: usize, hashes: usize) -> usize {
+    let n = b.len();
+    let mut j = quote_at + 1;
+    while j < n {
+        if b[j] == b'"' && j + 1 + hashes <= n && b[j + 1..j + 1 + hashes].iter().all(|&c| c == b'#')
+        {
+            blank(code, quote_at + 1, j);
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+    blank(code, quote_at + 1, n);
+    n
+}
+
+pub fn scrub(text: &str) -> Scrubbed {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut code: Vec<u8> = b.to_vec();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let lines = LineIndex::new(text);
+
+    let mut note = |comments: &mut BTreeMap<usize, String>, a: usize, z: usize| {
+        let mut ln = lines.line_of(a);
+        for part in text[a..z].split('\n') {
+            comments.entry(ln).or_default().push_str(part);
+            ln += 1;
+        }
+    };
+
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && b[i..].starts_with(b"//") {
+            let j = b[i..]
+                .iter()
+                .position(|&x| x == b'\n')
+                .map_or(n, |rel| i + rel);
+            note(&mut comments, i, j);
+            blank(&mut code, i, j);
+            i = j;
+        } else if c == b'/' && b[i..].starts_with(b"/*") {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            note(&mut comments, i, j);
+            blank(&mut code, i, j);
+            i = j;
+        } else if c == b'"' {
+            i = scan_string(b, &mut code, i, b'"');
+        } else if (c == b'r' || c == b'b') && !ident_before(b, i) {
+            match raw_prefix(b, i) {
+                Some((quote_at, hashes, true)) => i = scan_raw(b, &mut code, quote_at, hashes),
+                Some((quote_at, _, false)) => i = scan_string(b, &mut code, quote_at, b'"'),
+                None => i += 1,
+            }
+        } else if c == b'\'' {
+            let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+            if nxt == b'\\' {
+                i = scan_string(b, &mut code, i, b'\'');
+            } else if i + 2 < n && b[i + 2] == b'\'' && nxt != b'\'' {
+                blank(&mut code, i + 1, i + 2);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Scrubbed {
+        code: String::from_utf8_lossy(&code).into_owned(),
+        comments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_offsets_kept() {
+        let src = "let x = \"as i32\"; // as u32\nlet y = 1;\n";
+        let s = scrub(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(!s.code.contains("as i32"), "string contents must vanish");
+        assert!(!s.code.contains("as u32"), "comment contents must vanish");
+        assert!(s.code.contains("let y = 1;"));
+        assert!(s.comments[&1].contains("as u32"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = "let a = r#\"unsafe { }\"#; let c = 'u'; let l: &'static str = \"x\";";
+        let s = scrub(src);
+        assert!(!s.code.contains("unsafe"));
+        assert!(!s.code.contains("'u'"), "char contents blanked");
+        assert!(s.code.contains("&'static str"), "lifetimes survive");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn f() {}";
+        let s = scrub(src);
+        assert!(!s.code.contains("inner"));
+        assert!(s.code.contains("fn f()"));
+    }
+
+    #[test]
+    fn line_index_maps_offsets() {
+        let idx = LineIndex::new("ab\ncd\nef");
+        assert_eq!(idx.line_of(0), 1);
+        assert_eq!(idx.line_of(2), 1);
+        assert_eq!(idx.line_of(3), 2);
+        assert_eq!(idx.line_of(7), 3);
+    }
+}

@@ -1,0 +1,278 @@
+//! metis-lint: the Rust half of the invariant lint engine
+//! (DESIGN.md §12).  Token-level checks over `rust/src` + `rust/tests`
+//! for the written invariant catalog; mirrored by
+//! tools/lint_invariants.py so the catalog is enforceable with either
+//! toolchain alone.
+//!
+//! Usage:
+//!   cargo run -p metis-lint                      # lint rust/src + rust/tests
+//!   cargo run -p metis-lint -- rust/src          # explicit roots
+//!   cargo run -p metis-lint -- --self-test       # fixture suite (CI)
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/internal error.
+
+mod allowlist;
+mod lexer;
+mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use rules::{Finding, SourceFile};
+
+const DEFAULT_ROOTS: &[&str] = &["rust/src", "rust/tests"];
+const DEFAULT_ALLOWLIST: &str = "rust/lint/allowlist.txt";
+const FIXTURES: &str = "rust/lint/fixtures";
+const EVENTS_TABLE: &str = "tools/validate_events.py";
+
+/// Walk up from the CWD to the directory holding tools/validate_events.py.
+fn find_repo_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir().context("cwd")?;
+    loop {
+        if dir.join(EVENTS_TABLE).is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!("could not find {EVENTS_TABLE} above the current directory");
+        }
+    }
+}
+
+/// Event names from validate_events.py's SCHEMAS table.  The Python
+/// half imports the table; here we re-parse it textually: keys are
+/// `    "name": {` lines at 4-space indent between `SCHEMAS = {` and
+/// the closing `}` at column 0.
+fn schema_events(repo: &Path) -> Result<BTreeSet<String>> {
+    let path = repo.join(EVENTS_TABLE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut events = BTreeSet::new();
+    let mut inside = false;
+    for line in text.split('\n') {
+        if !inside {
+            inside = line.starts_with("SCHEMAS = {");
+            continue;
+        }
+        if line.starts_with('}') {
+            break;
+        }
+        // exactly 4-space indent, then "name":
+        let Some(rest) = line.strip_prefix("    \"") else {
+            continue;
+        };
+        let Some(q) = rest.find('"') else { continue };
+        if rest[q + 1..].trim_start().starts_with(':') {
+            events.insert(rest[..q].to_string());
+        }
+    }
+    if events.is_empty() {
+        bail!("no event names parsed from {} — SCHEMAS layout changed?", path.display());
+    }
+    Ok(events)
+}
+
+fn rust_files(roots: &[PathBuf]) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let mut names: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading dir {}", dir.display()))?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<std::io::Result<_>>()?;
+        names.sort();
+        for p in names {
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for root in roots {
+        walk(root, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn load_sources(paths: &[PathBuf], repo: &Path) -> Result<Vec<SourceFile>> {
+    paths
+        .iter()
+        .map(|p| {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            let rel = p
+                .strip_prefix(repo)
+                .unwrap_or(p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            Ok(SourceFile::new(rel, text))
+        })
+        .collect()
+}
+
+fn lint_paths(paths: &[PathBuf], events: &BTreeSet<String>, repo: &Path) -> Result<Vec<Finding>> {
+    let files = load_sources(paths, repo)?;
+    Ok(rules::lint_all(&files, events))
+}
+
+fn self_test(events: &BTreeSet<String>, repo: &Path) -> Result<bool> {
+    let fixtures = repo.join(FIXTURES);
+    let expect: BTreeMap<&str, &[&str]> = BTreeMap::from([
+        ("clean.rs", &[][..]),
+        ("hash_iter.rs", &["hash-iter"][..]),
+        ("narrowing_cast.rs", &["narrowing-cast"][..]),
+        ("undocumented_unsafe.rs", &["undocumented-unsafe"][..]),
+        ("missing_ordering.rs", &["missing-ordering"][..]),
+        ("relaxed_outside_obs.rs", &["relaxed-outside-obs"][..]),
+        ("ref_without_test.rs", &["ref-without-test"][..]),
+        ("unknown_event.rs", &["unknown-event"][..]),
+    ]);
+    let present: BTreeSet<String> = rust_files(&[fixtures.clone()])?
+        .iter()
+        .filter_map(|p| p.file_name().map(|n| n.to_string_lossy().into_owned()))
+        .collect();
+    let wanted: BTreeSet<String> = expect.keys().map(|k| k.to_string()).collect();
+    if present != wanted {
+        println!("self-test: fixture set mismatch: {present:?} vs {wanted:?}");
+        return Ok(false);
+    }
+    let mut failures = 0usize;
+    for (name, want) in &expect {
+        let findings = lint_paths(&[fixtures.join(name)], events, repo)?;
+        let got: BTreeSet<&str> = findings.iter().map(|f| f.rule).collect();
+        let want: BTreeSet<&str> = want.iter().copied().collect();
+        if (!want.is_empty() && (got != want || findings.is_empty()))
+            || (want.is_empty() && !findings.is_empty())
+        {
+            println!("self-test FAIL {name}: expected exactly {want:?}, got {got:?}");
+            for f in &findings {
+                println!("    {f}");
+            }
+            failures += 1;
+        } else {
+            let label = if want.is_empty() {
+                "clean".to_string()
+            } else {
+                want.iter().copied().collect::<Vec<_>>().join(",")
+            };
+            println!("self-test ok   {name}: {label}");
+        }
+    }
+
+    // Allowlist mechanics: a matching entry suppresses; a stale one errors.
+    let findings = lint_paths(&[fixtures.join("narrowing_cast.rs")], events, repo)?;
+    let (mut entries, _) = allowlist::parse(
+        "narrowing-cast | narrowing_cast.rs | as i32 | fixture\n",
+        "allowlist.txt",
+    );
+    let left = allowlist::apply(findings, &mut entries, "allowlist.txt");
+    if left.is_empty() {
+        println!("self-test ok   allowlist suppresses a justified finding");
+    } else {
+        println!("self-test FAIL allowlist-suppression: {left:?}");
+        failures += 1;
+    }
+    let (mut stale_entries, _) =
+        allowlist::parse("hash-iter | nope.rs | zzz | stale\n", "allowlist.txt");
+    let stale = allowlist::apply(Vec::new(), &mut stale_entries, "allowlist.txt");
+    if stale.len() == 1 && stale[0].rule == "stale-allowlist" {
+        println!("self-test ok   stale allowlist entry is an error");
+    } else {
+        println!("self-test FAIL stale-allowlist not reported");
+        failures += 1;
+    }
+    println!(
+        "self-test: {}",
+        if failures == 0 { "passed" } else { "FAILED" }
+    );
+    Ok(failures == 0)
+}
+
+fn run() -> Result<ExitCode> {
+    let repo = find_repo_root()?;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut allowlist_path = repo.join(DEFAULT_ALLOWLIST);
+    let mut do_self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--self-test" => do_self_test = true,
+            "--allowlist" => {
+                let v = args.next().ok_or_else(|| anyhow!("--allowlist needs a path"))?;
+                allowlist_path = PathBuf::from(v);
+            }
+            "--help" | "-h" => {
+                println!("usage: metis-lint [--self-test] [--allowlist PATH] [ROOT...]");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other if !other.starts_with('-') => roots.push(PathBuf::from(other)),
+            other => bail!("unknown flag {other}"),
+        }
+    }
+
+    let events = schema_events(&repo)?;
+    if do_self_test {
+        return Ok(if self_test(&events, &repo)? {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        });
+    }
+
+    if roots.is_empty() {
+        roots = DEFAULT_ROOTS.iter().map(|r| repo.join(r)).collect();
+    }
+    let files = rust_files(&roots)?;
+    if files.is_empty() {
+        bail!("no .rs files under {roots:?}");
+    }
+    let findings = lint_paths(&files, &events, &repo)?;
+    let (mut entries, errors) = match std::fs::read_to_string(&allowlist_path) {
+        Ok(text) => allowlist::parse(
+            &text,
+            &allowlist_path
+                .strip_prefix(&repo)
+                .unwrap_or(&allowlist_path)
+                .to_string_lossy()
+                .replace('\\', "/"),
+        ),
+        Err(_) => (Vec::new(), Vec::new()),
+    };
+    let rel_allow = allowlist_path
+        .strip_prefix(&repo)
+        .unwrap_or(&allowlist_path)
+        .to_string_lossy()
+        .replace('\\', "/");
+    let mut findings = allowlist::apply(findings, &mut entries, &rel_allow);
+    findings.extend(errors);
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    for f in &findings {
+        println!("{f}");
+    }
+    let n_allowed = entries.iter().filter(|e| e.used).count();
+    println!(
+        "metis-lint: {} files, {} finding(s), {} allowlisted",
+        files.len(),
+        findings.len(),
+        n_allowed
+    );
+    Ok(if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("metis-lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

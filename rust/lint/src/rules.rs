@@ -1,0 +1,720 @@
+//! The invariant rule implementations (DESIGN.md §12), mirroring
+//! tools/lint_invariants.py rule-for-rule.  Deliberately token-level —
+//! a full parser (syn) is unavailable offline, and the catalog's
+//! patterns are all lexically recognizable; the documented limits are
+//! shared with the Python half.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::lexer::{LineIndex, Scrubbed};
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub snippet: String,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.path, self.line, self.rule, self.msg, self.snippet
+        )
+    }
+}
+
+/// One loaded source file, ready for the rules.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+    pub scrubbed: Scrubbed,
+    pub lines: LineIndex,
+}
+
+impl SourceFile {
+    pub fn new(path: String, text: String) -> SourceFile {
+        let scrubbed = crate::lexer::scrub(&text);
+        let lines = LineIndex::new(&text);
+        SourceFile {
+            path,
+            scrubbed,
+            lines,
+            text,
+        }
+    }
+
+    fn line_text(&self, line: usize) -> String {
+        self.text
+            .split('\n')
+            .nth(line.saturating_sub(1))
+            .unwrap_or("")
+            .trim()
+            .to_string()
+    }
+
+    fn finding(&self, rule: &'static str, at: usize, msg: String) -> Finding {
+        let line = self.lines.line_of(at);
+        Finding {
+            rule,
+            path: self.path.clone(),
+            line,
+            snippet: self.line_text(line),
+            msg,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token-scan helpers
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+/// Byte offsets of `word` as a standalone token (ident boundaries on
+/// both sides).
+fn token_positions(code: &str, word: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(word) {
+        let at = from + rel;
+        let end = at + word.len();
+        if (at == 0 || !is_ident(b[at - 1])) && (end >= b.len() || !is_ident(b[end])) {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Offset just past the last non-whitespace byte before `i`.
+fn rskip_ws(b: &[u8], mut i: usize) -> usize {
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+/// The identifier (or tuple index digits) whose last byte is at
+/// `end - 1`; empty if none.
+fn ident_ending_at(code: &str, end: usize) -> &str {
+    let b = code.as_bytes();
+    let mut s = end;
+    while s > 0 && is_ident(b[s - 1]) {
+        s -= 1;
+    }
+    &code[s..end]
+}
+
+fn ident_starting_at(code: &str, at: usize) -> &str {
+    let b = code.as_bytes();
+    let mut e = at;
+    while e < b.len() && is_ident(b[e]) {
+        e += 1;
+    }
+    &code[at..e]
+}
+
+fn leading_ident(s: &str) -> &str {
+    let b = s.as_bytes();
+    if b.is_empty() || !is_ident_start(b[0]) {
+        return "";
+    }
+    ident_starting_at(s, 0)
+}
+
+fn strip_kw<'a>(s: &'a str, kw: &str) -> Option<&'a str> {
+    let rest = s.strip_prefix(kw)?;
+    if rest.starts_with(|c: char| c.is_ascii_whitespace()) {
+        Some(rest.trim_start())
+    } else {
+        None
+    }
+}
+
+/// Contents of the balanced paren group opening at `open_at`.
+fn paren_span(code: &str, open_at: usize) -> &str {
+    let b = code.as_bytes();
+    let mut depth = 0usize;
+    for j in open_at..b.len() {
+        match b[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &code[open_at..=j];
+                }
+            }
+            _ => {}
+        }
+    }
+    &code[open_at..]
+}
+
+// ---------------------------------------------------------------------------
+// Binding collection (textual, file-local — the documented limit)
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum BindKind {
+    /// `HashMap` / `HashSet`.
+    Hash,
+    /// Any `Atomic*` type.
+    Atomic,
+}
+
+fn type_matches(kind: BindKind, name: &str) -> bool {
+    match kind {
+        BindKind::Hash => name == "HashMap" || name == "HashSet",
+        BindKind::Atomic => name.starts_with("Atomic") && name.len() > "Atomic".len(),
+    }
+}
+
+/// `ident::`-path prefix (possibly empty) — what may sit between `=`
+/// and a constructed type, e.g. `std::collections::`.
+fn path_prefix_ok(mut s: &str) -> bool {
+    loop {
+        s = s.trim_start();
+        if s.is_empty() {
+            return true;
+        }
+        let id = leading_ident(s);
+        if id.is_empty() {
+            return false;
+        }
+        let rest = s[id.len()..].trim_start();
+        if let Some(r) = rest.strip_prefix("::") {
+            s = r;
+        } else {
+            return false;
+        }
+    }
+}
+
+/// What may sit between a field/param `:` and its type: a path prefix
+/// with at most one `Mutex<` wrapper, e.g. `std::sync::Mutex<`.
+fn field_prefix_ok(mut s: &str) -> bool {
+    loop {
+        s = s.trim_start();
+        if s.is_empty() {
+            return true;
+        }
+        let id = leading_ident(s);
+        if id.is_empty() {
+            return false;
+        }
+        let rest = s[id.len()..].trim_start();
+        if let Some(r) = rest.strip_prefix("::") {
+            s = r;
+        } else if id == "Mutex" && rest.starts_with('<') {
+            s = &rest[1..];
+        } else {
+            return false;
+        }
+    }
+}
+
+/// Identifiers bound to a `kind` type via let/static/const, struct
+/// fields, fn params, or a tuple-struct field (bound as `"0"`).
+pub fn collect_bindings(code: &str, kind: BindKind) -> BTreeSet<String> {
+    let b = code.as_bytes();
+    let mut names = BTreeSet::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if !is_ident_start(b[i]) || (i > 0 && is_ident(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < b.len() && is_ident(b[i]) {
+            i += 1;
+        }
+        if !type_matches(kind, &code[start..i]) {
+            continue;
+        }
+        let end = i;
+        // Segment: from the nearest statement-ish boundary back to the
+        // type token.
+        let mut s = start;
+        while s > 0 && !matches!(b[s - 1], b';' | b'{' | b'}' | b'(' | b',') {
+            s -= 1;
+        }
+        let seg = code[s..start].trim();
+
+        // let / static (mut) / const NAME : .. TYPE | = TYPE:: — the
+        // keyword may sit anywhere in the segment (`pub static …`),
+        // like the python mirror's unanchored regex.
+        let mut kw_hit: Option<(usize, &str, bool)> = None;
+        for (kw, allow_mut) in [("let", true), ("static", true), ("const", false)] {
+            if let Some(at) = token_positions(seg, kw).into_iter().next_back() {
+                if kw_hit.map_or(true, |(best, _, _)| at > best) {
+                    kw_hit = Some((at, kw, allow_mut));
+                }
+            }
+        }
+        if let Some((at, kw, allow_mut)) = kw_hit {
+            if let Some(rest) = strip_kw(&seg[at..], kw) {
+                let rest = if allow_mut {
+                    strip_kw(rest, "mut").unwrap_or(rest)
+                } else {
+                    rest
+                };
+                let name = leading_ident(rest);
+                if !name.is_empty() {
+                    let after = rest[name.len()..].trim_start();
+                    let ok = if let Some(ann) = after.strip_prefix(':') {
+                        !ann.contains('=') && !ann.contains('\n')
+                    } else if let Some(init) = after.strip_prefix('=') {
+                        path_prefix_ok(init) && code[end..].trim_start().starts_with("::")
+                    } else {
+                        false
+                    };
+                    if ok {
+                        names.insert(name.to_string());
+                    }
+                }
+            }
+            continue;
+        }
+
+        // Field / param:  [pub] NAME : [path::][Mutex<] TYPE <
+        let fseg = strip_kw(seg, "pub").unwrap_or(seg);
+        let name = leading_ident(fseg);
+        if !name.is_empty() {
+            if let Some(rest) = fseg[name.len()..].trim_start().strip_prefix(':') {
+                let next_is_generic = code[end..].trim_start().starts_with('<');
+                if field_prefix_ok(rest) && next_is_generic {
+                    names.insert(name.to_string());
+                    continue;
+                }
+            }
+        }
+
+        // Tuple struct:  struct X ( [pub] TYPE ...  →  field `.0`
+        if (seg.is_empty() || seg == "pub") && s > 0 && b[s - 1] == b'(' {
+            let before = rskip_ws(b, s - 1);
+            let sname = ident_ending_at(code, before);
+            if !sname.is_empty() {
+                let before_kw = rskip_ws(b, before - sname.len());
+                if ident_ending_at(code, before_kw) == "struct" {
+                    names.insert("0".to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+
+const ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain",
+];
+
+pub fn hash_iter(f: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    for name in collect_bindings(code, BindKind::Hash) {
+        // NAME . method (
+        for at in token_positions(code, &name) {
+            let dot = skip_ws(b, at + name.len());
+            if dot >= b.len() || b[dot] != b'.' {
+                continue;
+            }
+            let m = skip_ws(b, dot + 1);
+            let method = ident_starting_at(code, m);
+            if !ITER_METHODS.contains(&method) {
+                continue;
+            }
+            let paren = skip_ws(b, m + method.len());
+            if paren < b.len() && b[paren] == b'(' {
+                out.push(f.finding(
+                    "hash-iter",
+                    at,
+                    format!(
+                        "iteration over HashMap/HashSet `{name}` is nondeterministic \
+                         order; use BTreeMap or sort first"
+                    ),
+                ));
+            }
+        }
+        // for .. in [&][mut] NAME
+        for at in token_positions(code, "for") {
+            let stop = code[at..]
+                .find(|c| c == ';' || c == '{')
+                .map_or(code.len(), |rel| at + rel);
+            let clause = &code[at..stop];
+            for inat in token_positions(clause, "in") {
+                let mut j = skip_ws(clause.as_bytes(), inat + 2);
+                let cb = clause.as_bytes();
+                if j < cb.len() && cb[j] == b'&' {
+                    j = skip_ws(cb, j + 1);
+                }
+                if let Some(rest) = clause.get(j..) {
+                    let rest = strip_kw(rest, "mut").map_or(rest, |r| {
+                        j = clause.len() - r.len();
+                        r
+                    });
+                    let _ = rest;
+                }
+                if ident_starting_at(clause, j) == name {
+                    out.push(f.finding(
+                        "hash-iter",
+                        at + inat,
+                        format!(
+                            "iteration over HashMap/HashSet `{name}` is nondeterministic \
+                             order; use BTreeMap or sort first"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+pub fn narrowing_cast(f: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    for at in token_positions(code, "as") {
+        let j = skip_ws(b, at + 2);
+        if j == at + 2 {
+            continue; // `as` must be followed by whitespace
+        }
+        let ty = ident_starting_at(code, j);
+        if matches!(ty, "i32" | "u32" | "u16") {
+            out.push(f.finding(
+                "narrowing-cast",
+                at,
+                format!("narrowing `as {ty}` silently truncates; use try_from with a named error"),
+            ));
+        }
+    }
+}
+
+pub fn undocumented_unsafe(f: &SourceFile, out: &mut Vec<Finding>) {
+    let code_lines: Vec<&str> = f.scrubbed.code.split('\n').collect();
+    for at in token_positions(&f.scrubbed.code, "unsafe") {
+        let ln = f.lines.line_of(at);
+        if safety_comment_above(&code_lines, &f.scrubbed.comments, ln) {
+            continue;
+        }
+        out.push(f.finding(
+            "undocumented-unsafe",
+            at,
+            "`unsafe` without a `// SAFETY:` comment directly above".to_string(),
+        ));
+    }
+}
+
+fn safety_comment_above(
+    code_lines: &[&str],
+    comments: &std::collections::BTreeMap<usize, String>,
+    ln: usize,
+) -> bool {
+    if comments.get(&ln).is_some_and(|c| c.contains("SAFETY:")) {
+        return true;
+    }
+    let mut k = ln.saturating_sub(1);
+    while k >= 1 {
+        let line_code = code_lines.get(k - 1).copied().unwrap_or("").trim();
+        if comments.contains_key(&k) && line_code.is_empty() {
+            if comments[&k].contains("SAFETY:") {
+                return true;
+            }
+            k -= 1; // contiguous comment block: keep walking up
+        } else if line_code.starts_with("#[") {
+            k -= 1; // attributes may sit between the comment and the item
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+const ATOMIC_RMW: &[&str] = &[
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_nand",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+pub fn missing_ordering(f: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    let atomics = collect_bindings(code, BindKind::Atomic);
+    let mut methods: Vec<&str> = vec!["load", "store"];
+    methods.extend_from_slice(ATOMIC_RMW);
+    for method in methods {
+        for at in token_positions(code, method) {
+            let prev = rskip_ws(b, at);
+            if prev == 0 || b[prev - 1] != b'.' {
+                continue;
+            }
+            let open = skip_ws(b, at + method.len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            let needs = if matches!(method, "load" | "store" | "swap") {
+                let recv = ident_ending_at(code, rskip_ws(b, prev - 1));
+                atomics.contains(recv)
+            } else {
+                true // fetch_* / compare_exchange only exist on atomics
+            };
+            if !needs || paren_span(code, open).contains("Ordering::") {
+                continue;
+            }
+            out.push(f.finding(
+                "missing-ordering",
+                at,
+                format!("atomic `.{method}()` without an explicit `Ordering::...`"),
+            ));
+        }
+    }
+}
+
+pub fn relaxed_outside_obs(f: &SourceFile, out: &mut Vec<Finding>) {
+    let norm = f.path.replace('\\', "/");
+    if norm.contains("/obs/") || norm.starts_with("obs/") {
+        return;
+    }
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    for at in token_positions(code, "Ordering") {
+        let mut j = skip_ws(b, at + "Ordering".len());
+        if !code[j..].starts_with("::") {
+            continue;
+        }
+        j = skip_ws(b, j + 2);
+        if ident_starting_at(code, j) == "Relaxed" {
+            out.push(f.finding(
+                "relaxed-outside-obs",
+                at,
+                "`Ordering::Relaxed` outside rust/src/obs/ — use an acquire/release \
+                 or SeqCst ordering (or justify in the allowlist)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Count call sites `name(` excluding definitions `fn name(`.
+fn call_count(code: &str, name: &str) -> usize {
+    let b = code.as_bytes();
+    token_positions(code, name)
+        .into_iter()
+        .filter(|&at| {
+            let open = skip_ws(b, at + name.len());
+            if open >= b.len() || b[open] != b'(' {
+                return false;
+            }
+            ident_ending_at(code, rskip_ws(b, at)) != "fn"
+        })
+        .count()
+}
+
+/// Repo-level: every `fn NAME_ref` oracle needs a test file calling
+/// both `NAME(` and `NAME_ref(`.
+pub fn ref_pairs(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let mut oracles: Vec<(String, usize, usize)> = Vec::new(); // (base, file idx, offset)
+    for (fi, f) in files.iter().enumerate() {
+        let code = &f.scrubbed.code;
+        let b = code.as_bytes();
+        for at in token_positions(code, "fn") {
+            let j = skip_ws(b, at + 2);
+            let name = ident_starting_at(code, j);
+            let Some(base) = name.strip_suffix("_ref") else {
+                continue;
+            };
+            if base.is_empty() {
+                continue;
+            }
+            let open = skip_ws(b, j + name.len());
+            if open < b.len() && b[open] == b'(' {
+                oracles.push((base.to_string(), fi, at));
+            }
+        }
+    }
+    for (base, fi, at) in oracles {
+        let tested = files.iter().any(|f2| {
+            f2.scrubbed.code.contains("#[test]")
+                && call_count(&f2.scrubbed.code, &base) > 0
+                && call_count(&f2.scrubbed.code, &format!("{base}_ref")) > 0
+        });
+        if !tested {
+            let f = &files[fi];
+            let line = f.lines.line_of(at);
+            out.push(Finding {
+                rule: "ref-without-test",
+                path: f.path.clone(),
+                line,
+                snippet: format!("fn {base}_ref"),
+                msg: format!(
+                    "`{base}_ref` oracle has no test referencing both `{base}(` and \
+                     `{base}_ref(` — add an exact-equality test"
+                ),
+            });
+        }
+    }
+}
+
+/// Parse the string literal starting (after whitespace) at `at` in the
+/// ORIGINAL text — literals are blanked in the scrubbed code.
+fn next_string_literal(text: &str, at: usize, window: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let j = skip_ws(b, at);
+    if j >= b.len() || b[j] != b'"' || j > at + window {
+        return None;
+    }
+    let mut k = j + 1;
+    while k < b.len() {
+        match b[k] {
+            b'\\' => k += 2,
+            b'"' => return Some(text[j + 1..k].to_string()),
+            _ => k += 1,
+        }
+    }
+    None
+}
+
+pub fn event_schema(f: &SourceFile, events: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    for at in token_positions(code, "stamp") {
+        let open = skip_ws(b, at + "stamp".len());
+        if open >= b.len() || b[open] != b'(' {
+            continue;
+        }
+        if ident_ending_at(code, rskip_ws(b, at)) == "fn" {
+            continue; // the definition in obs/run.rs
+        }
+        let Some(name) = next_string_literal(&f.text, open + 1, 120) else {
+            out.push(f.finding(
+                "unknown-event",
+                at,
+                "stamp() with a non-literal event name — event names must be \
+                 literal so the schema table stays checkable"
+                    .to_string(),
+            ));
+            continue;
+        };
+        if !events.contains(&name) {
+            let known: Vec<&str> = events.iter().map(String::as_str).collect();
+            out.push(f.finding(
+                "unknown-event",
+                at,
+                format!(
+                    "stamp(\"{name}\") is not in validate_events.py SCHEMAS ({})",
+                    known.join(", ")
+                ),
+            ));
+            continue;
+        }
+        let window_end = (open + 250).min(code.len());
+        let want = format!("schema::{}", name.to_uppercase());
+        if !code[open..window_end].contains(&want) {
+            out.push(f.finding(
+                "event-schema-const",
+                at,
+                format!("stamp(\"{name}\") must pass `{want}` as its schema_version"),
+            ));
+        }
+    }
+}
+
+/// Run every per-file rule plus the repo-level pair rule.
+pub fn lint_all(files: &[SourceFile], events: &BTreeSet<String>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        hash_iter(f, &mut out);
+        narrowing_cast(f, &mut out);
+        undocumented_unsafe(f, &mut out);
+        missing_ordering(f, &mut out);
+        relaxed_outside_obs(f, &mut out);
+        event_schema(f, events, &mut out);
+    }
+    ref_pairs(files, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(code: &str) -> SourceFile {
+        SourceFile::new("x/test.rs".to_string(), code.to_string())
+    }
+
+    #[test]
+    fn narrowing_flags_only_the_narrow_set() {
+        let f = src("let a = x as i32; let b = y as u64; let c = z as u16;");
+        let mut out = Vec::new();
+        narrowing_cast(&f, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|f| f.rule == "narrowing-cast"));
+    }
+
+    #[test]
+    fn bindings_cover_let_static_field_param() {
+        let code = "static N: AtomicUsize = AtomicUsize::new(0);\n\
+                    struct S { len: AtomicU32, cache: Mutex<HashMap<String, u32>> }\n\
+                    fn f(per_layer: HashMap<String, f64>) { let m = HashMap::new(); }";
+        let atomics = collect_bindings(code, BindKind::Atomic);
+        assert!(atomics.contains("N"));
+        // Field bindings require a generic `<` after the type (like the
+        // python mirror's regex) — a bare `AtomicU32` field is not
+        // bound; its accesses are caught when it is a static/let.
+        assert!(!atomics.contains("len"));
+        let hashes = collect_bindings(code, BindKind::Hash);
+        assert!(hashes.contains("cache") && hashes.contains("per_layer"));
+        assert!(hashes.contains("m"));
+    }
+
+    #[test]
+    fn ordering_required_only_for_atomic_receivers() {
+        let f = src(
+            "static N: AtomicUsize = AtomicUsize::new(0);\n\
+             fn g(e: &Engine) { e.load(name); N.load(Ordering::SeqCst); N.store(1); }",
+        );
+        let mut out = Vec::new();
+        missing_ordering(&f, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].snippet.contains("N.store(1)"));
+    }
+
+    #[test]
+    fn safety_walks_comment_blocks_and_attributes() {
+        let f = src(
+            "// SAFETY: fine because reasons\n// spanning two lines.\n\
+             #[inline]\nunsafe fn a() {}\n\nunsafe fn b() {}",
+        );
+        let mut out = Vec::new();
+        undocumented_unsafe(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 6);
+    }
+}

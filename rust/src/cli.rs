@@ -189,7 +189,15 @@ kernel layer against the preserved pre-kernel implementations (GEMM
 GFLOP/s at 64²/256²/1024², Jacobi-256² wall time, fused-vs-naive
 quantizer throughput, end-to-end train-native step time) and writes
 the paired old/new rows to BENCH_PERF.json at the repo root; CI
-uploads it per commit as the `bench-perf` artifact.";
+uploads it per commit as the `bench-perf` artifact.
+
+Invariant lint: `cargo run -p metis-lint` (or, without cargo,
+`python3 tools/lint_invariants.py`) enforces the DESIGN.md §12
+catalog over rust/src + rust/tests — deterministic-iteration,
+no-narrowing-cast, SAFETY/Ordering discipline, _ref-oracle test
+pairing, stamp() event/schema cross-check — with the shared
+allowlist at rust/lint/allowlist.txt; `--self-test` runs the
+fixture suite.";
 
 pub fn artifacts_flag(args: &Args) -> String {
     args.flags

@@ -159,12 +159,9 @@ impl RunStore {
                     .names
                     .iter()
                     .map(|n| {
-                        Ok(crate::runtime::HostValue::from_npy(
-                            &crate::util::npy::read_npy(
-                                std::path::Path::new(&rec.ckpt_dir)
-                                    .join(format!("{n}.npy")),
-                            )?,
-                        ))
+                        crate::runtime::HostValue::from_npy(&crate::util::npy::read_npy(
+                            std::path::Path::new(&rec.ckpt_dir).join(format!("{n}.npy")),
+                        )?)
                     })
                     .collect::<Result<_>>()?;
                 for r in eval_downstream(

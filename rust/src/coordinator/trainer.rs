@@ -209,7 +209,10 @@ impl<'e> Trainer<'e> {
                 shape: vec![self.batch, self.seq_len + 1],
                 data: tokens,
             };
-            let step_hv = HostValue::scalar_i32(step as i32);
+            let step_hv = HostValue::scalar_i32(
+                i32::try_from(step)
+                    .map_err(|_| anyhow!("step counter {step} exceeds i32::MAX"))?,
+            );
             let lr_hv = HostValue::scalar_f32(lr as f32);
             let mut inputs: Vec<&HostValue> = self.state.iter().collect();
             inputs.push(&tok_hv);

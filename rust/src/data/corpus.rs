@@ -27,6 +27,13 @@ pub const QMARK: i32 = 4; // question terminator
 pub const NOT: i32 = 5; // negation marker (used by NLI-like tasks)
 const SPECIALS: usize = 6;
 
+/// Checked usize→i32 for token ids and pool offsets.  Pool extents are
+/// bounded by the vocab validated in [`Corpus::new`], so a failure here
+/// is a constructor bug, not a data condition.
+fn to_tok(v: usize) -> i32 {
+    i32::try_from(v).expect("token id fits i32: vocab bounded at construction")
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pos {
     Det,
@@ -58,18 +65,18 @@ impl Pool {
     }
 
     pub fn sample(&self, rng: &mut Rng) -> i32 {
-        self.start + self.zipf.sample(rng) as i32
+        self.start + to_tok(self.zipf.sample(rng))
     }
 
     /// Rank of a token within the pool (0 = most frequent), if a member.
     pub fn rank_of(&self, tok: i32) -> Option<usize> {
         let off = tok - self.start;
-        (0..self.len as i32).contains(&off).then_some(off as usize)
+        (0..to_tok(self.len)).contains(&off).then_some(off as usize)
     }
 
     /// The token at a given frequency rank.
     pub fn at_rank(&self, rank: usize) -> i32 {
-        self.start + (rank.min(self.len - 1)) as i32
+        self.start + to_tok(rank.min(self.len - 1))
     }
 }
 
@@ -107,6 +114,10 @@ pub struct Corpus {
 impl Corpus {
     pub fn new(cfg: CorpusConfig) -> Self {
         assert!(cfg.vocab >= 64, "vocab too small for the grammar pools");
+        assert!(
+            i32::try_from(cfg.vocab).is_ok(),
+            "vocab must fit i32 token ids"
+        );
         let usable = cfg.vocab - SPECIALS;
         // Fixed small closed classes, Zipfian open classes.
         let n_det = 4;
@@ -118,10 +129,10 @@ impl Corpus {
         let n_adv = open * 10 / 100;
         let n_name = open - n_noun - n_verb - n_adj - n_adv;
 
-        let mut at = SPECIALS as i32;
+        let mut at = to_tok(SPECIALS);
         let mut take = |pos, len: usize, s: f64| {
             let p = Pool::new(pos, at, len, s);
-            at += len as i32;
+            at += to_tok(len);
             p
         };
         let det = take(Pos::Det, n_det, 1.0);
@@ -280,7 +291,7 @@ mod tests {
         let c = corpus();
         let mut seen = vec![false; 256];
         for p in [&c.det, &c.prep, &c.adj, &c.noun, &c.verb, &c.adv, &c.name] {
-            for t in p.start..p.start + p.len as i32 {
+            for t in p.start..p.start + to_tok(p.len) {
                 assert!(!seen[t as usize], "overlap at {t}");
                 seen[t as usize] = true;
             }

@@ -59,7 +59,7 @@ pub fn set_reference_mode(on: bool) {
 
 /// Whether the bench-only reference dispatch is active.
 pub fn reference_mode() -> bool {
-    REFERENCE.load(Ordering::Relaxed)
+    REFERENCE.load(Ordering::SeqCst)
 }
 
 // -- reference (pre-kernel) implementations ------------------------------

@@ -296,7 +296,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
             let arr = metis::util::npy::read_npy(
                 std::path::Path::new(&ckpt).join(format!("{n}.npy")),
             )?;
-            Ok(metis::runtime::HostValue::from_npy(&arr))
+            metis::runtime::HostValue::from_npy(&arr)
         })
         .collect::<Result<_>>()?;
 

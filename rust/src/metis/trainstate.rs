@@ -761,7 +761,7 @@ impl TrainState {
                 let tx = tx.clone();
                 let (slots, next, grad_fn) = (&slots, &next, &grad_fn);
                 scope.execute(move || loop {
-                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    let idx = next.fetch_add(1, Ordering::SeqCst);
                     if idx >= n {
                         break;
                     }

@@ -25,6 +25,7 @@
 //! invariance contract holds with observability on or off.
 
 pub mod metrics;
+pub mod ringcore;
 pub mod run;
 pub mod span;
 pub mod summarize;

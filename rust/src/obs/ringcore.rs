@@ -1,0 +1,155 @@
+//! Instantiations of the single-writer publish ring (`ringcore_body.rs`).
+//!
+//! The protocol body is `include!`d twice — against std primitives for
+//! the shipped build, and against loom's model-checked primitives under
+//! `RUSTFLAGS="--cfg loom"` (`cargo test --lib loom_`), which
+//! exhaustively explores publish/snapshot interleavings and verifies
+//! the release/acquire pairing on `len` actually orders the slot
+//! writes.  A seeded wrong-order `push_racy` proves the checker trips
+//! on exactly the bug class the protocol comment forbids.
+
+mod imp {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use crate::util::sync::UnsafeCell;
+
+    include!("ringcore_body.rs");
+}
+
+pub use imp::RingCore;
+
+#[cfg(all(loom, test))]
+mod loom_imp {
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+
+    include!("ringcore_body.rs");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_snapshot_roundtrip_and_overflow() {
+        let r = RingCore::new(3, 0u64);
+        assert_eq!(r.capacity(), 3);
+        assert!(r.push(10));
+        assert!(r.push(11));
+        assert_eq!(r.snapshot(), vec![10, 11]);
+        assert!(r.push(12));
+        assert!(!r.push(13), "full ring must reject");
+        assert!(!r.push(14));
+        assert_eq!(r.snapshot(), vec![10, 11, 12]);
+        assert_eq!(r.published(), 3);
+        assert_eq!(r.dropped_count(), 2);
+        r.reset();
+        assert_eq!(r.published(), 0);
+        assert_eq!(r.dropped_count(), 0);
+        assert!(r.push(20));
+        assert_eq!(r.snapshot(), vec![20]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let r = RingCore::new(0, 0u8);
+        assert_eq!(r.capacity(), 1);
+        assert!(r.push(1));
+        assert!(!r.push(2));
+    }
+
+    #[test]
+    fn concurrent_snapshots_see_a_prefix() {
+        let r = std::sync::Arc::new(RingCore::new(64, 0usize));
+        let writer = {
+            let r = std::sync::Arc::clone(&r);
+            std::thread::spawn(move || {
+                for i in 1..=64 {
+                    assert!(r.push(i));
+                }
+            })
+        };
+        // Snapshots taken while the writer runs must always be a dense
+        // prefix 1..=k — a gap or a zero would mean an unpublished read.
+        for _ in 0..100 {
+            let snap = r.snapshot();
+            for (i, &v) in snap.iter().enumerate() {
+                assert_eq!(v, i + 1, "snapshot not a published prefix: {snap:?}");
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(r.snapshot().len(), 64);
+    }
+}
+
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use loom::sync::Arc;
+    use loom::thread;
+
+    use super::loom_imp::RingCore;
+
+    /// Exhaustive interleaving check of the shipped protocol: every
+    /// snapshot observed concurrently with a writer is a dense prefix.
+    #[test]
+    fn loom_snapshot_is_always_a_published_prefix() {
+        loom::model(|| {
+            let r = Arc::new(RingCore::new(2, 0usize));
+            let writer = {
+                let r = Arc::clone(&r);
+                thread::spawn(move || {
+                    r.push(1);
+                    r.push(2);
+                })
+            };
+            let snap = r.snapshot();
+            for (i, &v) in snap.iter().enumerate() {
+                assert_eq!(v, i + 1, "torn/unpublished read: {snap:?}");
+            }
+            writer.join().unwrap();
+            assert_eq!(r.snapshot(), vec![1, 2]);
+        });
+    }
+
+    /// Overflow path under concurrency: drops are counted, the
+    /// published prefix never exceeds capacity.
+    #[test]
+    fn loom_overflow_drops_are_counted() {
+        loom::model(|| {
+            let r = Arc::new(RingCore::new(1, 0usize));
+            let writer = {
+                let r = Arc::clone(&r);
+                thread::spawn(move || {
+                    r.push(1);
+                    r.push(2);
+                })
+            };
+            let snap = r.snapshot();
+            assert!(snap.len() <= 1);
+            writer.join().unwrap();
+            assert_eq!(r.snapshot(), vec![1]);
+            assert_eq!(r.dropped_count(), 1);
+        });
+    }
+
+    /// Seeded bug: publishing `len` before the slot write is exactly
+    /// the ordering the protocol forbids.  Loom's access-tracked
+    /// `UnsafeCell` observes the unsynchronized write/read pair and
+    /// panics — demonstrating the model check catches a regression of
+    /// the store/publish order in `push`.
+    #[test]
+    #[should_panic]
+    fn loom_racy_publish_order_is_caught() {
+        loom::model(|| {
+            let r = Arc::new(RingCore::new(2, 0usize));
+            let writer = {
+                let r = Arc::clone(&r);
+                thread::spawn(move || {
+                    r.push_racy(1);
+                })
+            };
+            let _snap = r.snapshot();
+            writer.join().unwrap();
+        });
+    }
+}

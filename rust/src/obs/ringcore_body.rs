@@ -1,0 +1,120 @@
+// Single-writer publish ring — the lock-free core of `obs::span`.
+//
+// This file is NOT a module: it is `include!`d twice by ringcore.rs —
+// once with std primitives (the shipped build) and once with loom's
+// under `--cfg loom`, where every interleaving of publish/snapshot is
+// model-checked.  It may only reference the names the including module
+// puts in scope: `UnsafeCell`, `AtomicUsize`, `Ordering`.
+//
+// Protocol: slots below `len` are written exactly once by the owning
+// thread *before* the release store of `len`; a reader acquire-loads
+// `len` and touches only slots below it.  Slots are never rewritten
+// (no wrap-around) until `reset`, which requires quiescent writers.
+
+/// Fixed-capacity single-writer / multi-reader publish buffer.
+pub struct RingCore<T: Copy> {
+    slots: Box<[UnsafeCell<T>]>,
+    len: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+// SAFETY: cross-thread access is limited to `len`/`dropped` (atomics)
+// and reads of `slots[i]` for `i < len`; the single writer fully wrote
+// slot `i` before the release store publishing `i + 1`, and the
+// reader's acquire load orders its read after that write.
+unsafe impl<T: Copy + Send> Sync for RingCore<T> {}
+
+// SAFETY: sending a RingCore moves the owned slot box and the atomics;
+// `T: Send` is required and no thread-affine state (TLS handles, Rc)
+// lives inside, so ownership may migrate threads freely.
+unsafe impl<T: Copy + Send> Send for RingCore<T> {}
+
+impl<T: Copy> RingCore<T> {
+    pub fn new(capacity: usize, empty: T) -> RingCore<T> {
+        RingCore {
+            slots: (0..capacity.max(1)).map(|_| UnsafeCell::new(empty)).collect(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Owner-thread push of one value.  Returns `false` (and counts a
+    /// drop) when the ring is full.
+    pub fn push(&self, v: T) -> bool {
+        let i = self.len.load(Ordering::Relaxed);
+        if i < self.slots.len() {
+            self.slots[i].with_mut(|p| {
+                // SAFETY: slot `i` is unpublished — every reader sees
+                // `len <= i` until the release store below — and only
+                // the owning thread writes slots, so the pointer is
+                // exclusive here.
+                unsafe { *p = v }
+            });
+            self.len.store(i + 1, Ordering::Release);
+            true
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Any-thread snapshot of the published prefix.
+    pub fn snapshot(&self) -> Vec<T> {
+        let n = self.len.load(Ordering::Acquire).min(self.slots.len());
+        (0..n)
+            .map(|i| {
+                self.slots[i].with(|p| {
+                    // SAFETY: slots below the acquired `len` were fully
+                    // written before publication and are never
+                    // rewritten, so a shared read cannot race the
+                    // writer.
+                    unsafe { *p }
+                })
+            })
+            .collect()
+    }
+
+    /// Published event count (acquire, pairs with `push`'s release).
+    pub fn published(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    /// Events rejected because the ring was full.
+    pub fn dropped_count(&self) -> usize {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Zero the ring.  Only sound while writers are quiescent — a
+    /// concurrent `push` could republish a stale slot.
+    pub fn reset(&self) {
+        self.len.store(0, Ordering::Release);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Seeded ordering bug for the loom suite (never shipped: compiled
+    /// only under `--cfg loom`): publishes `len` *before* writing the
+    /// slot, so a concurrent `snapshot` can read the slot mid-write.
+    /// Loom's access-tracked `UnsafeCell` detects the race and panics —
+    /// the `#[should_panic]` test proves the checker would catch a
+    /// regression of the store/publish order in `push`.
+    #[cfg(loom)]
+    pub fn push_racy(&self, v: T) -> bool {
+        let i = self.len.load(Ordering::Relaxed);
+        if i < self.slots.len() {
+            self.len.store(i + 1, Ordering::Release); // BUG: published early
+            self.slots[i].with_mut(|p| {
+                // SAFETY: intentionally unsound ordering (see above);
+                // loom flags the concurrent access.
+                unsafe { *p = v }
+            });
+            true
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+}

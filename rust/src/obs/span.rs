@@ -15,6 +15,11 @@
 //! therefore safe at any time, though a snapshot taken mid-scope can
 //! miss spans still open.  [`reset_trace`] (bench/tests) must only run
 //! while recorders are quiescent.
+//!
+//! The publish buffer itself lives in [`crate::obs::ringcore`], whose
+//! protocol body is additionally compiled against loom and
+//! model-checked (see DESIGN.md §12); this module adds the per-thread
+//! id/parent/timestamp bookkeeping on top.
 
 use std::cell::{Cell, OnceCell, UnsafeCell};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -23,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::ringcore::RingCore;
 use crate::util::json::Json;
 
 /// Events one thread can hold before truncation (fixed at ring
@@ -98,15 +104,12 @@ impl SpanEvent {
     };
 }
 
-/// Per-thread recorder.  `slots[..len]` are published events (single
-/// writer, release/acquire on `len`); the `Cell`/`UnsafeCell` scratch
-/// below is touched only by the owning thread.
+/// Per-thread recorder: the model-checked publish buffer plus
+/// `Cell`/`UnsafeCell` scratch touched only by the owning thread.
 struct Ring {
     tid: usize,
     thread_name: String,
-    slots: Box<[UnsafeCell<SpanEvent>]>,
-    len: AtomicUsize,
-    dropped: AtomicUsize,
+    core: RingCore<SpanEvent>,
     // -- owner-thread-only state --
     next_id: Cell<u32>,
     last_start: Cell<u64>,
@@ -114,10 +117,15 @@ struct Ring {
     depth: Cell<usize>,
 }
 
-// SAFETY: cross-thread access is limited to `len`/`dropped` (atomics)
-// and `slots[i]` for `i < len`, which the owner fully wrote before the
-// release store publishing `i + 1`.  The Cell fields are owner-only.
+// SAFETY: cross-thread access is limited to `core` (Sync by its own
+// single-writer contract — drainers only call `snapshot`/counters);
+// the `Cell`/`UnsafeCell` scratch is touched exclusively by the one
+// thread whose TLS owns this ring.
 unsafe impl Sync for Ring {}
+
+// SAFETY: the registry's `Arc<Ring>` may be dropped from any thread;
+// every field is `Send` (the scratch cells hold plain `Copy` data with
+// no thread-affine resources), so transferring ownership is sound.
 unsafe impl Send for Ring {}
 
 impl Ring {
@@ -129,11 +137,7 @@ impl Ring {
         let ring = Arc::new(Ring {
             tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
             thread_name: name,
-            slots: (0..capacity.max(1))
-                .map(|_| UnsafeCell::new(SpanEvent::EMPTY))
-                .collect(),
-            len: AtomicUsize::new(0),
-            dropped: AtomicUsize::new(0),
+            core: RingCore::new(capacity, SpanEvent::EMPTY),
             next_id: Cell::new(0),
             last_start: Cell::new(0),
             stack: UnsafeCell::new([-1; MAX_DEPTH]),
@@ -143,17 +147,10 @@ impl Ring {
         ring
     }
 
-    /// Owner-thread push of one completed event.
+    /// Owner-thread push of one completed event (drops counted by the
+    /// core when full).
     fn record(&self, ev: SpanEvent) {
-        let i = self.len.load(Ordering::Relaxed);
-        if i < self.slots.len() {
-            // SAFETY: slot `i` is unpublished (i >= len seen by any
-            // reader) and only this thread writes this ring.
-            unsafe { *self.slots[i].get() = ev };
-            self.len.store(i + 1, Ordering::Release);
-        } else {
-            self.dropped.fetch_add(1, Ordering::Relaxed);
-        }
+        self.core.push(ev);
     }
 }
 
@@ -219,7 +216,9 @@ pub fn span_ab(name: &'static str, a: i64, b: i64) -> Span {
             stack[(depth - 1).min(MAX_DEPTH - 1)]
         };
         if depth < MAX_DEPTH {
-            stack[depth] = id as i32;
+            // Past 2^31 spans on one thread, record "no parent" rather
+            // than a truncated (wrong) link.
+            stack[depth] = i32::try_from(id).unwrap_or(-1);
         }
         r.depth.set(depth + 1);
         // Strictly monotonic per-thread start timestamps, even when the
@@ -282,10 +281,8 @@ pub fn drain_trace() -> TraceData {
     let mut workers = Vec::with_capacity(rings.len());
     let mut truncated = false;
     for r in &rings {
-        let n = r.len.load(Ordering::Acquire).min(r.slots.len());
-        // SAFETY: slots below the acquired `len` are fully published.
-        let events = (0..n).map(|i| unsafe { *r.slots[i].get() }).collect();
-        let dropped = r.dropped.load(Ordering::Relaxed);
+        let events = r.core.snapshot();
+        let dropped = r.core.dropped_count();
         truncated |= dropped > 0;
         workers.push(WorkerTrace {
             tid: r.tid,
@@ -302,8 +299,7 @@ pub fn drain_trace() -> TraceData {
 /// recorded — concurrent recorders may republish stale slots.
 pub fn reset_trace() {
     for r in lock_registry().iter() {
-        r.len.store(0, Ordering::Release);
-        r.dropped.store(0, Ordering::Relaxed);
+        r.core.reset();
     }
 }
 
@@ -424,7 +420,7 @@ mod tests {
         assert_eq!(mine.len(), 2);
         let outer = mine.iter().find(|e| e.name.ends_with("outer")).unwrap();
         let inner = mine.iter().find(|e| e.name.ends_with("inner")).unwrap();
-        assert_eq!(inner.parent, outer.id as i32);
+        assert_eq!(inner.parent, i32::try_from(outer.id).unwrap());
         assert_eq!(outer.parent, -1);
         assert_eq!((inner.a, inner.b), (3, 7));
         // Inner closed first, so it is recorded first but starts later.

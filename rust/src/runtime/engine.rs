@@ -70,6 +70,11 @@ impl HostValue {
     pub fn to_literal(&self) -> Result<Literal> {
         match self {
             HostValue::F32 { shape, data } => {
+                // SAFETY: `data` is a live `Vec<f32>`; viewing its
+                // backing buffer as `4 * len` bytes stays in bounds,
+                // u8 has no alignment requirement, and every f32 bit
+                // pattern is a valid [u8; 4].  The view is read-only
+                // and dropped before `data`.
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };
@@ -80,6 +85,9 @@ impl HostValue {
                 )?)
             }
             HostValue::I32 { shape, data } => {
+                // SAFETY: as above — `Vec<i32>` viewed as `4 * len`
+                // read-only bytes; in bounds, alignment-free, every
+                // i32 bit pattern is a valid [u8; 4].
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };
@@ -108,21 +116,30 @@ impl HostValue {
         }
     }
 
-    pub fn from_npy(arr: &NpyArray) -> HostValue {
-        match &arr.data {
+    /// Errors (rather than truncating) when an `<i8`-class blob holds
+    /// values outside the i32 range — token ids and dims must survive
+    /// the narrowing bit-exactly.
+    pub fn from_npy(arr: &NpyArray) -> Result<HostValue> {
+        Ok(match &arr.data {
             NpyData::I32(v) => HostValue::I32 {
                 shape: arr.shape.clone(),
                 data: v.clone(),
             },
             NpyData::I64(v) => HostValue::I32 {
                 shape: arr.shape.clone(),
-                data: v.iter().map(|&x| x as i32).collect(),
+                data: v
+                    .iter()
+                    .map(|&x| {
+                        i32::try_from(x)
+                            .map_err(|_| anyhow!("i64 npy value {x} exceeds i32 range"))
+                    })
+                    .collect::<Result<_>>()?,
             },
             _ => HostValue::F32 {
                 shape: arr.shape.clone(),
                 data: arr.to_f32(),
             },
-        }
+        })
     }
 
     pub fn to_npy(&self) -> NpyArray {
@@ -243,7 +260,7 @@ impl Engine {
                 let arr = npy::NpyReader::open(dir.join(format!("{n}.npy")))
                     .and_then(|mut r| r.read_all())
                     .with_context(|| format!("param {n}"))?;
-                Ok(HostValue::from_npy(&arr))
+                HostValue::from_npy(&arr)
             })
             .collect()
     }

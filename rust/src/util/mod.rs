@@ -4,6 +4,7 @@
 pub mod json;
 pub mod npy;
 pub mod prng;
+pub mod sync;
 pub mod timer;
 pub mod toml;
 pub mod workpool;

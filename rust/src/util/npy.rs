@@ -425,7 +425,7 @@ fn shape_tuple_str(shape: &[usize]) -> String {
 }
 
 /// Magic + version + length-prefixed padded header (v1.0 layout).
-fn header_bytes(descr: &str, shape: &[usize]) -> Vec<u8> {
+fn header_bytes(descr: &str, shape: &[usize]) -> Result<Vec<u8>> {
     let mut header = format!(
         "{{'descr': '{descr}', 'fortran_order': False, 'shape': {}, }}",
         shape_tuple_str(shape)
@@ -435,16 +435,20 @@ fn header_bytes(descr: &str, shape: &[usize]) -> Vec<u8> {
     let pad = (64 - unpadded % 64) % 64;
     header.push_str(&" ".repeat(pad));
     header.push('\n');
+    // The v1.0 length prefix is u16; a >64KiB header would silently
+    // wrap if cast, so refuse (v2.0's u32 prefix is not implemented).
+    let len = u16::try_from(header.len())
+        .map_err(|_| anyhow!("npy v1.0 header exceeds u16 length for shape {shape:?}"))?;
     let mut out = b"\x93NUMPY\x01\x00".to_vec();
-    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
     out.extend_from_slice(header.as_bytes());
-    out
+    Ok(out)
 }
 
 pub fn write_npy(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
     let mut f = File::create(path.as_ref())
         .map_err(|e| anyhow!("create {}: {e}", path.as_ref().display()))?;
-    f.write_all(&header_bytes(arr.descr(), &arr.shape))?;
+    f.write_all(&header_bytes(arr.descr(), &arr.shape)?)?;
     match &arr.data {
         NpyData::F32(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
         NpyData::F64(v) => write_raw(&mut f, v, |x| x.to_le_bytes())?,
@@ -474,7 +478,7 @@ impl NpyWriter {
                 anyhow!("npy shape {shape:?} overflows element count: {}", path.display())
             })?;
         let mut file = File::create(&path).map_err(|e| anyhow!("create {}: {e}", path.display()))?;
-        file.write_all(&header_bytes("<f4", shape))?;
+        file.write_all(&header_bytes("<f4", shape)?)?;
         Ok(NpyWriter {
             file,
             path,
@@ -582,7 +586,8 @@ mod tests {
         let pad = (64 - unpadded % 64) % 64;
         let full = format!("{}{}\n", header, " ".repeat(pad));
         let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
-        bytes.extend_from_slice(&(full.len() as u16).to_le_bytes());
+        let len = u16::try_from(full.len()).expect("test header fits u16");
+        bytes.extend_from_slice(&len.to_le_bytes());
         bytes.extend_from_slice(full.as_bytes());
         bytes.extend_from_slice(payload);
         bytes
@@ -603,7 +608,7 @@ mod tests {
         let dir = test_dir("metis_npy_test");
         for (shape, n) in [(vec![], 1usize), (vec![5], 5)] {
             let p = dir.join(format!("s{}.npy", shape.len()));
-            let arr = NpyArray::i32(shape.clone(), (0..n as i32).collect());
+            let arr = NpyArray::i32(shape.clone(), (0..i32::try_from(n).unwrap()).collect());
             write_npy(&p, &arr).unwrap();
             let back = read_npy(&p).unwrap();
             assert_eq!(back.shape, shape);

@@ -1,0 +1,36 @@
+//! Loom-compatible sync shims.
+//!
+//! The lock-free protocol bodies (`obs::ringcore_body.rs`,
+//! `util::workpool_body.rs`) are written against loom's closure-style
+//! cell API so the *same* source compiles twice: once against std (the
+//! shipped build, via this module) and once against `loom` under
+//! `RUSTFLAGS="--cfg loom"` for exhaustive interleaving model checks.
+//! See DESIGN.md §12.
+
+/// `std::cell::UnsafeCell` wrapped in loom's `with`/`with_mut` API:
+/// the closure receives the raw pointer and is responsible for sound
+/// access (dereference stays `unsafe` at the use site, where the
+/// protocol argument lives — see the `// SAFETY:` comments there).
+/// Under `--cfg loom` the bodies use `loom::cell::UnsafeCell`, which
+/// has the same shape but *tracks* accesses and panics on a data race.
+#[derive(Debug)]
+#[repr(transparent)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+impl<T> UnsafeCell<T> {
+    pub fn new(v: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+
+    /// Immutable access: hands the closure a `*const T`.
+    #[inline]
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Mutable access: hands the closure a `*mut T`.
+    #[inline]
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}

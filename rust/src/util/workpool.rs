@@ -28,265 +28,95 @@
 //! in unit order, so *which* thread runs a unit never changes any
 //! number — the bit-identity guarantees of the pipeline and the native
 //! training loop carry over unchanged.
+//!
+//! The protocol itself lives in `workpool_body.rs` and is compiled a
+//! second time against loom under `RUSTFLAGS="--cfg loom"` (`cargo
+//! test --lib loom_`), which model-checks the scope-join and
+//! panic-propagation contracts across thread interleavings — see
+//! DESIGN.md §12.
 
-use std::collections::VecDeque;
-use std::marker::PhantomData;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread;
+mod imp {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+    fn pool_spawn(name: String, f: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(f)
+            .expect("workpool: failed to spawn worker")
+    }
 
-/// One submitted job plus the batch it belongs to.
-struct Task {
-    job: Job,
-    batch: Arc<Batch>,
-}
+    #[inline]
+    fn obs_job_start() {
+        crate::obs::metrics::metrics().pool_jobs.incr();
+    }
 
-/// Completion state of one scoped region.
-struct Batch {
-    /// Jobs submitted and not yet finished (queued or running).
-    pending: Mutex<usize>,
-    done: Condvar,
-    panicked: AtomicUsize,
-    /// First caught panic payload — re-thrown by `scoped` so the
-    /// original message/location survives the pool hop.
-    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
-}
+    #[inline]
+    fn obs_job_span() -> crate::obs::span::Span {
+        crate::obs::span::span("pool.job")
+    }
 
-impl Batch {
-    fn new() -> Batch {
-        Batch {
-            pending: Mutex::new(0),
-            done: Condvar::new(),
-            panicked: AtomicUsize::new(0),
-            payload: Mutex::new(None),
+    #[inline]
+    fn obs_queue_depth(depth: usize) {
+        if crate::obs::enabled() {
+            crate::obs::metrics::metrics()
+                .pool_queue_depth
+                .record(depth as f64);
         }
     }
-}
 
-struct PoolShared {
-    /// (FIFO of queued tasks, shutdown flag).
-    queue: Mutex<(VecDeque<Task>, bool)>,
-    available: Condvar,
-}
-
-/// Run one task and mark it complete.  The job box is consumed (and its
-/// captures dropped) *before* the pending count is decremented — that
-/// ordering is what lets [`WorkPool::scoped`] promise that no borrow
-/// escapes the scope.
-fn run_task(task: Task) {
-    let Task { job, batch } = task;
-    crate::obs::metrics::metrics().pool_jobs.incr();
-    {
-        // The span wraps only the job body (not the completion
-        // bookkeeping), so pool overhead stays out of phase timings.
-        let _span = crate::obs::span::span("pool.job");
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-            batch.panicked.fetch_add(1, Ordering::SeqCst);
-            let mut slot = batch.payload.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(payload);
-            }
-        }
+    #[inline]
+    fn obs_helper_steal() {
+        crate::obs::metrics::metrics().pool_helper_steals.incr();
     }
-    let mut pending = batch.pending.lock().unwrap();
-    *pending -= 1;
-    if *pending == 0 {
-        batch.done.notify_all();
-    }
+
+    include!("workpool_body.rs");
 }
 
-fn worker_loop(shared: Arc<PoolShared>) {
-    loop {
-        let task = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(t) = q.0.pop_front() {
-                    break t;
-                }
-                if q.1 {
-                    return;
-                }
-                q = shared.available.wait(q).unwrap();
-            }
-        };
-        run_task(task);
-    }
-}
-
-/// A persistent pool of worker threads executing scoped jobs.
-pub struct WorkPool {
-    shared: Arc<PoolShared>,
-    workers: Vec<thread::JoinHandle<()>>,
-}
+pub use imp::{Scope, WorkPool};
 
 impl WorkPool {
-    /// Spawn a pool with `workers` threads.  Zero is legal: every scope
-    /// then runs on the submitting thread (useful for tests).
-    pub fn new(workers: usize) -> WorkPool {
-        let shared = Arc::new(PoolShared {
-            queue: Mutex::new((VecDeque::new(), false)),
-            available: Condvar::new(),
-        });
-        let workers = (0..workers)
-            .map(|i| {
-                let shared = Arc::clone(&shared);
-                thread::Builder::new()
-                    .name(format!("metis-pool-{i}"))
-                    .spawn(move || worker_loop(shared))
-                    .expect("workpool: failed to spawn worker")
-            })
-            .collect();
-        WorkPool { shared, workers }
-    }
-
     /// The process-wide pool, created on first use with
     /// `available_parallelism - 1` workers (the scope-opening thread is
     /// the +1: it always helps).
     pub fn global() -> &'static WorkPool {
-        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        static POOL: std::sync::OnceLock<WorkPool> = std::sync::OnceLock::new();
         POOL.get_or_init(|| {
-            let n = thread::available_parallelism().map_or(2, |x| x.get());
+            let n = std::thread::available_parallelism().map_or(2, |x| x.get());
             WorkPool::new(n.saturating_sub(1).max(1))
         })
     }
-
-    /// Worker thread count (the submitting thread adds one more lane of
-    /// effective parallelism on top).
-    pub fn workers(&self) -> usize {
-        self.workers.len()
-    }
-
-    /// Open a scoped region: `f` may submit jobs borrowing data that
-    /// outlives the `scoped` call; every job is joined before `scoped`
-    /// returns (on the success *and* the unwind path).  Panics if any
-    /// job panicked — callers that need an `Err` instead should catch
-    /// inside the job.
-    pub fn scoped<'pool, 'scope, F, R>(&'pool self, f: F) -> R
-    where
-        F: FnOnce(&Scope<'pool, 'scope>) -> R,
-    {
-        let batch = Arc::new(Batch::new());
-        let scope = Scope {
-            pool: self,
-            batch: Arc::clone(&batch),
-            _marker: PhantomData,
-        };
-        let r = {
-            // The guard joins the batch when dropped, so the wait also
-            // happens if `f` unwinds mid-submission.
-            let _guard = WaitGuard {
-                pool: self,
-                batch: &batch,
-            };
-            f(&scope)
-        };
-        if batch.panicked.load(Ordering::SeqCst) > 0 {
-            // Re-throw the first job's payload so the original panic
-            // message and location survive the pool hop.
-            match batch.payload.lock().unwrap().take() {
-                Some(payload) => std::panic::resume_unwind(payload),
-                None => panic!("workpool: a scoped job panicked"),
-            }
-        }
-        r
-    }
 }
 
-impl Drop for WorkPool {
-    fn drop(&mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.1 = true;
-        }
-        self.shared.available.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+#[cfg(all(loom, test))]
+mod loom_imp {
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use loom::sync::{Arc, Condvar, Mutex};
+    use loom::thread::JoinHandle;
+
+    fn pool_spawn(_name: String, f: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+        loom::thread::spawn(f)
     }
-}
 
-/// Submission handle passed to the closure of [`WorkPool::scoped`].
-pub struct Scope<'pool, 'scope> {
-    pool: &'pool WorkPool,
-    batch: Arc<Batch>,
-    /// Invariant over 'scope, like `std::thread::scope`'s marker.
-    _marker: PhantomData<&'scope mut &'scope ()>,
-}
+    // Observability probes are std-backed (metrics registry, span
+    // rings) and would hide interleavings from the model checker —
+    // no-ops here; the protocol under test never depends on them.
+    fn obs_job_start() {}
+    fn obs_job_span() {}
+    fn obs_queue_depth(_depth: usize) {}
+    fn obs_helper_steal() {}
 
-impl<'scope> Scope<'_, 'scope> {
-    /// Queue a job.  It may run on any pool worker or on the submitting
-    /// thread while it waits in the scope join.
-    pub fn execute<F>(&self, f: F)
-    where
-        F: FnOnce() + Send + 'scope,
-    {
-        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
-        // SAFETY: the job only lives until the end of the enclosing
-        // `scoped` call — `WaitGuard` blocks (helping) until the pool
-        // has consumed and dropped every job of this batch, on both the
-        // return and the unwind path, so no 'scope borrow is ever used
-        // after 'scope ends.  This is the `scoped_threadpool` lifetime
-        // erasure; only the fat-pointer lifetime changes.
-        let job: Job = unsafe {
-            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
-        };
-        *self.batch.pending.lock().unwrap() += 1;
-        {
-            let mut q = self.pool.shared.queue.lock().unwrap();
-            if crate::obs::enabled() {
-                crate::obs::metrics::metrics()
-                    .pool_queue_depth
-                    .record(q.0.len() as f64);
-            }
-            q.0.push_back(Task {
-                job,
-                batch: Arc::clone(&self.batch),
-            });
-        }
-        self.pool.shared.available.notify_one();
-    }
-}
-
-/// Joins a batch on drop: first helps by running the batch's queued
-/// jobs on the current thread, then blocks until in-flight ones finish.
-struct WaitGuard<'a> {
-    pool: &'a WorkPool,
-    batch: &'a Arc<Batch>,
-}
-
-impl Drop for WaitGuard<'_> {
-    fn drop(&mut self) {
-        loop {
-            let task = {
-                let mut q = self.pool.shared.queue.lock().unwrap();
-                let pos = q.0.iter().position(|t| Arc::ptr_eq(&t.batch, self.batch));
-                pos.and_then(|i| q.0.remove(i))
-            };
-            match task {
-                Some(t) => {
-                    crate::obs::metrics::metrics().pool_helper_steals.incr();
-                    run_task(t)
-                }
-                None => break,
-            }
-        }
-        // No queued jobs of this batch remain and none can be added
-        // (submission requires &Scope, which is gone by the time the
-        // guard drops) — wait out the in-flight ones.
-        let mut pending = self.batch.pending.lock().unwrap();
-        while *pending > 0 {
-            pending = self.batch.done.wait(pending).unwrap();
-        }
-    }
+    include!("workpool_body.rs");
 }
 
 #[cfg(test)]
 mod tests {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
     use super::*;
-    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn scoped_jobs_all_run_and_borrow_locals() {
@@ -509,5 +339,95 @@ mod tests {
         let b = WorkPool::global() as *const _;
         assert_eq!(a, b);
         assert!(WorkPool::global().workers() >= 1);
+    }
+}
+
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use loom::sync::Arc;
+    use loom::thread;
+
+    use super::loom_imp::WorkPool;
+
+    /// Model check of the core contract: every submitted job runs
+    /// exactly once before `scoped` returns, with a real pool worker
+    /// racing the helping submitter for the queue.
+    #[test]
+    fn loom_scoped_jobs_all_run_before_scope_returns() {
+        loom::model(|| {
+            let pool = WorkPool::new(1);
+            let hits = Arc::new(AtomicUsize::new(0));
+            pool.scoped(|scope| {
+                for _ in 0..2 {
+                    let hits = Arc::clone(&hits);
+                    scope.execute(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    /// Model check of panic propagation: the payload written by a
+    /// worker thread is observed intact by the joining submitter in
+    /// every interleaving, and the sibling job still completes.
+    #[test]
+    fn loom_panic_payload_survives_every_interleaving() {
+        loom::model(|| {
+            let pool = WorkPool::new(1);
+            let ran = Arc::new(AtomicUsize::new(0));
+            let ran2 = Arc::clone(&ran);
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                pool.scoped(|scope| {
+                    scope.execute(|| panic!("boom"));
+                    scope.execute(move || {
+                        ran2.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            }));
+            let payload = result.expect_err("job panic must propagate");
+            assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+            assert_eq!(ran.load(Ordering::SeqCst), 1);
+        });
+    }
+
+    /// Seeded bug: a batch-join protocol that publishes its result
+    /// with a `Relaxed` store (instead of the release/acquire pairing
+    /// the real pool gets from the `pending` mutex + condvar).  The
+    /// joiner can then read the result slot without a happens-before
+    /// edge to the worker's write — loom's access-tracked `UnsafeCell`
+    /// detects the race and panics, demonstrating the model check
+    /// would catch this class of join-protocol regression.
+    #[test]
+    #[should_panic]
+    fn loom_relaxed_join_publish_is_caught() {
+        loom::model(|| {
+            let result = Arc::new(UnsafeCell::new(0u32));
+            let pending = Arc::new(AtomicUsize::new(1));
+            let (r2, p2) = (Arc::clone(&result), Arc::clone(&pending));
+            let worker = thread::spawn(move || {
+                r2.with_mut(|p| {
+                    // SAFETY: sole writer; the *publication* below is
+                    // the seeded bug, not this access.
+                    unsafe { *p = 42 }
+                });
+                p2.store(0, Ordering::Relaxed); // BUG: should be Release
+            });
+            if pending.load(Ordering::Acquire) == 0 {
+                // Relaxed publish → no happens-before edge: this read
+                // races the worker's write and loom flags it.
+                let v = result.with(|p| {
+                    // SAFETY: intentionally unsynchronized (see above).
+                    unsafe { *p }
+                });
+                assert_eq!(v, 42);
+            }
+            worker.join().unwrap();
+        });
     }
 }

@@ -1,0 +1,241 @@
+// Persistent scoped worker pool — protocol body.
+//
+// This file is NOT a module: it is `include!`d twice by workpool.rs —
+// once against std primitives (the shipped build) and once against
+// loom's under `--cfg loom`, where scope join, helper stealing and
+// panic propagation are model-checked across interleavings.  It may
+// only reference names the including module puts in scope: `Arc`,
+// `Mutex`, `Condvar`, `AtomicUsize`, `Ordering`, `JoinHandle`, the
+// `pool_spawn` thread constructor, and the `obs_*` hook fns (real
+// metrics/span probes in the std instantiation, no-ops under loom).
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One submitted job plus the batch it belongs to.
+struct Task {
+    job: Job,
+    batch: Arc<Batch>,
+}
+
+/// Completion state of one scoped region.
+struct Batch {
+    /// Jobs submitted and not yet finished (queued or running).
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicUsize,
+    /// First caught panic payload — re-thrown by `scoped` so the
+    /// original message/location survives the pool hop.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Batch {
+    fn new() -> Batch {
+        Batch {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicUsize::new(0),
+            payload: Mutex::new(None),
+        }
+    }
+}
+
+struct PoolShared {
+    /// (FIFO of queued tasks, shutdown flag).
+    queue: Mutex<(std::collections::VecDeque<Task>, bool)>,
+    available: Condvar,
+}
+
+/// Run one task and mark it complete.  The job box is consumed (and its
+/// captures dropped) *before* the pending count is decremented — that
+/// ordering is what lets [`WorkPool::scoped`] promise that no borrow
+/// escapes the scope.
+fn run_task(task: Task) {
+    let Task { job, batch } = task;
+    obs_job_start();
+    {
+        // The span wraps only the job body (not the completion
+        // bookkeeping), so pool overhead stays out of phase timings.
+        let _span = obs_job_span();
+        if let Err(payload) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+        {
+            batch.panicked.fetch_add(1, Ordering::SeqCst);
+            let mut slot = batch.payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+    let mut pending = batch.pending.lock().unwrap();
+    *pending -= 1;
+    if *pending == 0 {
+        batch.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.0.pop_front() {
+                    break t;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        run_task(task);
+    }
+}
+
+/// A persistent pool of worker threads executing scoped jobs.
+pub struct WorkPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkPool {
+    /// Spawn a pool with `workers` threads.  Zero is legal: every scope
+    /// then runs on the submitting thread (useful for tests).
+    pub fn new(workers: usize) -> WorkPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new((std::collections::VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                pool_spawn(format!("metis-pool-{i}"), move || worker_loop(shared))
+            })
+            .collect();
+        WorkPool { shared, workers }
+    }
+
+    /// Worker thread count (the submitting thread adds one more lane of
+    /// effective parallelism on top).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Open a scoped region: `f` may submit jobs borrowing data that
+    /// outlives the `scoped` call; every job is joined before `scoped`
+    /// returns (on the success *and* the unwind path).  Panics if any
+    /// job panicked — callers that need an `Err` instead should catch
+    /// inside the job.
+    pub fn scoped<'pool, 'scope, F, R>(&'pool self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'pool, 'scope>) -> R,
+    {
+        let batch = Arc::new(Batch::new());
+        let scope = Scope {
+            pool: self,
+            batch: Arc::clone(&batch),
+            _marker: std::marker::PhantomData,
+        };
+        let r = {
+            // The guard joins the batch when dropped, so the wait also
+            // happens if `f` unwinds mid-submission.
+            let _guard = WaitGuard {
+                pool: self,
+                batch: &batch,
+            };
+            f(&scope)
+        };
+        if batch.panicked.load(Ordering::SeqCst) > 0 {
+            // Re-throw the first job's payload so the original panic
+            // message and location survive the pool hop.
+            match batch.payload.lock().unwrap().take() {
+                Some(payload) => std::panic::resume_unwind(payload),
+                None => panic!("workpool: a scoped job panicked"),
+            }
+        }
+        r
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Submission handle passed to the closure of [`WorkPool::scoped`].
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkPool,
+    batch: Arc<Batch>,
+    /// Invariant over 'scope, like `std::thread::scope`'s marker.
+    _marker: std::marker::PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'_, 'scope> {
+    /// Queue a job.  It may run on any pool worker or on the submitting
+    /// thread while it waits in the scope join.
+    pub fn execute<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the job only lives until the end of the enclosing
+        // `scoped` call — `WaitGuard` blocks (helping) until the pool
+        // has consumed and dropped every job of this batch, on both the
+        // return and the unwind path, so no 'scope borrow is ever used
+        // after 'scope ends.  This is the `scoped_threadpool` lifetime
+        // erasure; only the fat-pointer lifetime changes.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        *self.batch.pending.lock().unwrap() += 1;
+        {
+            let mut q = self.pool.shared.queue.lock().unwrap();
+            obs_queue_depth(q.0.len());
+            q.0.push_back(Task {
+                job,
+                batch: Arc::clone(&self.batch),
+            });
+        }
+        self.pool.shared.available.notify_one();
+    }
+}
+
+/// Joins a batch on drop: first helps by running the batch's queued
+/// jobs on the current thread, then blocks until in-flight ones finish.
+struct WaitGuard<'a> {
+    pool: &'a WorkPool,
+    batch: &'a Arc<Batch>,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        loop {
+            let task = {
+                let mut q = self.pool.shared.queue.lock().unwrap();
+                let pos = q.0.iter().position(|t| Arc::ptr_eq(&t.batch, self.batch));
+                pos.and_then(|i| q.0.remove(i))
+            };
+            match task {
+                Some(t) => {
+                    obs_helper_steal();
+                    run_task(t)
+                }
+                None => break,
+            }
+        }
+        // No queued jobs of this batch remain and none can be added
+        // (submission requires &Scope, which is gone by the time the
+        // guard drops) — wait out the in-flight ones.
+        let mut pending = self.batch.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.batch.done.wait(pending).unwrap();
+        }
+    }
+}

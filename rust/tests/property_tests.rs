@@ -55,7 +55,7 @@ fn prop_block_quant_scale_invariance_mx() {
     for s in 0..200u64 {
         let mut rng = seed(s);
         let xs: Vec<f32> = (0..32).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
-        let k = (rng.below(9) as i32) - 4;
+        let k = i32::try_from(rng.below(9)).unwrap() - 4;
         let factor = (k as f32).exp2();
         let scaled: Vec<f32> = xs.iter().map(|x| x * factor).collect();
         let q1 = formats::quantize_block(Format::Mxfp4, &xs);

@@ -115,7 +115,7 @@ fn nano_train_step_runs_and_learns() {
 
     let batch = spec.batch.unwrap();
     let seq = eng.manifest.models["nano"].seq_len;
-    let vocab = eng.manifest.models["nano"].vocab as i32;
+    let vocab = i32::try_from(eng.manifest.models["nano"].vocab).expect("vocab fits i32");
     let mut rng = Rng::new(0);
 
     let mut state: Vec<HostValue> = params
@@ -131,9 +131,10 @@ fn nano_train_step_runs_and_learns() {
         // Learnable pattern: arithmetic token sequences.
         let mut toks = Vec::with_capacity(batch * (seq + 1));
         for _ in 0..batch {
-            let start = rng.below(vocab as u64) as i32;
+            let start = i32::try_from(rng.below(vocab as u64)).expect("draw below vocab");
             for t in 0..=seq {
-                toks.push((start + 3 * t as i32).rem_euclid(vocab));
+                let t = i32::try_from(t).expect("seq fits i32");
+                toks.push((start + 3 * t).rem_euclid(vocab));
             }
         }
         let mut inputs = state.clone();

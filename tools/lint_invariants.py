@@ -1,0 +1,632 @@
+#!/usr/bin/env python3
+"""Cross-language invariant linter — the Python half of `metis-lint`.
+
+Walks the Rust sources and fails on violations of the written invariant
+catalog (DESIGN.md §12).  The same five rule families are implemented
+natively in `rust/lint/` (run as `cargo run -p metis-lint -- src tests`);
+this mirror exists so the catalog is enforceable from plain python3
+(no cargo needed) and so the cross-language half — Rust `stamp()` event
+names vs the `tools/validate_events.py` schema table — is checked by
+importing the schema table directly rather than re-parsing it.
+
+Rule families (shared allowlist: rust/lint/allowlist.txt):
+
+  hash-iter           HashMap/HashSet iteration (iter/keys/values/drain/
+                      retain/into_iter or `for _ in &map`) is
+                      nondeterministic order — reduction/fold_in/report
+                      paths must use BTreeMap or an explicit sort.
+  narrowing-cast      `as i32` / `as u32` / `as u16` silently truncates
+                      (the PR 2 seed bug class) — use `try_from` with a
+                      named error, or allowlist with a justification.
+  undocumented-unsafe every `unsafe` must carry a `// SAFETY:` comment
+                      directly above (attributes may intervene).
+  missing-ordering    atomic accesses must spell an explicit
+                      `Ordering::...` (no default-ordering helpers).
+  relaxed-outside-obs `Ordering::Relaxed` is permitted only under
+                      rust/src/obs/ (observability counters may be
+                      racy-by-design; nothing else may be).
+  ref-without-test    every `fn NAME_ref` oracle must have a test
+                      referencing both `NAME(` and `NAME_ref(`.
+  unknown-event /     every literal passed to `obs::run::stamp()` must
+  event-schema-const  exist in validate_events.py's SCHEMAS table, and
+                      the matching `schema::UPPER` constant must appear
+                      at the call site.
+  stale-allowlist     allowlist entries that match nothing are errors —
+                      the allowlist may not rot.
+
+Exit status: 0 clean, 1 findings, 2 usage/internal error.
+
+Usage:
+  python3 tools/lint_invariants.py                 # lint rust/src + rust/tests
+  python3 tools/lint_invariants.py --self-test     # fixture suite (CI)
+"""
+
+import argparse
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+DEFAULT_ROOTS = ["rust/src", "rust/tests"]
+DEFAULT_ALLOWLIST = "rust/lint/allowlist.txt"
+FIXTURES = "rust/lint/fixtures"
+
+NARROWING = ("i32", "u32", "u16")
+ATOMIC_RMW = (
+    "swap|fetch_add|fetch_sub|fetch_and|fetch_or|fetch_xor|fetch_max|"
+    "fetch_min|fetch_nand|fetch_update|compare_exchange|compare_exchange_weak"
+)
+
+
+def schema_events():
+    """Event names from validate_events.py — imported, not re-parsed."""
+    sys.path.insert(0, HERE)
+    try:
+        import validate_events
+    finally:
+        sys.path.pop(0)
+    return set(validate_events.SCHEMAS.keys())
+
+
+# ---------------------------------------------------------------------------
+# Lexer: blank comments and string/char-literal contents so token scans
+# cannot be fooled, while keeping byte offsets (and thus line numbers)
+# stable.  Comments are collected per line for the SAFETY: rule.
+
+
+def scrub(text):
+    """Return (code, comment_lines) where `code` is `text` with comment
+    and string/char contents replaced by spaces (newlines kept), and
+    `comment_lines` maps 1-based line -> concatenated comment text."""
+    n = len(text)
+    code = list(text)
+    comments = {}
+    line_of = _line_index(text)
+
+    def blank(a, b):
+        for k in range(a, b):
+            if code[k] != "\n":
+                code[k] = " "
+
+    def note_comment(a, b):
+        ln = line_of(a)
+        for part in text[a:b].split("\n"):
+            comments[ln] = comments.get(ln, "") + part
+            ln += 1
+
+    i = 0
+    while i < n:
+        c = text[i]
+        if c == "/" and text.startswith("//", i):
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            note_comment(i, j)
+            blank(i, j)
+            i = j
+        elif c == "/" and text.startswith("/*", i):
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth, j = depth + 1, j + 2
+                elif text.startswith("*/", j):
+                    depth, j = depth - 1, j + 2
+                else:
+                    j += 1
+            note_comment(i, j)
+            blank(i, j)
+            i = j
+        elif c == '"':
+            i = _scan_string(text, i, blank, raw=False)
+        elif c in "rb" and not _ident_before(text, i):
+            m = re.match(r'(?:b?r(#*)"|br(#*)"|b")', text[i : i + 8])
+            if m:
+                hashes = m.group(1) or m.group(2) or ""
+                q = text.find('"', i)
+                if "r" in text[i : q + 1]:
+                    i = _scan_raw_string(text, q, hashes, blank)
+                else:
+                    i = _scan_string(text, q, blank, raw=False)
+            else:
+                i += 1
+        elif c == "'":
+            nxt = text[i + 1] if i + 1 < n else ""
+            if nxt == "\\":
+                i = _scan_string(text, i, blank, raw=False, quote="'")
+            elif i + 2 < n and text[i + 2] == "'" and nxt != "'":
+                blank(i + 1, i + 2)
+                i += 3
+            else:
+                i += 1  # lifetime
+        else:
+            i += 1
+    return "".join(code), comments
+
+
+def _ident_before(text, i):
+    return i > 0 and (text[i - 1].isalnum() or text[i - 1] == "_")
+
+
+def _scan_string(text, i, blank, raw, quote='"'):
+    j = i + 1
+    n = len(text)
+    while j < n:
+        if text[j] == "\\" and not raw:
+            j += 2
+        elif text[j] == quote:
+            blank(i + 1, j)
+            return j + 1
+        else:
+            j += 1
+    blank(i + 1, n)
+    return n
+
+
+def _scan_raw_string(text, quote_at, hashes, blank):
+    close = '"' + hashes
+    j = text.find(close, quote_at + 1)
+    j = len(text) if j == -1 else j
+    blank(quote_at + 1, j)
+    return min(j + len(close), len(text))
+
+
+def _line_index(text):
+    starts = [0]
+    for m in re.finditer("\n", text):
+        starts.append(m.end())
+
+    def line_of(off):
+        import bisect
+
+        return bisect.bisect_right(starts, off)
+
+    return line_of
+
+
+# ---------------------------------------------------------------------------
+# Findings + rules
+
+
+class Finding:
+    def __init__(self, rule, path, line, snippet, msg):
+        self.rule, self.path, self.line = rule, path, line
+        self.snippet, self.msg = snippet, msg
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}\n    {self.snippet}"
+
+
+def _line_text(text, line):
+    lines = text.split("\n")
+    return lines[line - 1].strip() if 1 <= line <= len(lines) else ""
+
+
+def _collect_bindings(code, type_re):
+    """Identifiers bound to a type matching `type_re` via let/static/
+    field/tuple-struct declarations.  Textual and local to one file —
+    good enough for the patterns this codebase uses (documented limit)."""
+    names = set()
+    qual = r"(?:[\w]+::)*"
+    for m in re.finditer(
+        rf"(?:let\s+(?:mut\s+)?|static\s+(?:mut\s+)?|const\s+)(\w+)\s*(?::[^=;\n]*?\b{qual}{type_re}\b|=\s*{qual}{type_re}\s*::)",
+        code,
+    ):
+        names.add(m.group(1))
+    for m in re.finditer(rf"(\w+)\s*:\s*{qual}(?:Mutex\s*<\s*)?{qual}{type_re}\s*<", code):
+        names.add(m.group(1))
+    if re.search(rf"struct\s+\w+\s*\(\s*(?:pub\s+)?{qual}{type_re}\b", code):
+        names.add("0")  # tuple-struct field, accessed as `self.0`
+    return names
+
+
+def rule_hash_iter(path, text, code, comments, out):
+    names = _collect_bindings(code, r"Hash(?:Map|Set)")
+    for name in sorted(names):
+        pats = [
+            rf"\b{name}\s*\.\s*(?:iter|iter_mut|keys|values|values_mut|drain|into_iter|retain)\s*\(",
+            rf"\bfor\s[^;{{]*?\bin\s+&?(?:mut\s+)?{name}\b",
+        ]
+        for pat in pats:
+            for m in re.finditer(pat, code):
+                ln = _line_index(text)(m.start())
+                out.append(
+                    Finding(
+                        "hash-iter",
+                        path,
+                        ln,
+                        _line_text(text, ln),
+                        f"iteration over HashMap/HashSet `{name}` is "
+                        "nondeterministic order; use BTreeMap or sort first",
+                    )
+                )
+
+
+def rule_narrowing_cast(path, text, code, comments, out):
+    for m in re.finditer(rf"\bas\s+({'|'.join(NARROWING)})\b", code):
+        ln = _line_index(text)(m.start())
+        out.append(
+            Finding(
+                "narrowing-cast",
+                path,
+                ln,
+                _line_text(text, ln),
+                f"narrowing `as {m.group(1)}` silently truncates; use "
+                "try_from with a named error",
+            )
+        )
+
+
+def rule_undocumented_unsafe(path, text, code, comments, out):
+    code_lines = code.split("\n")
+    for m in re.finditer(r"\bunsafe\b", code):
+        ln = _line_index(text)(m.start())
+        if _safety_comment_above(code_lines, comments, ln):
+            continue
+        out.append(
+            Finding(
+                "undocumented-unsafe",
+                path,
+                ln,
+                _line_text(text, ln),
+                "`unsafe` without a `// SAFETY:` comment directly above",
+            )
+        )
+
+
+def _safety_comment_above(code_lines, comments, ln):
+    if "SAFETY:" in comments.get(ln, ""):
+        return True
+    k = ln - 1
+    while k >= 1:
+        if k in comments and code_lines[k - 1].strip() == "":
+            if "SAFETY:" in comments[k]:
+                return True
+            k -= 1  # contiguous comment block: keep walking up
+        elif code_lines[k - 1].strip().startswith("#["):
+            k -= 1  # attributes may sit between the comment and the item
+        else:
+            return False
+    return False
+
+
+def rule_missing_ordering(path, text, code, comments, out):
+    atomics = _collect_bindings(code, r"Atomic\w+")
+    line_of = _line_index(text)
+    for m in re.finditer(rf"\.\s*(load|store|{ATOMIC_RMW})\s*\(", code):
+        method = m.group(1)
+        recv = _receiver_ident(code, m.start())
+        needs = (
+            recv in atomics
+            if method in ("load", "store", "swap")
+            else True  # fetch_*/compare_exchange only exist on atomics
+        )
+        if not needs:
+            continue
+        args = _paren_span(code, code.find("(", m.start()))
+        if "Ordering::" in args:
+            continue
+        ln = line_of(m.start())
+        out.append(
+            Finding(
+                "missing-ordering",
+                path,
+                ln,
+                _line_text(text, ln),
+                f"atomic `.{method}()` without an explicit `Ordering::...`",
+            )
+        )
+
+
+def _receiver_ident(code, at):
+    """Last identifier (or tuple index) before the `.method(` at `at`."""
+    m = re.search(r"([A-Za-z_]\w*|\d+)\s*$", code[:at])
+    return m.group(1) if m else ""
+
+
+def _paren_span(code, open_at):
+    depth = 0
+    for j in range(open_at, len(code)):
+        if code[j] == "(":
+            depth += 1
+        elif code[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return code[open_at : j + 1]
+    return code[open_at:]
+
+
+def rule_relaxed_outside_obs(path, text, code, comments, out):
+    norm = path.replace(os.sep, "/")
+    if "/obs/" in norm or norm.startswith("obs/"):
+        return
+    for m in re.finditer(r"\bOrdering\s*::\s*Relaxed\b", code):
+        ln = _line_index(text)(m.start())
+        out.append(
+            Finding(
+                "relaxed-outside-obs",
+                path,
+                ln,
+                _line_text(text, ln),
+                "`Ordering::Relaxed` outside rust/src/obs/ — use an "
+                "acquire/release or SeqCst ordering (or justify in the allowlist)",
+            )
+        )
+
+
+def rule_ref_pairs(files, out):
+    """files: list of (path, text, code). Repo-level: every `fn X_ref`
+    oracle needs a test file calling both `X(` and `X_ref(`."""
+    pairs = []  # (base, path, line)
+    for path, text, code in files:
+        for m in re.finditer(r"\bfn\s+(\w+?)_ref\s*\(", code):
+            pairs.append((m.group(1), path, _line_index(text)(m.start())))
+    for base, path, line in pairs:
+        ok = False
+        for _, t2, c2 in files:
+            if "#[test]" not in c2:
+                continue
+            calls = len(re.findall(rf"\b{base}\s*\(", c2)) - len(
+                re.findall(rf"\bfn\s+{base}\s*\(", c2)
+            )
+            ref_calls = len(re.findall(rf"\b{base}_ref\s*\(", c2)) - len(
+                re.findall(rf"\bfn\s+{base}_ref\s*\(", c2)
+            )
+            if calls > 0 and ref_calls > 0:
+                ok = True
+                break
+        if not ok:
+            out.append(
+                Finding(
+                    "ref-without-test",
+                    path,
+                    line,
+                    f"fn {base}_ref",
+                    f"`{base}_ref` oracle has no test referencing both "
+                    f"`{base}(` and `{base}_ref(` — add an exact-equality test",
+                )
+            )
+
+
+def rule_event_schema(path, text, code, comments, events, out):
+    line_of = _line_index(text)
+    for m in re.finditer(r"(?<![\w])stamp\s*\(", code):
+        if re.search(r"\bfn\s*$", code[: m.start()]):
+            continue  # the definition in obs/run.rs
+        open_at = code.find("(", m.start())
+        name = _next_string_literal(text, open_at + 1)
+        ln = line_of(m.start())
+        if name is None:
+            out.append(
+                Finding(
+                    "unknown-event",
+                    path,
+                    ln,
+                    _line_text(text, ln),
+                    "stamp() with a non-literal event name — event names "
+                    "must be literal so the schema table stays checkable",
+                )
+            )
+            continue
+        if name not in events:
+            out.append(
+                Finding(
+                    "unknown-event",
+                    path,
+                    ln,
+                    _line_text(text, ln),
+                    f'stamp("{name}") is not in validate_events.py SCHEMAS '
+                    f"({', '.join(sorted(events))})",
+                )
+            )
+            continue
+        window = code[open_at : open_at + 250]
+        if f"schema::{name.upper()}" not in window:
+            out.append(
+                Finding(
+                    "event-schema-const",
+                    path,
+                    ln,
+                    _line_text(text, ln),
+                    f'stamp("{name}") must pass `schema::{name.upper()}` '
+                    "as its schema_version",
+                )
+            )
+
+
+def _next_string_literal(text, at, window=120):
+    seg = text[at : at + window]
+    m = re.match(r'\s*"((?:[^"\\]|\\.)*)"', seg)
+    return m.group(1) if m else None
+
+
+# ---------------------------------------------------------------------------
+# Allowlist: `rule | path-suffix | snippet | justification` lines.
+
+
+class AllowEntry:
+    def __init__(self, rule, path, snippet, why, line):
+        self.rule, self.path, self.snippet, self.why = rule, path, snippet, why
+        self.line = line
+        self.used = False
+
+
+def load_allowlist(path):
+    entries, errors = [], []
+    if not os.path.exists(path):
+        return entries, errors
+    with open(path, encoding="utf-8") as f:
+        for i, raw in enumerate(f, 1):
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            parts = [p.strip() for p in s.split("|")]
+            if len(parts) != 4 or not all(parts):
+                errors.append(
+                    Finding(
+                        "allowlist-format",
+                        path,
+                        i,
+                        s,
+                        "allowlist entries are `rule | path-suffix | "
+                        "snippet | justification` (all four non-empty)",
+                    )
+                )
+                continue
+            entries.append(AllowEntry(*parts, line=i))
+    return entries, errors
+
+
+def apply_allowlist(findings, entries, allowlist_path):
+    kept = []
+    for f in findings:
+        hit = None
+        for e in entries:
+            if (
+                e.rule == f.rule
+                and f.path.replace(os.sep, "/").endswith(e.path)
+                and e.snippet in f.snippet
+            ):
+                hit = e
+                break
+        if hit:
+            hit.used = True
+        else:
+            kept.append(f)
+    for e in entries:
+        if not e.used:
+            kept.append(
+                Finding(
+                    "stale-allowlist",
+                    allowlist_path,
+                    e.line,
+                    f"{e.rule} | {e.path} | {e.snippet}",
+                    "allowlist entry matches no finding — remove it",
+                )
+            )
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# Driver
+
+
+def lint_files(paths, events, repo=REPO):
+    loaded = []
+    for p in paths:
+        with open(p, encoding="utf-8") as f:
+            text = f.read()
+        code, comments = scrub(text)
+        loaded.append((os.path.relpath(p, repo), text, code, comments))
+    findings = []
+    for path, text, code, comments in loaded:
+        rule_hash_iter(path, text, code, comments, findings)
+        rule_narrowing_cast(path, text, code, comments, findings)
+        rule_undocumented_unsafe(path, text, code, comments, findings)
+        rule_missing_ordering(path, text, code, comments, findings)
+        rule_relaxed_outside_obs(path, text, code, comments, findings)
+        rule_event_schema(path, text, code, comments, events, findings)
+    rule_ref_pairs([(p, t, c) for p, t, c, _ in loaded], findings)
+    return findings
+
+
+def rust_files(roots):
+    out = []
+    for root in roots:
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    out.append(os.path.join(dirpath, name))
+    return sorted(out)
+
+
+def self_test(events):
+    fixtures = os.path.join(REPO, FIXTURES)
+    expect = {
+        "clean.rs": set(),
+        "hash_iter.rs": {"hash-iter"},
+        "narrowing_cast.rs": {"narrowing-cast"},
+        "undocumented_unsafe.rs": {"undocumented-unsafe"},
+        "missing_ordering.rs": {"missing-ordering"},
+        "relaxed_outside_obs.rs": {"relaxed-outside-obs"},
+        "ref_without_test.rs": {"ref-without-test"},
+        "unknown_event.rs": {"unknown-event"},
+    }
+    present = sorted(n for n in os.listdir(fixtures) if n.endswith(".rs"))
+    if sorted(expect) != present:
+        print(f"self-test: fixture set mismatch: {present} vs {sorted(expect)}")
+        return 1
+    failures = 0
+    for name, want in sorted(expect.items()):
+        findings = lint_files([os.path.join(fixtures, name)], events)
+        got = {f.rule for f in findings}
+        if want and (got != want or not findings):
+            print(f"self-test FAIL {name}: expected exactly {want}, got {got}")
+            for f in findings:
+                print(f"    {f}")
+            failures += 1
+        elif not want and findings:
+            print(f"self-test FAIL {name}: expected clean, got {got}")
+            for f in findings:
+                print(f"    {f}")
+            failures += 1
+        else:
+            label = ",".join(sorted(want)) or "clean"
+            print(f"self-test ok   {name}: {label}")
+
+    # Allowlist mechanics: an entry that matches suppresses the finding;
+    # an entry that matches nothing is itself an error.
+    fix = os.path.join(fixtures, "narrowing_cast.rs")
+    findings = lint_files([fix], events)
+    entries = [
+        AllowEntry("narrowing-cast", "narrowing_cast.rs", "as i32", "fixture", 1)
+    ]
+    left = apply_allowlist(findings, entries, "allowlist.txt")
+    if left:
+        print(f"self-test FAIL allowlist-suppression: {[str(f) for f in left]}")
+        failures += 1
+    else:
+        print("self-test ok   allowlist suppresses a justified finding")
+    stale = apply_allowlist(
+        [], [AllowEntry("hash-iter", "nope.rs", "zzz", "stale", 9)], "allowlist.txt"
+    )
+    if len(stale) == 1 and stale[0].rule == "stale-allowlist":
+        print("self-test ok   stale allowlist entry is an error")
+    else:
+        print("self-test FAIL stale-allowlist not reported")
+        failures += 1
+    print(f"self-test: {'FAILED' if failures else 'passed'}")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("roots", nargs="*", help="directories of .rs files to lint")
+    ap.add_argument("--allowlist", default=os.path.join(REPO, DEFAULT_ALLOWLIST))
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    events = schema_events()
+    if args.self_test:
+        sys.exit(self_test(events))
+
+    roots = args.roots or [os.path.join(REPO, r) for r in DEFAULT_ROOTS]
+    files = rust_files(roots)
+    if not files:
+        print(f"lint_invariants: no .rs files under {roots}", file=sys.stderr)
+        sys.exit(2)
+    findings = lint_files(files, events)
+    entries, errors = load_allowlist(args.allowlist)
+    findings = apply_allowlist(findings, entries, os.path.relpath(args.allowlist, REPO))
+    findings.extend(errors)
+    for f in sorted(findings, key=lambda f: (f.path, f.line)):
+        print(f)
+    n_allowed = sum(1 for e in entries if e.used)
+    print(
+        f"lint_invariants: {len(files)} files, {len(findings)} finding(s), "
+        f"{n_allowed} allowlisted"
+    )
+    sys.exit(1 if findings else 0)
+
+
+if __name__ == "__main__":
+    main()
