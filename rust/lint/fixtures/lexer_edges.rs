@@ -1,0 +1,15 @@
+//! Fixture: lexer edge cases — byte strings, raw byte strings, nested
+//! raw-string hash counts, and escape-bearing byte chars, each loaded
+//! with rule-shaped text.  This file must lint CLEAN in both halves;
+//! any finding means the scrubber leaked literal contents into the
+//! token stream.
+
+pub fn literals() -> usize {
+    let a = b"x as i32; unsafe {}";
+    let b = br#"let m = HashMap::new(); for k in m.iter() {}"#;
+    let c = br##"Instant::now() closes with "# but not yet"##;
+    let d = r##"env::var("#inner"#) still inside"##;
+    let e = b'\n';
+    let f = b'"';
+    a.len() + b.len() + c.len() + d.len() + (e as usize) + (f as usize)
+}

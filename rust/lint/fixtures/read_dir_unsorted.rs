@@ -1,0 +1,13 @@
+//! Fixture: consuming fs::read_dir without sorting — platform
+//! directory order is arbitrary, so any fold over the listing is
+//! nondeterministic across filesystems.
+
+use std::path::PathBuf;
+
+pub fn list(dir: &std::path::Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        out.push(entry?.path());
+    }
+    Ok(out)
+}

@@ -1,0 +1,22 @@
+//! Seeded interprocedural bug: the entry point `step_with` reaches a
+//! HashMap iteration two helpers deep.  File-locally `deep_fold` also
+//! trips the hash-iter rule; the taint pass must additionally report
+//! the full chain step_with → accumulate → deep_fold.
+
+use std::collections::HashMap;
+
+pub fn step_with(per_layer: &HashMap<String, f64>) -> f64 {
+    accumulate(per_layer)
+}
+
+fn accumulate(per_layer: &HashMap<String, f64>) -> f64 {
+    deep_fold(per_layer) * 0.5
+}
+
+fn deep_fold(per_layer: &HashMap<String, f64>) -> f64 {
+    let mut acc = 0.0;
+    for (_k, v) in per_layer {
+        acc += v;
+    }
+    acc
+}

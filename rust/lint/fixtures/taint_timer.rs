@@ -1,0 +1,21 @@
+//! Seeded interprocedural bug: the entry point `run_specs` reaches a
+//! wall-clock read (`Instant::now`) two helpers deep.  No file-local
+//! rule fires — only the taint pass can see this, and it must report
+//! the full chain run_specs → measure → elapsed_hint.
+
+pub fn run_specs(steps: usize) -> f64 {
+    let mut total = 0.0;
+    for _ in 0..steps {
+        total += measure();
+    }
+    total
+}
+
+fn measure() -> f64 {
+    elapsed_hint() + 1.0
+}
+
+fn elapsed_hint() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -34,6 +34,7 @@ pub fn parse(text: &str, display_path: &str) -> (Vec<Entry>, Vec<Finding>) {
                 msg: "allowlist entries are `rule | path-suffix | snippet | \
                       justification` (all four non-empty)"
                     .to_string(),
+                chain: Vec::new(),
             });
             continue;
         }
@@ -70,6 +71,7 @@ pub fn apply(findings: Vec<Finding>, entries: &mut [Entry], allowlist_path: &str
             line: e.line,
             snippet: format!("{} | {} | {}", e.rule, e.path, e.snippet),
             msg: "allowlist entry matches no finding — remove it".to_string(),
+            chain: Vec::new(),
         });
     }
     kept
@@ -96,6 +98,7 @@ mod tests {
             line: 3,
             snippet: "let a = b as i32;".to_string(),
             msg: String::new(),
+            chain: Vec::new(),
         };
         let (mut entries, _) = parse(
             "narrowing-cast | src/x.rs | as i32 | why\nhash-iter | nope.rs | zzz | stale\n",

@@ -1,0 +1,627 @@
+//! Best-effort symbol table + call graph over the scrubbed token
+//! stream, mirroring the `_fn_defs`/`_impl_blocks`/`_imports`/`_calls`/
+//! `build_callgraph` family in tools/lint_invariants.py.  Token-level,
+//! not type-aware — the resolution heuristics and their documented
+//! limits (DESIGN.md §12) are shared verbatim with the Python half:
+//!
+//!   - method calls: `self.name(` resolves into the caller's own impl
+//!     block when it defines `name`; otherwise `name` must be globally
+//!     unique among crate fns and not a std method name;
+//!   - qualified calls `X::name(`: `X` must match a def's impl type,
+//!     file stem, or parent directory (`Self::` is rewritten to the
+//!     caller's impl type);
+//!   - bare calls: names imported from outside the crate are skipped,
+//!     then same-file defs win, then globally-unique names;
+//!   - ambiguous names are skipped (precision over recall), macro
+//!     invocations are invisible (the `!` breaks the token pattern),
+//!     turbofish call sites (`name::<T>(`) and trait-object dispatch
+//!     are documented misses.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::rules::SourceFile;
+
+/// Not callable names — skipped by the call-site scan.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "fn", "as", "in", "move", "unsafe",
+    "let", "ref", "mut", "box", "await", "use", "pub", "where", "impl", "struct", "enum", "union",
+    "trait", "type", "mod", "const", "static", "break", "continue", "crate", "super", "self",
+    "Self", "dyn", "true", "false",
+];
+
+/// Method names that belong to std types: `.name(` calls on these are
+/// never resolved to crate fns even when a unique same-named crate fn
+/// exists (the unique-name heuristic would otherwise invent edges
+/// through e.g. `.len()` or `.sort()`).  Shared verbatim with the
+/// Python half's STD_METHODS.
+const STD_METHODS: &[&str] = &[
+    "abs", "and_then", "any", "as_bytes", "as_mut", "as_ref", "as_slice", "as_str", "borrow",
+    "borrow_mut", "chars", "clear", "clone", "cloned", "cmp", "collect", "contains",
+    "contains_key", "copied", "count", "dedup", "drain", "drop", "entry", "enumerate", "eq",
+    "expect", "extend", "fetch_add", "fetch_sub", "filter", "filter_map", "find", "flush", "fold",
+    "get", "get_mut", "hash", "insert", "into", "is_empty", "is_err", "is_none", "is_ok",
+    "is_some", "iter", "iter_mut", "join", "keys", "last", "len", "load", "lock", "map",
+    "map_err", "max", "min", "next", "ok", "or_else", "parse", "partial_cmp", "position", "pow",
+    "powf", "powi", "push", "push_str", "read", "recv", "remove", "rev", "seek", "send", "skip",
+    "sort", "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by", "split", "sqrt",
+    "starts_with", "ends_with", "store", "sum", "swap", "take", "to_owned", "to_string", "to_vec",
+    "trim", "try_into", "unwrap", "unwrap_or", "unwrap_or_default", "unwrap_or_else", "values",
+    "values_mut", "wait", "write", "zip",
+];
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn rskip_ws(b: &[u8], mut i: usize) -> usize {
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+fn ident_starting_at(code: &str, at: usize) -> &str {
+    let b = code.as_bytes();
+    let mut e = at;
+    while e < b.len() && is_ident(b[e]) {
+        e += 1;
+    }
+    &code[at..e]
+}
+
+fn ident_ending_at(code: &str, end: usize) -> &str {
+    let b = code.as_bytes();
+    let mut s = end;
+    while s > 0 && is_ident(b[s - 1]) {
+        s -= 1;
+    }
+    &code[s..end]
+}
+
+/// Offset of the matching closer for the opener at `at` (`(`/`)`,
+/// `{`/`}`); end of code if unbalanced.
+fn match_delim(code: &str, at: usize, open: u8, close: u8) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 0i64;
+    for (j, &c) in b.iter().enumerate().skip(at) {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    b.len().saturating_sub(1)
+}
+
+/// Offset of the `>` closing the `<` at `at` (a `>` preceded by `-` is
+/// an arrow, not a closer — same rule as the Python `_match_angles`).
+fn match_angles(code: &str, at: usize) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 0i64;
+    for (j, &c) in b.iter().enumerate().skip(at) {
+        if c == b'<' {
+            depth += 1;
+        } else if c == b'>' && (j == 0 || b[j - 1] != b'-') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    b.len().saturating_sub(1)
+}
+
+/// One `fn` definition in one file.
+pub struct FnDef {
+    pub name: String,
+    pub off: usize,
+    /// `{`/`}` offsets of the body; `None` for bodyless trait fns.
+    pub body: Option<(usize, usize)>,
+    /// Enclosing `impl` block's type name, if any.
+    pub impl_ty: Option<String>,
+    /// Qualifiers that resolve a `X::name(` call to this def: the impl
+    /// type, the file stem, and the parent directory name.
+    pub quals: BTreeSet<String>,
+}
+
+/// Every `fn NAME` with its body span (mirrors `_fn_defs`): skip
+/// generics angle-matched, match the param parens, then scan at
+/// paren/bracket depth 0 for the first `{` (body) or `;` (no body).
+pub fn fn_defs(code: &str) -> Vec<FnDef> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut defs = Vec::new();
+    for at in crate::rules::token_positions(code, "fn") {
+        let mut i = skip_ws(b, at + 2);
+        if i == at + 2 {
+            continue; // `fn` must be followed by whitespace
+        }
+        let name = ident_starting_at(code, i);
+        if name.is_empty() {
+            continue;
+        }
+        let off = at;
+        i = skip_ws(b, i + name.len());
+        if i < n && b[i] == b'<' {
+            i = match_angles(code, i) + 1;
+            i = skip_ws(b, i);
+        }
+        if i >= n || b[i] != b'(' {
+            continue;
+        }
+        let mut k = match_delim(code, i, b'(', b')') + 1;
+        let mut body = None;
+        let mut depth = 0i64;
+        while k < n {
+            match b[k] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'{' if depth == 0 => {
+                    body = Some((k, match_delim(code, k, b'{', b'}')));
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        defs.push(FnDef {
+            name: name.to_string(),
+            off,
+            body,
+            impl_ty: None,
+            quals: BTreeSet::new(),
+        });
+    }
+    defs
+}
+
+/// `(body_open, body_close, type_name)` for every `impl` block
+/// (mirrors `_impl_blocks`): skip generics, take the header up to the
+/// first `{`, use the segment after ` for ` when present, and the last
+/// path segment of the first type path as the name.
+fn impl_blocks(code: &str) -> Vec<(usize, usize, String)> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut blocks = Vec::new();
+    for at in crate::rules::token_positions(code, "impl") {
+        let mut i = skip_ws(b, at + 4);
+        if i < n && b[i] == b'<' {
+            i = match_angles(code, i) + 1;
+        }
+        let Some(rel) = code[i..].find('{') else {
+            continue;
+        };
+        let brace = i + rel;
+        let mut header = &code[i..brace];
+        if let Some(fat) = crate::rules::token_positions(header, "for").first() {
+            header = &header[fat + 3..];
+        }
+        let Some(name) = first_path_last_segment(header) else {
+            continue;
+        };
+        blocks.push((brace, match_delim(code, brace, b'{', b'}'), name));
+    }
+    blocks
+}
+
+/// Last segment of the first `A::B::C` path in `s` (mirrors the Python
+/// `(?:\w+\s*::\s*)*(\w+)` regex applied with `re.search`).
+fn first_path_last_segment(s: &str) -> Option<String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        if is_ident_start(b[i]) && (i == 0 || !is_ident(b[i - 1])) {
+            // Walk the path from here: ident (:: ident)*
+            let mut last = ident_starting_at(s, i);
+            let mut j = i + last.len();
+            loop {
+                let k = skip_ws(b, j);
+                if s[k..].starts_with("::") {
+                    let m = skip_ws(b, k + 2);
+                    let seg = ident_starting_at(s, m);
+                    if seg.is_empty() {
+                        break;
+                    }
+                    last = seg;
+                    j = m + seg.len();
+                } else {
+                    break;
+                }
+            }
+            return Some(last.to_string());
+        }
+        i += 1;
+    }
+    None
+}
+
+/// alias -> full path segments from `use` declarations (single-level
+/// brace groups; nested groups are a documented miss).  Mirrors
+/// `_imports`.
+fn imports(code: &str) -> BTreeMap<String, Vec<String>> {
+    let mut imp = BTreeMap::new();
+    let b = code.as_bytes();
+    let n = b.len();
+    let add = |imp: &mut BTreeMap<String, Vec<String>>, segs: Vec<String>, alias: Option<String>| {
+        if segs.is_empty() {
+            return;
+        }
+        let alias = alias.or_else(|| {
+            let last = segs.last().unwrap();
+            if last == "self" {
+                segs.get(segs.len().wrapping_sub(2)).cloned()
+            } else {
+                Some(last.clone())
+            }
+        });
+        if let Some(a) = alias {
+            imp.insert(a, segs);
+        }
+    };
+    for at in crate::rules::token_positions(code, "use") {
+        // Base path: ident (:: ident)*
+        let mut i = skip_ws(b, at + 3);
+        if i == at + 3 || i >= n || !is_ident_start(b[i]) {
+            continue;
+        }
+        let mut base: Vec<String> = Vec::new();
+        loop {
+            let seg = ident_starting_at(code, i);
+            if seg.is_empty() {
+                break;
+            }
+            base.push(seg.to_string());
+            i = skip_ws(b, i + seg.len());
+            if code[i..].starts_with("::") {
+                let j = skip_ws(b, i + 2);
+                if j < n && is_ident_start(b[j]) {
+                    i = j;
+                    continue;
+                }
+                i = j;
+            }
+            break;
+        }
+        if i < n && b[i] == b'*' {
+            continue; // glob import — unresolvable, skipped (as in Python)
+        }
+        if i < n && b[i] == b'{' {
+            // First `}` only — single-level groups; nested groups are a
+            // documented miss shared with the Python regex's `[^}]*`.
+            let close = code[i..].find('}').map_or(n, |rel| i + rel);
+            for item in code[i + 1..close].split(',') {
+                let item = item.trim();
+                if item.is_empty() || item == "*" {
+                    continue;
+                }
+                let (path_part, alias) = match item.rsplit_once(" as ") {
+                    Some((p, a)) => (p.trim(), Some(a.trim().to_string())),
+                    None => (item, None),
+                };
+                let mut segs = base.clone();
+                segs.extend(
+                    path_part
+                        .split("::")
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty()),
+                );
+                add(&mut imp, segs, alias);
+            }
+        } else {
+            // `use a::b::c;` or `use a::b as x;`
+            let mut alias = None;
+            if code[i..].starts_with("as") && i + 2 < n && b[i + 2].is_ascii_whitespace() {
+                let j = skip_ws(b, i + 2);
+                let a = ident_starting_at(code, j);
+                if !a.is_empty() {
+                    alias = Some(a.to_string());
+                }
+            }
+            add(&mut imp, base, alias);
+        }
+    }
+    imp
+}
+
+/// Index of the innermost def whose body contains `off` (mirrors
+/// `_enclosing_def`: the containing body with the greatest start).
+pub fn enclosing_def(defs: &[FnDef], off: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, d) in defs.iter().enumerate() {
+        if let Some((a, z)) = d.body {
+            if a < off && off <= z && best.map_or(true, |bi| a > defs[bi].body.unwrap().0) {
+                best = Some(i);
+            }
+        }
+    }
+    best
+}
+
+enum CallKind {
+    Method(String),
+    Qualified(String),
+    Bare,
+}
+
+/// `(caller_local_idx, callee_name, kind)` for every call site inside
+/// a fn body (mirrors `_calls`).  Macros are invisible (the `!`
+/// breaks the pattern); definitions are excluded by the `fn` check.
+fn calls(code: &str, defs: &[FnDef]) -> Vec<(usize, String, CallKind)> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !is_ident_start(b[i]) || (i > 0 && is_ident(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let name = ident_starting_at(code, i);
+        let start = i;
+        i += name.len();
+        if KEYWORDS.contains(&name) {
+            continue;
+        }
+        let open = skip_ws(b, start + name.len());
+        if open >= n || b[open] != b'(' {
+            continue;
+        }
+        let Some(di) = enclosing_def(defs, start) else {
+            continue;
+        };
+        let prev_end = rskip_ws(b, start);
+        if ident_ending_at(code, prev_end) == "fn" {
+            continue;
+        }
+        let kind = if prev_end > 0 && b[prev_end - 1] == b'.' {
+            let recv_end = rskip_ws(b, prev_end - 1);
+            CallKind::Method(ident_ending_at(code, recv_end).to_string())
+        } else if prev_end >= 2 && &code[prev_end - 2..prev_end] == "::" {
+            let q_end = rskip_ws(b, prev_end - 2);
+            CallKind::Qualified(ident_ending_at(code, q_end).to_string())
+        } else {
+            CallKind::Bare
+        };
+        out.push((di, name.to_string(), kind));
+    }
+    out
+}
+
+/// Per-file symbol context (defs with qualifiers + imports).
+pub struct FileGraph {
+    pub defs: Vec<FnDef>,
+    imports: BTreeMap<String, Vec<String>>,
+}
+
+pub fn analyze(f: &SourceFile) -> FileGraph {
+    let code = &f.scrubbed.code;
+    let mut defs = fn_defs(code);
+    let impls = impl_blocks(code);
+    let norm = f.path.replace('\\', "/");
+    let base = norm.rsplit('/').next().unwrap_or(&norm);
+    let stem = base.strip_suffix(".rs").unwrap_or(base);
+    let parent = {
+        let without = norm.strip_suffix(base).unwrap_or("");
+        let without = without.strip_suffix('/').unwrap_or(without);
+        without.rsplit('/').next().unwrap_or(without).to_string()
+    };
+    for d in &mut defs {
+        d.quals.insert(stem.to_string());
+        if !parent.is_empty() {
+            d.quals.insert(parent.clone());
+        }
+        for (a, z, tname) in &impls {
+            if *a < d.off && d.off <= *z {
+                d.impl_ty = Some(tname.clone());
+                d.quals.insert(tname.clone());
+            }
+        }
+    }
+    FileGraph {
+        defs,
+        imports: imports(code),
+    }
+}
+
+/// Whole-crate call graph: `defs[g] = (file_idx, local_idx)`, `edges[g]`
+/// sorted callee indices.  Mirrors `build_callgraph`.
+pub struct CallGraph {
+    pub defs: Vec<(usize, usize)>,
+    pub edges: Vec<Vec<usize>>,
+}
+
+pub fn build(files: &[SourceFile], graphs: &[FileGraph]) -> CallGraph {
+    let mut defs: Vec<(usize, usize)> = Vec::new();
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (fi, fg) in graphs.iter().enumerate() {
+        for (li, d) in fg.defs.iter().enumerate() {
+            by_name.entry(&d.name).or_default().push(defs.len());
+            defs.push((fi, li));
+        }
+    }
+    let mut index_of: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (gi, pair) in defs.iter().enumerate() {
+        index_of.insert(*pair, gi);
+    }
+    let mut edges: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); defs.len()];
+
+    for (fi, fg) in graphs.iter().enumerate() {
+        for (li, name, kind) in calls(&files[fi].scrubbed.code, &fg.defs) {
+            let caller = index_of[&(fi, li)];
+            let Some(cands) = by_name.get(name.as_str()) else {
+                continue;
+            };
+            let mut resolved: Vec<usize> = Vec::new();
+            match kind {
+                CallKind::Method(recv) => {
+                    if recv == "self" {
+                        if let Some(imp) = &fg.defs[li].impl_ty {
+                            let own: Vec<usize> = cands
+                                .iter()
+                                .copied()
+                                .filter(|&g| {
+                                    defs[g].0 == fi
+                                        && graphs[fi].defs[defs[g].1].impl_ty.as_deref()
+                                            == Some(imp.as_str())
+                                })
+                                .collect();
+                            if !own.is_empty() {
+                                resolved = own;
+                            }
+                        }
+                    }
+                    if resolved.is_empty()
+                        && !STD_METHODS.contains(&name.as_str())
+                        && cands.len() == 1
+                    {
+                        resolved = cands.clone();
+                    }
+                }
+                CallKind::Qualified(mut qual) => {
+                    if qual == "Self" {
+                        if let Some(imp) = &fg.defs[li].impl_ty {
+                            qual = imp.clone();
+                        }
+                    }
+                    resolved = cands
+                        .iter()
+                        .copied()
+                        .filter(|&g| graphs[defs[g].0].defs[defs[g].1].quals.contains(&qual))
+                        .collect();
+                }
+                CallKind::Bare => {
+                    let external = fg.imports.get(&name).is_some_and(|segs| {
+                        !matches!(segs[0].as_str(), "crate" | "self" | "super")
+                    });
+                    if !external {
+                        let same: Vec<usize> =
+                            cands.iter().copied().filter(|&g| defs[g].0 == fi).collect();
+                        if !same.is_empty() {
+                            resolved = same;
+                        } else if cands.len() == 1 {
+                            resolved = cands.clone();
+                        }
+                    }
+                }
+            }
+            for g in resolved {
+                if g != caller {
+                    edges[caller].insert(g);
+                }
+            }
+        }
+    }
+    CallGraph {
+        defs,
+        edges: edges.into_iter().map(|e| e.into_iter().collect()).collect(),
+    }
+}
+
+/// Offsets of `read_dir(` calls with no `sort*` token between the call
+/// and the end of the enclosing fn body (end of file when not in a
+/// fn).  Shared by the file-local read-dir-unsorted rule and the taint
+/// source scan; mirrors `_unsorted_read_dirs`.
+pub fn unsorted_read_dirs(code: &str, defs: &[FnDef]) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut hits = Vec::new();
+    for at in crate::rules::token_positions(code, "read_dir") {
+        let open = skip_ws(b, at + "read_dir".len());
+        if open >= b.len() || b[open] != b'(' {
+            continue;
+        }
+        let end = enclosing_def(defs, at)
+            .and_then(|di| defs[di].body)
+            .map_or(code.len(), |(_, z)| z);
+        let after = &code[(open + 1).min(end)..end];
+        if crate::rules::token_prefix_positions(after, "sort").is_empty() {
+            hits.push(at);
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gf(path: &str, code: &str) -> (SourceFile, FileGraph) {
+        let f = SourceFile::new(path.to_string(), code.to_string());
+        let g = analyze(&f);
+        (f, g)
+    }
+
+    #[test]
+    fn defs_skip_generics_and_bracket_return_types() {
+        let code = "fn plain() { body(); }\n\
+                    fn generic<T: Ord>(x: T) -> [f64; 4] { [0.0; 4] }\n\
+                    trait T { fn sig(&self); }";
+        let defs = fn_defs(code);
+        let names: Vec<&str> = defs.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, ["plain", "generic", "sig"]);
+        assert!(defs[0].body.is_some() && defs[1].body.is_some());
+        assert!(defs[2].body.is_none(), "trait sig has no body");
+    }
+
+    #[test]
+    fn impl_type_becomes_qualifier() {
+        let (_f, g) = gf("rust/src/metis/state.rs", "impl<T> Foo<T> { fn go(&self) {} }");
+        assert_eq!(g.defs[0].impl_ty.as_deref(), Some("Foo"));
+        assert!(g.defs[0].quals.contains("Foo"));
+        assert!(g.defs[0].quals.contains("state"), "file stem");
+        assert!(g.defs[0].quals.contains("metis"), "parent dir");
+    }
+
+    #[test]
+    fn resolution_self_unique_and_qualified() {
+        let (f1, g1) = gf(
+            "rust/src/a/one.rs",
+            "impl W { fn entry(&self) { self.helper(); unique_free(); Other::t(); } \
+             fn helper(&self) {} }",
+        );
+        let (f2, g2) = gf(
+            "rust/src/a/two.rs",
+            "pub fn unique_free() {}\nimpl Other { pub fn t() {} }",
+        );
+        let files = vec![f1, f2];
+        let graphs = vec![g1, g2];
+        let cg = build(&files, &graphs);
+        // entry (0) -> helper (1), unique_free (2), Other::t (3)
+        assert_eq!(cg.edges[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn std_methods_and_external_imports_do_not_resolve() {
+        let (f1, g1) = gf(
+            "rust/src/b/one.rs",
+            "use std::cmp::min;\nfn caller(v: &mut Vec<u32>) { v.sort(); min(1, 2); }",
+        );
+        let (f2, g2) = gf("rust/src/b/two.rs", "pub fn sort() {}\npub fn min() {}");
+        let files = vec![f1, f2];
+        let graphs = vec![g1, g2];
+        let cg = build(&files, &graphs);
+        assert!(cg.edges[0].is_empty(), "{:?}", cg.edges[0]);
+    }
+
+    #[test]
+    fn read_dir_requires_sort_in_same_fn() {
+        let code = "fn bad(d: &P) { for e in read_dir(d) { use_it(e); } }\n\
+                    fn good(d: &P) { let mut v = read_dir(d).collect(); v.sort(); }";
+        let defs = fn_defs(code);
+        assert_eq!(unsorted_read_dirs(code, &defs).len(), 1);
+    }
+}

@@ -222,6 +222,35 @@ mod tests {
     }
 
     #[test]
+    fn byte_strings_and_byte_chars_are_blanked() {
+        // Mirrors the lexer_edges.rs fixture (which must lint clean in
+        // both halves): b"…" contents are code-shaped bait, and b'"'
+        // must not open a string that swallows the rest of the file.
+        let src = "let a = b\"x as i32; unsafe {}\"; let q = b'\"'; let e = b'\\n'; let t = 1;";
+        let s = scrub(src);
+        assert_eq!(s.code.len(), src.len(), "offsets must not shift");
+        assert!(!s.code.contains("as i32"), "byte-string contents blanked");
+        assert!(!s.code.contains("unsafe"));
+        assert!(s.code.contains("let t = 1;"), "scan stays aligned past b'\"'");
+    }
+
+    #[test]
+    fn raw_hash_counts_must_match_to_close() {
+        // A ##-delimited raw (byte) string only closes on `"##` — inner
+        // `"#` sequences are content, not terminators.
+        let src = "let a = br##\"closes with \"# but not yet\"##; let t = 1;";
+        let s = scrub(src);
+        assert!(!s.code.contains("but not yet"), "`\"#` closed a ##-string");
+        assert!(s.code.contains("let t = 1;"), "scan resumes after real closer");
+
+        let src2 = "let b = r##\"env::var(\"#inner\"#) still inside\"##; let u = 2;";
+        let s2 = scrub(src2);
+        assert!(!s2.code.contains("env::var"), "taint bait must be blanked");
+        assert!(!s2.code.contains("still inside"));
+        assert!(s2.code.contains("let u = 2;"));
+    }
+
+    #[test]
     fn line_index_maps_offsets() {
         let idx = LineIndex::new("ab\ncd\nef");
         assert_eq!(idx.line_of(0), 1);

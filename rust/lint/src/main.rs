@@ -1,19 +1,24 @@
 //! metis-lint: the Rust half of the invariant lint engine
-//! (DESIGN.md §12).  Token-level checks over `rust/src` + `rust/tests`
-//! for the written invariant catalog; mirrored by
-//! tools/lint_invariants.py so the catalog is enforceable with either
-//! toolchain alone.
+//! (DESIGN.md §12).  Token-level file-local checks plus an
+//! interprocedural determinism-taint pass over `rust/src` +
+//! `rust/tests`; mirrored by tools/lint_invariants.py so the catalog is
+//! enforceable with either toolchain alone (CI diffs the two halves'
+//! `--format json` output byte-for-byte).
 //!
 //! Usage:
 //!   cargo run -p metis-lint                      # lint rust/src + rust/tests
 //!   cargo run -p metis-lint -- rust/src          # explicit roots
 //!   cargo run -p metis-lint -- --self-test       # fixture suite (CI)
+//!   cargo run -p metis-lint -- --format sarif    # SARIF 2.1.0 on stdout
 //!
 //! Exit status: 0 clean, 1 findings, 2 usage/internal error.
 
 mod allowlist;
+mod callgraph;
 mod lexer;
 mod rules;
+mod sarif;
+mod taint;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
@@ -27,6 +32,12 @@ const DEFAULT_ROOTS: &[&str] = &["rust/src", "rust/tests"];
 const DEFAULT_ALLOWLIST: &str = "rust/lint/allowlist.txt";
 const FIXTURES: &str = "rust/lint/fixtures";
 const EVENTS_TABLE: &str = "tools/validate_events.py";
+
+enum Format {
+    Text,
+    Json,
+    Sarif,
+}
 
 /// Walk up from the CWD to the directory holding tools/validate_events.py.
 fn find_repo_root() -> Result<PathBuf> {
@@ -74,6 +85,13 @@ fn schema_events(repo: &Path) -> Result<BTreeSet<String>> {
     Ok(events)
 }
 
+fn load_entrypoints(path: &Path) -> Vec<(String, usize)> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => taint::load_entrypoints(&text),
+        Err(_) => Vec::new(),
+    }
+}
+
 fn rust_files(roots: &[PathBuf]) -> Result<Vec<PathBuf>> {
     fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
         let mut names: Vec<PathBuf> = std::fs::read_dir(dir)
@@ -114,22 +132,36 @@ fn load_sources(paths: &[PathBuf], repo: &Path) -> Result<Vec<SourceFile>> {
         .collect()
 }
 
-fn lint_paths(paths: &[PathBuf], events: &BTreeSet<String>, repo: &Path) -> Result<Vec<Finding>> {
+fn lint_paths(
+    paths: &[PathBuf],
+    events: &BTreeSet<String>,
+    repo: &Path,
+    entrypoints: &[(String, usize)],
+    check_entrypoints: bool,
+) -> Result<Vec<Finding>> {
     let files = load_sources(paths, repo)?;
-    Ok(rules::lint_all(&files, events))
+    Ok(rules::lint_all(&files, events, entrypoints, check_entrypoints))
 }
 
-fn self_test(events: &BTreeSet<String>, repo: &Path) -> Result<bool> {
+fn self_test(
+    events: &BTreeSet<String>,
+    repo: &Path,
+    entrypoints: &[(String, usize)],
+) -> Result<bool> {
     let fixtures = repo.join(FIXTURES);
     let expect: BTreeMap<&str, &[&str]> = BTreeMap::from([
         ("clean.rs", &[][..]),
+        ("lexer_edges.rs", &[][..]),
         ("hash_iter.rs", &["hash-iter"][..]),
         ("narrowing_cast.rs", &["narrowing-cast"][..]),
         ("undocumented_unsafe.rs", &["undocumented-unsafe"][..]),
         ("missing_ordering.rs", &["missing-ordering"][..]),
         ("relaxed_outside_obs.rs", &["relaxed-outside-obs"][..]),
+        ("read_dir_unsorted.rs", &["read-dir-unsorted"][..]),
         ("ref_without_test.rs", &["ref-without-test"][..]),
         ("unknown_event.rs", &["unknown-event"][..]),
+        ("taint_hash_iter.rs", &["hash-iter", "taint-hash-iter"][..]),
+        ("taint_timer.rs", &["taint-wall-clock"][..]),
     ]);
     let present: BTreeSet<String> = rust_files(&[fixtures.clone()])?
         .iter()
@@ -142,7 +174,7 @@ fn self_test(events: &BTreeSet<String>, repo: &Path) -> Result<bool> {
     }
     let mut failures = 0usize;
     for (name, want) in &expect {
-        let findings = lint_paths(&[fixtures.join(name)], events, repo)?;
+        let findings = lint_paths(&[fixtures.join(name)], events, repo, entrypoints, false)?;
         let got: BTreeSet<&str> = findings.iter().map(|f| f.rule).collect();
         let want: BTreeSet<&str> = want.iter().copied().collect();
         if (!want.is_empty() && (got != want || findings.is_empty()))
@@ -163,8 +195,67 @@ fn self_test(events: &BTreeSet<String>, repo: &Path) -> Result<bool> {
         }
     }
 
+    // Seeded interprocedural bugs must carry the full call chain.
+    for (name, rule, chain_text) in [
+        (
+            "taint_hash_iter.rs",
+            "taint-hash-iter",
+            "step_with → accumulate → deep_fold",
+        ),
+        (
+            "taint_timer.rs",
+            "taint-wall-clock",
+            "run_specs → measure → elapsed_hint",
+        ),
+    ] {
+        let findings = lint_paths(&[fixtures.join(name)], events, repo, entrypoints, false)?;
+        let hit = findings
+            .iter()
+            .find(|f| f.rule == rule && f.msg.contains(chain_text));
+        if hit.is_some_and(|f| f.chain.len() == 3) {
+            println!("self-test ok   {name}: chain `{chain_text}`");
+        } else {
+            println!(
+                "self-test FAIL {name}: no {rule} finding carrying `{chain_text}` \
+                 (got: {findings:?})"
+            );
+            failures += 1;
+        }
+    }
+
+    // SARIF: 2.1.0 envelope, full rule catalog, a 4-hop codeFlow for
+    // the taint fixture (3 chain hops + the source location).
+    let findings = lint_paths(
+        &[fixtures.join("taint_timer.rs")],
+        events,
+        repo,
+        entrypoints,
+        false,
+    )?;
+    let doc = sarif::emit_sarif(&findings);
+    let rules_ok = sarif::RULE_META
+        .iter()
+        .all(|(rid, _)| doc.contains(&format!("\"id\": \"{rid}\"")));
+    if doc.contains("\"version\": \"2.1.0\"")
+        && doc.contains("\"name\": \"metis-lint\"")
+        && rules_ok
+        && doc.contains("\"codeFlows\"")
+        && doc.matches("\"location\":").count() == 4
+    {
+        println!("self-test ok   sarif: 2.1.0 envelope + 4-hop codeFlow");
+    } else {
+        println!("self-test FAIL sarif structure");
+        failures += 1;
+    }
+
     // Allowlist mechanics: a matching entry suppresses; a stale one errors.
-    let findings = lint_paths(&[fixtures.join("narrowing_cast.rs")], events, repo)?;
+    let findings = lint_paths(
+        &[fixtures.join("narrowing_cast.rs")],
+        events,
+        repo,
+        entrypoints,
+        false,
+    )?;
     let (mut entries, _) = allowlist::parse(
         "narrowing-cast | narrowing_cast.rs | as i32 | fixture\n",
         "allowlist.txt",
@@ -196,7 +287,9 @@ fn run() -> Result<ExitCode> {
     let repo = find_repo_root()?;
     let mut roots: Vec<PathBuf> = Vec::new();
     let mut allowlist_path = repo.join(DEFAULT_ALLOWLIST);
+    let mut entrypoints_path = repo.join(taint::ENTRYPOINTS_PATH);
     let mut do_self_test = false;
+    let mut format = Format::Text;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -205,8 +298,26 @@ fn run() -> Result<ExitCode> {
                 let v = args.next().ok_or_else(|| anyhow!("--allowlist needs a path"))?;
                 allowlist_path = PathBuf::from(v);
             }
+            "--entrypoints" => {
+                let v = args
+                    .next()
+                    .ok_or_else(|| anyhow!("--entrypoints needs a path"))?;
+                entrypoints_path = PathBuf::from(v);
+            }
+            "--format" => {
+                let v = args.next().ok_or_else(|| anyhow!("--format needs a value"))?;
+                format = match v.as_str() {
+                    "text" => Format::Text,
+                    "json" => Format::Json,
+                    "sarif" => Format::Sarif,
+                    other => bail!("unknown format {other} (text|json|sarif)"),
+                };
+            }
             "--help" | "-h" => {
-                println!("usage: metis-lint [--self-test] [--allowlist PATH] [ROOT...]");
+                println!(
+                    "usage: metis-lint [--self-test] [--allowlist PATH] \
+                     [--entrypoints PATH] [--format text|json|sarif] [ROOT...]"
+                );
                 return Ok(ExitCode::SUCCESS);
             }
             other if !other.starts_with('-') => roots.push(PathBuf::from(other)),
@@ -215,22 +326,26 @@ fn run() -> Result<ExitCode> {
     }
 
     let events = schema_events(&repo)?;
+    let entrypoints = load_entrypoints(&entrypoints_path);
     if do_self_test {
-        return Ok(if self_test(&events, &repo)? {
+        return Ok(if self_test(&events, &repo, &entrypoints)? {
             ExitCode::SUCCESS
         } else {
             ExitCode::FAILURE
         });
     }
 
-    if roots.is_empty() {
+    // Entry-point rot is checked only on default (full-tree) runs — a
+    // partial root legitimately lacks most entry-point definitions.
+    let default_run = roots.is_empty();
+    if default_run {
         roots = DEFAULT_ROOTS.iter().map(|r| repo.join(r)).collect();
     }
     let files = rust_files(&roots)?;
     if files.is_empty() {
         bail!("no .rs files under {roots:?}");
     }
-    let findings = lint_paths(&files, &events, &repo)?;
+    let findings = lint_paths(&files, &events, &repo, &entrypoints, default_run)?;
     let (mut entries, errors) = match std::fs::read_to_string(&allowlist_path) {
         Ok(text) => allowlist::parse(
             &text,
@@ -249,17 +364,23 @@ fn run() -> Result<ExitCode> {
         .replace('\\', "/");
     let mut findings = allowlist::apply(findings, &mut entries, &rel_allow);
     findings.extend(errors);
-    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
-    for f in &findings {
-        println!("{f}");
+    sarif::sort_findings(&mut findings);
+    match format {
+        Format::Json => print!("{}", sarif::emit_json(&findings)),
+        Format::Sarif => print!("{}", sarif::emit_sarif(&findings)),
+        Format::Text => {
+            for f in &findings {
+                println!("{f}");
+            }
+            let n_allowed = entries.iter().filter(|e| e.used).count();
+            println!(
+                "metis-lint: {} files, {} finding(s), {} allowlisted",
+                files.len(),
+                findings.len(),
+                n_allowed
+            );
+        }
     }
-    let n_allowed = entries.iter().filter(|e| e.used).count();
-    println!(
-        "metis-lint: {} files, {} finding(s), {} allowlisted",
-        files.len(),
-        findings.len(),
-        n_allowed
-    );
     Ok(if findings.is_empty() {
         ExitCode::SUCCESS
     } else {

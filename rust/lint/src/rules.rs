@@ -9,6 +9,15 @@ use std::fmt;
 
 use crate::lexer::{LineIndex, Scrubbed};
 
+/// One hop of an interprocedural taint chain: the function, and where
+/// its `fn` token sits.
+#[derive(Clone, Debug)]
+pub struct ChainHop {
+    pub func: String,
+    pub path: String,
+    pub line: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct Finding {
     pub rule: &'static str,
@@ -16,6 +25,9 @@ pub struct Finding {
     pub line: usize,
     pub snippet: String,
     pub msg: String,
+    /// Entry-point-to-source call chain for taint-* findings; empty
+    /// for file-local rules.
+    pub chain: Vec<ChainHop>,
 }
 
 impl fmt::Display for Finding {
@@ -57,7 +69,7 @@ impl SourceFile {
             .to_string()
     }
 
-    fn finding(&self, rule: &'static str, at: usize, msg: String) -> Finding {
+    pub fn finding(&self, rule: &'static str, at: usize, msg: String) -> Finding {
         let line = self.lines.line_of(at);
         Finding {
             rule,
@@ -65,6 +77,7 @@ impl SourceFile {
             line,
             snippet: self.line_text(line),
             msg,
+            chain: Vec::new(),
         }
     }
 }
@@ -82,7 +95,7 @@ fn is_ident_start(c: u8) -> bool {
 
 /// Byte offsets of `word` as a standalone token (ident boundaries on
 /// both sides).
-fn token_positions(code: &str, word: &str) -> Vec<usize> {
+pub fn token_positions(code: &str, word: &str) -> Vec<usize> {
     let b = code.as_bytes();
     let mut out = Vec::new();
     let mut from = 0;
@@ -90,6 +103,23 @@ fn token_positions(code: &str, word: &str) -> Vec<usize> {
         let at = from + rel;
         let end = at + word.len();
         if (at == 0 || !is_ident(b[at - 1])) && (end >= b.len() || !is_ident(b[end])) {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+/// Byte offsets where a token STARTING with `word` begins (ident
+/// boundary on the left only) — the mirror of the Python `\bword\w*`
+/// pattern used by the read-dir sort check.
+pub fn token_prefix_positions(code: &str, word: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(word) {
+        let at = from + rel;
+        if at == 0 || !is_ident(b[at - 1]) {
             out.push(at);
         }
         from = at + word.len().max(1);
@@ -210,6 +240,12 @@ fn path_prefix_ok(mut s: &str) -> bool {
 /// What may sit between a field/param `:` and its type: a path prefix
 /// with at most one `Mutex<` wrapper, e.g. `std::sync::Mutex<`.
 fn field_prefix_ok(mut s: &str) -> bool {
+    // A single leading `&` / `&mut` is transparent: `x: &HashMap<..>`
+    // params iterate just as nondeterministically as owned ones.
+    if let Some(r) = s.trim_start().strip_prefix('&') {
+        let r = r.trim_start();
+        s = strip_kw(r, "mut").unwrap_or(r);
+    }
     loop {
         s = s.trim_start();
         if s.is_empty() {
@@ -328,9 +364,12 @@ const ITER_METHODS: &[&str] = &[
     "iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain",
 ];
 
-pub fn hash_iter(f: &SourceFile, out: &mut Vec<Finding>) {
-    let code = &f.scrubbed.code;
+/// `(offset, binding-name)` of every HashMap/HashSet iteration —
+/// shared by the file-local rule and the taint source scan.  Mirrors
+/// `_hash_iter_hits`.
+pub fn hash_iter_hits(code: &str) -> Vec<(usize, String)> {
     let b = code.as_bytes();
+    let mut hits = Vec::new();
     for name in collect_bindings(code, BindKind::Hash) {
         // NAME . method (
         for at in token_positions(code, &name) {
@@ -345,14 +384,7 @@ pub fn hash_iter(f: &SourceFile, out: &mut Vec<Finding>) {
             }
             let paren = skip_ws(b, m + method.len());
             if paren < b.len() && b[paren] == b'(' {
-                out.push(f.finding(
-                    "hash-iter",
-                    at,
-                    format!(
-                        "iteration over HashMap/HashSet `{name}` is nondeterministic \
-                         order; use BTreeMap or sort first"
-                    ),
-                ));
+                hits.push((at, name.clone()));
             }
         }
         // for .. in [&][mut] NAME
@@ -375,17 +407,38 @@ pub fn hash_iter(f: &SourceFile, out: &mut Vec<Finding>) {
                     let _ = rest;
                 }
                 if ident_starting_at(clause, j) == name {
-                    out.push(f.finding(
-                        "hash-iter",
-                        at + inat,
-                        format!(
-                            "iteration over HashMap/HashSet `{name}` is nondeterministic \
-                             order; use BTreeMap or sort first"
-                        ),
-                    ));
+                    hits.push((at + inat, name.clone()));
                 }
             }
         }
+    }
+    hits
+}
+
+pub fn hash_iter(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (at, name) in hash_iter_hits(&f.scrubbed.code) {
+        out.push(f.finding(
+            "hash-iter",
+            at,
+            format!(
+                "iteration over HashMap/HashSet `{name}` is nondeterministic \
+                 order; use BTreeMap or sort first"
+            ),
+        ));
+    }
+}
+
+/// File-local: `fs::read_dir` consumed with no `sort*` before the end
+/// of the enclosing fn — platform directory order is arbitrary.
+pub fn read_dir_unsorted(f: &SourceFile, defs: &[crate::callgraph::FnDef], out: &mut Vec<Finding>) {
+    for at in crate::callgraph::unsorted_read_dirs(&f.scrubbed.code, defs) {
+        out.push(f.finding(
+            "read-dir-unsorted",
+            at,
+            "fs::read_dir yields entries in platform directory order; sort before \
+             use (or justify in the allowlist)"
+                .to_string(),
+        ));
     }
 }
 
@@ -577,6 +630,7 @@ pub fn ref_pairs(files: &[SourceFile], out: &mut Vec<Finding>) {
                     "`{base}_ref` oracle has no test referencing both `{base}(` and \
                      `{base}_ref(` — add an exact-equality test"
                 ),
+                chain: Vec::new(),
             });
         }
     }
@@ -646,18 +700,33 @@ pub fn event_schema(f: &SourceFile, events: &BTreeSet<String>, out: &mut Vec<Fin
     }
 }
 
-/// Run every per-file rule plus the repo-level pair rule.
-pub fn lint_all(files: &[SourceFile], events: &BTreeSet<String>) -> Vec<Finding> {
+/// Run every per-file rule, the repo-level pair rule, and the
+/// interprocedural taint pass.  `check_entrypoints` is set only on
+/// default-root (full-tree) runs — a lone fixture legitimately lacks
+/// most entry-point definitions.
+pub fn lint_all(
+    files: &[SourceFile],
+    events: &BTreeSet<String>,
+    entrypoints: &[(String, usize)],
+    check_entrypoints: bool,
+) -> Vec<Finding> {
+    let graphs: Vec<crate::callgraph::FileGraph> =
+        files.iter().map(crate::callgraph::analyze).collect();
     let mut out = Vec::new();
-    for f in files {
+    for (f, g) in files.iter().zip(&graphs) {
         hash_iter(f, &mut out);
         narrowing_cast(f, &mut out);
         undocumented_unsafe(f, &mut out);
         missing_ordering(f, &mut out);
         relaxed_outside_obs(f, &mut out);
+        read_dir_unsorted(f, &g.defs, &mut out);
         event_schema(f, events, &mut out);
     }
     ref_pairs(files, &mut out);
+    crate::taint::taint(files, &graphs, entrypoints, &mut out);
+    if check_entrypoints {
+        crate::taint::unknown_entrypoints(&graphs, entrypoints, &mut out);
+    }
     out
 }
 

@@ -1,0 +1,352 @@
+//! Output emitters: NDJSON (`--format json`, diffed byte-for-byte
+//! against the Python half in CI) and SARIF 2.1.0 (`--format sarif`,
+//! uploaded as GitHub PR annotations via codeql-action).  The JSON
+//! string escaping mirrors Python's `json.dumps(ensure_ascii=False)`
+//! exactly — the differential check depends on it.
+
+use crate::rules::Finding;
+
+/// Rule catalog metadata — order defines the SARIF ruleIndex; shared
+/// verbatim with the Python half's RULE_META.
+pub const RULE_META: &[(&str, &str)] = &[
+    ("hash-iter", "HashMap/HashSet iteration is nondeterministic order"),
+    ("narrowing-cast", "narrowing `as` cast silently truncates"),
+    ("undocumented-unsafe", "`unsafe` without a `// SAFETY:` comment"),
+    ("missing-ordering", "atomic access without an explicit Ordering"),
+    ("relaxed-outside-obs", "Ordering::Relaxed outside rust/src/obs/"),
+    ("read-dir-unsorted", "fs::read_dir consumed without sorting"),
+    ("ref-without-test", "_ref oracle without a dual-name test"),
+    ("unknown-event", "stamp() event missing from the schema table"),
+    ("event-schema-const", "stamp() without its schema::UPPER constant"),
+    ("taint-hash-iter", "entry point reaches HashMap/HashSet iteration"),
+    ("taint-wall-clock", "entry point reaches a wall-clock read"),
+    ("taint-env-read", "entry point reaches a std::env read"),
+    ("taint-read-dir", "entry point reaches an unsorted fs::read_dir"),
+    ("taint-thread-id", "entry point reaches a thread-identity value"),
+    ("taint-relaxed-read", "entry point reaches a Relaxed atomic load"),
+    ("unknown-entrypoint", "entrypoints.txt names a missing fn"),
+    ("stale-allowlist", "allowlist entry matches no finding"),
+    ("allowlist-format", "malformed allowlist entry"),
+];
+
+const SARIF_SCHEMA_URI: &str = concat!(
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/",
+    "master/Schemata/sarif-schema-2.1.0.json"
+);
+
+/// Escape a string exactly like Python's
+/// `json.dumps(s, ensure_ascii=False)`: `"`/`\` escaped, the five
+/// short control escapes, `\u00xx` for other control bytes, and
+/// non-ASCII passed through raw.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Ordered JSON value — objects keep insertion order, matching the
+/// Python dicts the mirror emits.
+pub enum Json {
+    Str(String),
+    Num(usize),
+    Arr(Vec<Json>),
+    Obj(Vec<(&'static str, Json)>),
+}
+
+impl Json {
+    fn s(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Compact form, Python `separators=(",", ":")`.
+    fn compact(&self, out: &mut String) {
+        match self {
+            Json::Str(v) => {
+                out.push('"');
+                out.push_str(&escape(v));
+                out.push('"');
+            }
+            Json::Num(v) => out.push_str(&v.to_string()),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Pretty form, Python `indent=2` style.
+    fn pretty(&self, indent: usize, out: &mut String) {
+        match self {
+            Json::Str(_) | Json::Num(_) => self.compact(out),
+            Json::Arr(items) if items.is_empty() => out.push_str("[]"),
+            Json::Obj(pairs) if pairs.is_empty() => out.push_str("{}"),
+            Json::Arr(items) => {
+                out.push_str("[\n");
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&" ".repeat(indent + 2));
+                    it.pretty(indent + 2, out);
+                }
+                out.push('\n');
+                out.push_str(&" ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&" ".repeat(indent + 2));
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\": ");
+                    v.pretty(indent + 2, out);
+                }
+                out.push('\n');
+                out.push_str(&" ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Shared final ordering: `(path, line, rule, msg)` — byte-wise string
+/// comparison matches Python's code-point comparison because UTF-8
+/// preserves lexicographic order.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.msg).cmp(&(&b.path, b.line, b.rule, &b.msg))
+    });
+}
+
+/// One normalized finding per line (NDJSON) — the differential-mirror
+/// CI check diffs this against the Python half's `--format json`.
+pub fn emit_json(findings: &[Finding]) -> String {
+    let mut sorted: Vec<Finding> = findings.to_vec();
+    sort_findings(&mut sorted);
+    let mut out = String::new();
+    for f in &sorted {
+        let chain: Vec<Json> = f
+            .chain
+            .iter()
+            .map(|c| Json::Str(format!("{} {}:{}", c.func, c.path.replace('\\', "/"), c.line)))
+            .collect();
+        let obj = Json::Obj(vec![
+            ("rule", Json::s(f.rule)),
+            ("path", Json::s(&f.path.replace('\\', "/"))),
+            ("line", Json::Num(f.line)),
+            ("snippet", Json::s(&f.snippet)),
+            ("msg", Json::s(&f.msg)),
+            ("chain", Json::Arr(chain)),
+        ]);
+        obj.compact(&mut out);
+        out.push('\n');
+    }
+    out
+}
+
+fn location(path: &str, line: usize, message: Option<&str>) -> Json {
+    let mut pairs = vec![(
+        "physicalLocation",
+        Json::Obj(vec![
+            (
+                "artifactLocation",
+                Json::Obj(vec![
+                    ("uri", Json::s(&path.replace('\\', "/"))),
+                    ("uriBaseId", Json::s("%SRCROOT%")),
+                ]),
+            ),
+            ("region", Json::Obj(vec![("startLine", Json::Num(line))])),
+        ]),
+    )];
+    if let Some(m) = message {
+        pairs.push(("message", Json::Obj(vec![("text", Json::s(m))])));
+    }
+    Json::Obj(pairs)
+}
+
+/// SARIF 2.1.0 document with the full rule catalog and call-chain
+/// codeFlows for taint findings.  Mirrors `emit_sarif`.
+pub fn emit_sarif(findings: &[Finding]) -> String {
+    let mut sorted: Vec<Finding> = findings.to_vec();
+    sort_findings(&mut sorted);
+    let mut results = Vec::new();
+    for f in &sorted {
+        let mut pairs = vec![
+            ("ruleId", Json::s(f.rule)),
+            ("level", Json::s("error")),
+            ("message", Json::Obj(vec![("text", Json::s(&f.msg))])),
+            ("locations", Json::Arr(vec![location(&f.path, f.line, None)])),
+        ];
+        if let Some(idx) = RULE_META.iter().position(|(rid, _)| *rid == f.rule) {
+            pairs.push(("ruleIndex", Json::Num(idx)));
+        }
+        if !f.chain.is_empty() {
+            let mut flow_locs: Vec<Json> = f
+                .chain
+                .iter()
+                .map(|c| {
+                    Json::Obj(vec![(
+                        "location",
+                        location(&c.path, c.line, Some(&c.func)),
+                    )])
+                })
+                .collect();
+            flow_locs.push(Json::Obj(vec![(
+                "location",
+                location(&f.path, f.line, Some(&f.snippet)),
+            )]));
+            pairs.push((
+                "codeFlows",
+                Json::Arr(vec![Json::Obj(vec![(
+                    "threadFlows",
+                    Json::Arr(vec![Json::Obj(vec![("locations", Json::Arr(flow_locs))])]),
+                )])]),
+            ));
+        }
+        results.push(Json::Obj(pairs));
+    }
+    let rules: Vec<Json> = RULE_META
+        .iter()
+        .map(|(rid, short)| {
+            let name: String = rid
+                .split('-')
+                .map(|w| {
+                    let mut cs = w.chars();
+                    match cs.next() {
+                        Some(c) => c.to_uppercase().chain(cs).collect::<String>(),
+                        None => String::new(),
+                    }
+                })
+                .collect();
+            Json::Obj(vec![
+                ("id", Json::s(rid)),
+                ("name", Json::Str(name)),
+                ("shortDescription", Json::Obj(vec![("text", Json::s(short))])),
+                (
+                    "defaultConfiguration",
+                    Json::Obj(vec![("level", Json::s("error"))]),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::Obj(vec![
+        ("$schema", Json::s(SARIF_SCHEMA_URI)),
+        ("version", Json::s("2.1.0")),
+        (
+            "runs",
+            Json::Arr(vec![Json::Obj(vec![
+                (
+                    "tool",
+                    Json::Obj(vec![(
+                        "driver",
+                        Json::Obj(vec![
+                            ("name", Json::s("metis-lint")),
+                            ("version", Json::s("0.1.0")),
+                            ("informationUri", Json::s("https://github.com/metis/metis")),
+                            ("rules", Json::Arr(rules)),
+                        ]),
+                    )]),
+                ),
+                ("columnKind", Json::s("utf16CodeUnits")),
+                ("results", Json::Arr(results)),
+            ])]),
+        ),
+    ]);
+    let mut out = String::new();
+    doc.pretty(0, &mut out);
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::ChainHop;
+
+    fn finding(rule: &'static str, path: &str, line: usize) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            snippet: "let x = 1;".to_string(),
+            msg: "msg with \"quotes\" and → arrow".to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn json_escaping_matches_python_dumps() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("em—dash → raw"), "em—dash → raw");
+    }
+
+    #[test]
+    fn ndjson_is_sorted_and_compact() {
+        let out = emit_json(&[finding("hash-iter", "b.rs", 2), finding("hash-iter", "a.rs", 9)]);
+        let lines: Vec<&str> = out.trim_end().split('\n').collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("{\"rule\":\"hash-iter\",\"path\":\"a.rs\""));
+        assert!(lines[0].contains("\"chain\":[]"));
+        assert!(!lines[0].contains(": "), "compact separators");
+    }
+
+    #[test]
+    fn sarif_carries_codeflow_for_chains() {
+        let mut f = finding("taint-wall-clock", "rust/src/x.rs", 7);
+        f.chain = vec![
+            ChainHop {
+                func: "entry".to_string(),
+                path: "rust/src/e.rs".to_string(),
+                line: 1,
+            },
+            ChainHop {
+                func: "leaf".to_string(),
+                path: "rust/src/x.rs".to_string(),
+                line: 5,
+            },
+        ];
+        let out = emit_sarif(&[f]);
+        assert!(out.contains("\"version\": \"2.1.0\""));
+        assert!(out.contains("\"codeFlows\""));
+        assert!(out.contains("\"threadFlows\""));
+        // chain hops + the source location itself
+        assert_eq!(out.matches("\"location\":").count(), 3);
+        assert!(out.contains("\"uriBaseId\": \"%SRCROOT%\""));
+    }
+}

@@ -1,0 +1,407 @@
+//! Determinism-taint pass (DESIGN.md §12): seed nondeterminism sources,
+//! propagate reachability backwards over the call graph, and report any
+//! path from a declared deterministic entry point
+//! (rust/lint/entrypoints.txt) to a source, carrying the full call
+//! chain.  Mirrors `_file_taint_sources`/`rule_taint`/
+//! `rule_unknown_entrypoints` in tools/lint_invariants.py —
+//! message strings are shared byte-for-byte (the differential CI check
+//! diffs the two halves' JSON output).
+
+use crate::callgraph::{self, CallGraph, FileGraph};
+use crate::rules::{token_positions, ChainHop, Finding, SourceFile};
+
+/// Relative path the unknown-entrypoint findings anchor to — shared
+/// with the Python half's DEFAULT_ENTRYPOINTS.
+pub const ENTRYPOINTS_PATH: &str = "rust/lint/entrypoints.txt";
+
+fn is_obs(norm: &str) -> bool {
+    norm.contains("/obs/") || norm.starts_with("obs/")
+}
+
+fn what_text(rule: &str, detail: &str) -> String {
+    match rule {
+        "taint-hash-iter" => format!("HashMap/HashSet iteration (`{detail}`)"),
+        "taint-wall-clock" => format!("a wall-clock read ({detail})"),
+        "taint-env-read" => format!("a process-environment read ({detail})"),
+        "taint-read-dir" => "an unsorted fs::read_dir".to_string(),
+        "taint-thread-id" => {
+            format!("a thread-identity/parallelism-dependent value ({detail})")
+        }
+        "taint-relaxed-read" => "a Relaxed atomic load outside rust/src/obs/".to_string(),
+        _ => unreachable!("unknown taint rule {rule}"),
+    }
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn rskip_ws(b: &[u8], mut i: usize) -> usize {
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+fn ident_starting_at(code: &str, at: usize) -> &str {
+    let b = code.as_bytes();
+    let mut e = at;
+    while e < b.len() && (b[e] == b'_' || b[e].is_ascii_alphanumeric()) {
+        e += 1;
+    }
+    &code[at..e]
+}
+
+/// `A :: B` starting at token `at` (token text `a`): offset of `B` if
+/// the `::` path continues here.
+fn path_seg_after(code: &str, at: usize, a: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let i = skip_ws(b, at + a.len());
+    if !code[i..].starts_with("::") {
+        return None;
+    }
+    Some(skip_ws(b, i + 2))
+}
+
+fn paren_span(code: &str, open_at: usize) -> &str {
+    let b = code.as_bytes();
+    let mut depth = 0i64;
+    for (j, &c) in b.iter().enumerate().skip(open_at) {
+        if c == b'(' {
+            depth += 1;
+        } else if c == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return &code[open_at..=j];
+            }
+        }
+    }
+    &code[open_at..]
+}
+
+/// `(offset, rule, detail)` nondeterminism sources in one file,
+/// sorted.  Wall-clock reads are exempt under rust/src/obs/ and
+/// util/timer.rs (the sanctioned timing modules); thread-identity
+/// values and Relaxed loads are exempt under rust/src/obs/
+/// (racy-by-design telemetry that feeds no numeric result).  std::env
+/// and the iteration/read_dir sources have no file exemptions.
+/// Mirrors `_file_taint_sources`.
+fn file_sources(f: &SourceFile, fg: &FileGraph) -> Vec<(usize, &'static str, String)> {
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    let norm = f.path.replace('\\', "/");
+    let in_obs = is_obs(&norm);
+    let in_timer = norm.ends_with("util/timer.rs");
+    let mut srcs: Vec<(usize, &'static str, String)> = Vec::new();
+    if !(in_obs || in_timer) {
+        for at in token_positions(code, "Instant") {
+            if path_seg_after(code, at, "Instant")
+                .is_some_and(|j| ident_starting_at(code, j) == "now")
+            {
+                srcs.push((at, "taint-wall-clock", "Instant::now".to_string()));
+            }
+        }
+        for at in token_positions(code, "SystemTime") {
+            srcs.push((at, "taint-wall-clock", "SystemTime".to_string()));
+        }
+    }
+    for at in token_positions(code, "env") {
+        if let Some(j) = path_seg_after(code, at, "env") {
+            let name = ident_starting_at(code, j);
+            // Python: `[a-z_]\w*` — lowercase/underscore start only
+            // (skips type paths like `env::VarError`).
+            if name.as_bytes().first().is_some_and(|&c| c == b'_' || c.is_ascii_lowercase()) {
+                srcs.push((at, "taint-env-read", format!("env::{name}")));
+            }
+        }
+    }
+    if !in_obs {
+        for at in token_positions(code, "available_parallelism") {
+            srcs.push((at, "taint-thread-id", "available_parallelism".to_string()));
+        }
+        for at in token_positions(code, "thread") {
+            if path_seg_after(code, at, "thread")
+                .is_some_and(|j| ident_starting_at(code, j) == "current")
+            {
+                srcs.push((at, "taint-thread-id", "thread::current".to_string()));
+            }
+        }
+        for at in token_positions(code, "load") {
+            let prev = rskip_ws(b, at);
+            if prev == 0 || b[prev - 1] != b'.' {
+                continue;
+            }
+            let open = skip_ws(b, at + "load".len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            let args = paren_span(code, open);
+            let relaxed = token_positions(args, "Ordering").into_iter().any(|oat| {
+                path_seg_after(args, oat, "Ordering")
+                    .is_some_and(|j| ident_starting_at(args, j) == "Relaxed")
+            });
+            if relaxed {
+                // Python records the regex start — the `.` before load.
+                srcs.push((prev - 1, "taint-relaxed-read", "load(Ordering::Relaxed)".to_string()));
+            }
+        }
+    }
+    for at in callgraph::unsorted_read_dirs(code, &fg.defs) {
+        srcs.push((at, "taint-read-dir", "fs::read_dir".to_string()));
+    }
+    for (at, name) in crate::rules::hash_iter_hits(code) {
+        srcs.push((at, "taint-hash-iter", name));
+    }
+    srcs.sort();
+    srcs
+}
+
+/// Shortest a→b path over `edges` (BFS, deterministic sorted edge
+/// order).  Mirrors `_shortest_path`.
+fn shortest_path(edges: &[Vec<usize>], a: usize, b: usize) -> Vec<usize> {
+    if a == b {
+        return vec![a];
+    }
+    let mut parent: Vec<Option<usize>> = vec![None; edges.len()];
+    let mut seen = vec![false; edges.len()];
+    seen[a] = true;
+    let mut frontier = vec![a];
+    while !frontier.is_empty() {
+        let mut nxt = Vec::new();
+        for &g in &frontier {
+            for &h in &edges[g] {
+                if !seen[h] {
+                    seen[h] = true;
+                    parent[h] = Some(g);
+                    if h == b {
+                        let mut path = vec![h];
+                        while let Some(p) = parent[*path.last().unwrap()] {
+                            path.push(p);
+                        }
+                        path.reverse();
+                        return path;
+                    }
+                    nxt.push(h);
+                }
+            }
+        }
+        frontier = nxt;
+    }
+    vec![a, b] // unreachable under correct callers; keep total
+}
+
+/// The taint pass proper — mirrors `rule_taint`.
+pub fn taint(
+    files: &[SourceFile],
+    graphs: &[FileGraph],
+    entrypoints: &[(String, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let cg: CallGraph = callgraph::build(files, graphs);
+    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); cg.defs.len()];
+    for (a, outs) in cg.edges.iter().enumerate() {
+        for &b in outs {
+            rev[b].push(a);
+        }
+    }
+    // name -> global def indices, in defs order (insertion order, like
+    // the Python dict).
+    let mut by_name: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
+    for (gi, &(fi, li)) in cg.defs.iter().enumerate() {
+        by_name
+            .entry(graphs[fi].defs[li].name.as_str())
+            .or_default()
+            .push(gi);
+    }
+    let mut index_of: std::collections::BTreeMap<(usize, usize), usize> = Default::default();
+    for (gi, pair) in cg.defs.iter().enumerate() {
+        index_of.insert(*pair, gi);
+    }
+
+    for (fi, (f, fg)) in files.iter().zip(graphs).enumerate() {
+        for (off, rule, detail) in file_sources(f, fg) {
+            let Some(li) = callgraph::enclosing_def(&fg.defs, off) else {
+                continue;
+            };
+            let src_gi = index_of[&(fi, li)];
+            // Which defs reach this source's fn (reverse BFS)?
+            let mut reach = vec![false; cg.defs.len()];
+            reach[src_gi] = true;
+            let mut frontier = vec![src_gi];
+            while !frontier.is_empty() {
+                let mut nxt = Vec::new();
+                for &g in &frontier {
+                    for &p in &rev[g] {
+                        if !reach[p] {
+                            reach[p] = true;
+                            nxt.push(p);
+                        }
+                    }
+                }
+                frontier = nxt;
+            }
+            for (entry, _) in entrypoints {
+                let hit = by_name
+                    .get(entry.as_str())
+                    .and_then(|gs| gs.iter().copied().find(|&g| reach[g]));
+                let Some(hit) = hit else {
+                    continue;
+                };
+                let chain: Vec<ChainHop> = shortest_path(&cg.edges, hit, src_gi)
+                    .into_iter()
+                    .map(|g| {
+                        let (dfi, dli) = cg.defs[g];
+                        let d = &graphs[dfi].defs[dli];
+                        ChainHop {
+                            func: d.name.clone(),
+                            path: files[dfi].path.clone(),
+                            line: files[dfi].lines.line_of(d.off),
+                        }
+                    })
+                    .collect();
+                let what = what_text(rule, &detail);
+                let names: Vec<&str> = chain.iter().map(|c| c.func.as_str()).collect();
+                let names = names.join(" → ");
+                let mut finding = f.finding(
+                    rule,
+                    off,
+                    format!(
+                        "deterministic entry point `{entry}` reaches {what} via {names} — \
+                         make it deterministic, route it through an exempt module, or \
+                         justify in the allowlist"
+                    ),
+                );
+                finding.chain = chain;
+                out.push(finding);
+            }
+        }
+    }
+}
+
+/// Load `rust/lint/entrypoints.txt`-format data: `(name, line)` from
+/// `name | note` lines; `#` comments.  Mirrors `load_entrypoints`.
+pub fn load_entrypoints(text: &str) -> Vec<(String, usize)> {
+    let mut eps = Vec::new();
+    for (i, raw) in text.split('\n').enumerate() {
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let name = s.split('|').next().unwrap_or("").trim();
+        if !name.is_empty() {
+            eps.push((name.to_string(), i + 1));
+        }
+    }
+    eps
+}
+
+/// Entry points that match no `fn` definition are errors (the file
+/// cannot rot).  Checked only on default-root runs.  Mirrors
+/// `rule_unknown_entrypoints`.
+pub fn unknown_entrypoints(
+    graphs: &[FileGraph],
+    entrypoints: &[(String, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let have: std::collections::BTreeSet<&str> = graphs
+        .iter()
+        .flat_map(|g| g.defs.iter().map(|d| d.name.as_str()))
+        .collect();
+    for (name, line) in entrypoints {
+        if !have.contains(name.as_str()) {
+            out.push(Finding {
+                rule: "unknown-entrypoint",
+                path: ENTRYPOINTS_PATH.to_string(),
+                line: *line,
+                snippet: name.clone(),
+                msg: format!(
+                    "declared entry point `{name}` matches no `fn` definition — fix \
+                     rust/lint/entrypoints.txt"
+                ),
+                chain: Vec::new(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, code: &str) -> SourceFile {
+        SourceFile::new(path.to_string(), code.to_string())
+    }
+
+    #[test]
+    fn sources_respect_module_exemptions() {
+        let hot = sf(
+            "rust/src/metis/hot.rs",
+            "fn t() { let t0 = std::time::Instant::now(); }",
+        );
+        let fg = crate::callgraph::analyze(&hot);
+        let srcs = file_sources(&hot, &fg);
+        assert_eq!(srcs.len(), 1);
+        assert_eq!(srcs[0].1, "taint-wall-clock");
+
+        let obs = sf("rust/src/obs/span.rs", "fn t() { let t0 = Instant::now(); }");
+        let fg = crate::callgraph::analyze(&obs);
+        assert!(file_sources(&obs, &fg).is_empty(), "obs/ is clock-exempt");
+
+        let timer = sf(
+            "rust/src/util/timer.rs",
+            "fn start() { let t0 = Instant::now(); }",
+        );
+        let fg = crate::callgraph::analyze(&timer);
+        assert!(file_sources(&timer, &fg).is_empty(), "timer.rs is exempt");
+    }
+
+    #[test]
+    fn env_reads_have_no_exemption() {
+        let obs = sf(
+            "rust/src/obs/run.rs",
+            "fn mint() { let v = std::env::var(\"X\"); }",
+        );
+        let fg = crate::callgraph::analyze(&obs);
+        let srcs = file_sources(&obs, &fg);
+        assert_eq!(srcs.len(), 1);
+        assert_eq!(srcs[0].1, "taint-env-read");
+        assert_eq!(srcs[0].2, "env::var");
+    }
+
+    #[test]
+    fn interprocedural_chain_reaches_entry_point() {
+        let f = sf(
+            "rust/src/metis/deep.rs",
+            "pub fn run_specs() { a(); }\nfn a() { b(); }\nfn b() { \
+             let t0 = std::time::Instant::now(); }",
+        );
+        let fg = crate::callgraph::analyze(&f);
+        let files = vec![f];
+        let graphs = vec![fg];
+        let mut out = Vec::new();
+        taint(&files, &graphs, &[("run_specs".to_string(), 1)], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "taint-wall-clock");
+        assert!(out[0].msg.contains("run_specs → a → b"), "{}", out[0].msg);
+        assert_eq!(out[0].chain.len(), 3);
+    }
+
+    #[test]
+    fn entrypoints_parse_and_rot_check() {
+        let eps = load_entrypoints("# c\nstep_with | note\n\nrun_specs|x\n");
+        assert_eq!(
+            eps,
+            vec![("step_with".to_string(), 2), ("run_specs".to_string(), 4)]
+        );
+        let f = sf("rust/src/a.rs", "pub fn step_with() {}");
+        let graphs = vec![crate::callgraph::analyze(&f)];
+        let mut out = Vec::new();
+        unknown_entrypoints(&graphs, &eps, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unknown-entrypoint");
+        assert!(out[0].msg.contains("run_specs"));
+    }
+}

@@ -334,11 +334,14 @@ where
 /// Observability probe for one GEMM dispatch: samples achieved GFLOP/s
 /// into the per-shape-class histograms and opens a `"gemm"` span for
 /// pool-sized products.  `None` (zero-cost) while recording is off —
-/// the timing itself is the gated part, so disabled runs never call
-/// `Instant::now` here.
+/// the timing itself is the gated part, so disabled runs never read the
+/// clock here.  Wall-clock access goes through `util::timer::Stopwatch`
+/// (a taint-exempt module): the elapsed time feeds only telemetry
+/// histograms, never a numeric result, and metis-lint's taint pass
+/// enforces that kernels touch clocks solely through sanctioned paths.
 struct GemmProbe {
     flops: usize,
-    t0: std::time::Instant,
+    t0: crate::util::timer::Stopwatch,
     _span: Option<crate::obs::span::Span>,
 }
 
@@ -350,7 +353,7 @@ impl GemmProbe {
         }
         Some(GemmProbe {
             flops,
-            t0: std::time::Instant::now(),
+            t0: crate::util::timer::Stopwatch::start(),
             _span: (flops >= PAR_FLOPS).then(|| crate::obs::span::span("gemm")),
         })
     }
@@ -358,7 +361,7 @@ impl GemmProbe {
 
 impl Drop for GemmProbe {
     fn drop(&mut self) {
-        crate::obs::metrics::record_gemm(self.flops, self.t0.elapsed().as_secs_f64());
+        crate::obs::metrics::record_gemm(self.flops, self.t0.secs());
     }
 }
 

@@ -140,6 +140,43 @@ fn blocked_pipeline_disk_and_mem_paths_agree() {
 }
 
 #[test]
+fn checkpoint_scan_is_directory_order_independent() {
+    // scan_checkpoint_dir sorts the readdir stream (metis-lint rule
+    // read-dir-unsorted, DESIGN.md §12): the spec list must depend only
+    // on the file names, never on creation order or the filesystem's
+    // directory enumeration.  Same checkpoint written in opposite
+    // creation orders must scan to identical spec lists.
+    let names = ["alpha", "mid", "zeta"];
+    let mut rng = Rng::new(21);
+    let mats: Vec<Matrix> = names
+        .iter()
+        .map(|_| pipeline::planted_powerlaw(&mut rng, 24, 24, 1.5))
+        .collect();
+    let mk = |tag: &str, order: &[usize]| {
+        let dir = std::env::temp_dir().join(format!("metis_scan_order_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for &i in order {
+            mats[i]
+                .save_npy(dir.join(format!("{}.npy", names[i])))
+                .unwrap();
+        }
+        dir
+    };
+    let fwd = pipeline::scan_checkpoint_dir(mk("fwd", &[0, 1, 2])).unwrap();
+    let rev = pipeline::scan_checkpoint_dir(mk("rev", &[2, 1, 0])).unwrap();
+    let sig = |specs: &[LayerSpec]| {
+        specs
+            .iter()
+            .map(|s| (s.name.clone(), s.rows, s.cols))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(sig(&fwd), sig(&rev), "spec list depends on creation order");
+    let got: Vec<&str> = fwd.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(got, names, "specs must come back sorted by file name");
+}
+
+#[test]
 fn streamed_blocked_sweep_reports_finite_sampled_sigma_above_cap() {
     // A streamed layer above --sigma-cap, sharded into column blocks:
     // σ columns come back finite through the sampled reference (they

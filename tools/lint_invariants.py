@@ -2,10 +2,10 @@
 """Cross-language invariant linter — the Python half of `metis-lint`.
 
 Walks the Rust sources and fails on violations of the written invariant
-catalog (DESIGN.md §12).  The same five rule families are implemented
-natively in `rust/lint/` (run as `cargo run -p metis-lint -- src tests`);
-this mirror exists so the catalog is enforceable from plain python3
-(no cargo needed) and so the cross-language half — Rust `stamp()` event
+catalog (DESIGN.md §12).  The same rule families are implemented
+natively in `rust/lint/` (run as `cargo run -p metis-lint`); this
+mirror exists so the catalog is enforceable from plain python3 (no
+cargo needed) and so the cross-language half — Rust `stamp()` event
 names vs the `tools/validate_events.py` schema table — is checked by
 importing the schema table directly rather than re-parsing it.
 
@@ -25,23 +25,44 @@ Rule families (shared allowlist: rust/lint/allowlist.txt):
   relaxed-outside-obs `Ordering::Relaxed` is permitted only under
                       rust/src/obs/ (observability counters may be
                       racy-by-design; nothing else may be).
+  read-dir-unsorted   `fs::read_dir` yields entries in platform
+                      directory order; every use must sort before
+                      consuming the listing.
   ref-without-test    every `fn NAME_ref` oracle must have a test
                       referencing both `NAME(` and `NAME_ref(`.
   unknown-event /     every literal passed to `obs::run::stamp()` must
   event-schema-const  exist in validate_events.py's SCHEMAS table, and
                       the matching `schema::UPPER` constant must appear
                       at the call site.
+  taint-*             interprocedural determinism taint: a best-effort
+                      call graph over the scrubbed token stream, with
+                      nondeterminism sources (HashMap iteration, wall
+                      clocks, std::env, unsorted read_dir, thread-id /
+                      available_parallelism, Relaxed atomic loads)
+                      propagated backwards; any path from a declared
+                      deterministic entry point (rust/lint/
+                      entrypoints.txt) to a source is a finding
+                      carrying the full call chain.
+  unknown-entrypoint  entrypoints.txt names a fn that no longer exists
+                      (checked on default-root runs).
   stale-allowlist     allowlist entries that match nothing are errors —
                       the allowlist may not rot.
+
+Output formats (--format): text (default, human), json (one normalized
+finding per line — diffed byte-for-byte against the Rust half's
+`--format json` in CI), sarif (SARIF 2.1.0 with rule metadata and
+call-chain codeFlows, uploadable as GitHub PR annotations).
 
 Exit status: 0 clean, 1 findings, 2 usage/internal error.
 
 Usage:
   python3 tools/lint_invariants.py                 # lint rust/src + rust/tests
   python3 tools/lint_invariants.py --self-test     # fixture suite (CI)
+  python3 tools/lint_invariants.py --format sarif  # SARIF 2.1.0 on stdout
 """
 
 import argparse
+import json
 import os
 import re
 import sys
@@ -50,6 +71,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
 DEFAULT_ROOTS = ["rust/src", "rust/tests"]
 DEFAULT_ALLOWLIST = "rust/lint/allowlist.txt"
+DEFAULT_ENTRYPOINTS = "rust/lint/entrypoints.txt"
 FIXTURES = "rust/lint/fixtures"
 
 NARROWING = ("i32", "u32", "u16")
@@ -119,7 +141,7 @@ def scrub(text):
         elif c == '"':
             i = _scan_string(text, i, blank, raw=False)
         elif c in "rb" and not _ident_before(text, i):
-            m = re.match(r'(?:b?r(#*)"|br(#*)"|b")', text[i : i + 8])
+            m = re.match(r'(?:br(#*)"|b?r(#*)"|b")', text[i : i + 8])
             if m:
                 hashes = m.group(1) or m.group(2) or ""
                 q = text.find('"', i)
@@ -188,9 +210,11 @@ def _line_index(text):
 
 
 class Finding:
-    def __init__(self, rule, path, line, snippet, msg):
+    def __init__(self, rule, path, line, snippet, msg, chain=None):
         self.rule, self.path, self.line = rule, path, line
         self.snippet, self.msg = snippet, msg
+        # Taint findings carry the call chain: [(func, path, line), ...]
+        self.chain = chain or []
 
     def __str__(self):
         return f"{self.path}:{self.line}: [{self.rule}] {self.msg}\n    {self.snippet}"
@@ -212,33 +236,44 @@ def _collect_bindings(code, type_re):
         code,
     ):
         names.add(m.group(1))
-    for m in re.finditer(rf"(\w+)\s*:\s*{qual}(?:Mutex\s*<\s*)?{qual}{type_re}\s*<", code):
+    for m in re.finditer(
+        rf"(\w+)\s*:\s*(?:&\s*(?:mut\s+)?)?{qual}(?:Mutex\s*<\s*)?{qual}{type_re}\s*<", code
+    ):
         names.add(m.group(1))
     if re.search(rf"struct\s+\w+\s*\(\s*(?:pub\s+)?{qual}{type_re}\b", code):
         names.add("0")  # tuple-struct field, accessed as `self.0`
     return names
 
 
-def rule_hash_iter(path, text, code, comments, out):
-    names = _collect_bindings(code, r"Hash(?:Map|Set)")
-    for name in sorted(names):
+def _hash_iter_hits(code):
+    """(offset, binding-name) of every HashMap/HashSet iteration —
+    shared by the file-local rule and the taint source scan."""
+    hits = []
+    for name in sorted(_collect_bindings(code, r"Hash(?:Map|Set)")):
         pats = [
             rf"\b{name}\s*\.\s*(?:iter|iter_mut|keys|values|values_mut|drain|into_iter|retain)\s*\(",
             rf"\bfor\s[^;{{]*?\bin\s+&?(?:mut\s+)?{name}\b",
         ]
         for pat in pats:
             for m in re.finditer(pat, code):
-                ln = _line_index(text)(m.start())
-                out.append(
-                    Finding(
-                        "hash-iter",
-                        path,
-                        ln,
-                        _line_text(text, ln),
-                        f"iteration over HashMap/HashSet `{name}` is "
-                        "nondeterministic order; use BTreeMap or sort first",
-                    )
-                )
+                hits.append((m.start(), name))
+    return hits
+
+
+def rule_hash_iter(path, text, code, comments, out):
+    line_of = _line_index(text)
+    for off, name in _hash_iter_hits(code):
+        ln = line_of(off)
+        out.append(
+            Finding(
+                "hash-iter",
+                path,
+                ln,
+                _line_text(text, ln),
+                f"iteration over HashMap/HashSet `{name}` is "
+                "nondeterministic order; use BTreeMap or sort first",
+            )
+        )
 
 
 def rule_narrowing_cast(path, text, code, comments, out):
@@ -353,6 +388,34 @@ def rule_relaxed_outside_obs(path, text, code, comments, out):
         )
 
 
+def _unsorted_read_dirs(code, defs):
+    """Offsets of `read_dir(` calls with no sort* token between the call
+    and the end of the enclosing fn (end of file when not in a fn)."""
+    hits = []
+    for m in re.finditer(r"\bread_dir\s*\(", code):
+        di = _enclosing_def(defs, m.start())
+        end = defs[di]["body"][1] if di is not None else len(code)
+        if not re.search(r"\bsort\w*", code[m.end() : end]):
+            hits.append(m.start())
+    return hits
+
+
+def rule_read_dir(path, text, code, comments, defs, out):
+    line_of = _line_index(text)
+    for off in _unsorted_read_dirs(code, defs):
+        ln = line_of(off)
+        out.append(
+            Finding(
+                "read-dir-unsorted",
+                path,
+                ln,
+                _line_text(text, ln),
+                "fs::read_dir yields entries in platform directory order; "
+                "sort before use (or justify in the allowlist)",
+            )
+        )
+
+
 def rule_ref_pairs(files, out):
     """files: list of (path, text, code). Repo-level: every `fn X_ref`
     oracle needs a test file calling both `X(` and `X_ref(`."""
@@ -440,6 +503,468 @@ def _next_string_literal(text, at, window=120):
 
 
 # ---------------------------------------------------------------------------
+# Call graph: best-effort symbol table over the scrubbed token stream.
+# Token-level, not type-aware — the resolution heuristics and their
+# limits are documented in DESIGN.md §12.
+
+# Not callable names.
+KEYWORDS = {
+    "if", "else", "while", "for", "loop", "match", "return", "fn", "as",
+    "in", "move", "unsafe", "let", "ref", "mut", "box", "await", "use",
+    "pub", "where", "impl", "struct", "enum", "union", "trait", "type",
+    "mod", "const", "static", "break", "continue", "crate", "super",
+    "self", "Self", "dyn", "true", "false",
+}
+
+# Method names that belong to std types: `.name(` calls on these are
+# never resolved to crate fns even when a unique same-named crate fn
+# exists (the unique-name heuristic would otherwise invent edges
+# through e.g. `.len()` or `.sort()`).  Shared verbatim with the Rust
+# half.
+STD_METHODS = {
+    "abs", "and_then", "any", "as_bytes", "as_mut", "as_ref", "as_slice",
+    "as_str", "borrow", "borrow_mut", "chars", "clear", "clone", "cloned",
+    "cmp", "collect", "contains", "contains_key", "copied", "count",
+    "dedup", "drain", "drop", "entry", "enumerate", "eq", "expect",
+    "extend", "fetch_add", "fetch_sub", "filter", "filter_map", "find",
+    "flush", "fold", "get", "get_mut", "hash", "insert", "into",
+    "is_empty", "is_err", "is_none", "is_ok", "is_some", "iter",
+    "iter_mut", "join", "keys", "last", "len", "load", "lock", "map",
+    "map_err", "max", "min", "next", "ok", "or_else", "parse",
+    "partial_cmp", "position", "pow", "powf", "powi", "push", "push_str",
+    "read", "recv", "remove", "rev", "seek", "send", "skip", "sort",
+    "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by",
+    "split", "sqrt", "starts_with", "ends_with", "store", "sum", "swap",
+    "take", "to_owned", "to_string", "to_vec", "trim", "try_into",
+    "unwrap", "unwrap_or", "unwrap_or_default", "unwrap_or_else",
+    "values", "values_mut", "wait", "write", "zip",
+}
+
+
+def _match_delim(code, at, open_c, close_c):
+    depth = 0
+    for j in range(at, len(code)):
+        c = code[j]
+        if c == open_c:
+            depth += 1
+        elif c == close_c:
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(code) - 1
+
+
+def _match_angles(code, at):
+    depth = 0
+    for j in range(at, len(code)):
+        c = code[j]
+        if c == "<":
+            depth += 1
+        elif c == ">" and (j == 0 or code[j - 1] != "-"):
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(code) - 1
+
+
+def _fn_defs(code):
+    """[{name, off, body:(open,close)|None}] for every `fn NAME`."""
+    defs = []
+    n = len(code)
+    for m in re.finditer(r"\bfn\s+(\w+)", code):
+        i = m.end()
+        while i < n and code[i].isspace():
+            i += 1
+        if i < n and code[i] == "<":
+            i = _match_angles(code, i) + 1
+            while i < n and code[i].isspace():
+                i += 1
+        if i >= n or code[i] != "(":
+            continue
+        k = _match_delim(code, i, "(", ")") + 1
+        body = None
+        depth = 0
+        while k < n:
+            c = code[k]
+            if c in "([":
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+            elif c == "{" and depth == 0:
+                body = (k, _match_delim(code, k, "{", "}"))
+                break
+            elif c == ";" and depth == 0:
+                break
+            k += 1
+        defs.append({"name": m.group(1), "off": m.start(), "body": body})
+    return defs
+
+
+def _impl_blocks(code):
+    """[(body_open, body_close, type_name)] for every `impl` block."""
+    blocks = []
+    n = len(code)
+    for m in re.finditer(r"\bimpl\b", code):
+        i = m.end()
+        while i < n and code[i].isspace():
+            i += 1
+        if i < n and code[i] == "<":
+            i = _match_angles(code, i) + 1
+        brace = code.find("{", i)
+        if brace == -1:
+            continue
+        header = code[i:brace]
+        fm = re.search(r"\bfor\b", header)
+        if fm:
+            header = header[fm.end() :]
+        tm = re.search(r"(?:\w+\s*::\s*)*(\w+)", header)
+        if not tm:
+            continue
+        blocks.append((brace, _match_delim(code, brace, "{", "}"), tm.group(1)))
+    return blocks
+
+
+def _imports(code):
+    """alias -> full path segments, from `use` declarations (single-level
+    brace groups; nested groups are a documented miss)."""
+    imp = {}
+
+    def add(segs, alias):
+        segs = [s for s in segs if s]
+        if not segs:
+            return
+        if alias is None:
+            alias = segs[-1] if segs[-1] != "self" else segs[-2] if len(segs) > 1 else None
+        if alias:
+            imp[alias] = segs
+
+    for m in re.finditer(
+        r"\buse\s+([A-Za-z_]\w*(?:\s*::\s*[A-Za-z_]\w*)*)"
+        r"(?:\s*::\s*\{([^}]*)\})?(?:\s+as\s+(\w+))?\s*;",
+        code,
+    ):
+        base = [s.strip() for s in m.group(1).split("::")]
+        if m.group(2) is not None:
+            for item in m.group(2).split(","):
+                item = item.strip()
+                if not item or item == "*":
+                    continue
+                alias = None
+                am = re.match(r"(.*?)\s+as\s+(\w+)$", item)
+                if am:
+                    item, alias = am.group(1).strip(), am.group(2)
+                segs = [s.strip() for s in item.split("::")]
+                add(base + segs, alias)
+        else:
+            add(base, m.group(3))
+    return imp
+
+
+def _enclosing_def(defs, off):
+    """Index of the innermost def whose body contains `off` (None if
+    top-level)."""
+    best = None
+    for i, d in enumerate(defs):
+        b = d["body"]
+        if b and b[0] < off <= b[1]:
+            if best is None or b[0] > defs[best]["body"][0]:
+                best = i
+    return best
+
+
+def _calls(code, defs):
+    """[(local_def_idx, name, kind, extra)] — kind is 'method' (extra =
+    receiver ident), 'qualified' (extra = immediate `X::` qualifier) or
+    'bare'.  Macro invocations (`name!(`) and definitions are skipped;
+    turbofish call sites (`name::<T>(`) are a documented miss."""
+    calls = []
+    for m in re.finditer(r"\b([A-Za-z_]\w*)\s*\(", code):
+        name = m.group(1)
+        if name in KEYWORDS:
+            continue
+        di = _enclosing_def(defs, m.start(1))
+        if di is None:
+            continue
+        before = code[: m.start(1)].rstrip()
+        if re.search(r"\bfn$", before):
+            continue
+        if before.endswith("."):
+            rm = re.search(r"([A-Za-z_]\w*|\d+)\s*\.$", before)
+            calls.append((di, name, "method", rm.group(1) if rm else ""))
+        elif before.endswith("::"):
+            qm = re.search(r"([A-Za-z_]\w*)\s*::$", before)
+            calls.append((di, name, "qualified", qm.group(1) if qm else ""))
+        else:
+            calls.append((di, name, "bare", ""))
+    return calls
+
+
+class GraphFile:
+    """Per-file interprocedural context."""
+
+    def __init__(self, path, text, code):
+        self.path, self.text, self.code = path, text, code
+        self.defs = _fn_defs(code)
+        self.impls = _impl_blocks(code)
+        self.imports = _imports(code)
+        norm = path.replace(os.sep, "/")
+        stem = os.path.splitext(os.path.basename(norm))[0]
+        parent = os.path.basename(os.path.dirname(norm))
+        for d in self.defs:
+            quals = {stem}
+            if parent:
+                quals.add(parent)
+            d["impl"] = None
+            for a, z, tname in self.impls:
+                if a < d["off"] <= z:
+                    d["impl"] = tname
+                    quals.add(tname)
+            d["quals"] = quals
+
+
+def build_callgraph(gfiles):
+    """(defs, edges): defs = [(file_idx, local_idx)], edges = list of
+    sorted callee def-index lists.  Resolution heuristics (documented
+    limits shared with the Rust half):
+      - method calls: `self.name(` resolves into the caller's own impl
+        block when it defines `name`; otherwise `name` must be globally
+        unique among crate fns and not a std method name;
+      - qualified calls `X::name(`: `X` must match a def's impl type,
+        file stem, or parent dir (with `Self::` rewritten to the
+        caller's impl type);
+      - bare calls: names imported from outside the crate are skipped,
+        then same-file defs win, then globally-unique names."""
+    defs = []  # (file_idx, local_idx)
+    by_name = {}
+    for fi, gf in enumerate(gfiles):
+        for li, d in enumerate(gf.defs):
+            by_name.setdefault(d["name"], []).append(len(defs))
+            defs.append((fi, li))
+    edges = [set() for _ in defs]
+    index_of = {pair: gi for gi, pair in enumerate(defs)}
+
+    for fi, gf in enumerate(gfiles):
+        for li, name, kind, extra in _calls(gf.code, gf.defs):
+            caller = index_of[(fi, li)]
+            cands = by_name.get(name, [])
+            if not cands:
+                continue
+            resolved = []
+            if kind == "method":
+                if extra == "self" and gf.defs[li]["impl"]:
+                    own = [
+                        g
+                        for g in cands
+                        if defs[g][0] == fi
+                        and gfiles[fi].defs[defs[g][1]]["impl"] == gf.defs[li]["impl"]
+                    ]
+                    if own:
+                        resolved = own
+                if not resolved and name not in STD_METHODS and len(cands) == 1:
+                    resolved = cands
+            elif kind == "qualified":
+                qual = extra
+                if qual == "Self" and gf.defs[li]["impl"]:
+                    qual = gf.defs[li]["impl"]
+                resolved = [
+                    g
+                    for g in cands
+                    if qual in gfiles[defs[g][0]].defs[defs[g][1]]["quals"]
+                ]
+            else:  # bare
+                imp = gf.imports.get(name)
+                if imp and imp[0] not in ("crate", "self", "super"):
+                    resolved = []
+                else:
+                    same = [g for g in cands if defs[g][0] == fi]
+                    if same:
+                        resolved = same
+                    elif len(cands) == 1:
+                        resolved = cands
+            for g in resolved:
+                if g != caller:
+                    edges[caller].add(g)
+    return defs, [sorted(e) for e in edges]
+
+
+# ---------------------------------------------------------------------------
+# Determinism taint: seed nondeterminism sources, propagate reachability
+# backwards, report any entry-point-to-source path with its call chain.
+
+TAINT_WHAT = {
+    "taint-hash-iter": "HashMap/HashSet iteration (`{d}`)",
+    "taint-wall-clock": "a wall-clock read ({d})",
+    "taint-env-read": "a process-environment read ({d})",
+    "taint-read-dir": "an unsorted fs::read_dir",
+    "taint-thread-id": "a thread-identity/parallelism-dependent value ({d})",
+    "taint-relaxed-read": "a Relaxed atomic load outside rust/src/obs/",
+}
+
+
+def _file_taint_sources(gf):
+    """[(off, rule, detail)] nondeterminism sources in one file.
+    Wall-clock reads are exempt under rust/src/obs/ and util/timer.rs
+    (the sanctioned timing modules); thread-identity values and Relaxed
+    loads are exempt under rust/src/obs/ (racy-by-design telemetry that
+    feeds no numeric result).  std::env and the iteration/read_dir
+    sources have no file exemptions."""
+    code = gf.code
+    norm = gf.path.replace(os.sep, "/")
+    in_obs = "/obs/" in norm or norm.startswith("obs/")
+    in_timer = norm.endswith("util/timer.rs")
+    srcs = []
+    if not (in_obs or in_timer):
+        for m in re.finditer(r"\bInstant\s*::\s*now\b", code):
+            srcs.append((m.start(), "taint-wall-clock", "Instant::now"))
+        for m in re.finditer(r"\bSystemTime\b", code):
+            srcs.append((m.start(), "taint-wall-clock", "SystemTime"))
+    for m in re.finditer(r"\benv\s*::\s*([a-z_]\w*)", code):
+        srcs.append((m.start(), "taint-env-read", f"env::{m.group(1)}"))
+    if not in_obs:
+        for m in re.finditer(r"\bavailable_parallelism\b", code):
+            srcs.append((m.start(), "taint-thread-id", "available_parallelism"))
+        for m in re.finditer(r"\bthread\s*::\s*current\b", code):
+            srcs.append((m.start(), "taint-thread-id", "thread::current"))
+        for m in re.finditer(r"\.\s*load\s*\(", code):
+            args = _paren_span(code, code.find("(", m.start()))
+            if re.search(r"\bOrdering\s*::\s*Relaxed\b", args):
+                srcs.append((m.start(), "taint-relaxed-read", "load(Ordering::Relaxed)"))
+    for off in _unsorted_read_dirs(code, gf.defs):
+        srcs.append((off, "taint-read-dir", "fs::read_dir"))
+    for off, name in _hash_iter_hits(code):
+        srcs.append((off, "taint-hash-iter", name))
+    return sorted(srcs)
+
+
+def rule_taint(gfiles, entrypoints, out):
+    defs, edges = build_callgraph(gfiles)
+    rev = [[] for _ in defs]
+    for a, outs in enumerate(edges):
+        for b in outs:
+            rev[b].append(a)
+    by_name = {}
+    for gi, (fi, li) in enumerate(defs):
+        by_name.setdefault(gfiles[fi].defs[li]["name"], []).append(gi)
+
+    sources = []  # (file_idx, off, rule, detail, def_gi)
+    for fi, gf in enumerate(gfiles):
+        for off, rule, detail in _file_taint_sources(gf):
+            li = _enclosing_def(gf.defs, off)
+            if li is None:
+                continue
+            sources.append((fi, off, rule, detail, by_name_lookup(defs, fi, li)))
+
+    for fi, off, rule, detail, src_gi in sources:
+        # Which defs reach this source's fn (reverse BFS)?
+        reach = {src_gi}
+        frontier = [src_gi]
+        while frontier:
+            nxt = []
+            for g in frontier:
+                for p in rev[g]:
+                    if p not in reach:
+                        reach.add(p)
+                        nxt.append(p)
+            frontier = nxt
+        gf = gfiles[fi]
+        line_of = _line_index(gf.text)
+        ln = line_of(off)
+        for entry in entrypoints:
+            hit = None
+            for g in by_name.get(entry, []):
+                if g in reach:
+                    hit = g
+                    break
+            if hit is None:
+                continue
+            chain_idx = _shortest_path(edges, hit, src_gi)
+            chain = []
+            for g in chain_idx:
+                dfi, dli = defs[g]
+                dgf = gfiles[dfi]
+                d = dgf.defs[dli]
+                chain.append(
+                    (d["name"], dgf.path, _line_index(dgf.text)(d["off"]))
+                )
+            what = TAINT_WHAT[rule].replace("{d}", detail)
+            names = " → ".join(c[0] for c in chain)
+            out.append(
+                Finding(
+                    rule,
+                    gf.path,
+                    ln,
+                    _line_text(gf.text, ln),
+                    f"deterministic entry point `{entry}` reaches {what} "
+                    f"via {names} — make it deterministic, route it through "
+                    "an exempt module, or justify in the allowlist",
+                    chain=chain,
+                )
+            )
+
+
+def by_name_lookup(defs, fi, li):
+    for gi, pair in enumerate(defs):
+        if pair == (fi, li):
+            return gi
+    raise AssertionError("def index out of sync")
+
+
+def _shortest_path(edges, a, b):
+    """Shortest a→b def-index path (BFS, deterministic edge order)."""
+    if a == b:
+        return [a]
+    parent = {a: None}
+    frontier = [a]
+    while frontier:
+        nxt = []
+        for g in frontier:
+            for h in edges[g]:
+                if h not in parent:
+                    parent[h] = g
+                    if h == b:
+                        path = [h]
+                        while parent[path[-1]] is not None:
+                            path.append(parent[path[-1]])
+                        return list(reversed(path))
+                    nxt.append(h)
+        frontier = nxt
+    return [a, b]  # unreachable under correct callers; keep total
+
+
+def load_entrypoints(path):
+    """[(name, line)] from entrypoints.txt (`name | note` lines)."""
+    eps = []
+    if not os.path.exists(path):
+        return eps
+    with open(path, encoding="utf-8") as f:
+        for i, raw in enumerate(f, 1):
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            eps.append((s.split("|")[0].strip(), i))
+    return eps
+
+
+def rule_unknown_entrypoints(gfiles, eps, eps_relpath, out):
+    have = set()
+    for gf in gfiles:
+        for d in gf.defs:
+            have.add(d["name"])
+    for name, line in eps:
+        if name not in have:
+            out.append(
+                Finding(
+                    "unknown-entrypoint",
+                    eps_relpath,
+                    line,
+                    name,
+                    f"declared entry point `{name}` matches no `fn` "
+                    "definition — fix rust/lint/entrypoints.txt",
+                )
+            )
+
+
+# ---------------------------------------------------------------------------
 # Allowlist: `rule | path-suffix | snippet | justification` lines.
 
 
@@ -507,25 +1032,157 @@ def apply_allowlist(findings, entries, allowlist_path):
 
 
 # ---------------------------------------------------------------------------
+# Output formats: text (default), json (NDJSON, diffed against the Rust
+# half byte-for-byte), sarif (2.1.0, codeFlows carry the call chains).
+
+# Rule catalog metadata — order defines SARIF ruleIndex; shared verbatim
+# with the Rust half.
+RULE_META = [
+    ("hash-iter", "HashMap/HashSet iteration is nondeterministic order"),
+    ("narrowing-cast", "narrowing `as` cast silently truncates"),
+    ("undocumented-unsafe", "`unsafe` without a `// SAFETY:` comment"),
+    ("missing-ordering", "atomic access without an explicit Ordering"),
+    ("relaxed-outside-obs", "Ordering::Relaxed outside rust/src/obs/"),
+    ("read-dir-unsorted", "fs::read_dir consumed without sorting"),
+    ("ref-without-test", "_ref oracle without a dual-name test"),
+    ("unknown-event", "stamp() event missing from the schema table"),
+    ("event-schema-const", "stamp() without its schema::UPPER constant"),
+    ("taint-hash-iter", "entry point reaches HashMap/HashSet iteration"),
+    ("taint-wall-clock", "entry point reaches a wall-clock read"),
+    ("taint-env-read", "entry point reaches a std::env read"),
+    ("taint-read-dir", "entry point reaches an unsorted fs::read_dir"),
+    ("taint-thread-id", "entry point reaches a thread-identity value"),
+    ("taint-relaxed-read", "entry point reaches a Relaxed atomic load"),
+    ("unknown-entrypoint", "entrypoints.txt names a missing fn"),
+    ("stale-allowlist", "allowlist entry matches no finding"),
+    ("allowlist-format", "malformed allowlist entry"),
+]
+
+SARIF_SCHEMA_URI = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/"
+    "Schemata/sarif-schema-2.1.0.json"
+)
+
+
+def finding_sort_key(f):
+    return (f.path.replace(os.sep, "/"), f.line, f.rule, f.msg)
+
+
+def emit_json(findings):
+    """One normalized finding per line (NDJSON) — the differential-
+    mirror CI check diffs this against `metis-lint --format json`."""
+    lines = []
+    for f in sorted(findings, key=finding_sort_key):
+        obj = {
+            "rule": f.rule,
+            "path": f.path.replace(os.sep, "/"),
+            "line": f.line,
+            "snippet": f.snippet,
+            "msg": f.msg,
+            "chain": [f"{fn} {p.replace(os.sep, '/')}:{ln}" for fn, p, ln in f.chain],
+        }
+        lines.append(json.dumps(obj, ensure_ascii=False, separators=(",", ":")))
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _sarif_location(path, line, message=None):
+    loc = {
+        "physicalLocation": {
+            "artifactLocation": {
+                "uri": path.replace(os.sep, "/"),
+                "uriBaseId": "%SRCROOT%",
+            },
+            "region": {"startLine": line},
+        }
+    }
+    if message is not None:
+        loc["message"] = {"text": message}
+    return loc
+
+
+def emit_sarif(findings):
+    rule_index = {rid: i for i, (rid, _) in enumerate(RULE_META)}
+    results = []
+    for f in sorted(findings, key=finding_sort_key):
+        res = {
+            "ruleId": f.rule,
+            "level": "error",
+            "message": {"text": f.msg},
+            "locations": [_sarif_location(f.path, f.line)],
+        }
+        if f.rule in rule_index:
+            res["ruleIndex"] = rule_index[f.rule]
+        if f.chain:
+            flow_locs = [
+                {"location": _sarif_location(p, ln, message=fn)}
+                for fn, p, ln in f.chain
+            ]
+            flow_locs.append(
+                {"location": _sarif_location(f.path, f.line, message=f.snippet)}
+            )
+            res["codeFlows"] = [{"threadFlows": [{"locations": flow_locs}]}]
+        results.append(res)
+    doc = {
+        "$schema": SARIF_SCHEMA_URI,
+        "version": "2.1.0",
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "metis-lint",
+                        "version": "0.1.0",
+                        "informationUri": "https://github.com/metis/metis",
+                        "rules": [
+                            {
+                                "id": rid,
+                                "name": "".join(
+                                    w.capitalize() for w in rid.split("-")
+                                ),
+                                "shortDescription": {"text": short},
+                                "defaultConfiguration": {"level": "error"},
+                            }
+                            for rid, short in RULE_META
+                        ],
+                    }
+                },
+                "columnKind": "utf16CodeUnits",
+                "results": results,
+            }
+        ],
+    }
+    return json.dumps(doc, ensure_ascii=False, indent=2) + "\n"
+
+
+# ---------------------------------------------------------------------------
 # Driver
 
 
-def lint_files(paths, events, repo=REPO):
+def lint_files(paths, events, repo=REPO, entrypoints=None, check_entrypoints=False):
     loaded = []
+    gfiles = []
     for p in paths:
         with open(p, encoding="utf-8") as f:
             text = f.read()
         code, comments = scrub(text)
-        loaded.append((os.path.relpath(p, repo), text, code, comments))
+        rel = os.path.relpath(p, repo).replace(os.sep, "/")
+        loaded.append((rel, text, code, comments))
+        gfiles.append(GraphFile(rel, text, code))
     findings = []
-    for path, text, code, comments in loaded:
+    for (path, text, code, comments), gf in zip(loaded, gfiles):
         rule_hash_iter(path, text, code, comments, findings)
         rule_narrowing_cast(path, text, code, comments, findings)
         rule_undocumented_unsafe(path, text, code, comments, findings)
         rule_missing_ordering(path, text, code, comments, findings)
         rule_relaxed_outside_obs(path, text, code, comments, findings)
+        rule_read_dir(path, text, code, comments, gf.defs, findings)
         rule_event_schema(path, text, code, comments, events, findings)
     rule_ref_pairs([(p, t, c) for p, t, c, _ in loaded], findings)
+    eps = entrypoints or []
+    rule_taint(gfiles, [name for name, _ in eps], findings)
+    if check_entrypoints:
+        rule_unknown_entrypoints(
+            gfiles, eps, DEFAULT_ENTRYPOINTS, findings
+        )
     return findings
 
 
@@ -539,17 +1196,21 @@ def rust_files(roots):
     return sorted(out)
 
 
-def self_test(events):
+def self_test(events, entrypoints):
     fixtures = os.path.join(REPO, FIXTURES)
     expect = {
         "clean.rs": set(),
+        "lexer_edges.rs": set(),
         "hash_iter.rs": {"hash-iter"},
         "narrowing_cast.rs": {"narrowing-cast"},
         "undocumented_unsafe.rs": {"undocumented-unsafe"},
         "missing_ordering.rs": {"missing-ordering"},
         "relaxed_outside_obs.rs": {"relaxed-outside-obs"},
+        "read_dir_unsorted.rs": {"read-dir-unsorted"},
         "ref_without_test.rs": {"ref-without-test"},
         "unknown_event.rs": {"unknown-event"},
+        "taint_hash_iter.rs": {"hash-iter", "taint-hash-iter"},
+        "taint_timer.rs": {"taint-wall-clock"},
     }
     present = sorted(n for n in os.listdir(fixtures) if n.endswith(".rs"))
     if sorted(expect) != present:
@@ -557,7 +1218,9 @@ def self_test(events):
         return 1
     failures = 0
     for name, want in sorted(expect.items()):
-        findings = lint_files([os.path.join(fixtures, name)], events)
+        findings = lint_files(
+            [os.path.join(fixtures, name)], events, entrypoints=entrypoints
+        )
         got = {f.rule for f in findings}
         if want and (got != want or not findings):
             print(f"self-test FAIL {name}: expected exactly {want}, got {got}")
@@ -573,10 +1236,66 @@ def self_test(events):
             label = ",".join(sorted(want)) or "clean"
             print(f"self-test ok   {name}: {label}")
 
+    # Seeded interprocedural bugs must carry the full call chain.
+    for name, rule, chain_text in [
+        ("taint_hash_iter.rs", "taint-hash-iter", "step_with → accumulate → deep_fold"),
+        ("taint_timer.rs", "taint-wall-clock", "run_specs → measure → elapsed_hint"),
+    ]:
+        findings = lint_files(
+            [os.path.join(fixtures, name)], events, entrypoints=entrypoints
+        )
+        hits = [f for f in findings if f.rule == rule and chain_text in f.msg]
+        if hits and len(hits[0].chain) == 3:
+            print(f"self-test ok   {name}: chain `{chain_text}`")
+        else:
+            print(
+                f"self-test FAIL {name}: no {rule} finding carrying "
+                f"`{chain_text}` (got: {[f.msg for f in findings]})"
+            )
+            failures += 1
+
+    # Lexer edges (mirrors the unit tests in rust/lint/src/lexer.rs):
+    # byte-string contents are blanked, b'"' cannot open a string, and
+    # a ##-raw string only closes on `"##` — `"#` inside is content.
+    lexer_cases = [
+        ('let a = b"x as i32; unsafe {}"; let q = b\'"\'; let t = 1;', ["let t = 1;"], ["as i32", "unsafe"]),
+        ('let a = br##"closes with "# but not yet"##; let t = 1;', ["let t = 1;"], ["but not yet"]),
+        ('let b = r##"env::var("#inner"#) still inside"##; let u = 2;', ["let u = 2;"], ["env::var", "still inside"]),
+    ]
+    for src, keep, gone in lexer_cases:
+        code, _ = scrub(src)
+        if (
+            len(code) == len(src)
+            and all(k in code for k in keep)
+            and not any(g in code for g in gone)
+        ):
+            print(f"self-test ok   lexer: {src[:34]}…")
+        else:
+            print(f"self-test FAIL lexer scrub of {src!r}: {code!r}")
+            failures += 1
+
+    # SARIF: structurally valid 2.1.0 with a codeFlow per taint finding.
+    findings = lint_files(
+        [os.path.join(fixtures, "taint_timer.rs")], events, entrypoints=entrypoints
+    )
+    doc = json.loads(emit_sarif(findings))
+    flows = doc["runs"][0]["results"][0].get("codeFlows", [])
+    if (
+        doc["version"] == "2.1.0"
+        and doc["runs"][0]["tool"]["driver"]["name"] == "metis-lint"
+        and len(doc["runs"][0]["tool"]["driver"]["rules"]) == len(RULE_META)
+        and flows
+        and len(flows[0]["threadFlows"][0]["locations"]) == 4
+    ):
+        print("self-test ok   sarif: 2.1.0 envelope + 4-hop codeFlow")
+    else:
+        print("self-test FAIL sarif structure")
+        failures += 1
+
     # Allowlist mechanics: an entry that matches suppresses the finding;
     # an entry that matches nothing is itself an error.
     fix = os.path.join(fixtures, "narrowing_cast.rs")
-    findings = lint_files([fix], events)
+    findings = lint_files([fix], events, entrypoints=entrypoints)
     entries = [
         AllowEntry("narrowing-cast", "narrowing_cast.rs", "as i32", "fixture", 1)
     ]
@@ -602,29 +1321,47 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("roots", nargs="*", help="directories of .rs files to lint")
     ap.add_argument("--allowlist", default=os.path.join(REPO, DEFAULT_ALLOWLIST))
+    ap.add_argument(
+        "--entrypoints", default=os.path.join(REPO, DEFAULT_ENTRYPOINTS)
+    )
+    ap.add_argument(
+        "--format", choices=["text", "json", "sarif"], default="text"
+    )
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
 
     events = schema_events()
+    entrypoints = load_entrypoints(args.entrypoints)
     if args.self_test:
-        sys.exit(self_test(events))
+        sys.exit(self_test(events, entrypoints))
 
+    default_run = not args.roots
     roots = args.roots or [os.path.join(REPO, r) for r in DEFAULT_ROOTS]
     files = rust_files(roots)
     if not files:
         print(f"lint_invariants: no .rs files under {roots}", file=sys.stderr)
         sys.exit(2)
-    findings = lint_files(files, events)
+    findings = lint_files(
+        files,
+        events,
+        entrypoints=entrypoints,
+        check_entrypoints=default_run,
+    )
     entries, errors = load_allowlist(args.allowlist)
     findings = apply_allowlist(findings, entries, os.path.relpath(args.allowlist, REPO))
     findings.extend(errors)
-    for f in sorted(findings, key=lambda f: (f.path, f.line)):
-        print(f)
     n_allowed = sum(1 for e in entries if e.used)
-    print(
-        f"lint_invariants: {len(files)} files, {len(findings)} finding(s), "
-        f"{n_allowed} allowlisted"
-    )
+    if args.format == "json":
+        sys.stdout.write(emit_json(findings))
+    elif args.format == "sarif":
+        sys.stdout.write(emit_sarif(findings))
+    else:
+        for f in sorted(findings, key=finding_sort_key):
+            print(f)
+        print(
+            f"lint_invariants: {len(files)} files, {len(findings)} finding(s), "
+            f"{n_allowed} allowlisted"
+        )
     sys.exit(1 if findings else 0)
 
 

@@ -1,0 +1,256 @@
+#!/usr/bin/env python3
+"""Structural validator for metis-lint's SARIF 2.1.0 output.
+
+CI pipes `metis-lint --format sarif` (and the Python mirror's
+`--format sarif`) through this before uploading with
+github/codeql-action/upload-sarif, so a malformed document fails the
+lint-invariants job instead of being silently dropped by the upload
+action.  The checks follow the SARIF 2.1.0 spec (OASIS sarif-spec,
+Schemata/sarif-schema-2.1.0.json) for the subset of the format the
+emitters produce: the log envelope, tool.driver rule metadata,
+results with physical locations, and codeFlows/threadFlows for the
+taint call chains.  No jsonschema dependency — the container has
+stdlib only, and a hand-rolled walk gives better error messages for
+this narrow profile anyway.
+
+Usage:
+  metis-lint --format sarif | python3 tools/validate_sarif.py
+  python3 tools/validate_sarif.py report.sarif
+  python3 tools/validate_sarif.py --self-test
+
+Exit status: 0 valid, 1 invalid, 2 usage/internal error.
+"""
+
+import json
+import sys
+
+SCHEMA_URI_SUFFIX = "sarif-schema-2.1.0.json"
+
+
+def _err(errors, path, msg):
+    errors.append(f"{path}: {msg}")
+
+
+def _require(errors, obj, path, key, typ):
+    if not isinstance(obj, dict) or key not in obj:
+        _err(errors, path, f"missing required property `{key}`")
+        return None
+    val = obj[key]
+    if not isinstance(val, typ):
+        _err(errors, f"{path}.{key}", f"expected {typ.__name__}, got {type(val).__name__}")
+        return None
+    return val
+
+
+def _check_location(errors, loc, path):
+    phys = _require(errors, loc, path, "physicalLocation", dict)
+    if phys is None:
+        return
+    art = _require(errors, phys, f"{path}.physicalLocation", "artifactLocation", dict)
+    if art is not None:
+        uri = _require(errors, art, f"{path}.physicalLocation.artifactLocation", "uri", str)
+        if uri is not None and (uri.startswith("/") or "\\" in uri):
+            _err(
+                errors,
+                f"{path}.physicalLocation.artifactLocation.uri",
+                f"must be a relative forward-slash path, got `{uri}`",
+            )
+    region = _require(errors, phys, f"{path}.physicalLocation", "region", dict)
+    if region is not None:
+        line = _require(errors, region, f"{path}.physicalLocation.region", "startLine", int)
+        if line is not None and line < 1:
+            _err(errors, f"{path}.physicalLocation.region.startLine", "must be >= 1")
+
+
+def validate(doc):
+    """Return a list of error strings (empty == valid)."""
+    errors = []
+    if not isinstance(doc, dict):
+        return ["$: document must be a JSON object"]
+    version = _require(errors, doc, "$", "version", str)
+    if version is not None and version != "2.1.0":
+        _err(errors, "$.version", f"must be `2.1.0`, got `{version}`")
+    schema = doc.get("$schema")
+    if isinstance(schema, str) and not schema.endswith(SCHEMA_URI_SUFFIX):
+        _err(errors, "$.$schema", f"does not reference {SCHEMA_URI_SUFFIX}")
+    runs = _require(errors, doc, "$", "runs", list)
+    if runs is None:
+        return errors
+    if not runs:
+        _err(errors, "$.runs", "must contain at least one run")
+    for ri, run in enumerate(runs):
+        rp = f"$.runs[{ri}]"
+        if not isinstance(run, dict):
+            _err(errors, rp, "run must be an object")
+            continue
+        tool = _require(errors, run, rp, "tool", dict)
+        rules = []
+        if tool is not None:
+            driver = _require(errors, tool, f"{rp}.tool", "driver", dict)
+            if driver is not None:
+                _require(errors, driver, f"{rp}.tool.driver", "name", str)
+                rules = driver.get("rules", [])
+                if not isinstance(rules, list):
+                    _err(errors, f"{rp}.tool.driver.rules", "must be an array")
+                    rules = []
+                for qi, rule in enumerate(rules):
+                    qp = f"{rp}.tool.driver.rules[{qi}]"
+                    if not isinstance(rule, dict):
+                        _err(errors, qp, "rule must be an object")
+                        continue
+                    _require(errors, rule, qp, "id", str)
+        rule_ids = [r.get("id") for r in rules if isinstance(r, dict)]
+        results = run.get("results", [])
+        if not isinstance(results, list):
+            _err(errors, f"{rp}.results", "must be an array")
+            continue
+        for si, res in enumerate(results):
+            sp = f"{rp}.results[{si}]"
+            if not isinstance(res, dict):
+                _err(errors, sp, "result must be an object")
+                continue
+            rule_id = _require(errors, res, sp, "ruleId", str)
+            msg = _require(errors, res, sp, "message", dict)
+            if msg is not None:
+                _require(errors, msg, f"{sp}.message", "text", str)
+            idx = res.get("ruleIndex")
+            if idx is not None:
+                if not isinstance(idx, int) or not (0 <= idx < len(rules)):
+                    _err(errors, f"{sp}.ruleIndex", f"out of range for {len(rules)} rules")
+                elif rule_id is not None and rule_ids[idx] != rule_id:
+                    _err(
+                        errors,
+                        f"{sp}.ruleIndex",
+                        f"points at rule `{rule_ids[idx]}`, ruleId is `{rule_id}`",
+                    )
+            elif rule_id is not None and rule_ids and rule_id not in rule_ids:
+                _err(errors, f"{sp}.ruleId", f"`{rule_id}` not in tool.driver.rules")
+            locs = _require(errors, res, sp, "locations", list)
+            if locs is not None:
+                if not locs:
+                    _err(errors, f"{sp}.locations", "must not be empty")
+                for li, loc in enumerate(locs):
+                    _check_location(errors, loc, f"{sp}.locations[{li}]")
+            for fi, flow in enumerate(res.get("codeFlows", [])):
+                fp = f"{sp}.codeFlows[{fi}]"
+                tflows = _require(errors, flow, fp, "threadFlows", list)
+                if tflows is None or not tflows:
+                    _err(errors, f"{fp}.threadFlows", "must contain at least one threadFlow")
+                    continue
+                for ti, tf in enumerate(tflows):
+                    tp = f"{fp}.threadFlows[{ti}]"
+                    tlocs = _require(errors, tf, tp, "locations", list)
+                    if tlocs is None or not tlocs:
+                        _err(errors, f"{tp}.locations", "must contain at least one location")
+                        continue
+                    for li, tl in enumerate(tlocs):
+                        inner = _require(errors, tl, f"{tp}.locations[{li}]", "location", dict)
+                        if inner is not None:
+                            _check_location(errors, inner, f"{tp}.locations[{li}].location")
+    return errors
+
+
+def self_test():
+    good = {
+        "$schema": "https://example.com/" + SCHEMA_URI_SUFFIX,
+        "version": "2.1.0",
+        "runs": [
+            {
+                "tool": {"driver": {"name": "metis-lint", "rules": [{"id": "hash-iter"}]}},
+                "results": [
+                    {
+                        "ruleId": "hash-iter",
+                        "ruleIndex": 0,
+                        "message": {"text": "x"},
+                        "locations": [
+                            {
+                                "physicalLocation": {
+                                    "artifactLocation": {"uri": "rust/src/a.rs"},
+                                    "region": {"startLine": 3},
+                                }
+                            }
+                        ],
+                        "codeFlows": [
+                            {
+                                "threadFlows": [
+                                    {
+                                        "locations": [
+                                            {
+                                                "location": {
+                                                    "physicalLocation": {
+                                                        "artifactLocation": {"uri": "rust/src/a.rs"},
+                                                        "region": {"startLine": 1},
+                                                    }
+                                                }
+                                            }
+                                        ]
+                                    }
+                                ]
+                            }
+                        ],
+                    }
+                ],
+            }
+        ],
+    }
+    cases = [
+        ("valid document", good, 0),
+        ("wrong version", {**good, "version": "2.0.0"}, 1),
+        ("missing runs", {"version": "2.1.0"}, 1),
+        ("empty runs", {**good, "runs": []}, 1),
+    ]
+    bad_result = json.loads(json.dumps(good))
+    del bad_result["runs"][0]["results"][0]["message"]
+    cases.append(("result without message", bad_result, 1))
+    bad_uri = json.loads(json.dumps(good))
+    bad_uri["runs"][0]["results"][0]["locations"][0]["physicalLocation"][
+        "artifactLocation"
+    ]["uri"] = "/abs/path.rs"
+    cases.append(("absolute uri", bad_uri, 1))
+    bad_idx = json.loads(json.dumps(good))
+    bad_idx["runs"][0]["results"][0]["ruleIndex"] = 7
+    cases.append(("ruleIndex out of range", bad_idx, 1))
+    bad_flow = json.loads(json.dumps(good))
+    bad_flow["runs"][0]["results"][0]["codeFlows"][0]["threadFlows"] = []
+    cases.append(("empty threadFlows", bad_flow, 1))
+
+    failures = 0
+    for name, doc, want in cases:
+        errors = validate(doc)
+        got = 1 if errors else 0
+        if got != want:
+            print(f"self-test FAIL {name}: expected {'errors' if want else 'clean'}, got {errors}")
+            failures += 1
+        else:
+            print(f"self-test ok   {name}")
+    print(f"self-test: {'FAILED' if failures else 'passed'}")
+    return 1 if failures else 0
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--self-test":
+        sys.exit(self_test())
+    if len(argv) > 1:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    try:
+        if argv:
+            with open(argv[0], encoding="utf-8") as f:
+                doc = json.load(f)
+        else:
+            doc = json.load(sys.stdin)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"validate_sarif: cannot parse input: {e}", file=sys.stderr)
+        sys.exit(2)
+    errors = validate(doc)
+    for e in errors:
+        print(f"validate_sarif: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    n = sum(len(r.get("results", [])) for r in doc["runs"])
+    print(f"validate_sarif: ok — {len(doc['runs'])} run(s), {n} result(s)")
+
+
+if __name__ == "__main__":
+    main()
