@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
                  implementations via kernels::set_reference_mode",
             ),
         ),
+        ("simd", Json::str(kernels::simd_feature())),
     ];
 
     // --- 1. GEMM family ---------------------------------------------------
@@ -94,6 +95,67 @@ fn main() -> anyhow::Result<()> {
     }
     t1.print();
     json.push(("gemm", Json::Arr(gemm_rows)));
+
+    // --- 1b. dequant-free packed GEMM -------------------------------------
+    // The W4A4 forward contraction at its real shapes: a batch of 32
+    // quantized activation rows against a dim² packed weight operand.
+    // "expand" is what every consumer did before this layer existed —
+    // decode the packed codes to a dense f64 matrix, then matmul —
+    // and `qgemm` contracts the nibble-packed codes natively (~¼ the
+    // operand bytes through the cache).  Both paths are bit-identical
+    // by construction, asserted here on every timed shape.
+    let mut t1b = Table::new(
+        "qgemm — expand(unpack+matmul) vs dequant-free packed contraction",
+        &["fmt", "dim", "expand ms", "packed ms", "speedup"],
+    );
+    let mut qgemm_rows = Vec::new();
+    let batch = 32usize;
+    for fmt in Format::ALL {
+        for dim in [256usize, 1024] {
+            let x = Matrix::gaussian(&mut rng, batch, dim, 1.0);
+            let w = Matrix::gaussian(&mut rng, dim, dim, 1.0);
+            let xp = formats::pack_matrix_along(fmt, &x, 1);
+            let wp = formats::pack_matrix_along(fmt, &w, 0);
+            let y_expand = metis::linalg::qgemm::qgemm_ref(&xp, &wp);
+            let y_packed = metis::linalg::qgemm(&xp, &wp);
+            assert!(
+                y_expand
+                    .data
+                    .iter()
+                    .zip(&y_packed.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "packed qgemm diverged from the expand oracle ({} {dim})",
+                fmt.name()
+            );
+            let (warm, iters) = if dim <= 256 { (2, 8) } else { (1, 4) };
+            let st_expand = time_fn(warm, iters, || {
+                std::hint::black_box(metis::linalg::qgemm::qgemm_ref(&xp, &wp));
+            });
+            let st_packed = time_fn(warm, iters, || {
+                std::hint::black_box(metis::linalg::qgemm(&xp, &wp));
+            });
+            t1b.row(vec![
+                fmt.name().into(),
+                format!("{dim}"),
+                fmt_f(st_expand.mean(), 2),
+                fmt_f(st_packed.mean(), 2),
+                fmt_ratio(st_expand.mean(), st_packed.mean()),
+            ]);
+            qgemm_rows.push(Json::obj(vec![
+                ("fmt", Json::str(fmt.name())),
+                ("dim", Json::num(dim as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("expand_ms", Json::num_or_null(st_expand.mean())),
+                ("packed_ms", Json::num_or_null(st_packed.mean())),
+                (
+                    "speedup",
+                    Json::num_or_null(st_expand.mean() / st_packed.mean()),
+                ),
+            ]));
+        }
+    }
+    t1b.print();
+    json.push(("qgemm", Json::Arr(qgemm_rows)));
 
     // --- 2. Jacobi SVD 256² ----------------------------------------------
     // Symmetric settings for both rows (same warmup + iteration count)

@@ -181,6 +181,16 @@ info, stream file list) is written next to the artifacts; every JSONL
 row of the run carries the same run_id plus schema_version and a
 monotonic seq for offline joining.
 
+Kernel toggles (every subcommand): --qgemm packed|expand selects the
+dequant-free packed-operand GEMM path (default: packed — FP4 codes
+are contracted natively at ~¼ the operand bytes) or the
+unpack-then-matmul oracle (expand); both are bit-identical, so
+expand exists for A/B timing and audits.  --simd native|portable
+pins the scalar microkernel (portable) instead of the
+runtime-detected AVX2/NEON lane (native, the default) — again
+bit-identical by construction; the detected lane is recorded in the
+run.json manifest (`simd`) and the metrics `kernel` section.
+
 Artifacts default to ./artifacts (built by `make artifacts`);
 override with --artifacts or METIS_ARTIFACTS.
 

@@ -6,6 +6,7 @@
 //! collects the bias measurements of Fig. 4: reconstruction error,
 //! small-value clipping (underflow) rate, and per-magnitude-decile error.
 
+use crate::formats::pack::{self, PackedQMatrix};
 use crate::formats::Format;
 use crate::tensor::Matrix;
 
@@ -30,8 +31,9 @@ impl BlockQuantizer {
 }
 
 /// Largest block width across formats — the stack-buffer bound of the
-/// strided axis-0 path.
-const MAX_BLOCK: usize = 128;
+/// strided axis-0 path.  Public so the `every_format_fits_max_block`
+/// guard test (and any future format addition) can see the contract.
+pub const MAX_BLOCK: usize = 128;
 
 /// Fused blockwise quantization: one walk over `xs` finding each
 /// block's scale and writing the clamped/cast values straight into the
@@ -124,7 +126,13 @@ pub fn quantize_matrix_along(fmt: Format, a: &Matrix, axis: usize) -> Matrix {
         }
         0 => {
             let block = fmt.block();
-            debug_assert!(block <= MAX_BLOCK);
+            // Hard assert (not debug_assert): a future >128 block format
+            // would otherwise silently quantize truncated blocks in
+            // release builds — the stack buffers below are MAX_BLOCK wide.
+            assert!(
+                block <= MAX_BLOCK,
+                "format block {block} exceeds MAX_BLOCK {MAX_BLOCK}"
+            );
             let mut xbuf = [0.0f32; MAX_BLOCK];
             let mut qbuf = [0.0f32; MAX_BLOCK];
             for c in 0..cols {
@@ -145,6 +153,76 @@ pub fn quantize_matrix_along(fmt: Format, a: &Matrix, axis: usize) -> Matrix {
         _ => panic!("axis must be 0 or 1"),
     }
     out
+}
+
+/// Pack a matrix into true 4-bit (FP4) / 8-bit (FP8) storage with
+/// per-block scales along `axis` — the operand form `linalg::qgemm`
+/// contracts natively.  Runs the *same* per-element pipeline as
+/// [`quantize_matrix_along`] (identical f64→f32 cast, amax fold order,
+/// scale rule, element codec), storing each element's code instead of
+/// its dequantized value, so `pack_matrix_along(fmt, a, axis).unpack()`
+/// is bit-identical to `quantize_matrix_along(fmt, a, axis)` — the
+/// property the qgemm oracle tests pin.
+pub fn pack_matrix_along(fmt: Format, a: &Matrix, axis: usize) -> PackedQMatrix {
+    assert!(axis == 0 || axis == 1, "axis must be 0 or 1");
+    let (lines, line_len) = if axis == 1 {
+        (a.rows, a.cols)
+    } else {
+        (a.cols, a.rows)
+    };
+    let stride = pack::code_stride(fmt, line_len);
+    let block = fmt.block();
+    let bpl = line_len.div_ceil(block);
+    let mut codes = vec![0u8; lines * stride];
+    let mut scales = vec![0.0f32; lines * bpl];
+    let mut xline = vec![0.0f32; line_len];
+    let observe = crate::obs::enabled();
+    let (mut underflow, mut clip) = (0u64, 0u64);
+    for line in 0..lines {
+        if axis == 1 {
+            for (x, &v) in xline.iter_mut().zip(&a.data[line * a.cols..(line + 1) * a.cols]) {
+                *x = v as f32;
+            }
+        } else {
+            for (r, x) in xline.iter_mut().enumerate() {
+                *x = a.data[r * a.cols + line] as f32;
+            }
+        }
+        let lcodes = &mut codes[line * stride..(line + 1) * stride];
+        let lscales = &mut scales[line * bpl..(line + 1) * bpl];
+        for (bi, xc) in xline.chunks(block).enumerate() {
+            let mut amax = 0.0f32;
+            for &x in xc {
+                amax = amax.max(x.abs());
+            }
+            let s = fmt.scale(amax);
+            lscales[bi] = s;
+            for (i, &x) in xc.iter().enumerate() {
+                let e = fmt.elem(x / s);
+                pack::encode_into(fmt, lcodes, bi * block + i, e);
+                if observe {
+                    // Same tallies as quantize_slice_into, on the same
+                    // product e·s the dequantized path would store.
+                    underflow += u64::from(x != 0.0 && e * s == 0.0);
+                    clip += u64::from(x.abs() > s * fmt.elem_max());
+                }
+            }
+        }
+    }
+    if observe {
+        let m = crate::obs::metrics::metrics();
+        m.quant_elems.add(fmt, (lines * line_len) as u64);
+        m.quant_underflow.add(fmt, underflow);
+        m.quant_clip.add(fmt, clip);
+    }
+    PackedQMatrix {
+        fmt,
+        rows: a.rows,
+        cols: a.cols,
+        axis,
+        codes,
+        scales,
+    }
 }
 
 /// The pre-kernel `quantize_matrix_along` (whole-matrix f32 copy; axis
@@ -192,7 +270,9 @@ pub fn quant_stats(a: &Matrix, q: &Matrix) -> QuantStats {
 
     // deciles of |a|
     let mut mags: Vec<f64> = a.data.iter().map(|x| x.abs()).collect();
-    mags.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a single NaN input must
+    // not panic the stats pass (same bug class as the Jacobi σ sort).
+    mags.sort_by(f64::total_cmp);
     let decile_edges: Vec<f64> = (1..10).map(|i| mags[i * n / 10]).collect();
     let mut dec_err = vec![0.0f64; 10];
     let mut dec_cnt = vec![0usize; 10];
@@ -272,6 +352,82 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn packed_decode_is_bit_identical_to_quantize() {
+        // ISSUE 9 property test: pack(A).unpack() must equal
+        // quantize_matrix_along(fmt, A, axis) *bitwise* (to_bits, so a
+        // −0.0/+0.0 swap cannot hide behind f64 ==) for all formats,
+        // both axes, partial tail blocks, and 0-row/0-col edge shapes.
+        let mut rng = Rng::new(21);
+        for fmt in Format::ALL {
+            for (m, n) in [
+                (0usize, 0usize),
+                (0, 5),
+                (5, 0),
+                (1, 1),
+                (1, 17),
+                (17, 1),
+                (13, 40),
+                (33, 31),
+                (64, 129),
+                (130, 48),
+            ] {
+                let a = Matrix::gaussian(&mut rng, m, n, 2.0);
+                for axis in [0, 1] {
+                    let q = quantize_matrix_along(fmt, &a, axis);
+                    let p = pack_matrix_along(fmt, &a, axis).unpack();
+                    assert_eq!((p.rows, p.cols), (q.rows, q.cols));
+                    for (i, (&pv, &qv)) in p.data.iter().zip(&q.data).enumerate() {
+                        assert_eq!(
+                            pv.to_bits(),
+                            qv.to_bits(),
+                            "{} {m}x{n} axis {axis} elem {i}: {pv} vs {qv}",
+                            fmt.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_decode_preserves_negative_underflow_sign() {
+        // Negative values that underflow to zero quantize to −0.0; the
+        // nibble round-trip must keep the sign bit.
+        let mut a = Matrix::zeros(1, 32);
+        a.data[0] = 100.0;
+        a.data[1] = -1e-4;
+        let q = quantize_matrix_along(Format::Mxfp4, &a, 1);
+        assert!(q.data[1] == 0.0 && q.data[1].is_sign_negative());
+        let p = pack_matrix_along(Format::Mxfp4, &a, 1).unpack();
+        assert_eq!(p.data[1].to_bits(), q.data[1].to_bits());
+    }
+
+    #[test]
+    fn every_format_fits_max_block() {
+        // Guards the axis-0 stack buffers: quantize_matrix_along hard-
+        // asserts block ≤ MAX_BLOCK, so a new wider format must fail
+        // here (and there) instead of silently truncating blocks.
+        for fmt in Format::ALL {
+            assert!(fmt.block() <= MAX_BLOCK, "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn quant_stats_tolerates_nan_inputs() {
+        // Regression: the magnitude-decile sort used partial_cmp().
+        // unwrap(), which panics on NaN — total_cmp must not.
+        let mut a = Matrix::zeros(4, 8);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            *v = i as f64 - 11.0;
+        }
+        a.data[5] = f64::NAN;
+        let q = a.clone();
+        let st = quant_stats(&a, &q);
+        assert!(st.decile_rel_err.len() == 10);
+        assert!(st.rel_frob_err.is_nan() || st.rel_frob_err >= 0.0);
     }
 
     #[test]

@@ -7,12 +7,14 @@
 
 pub mod blockq;
 pub mod codecs;
+pub mod pack;
 
 pub use blockq::{
-    quantize_block, quantize_block_ref, quantize_matrix_along, quantize_matrix_along_ref,
-    quantize_slice_into, BlockQuantizer, QuantStats,
+    pack_matrix_along, quantize_block, quantize_block_ref, quantize_matrix_along,
+    quantize_matrix_along_ref, quantize_slice_into, BlockQuantizer, QuantStats,
 };
 pub use codecs::{bf16_snap, e8m0_scale, fp4_e2m1, fp8_e4m3};
+pub use pack::PackedQMatrix;
 
 /// Block-scaled format descriptors matching the paper §2.3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

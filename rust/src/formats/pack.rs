@@ -1,0 +1,455 @@
+//! Packed block-quantized operands: the true 4-bit (or 8-bit) storage
+//! form of a quantized matrix, as contracted natively by
+//! `linalg::qgemm` (ISSUE 9; "MXFP4 on native FP4 hardware" in
+//! PAPERS.md).
+//!
+//! Layout (documented in DESIGN.md §9):
+//!
+//! * A **line** is one run of elements sharing the block axis: a row
+//!   when `axis == 1` (activation-style, blocks along K of X·W), a
+//!   column when `axis == 0` (weight-style).  Lines are stored
+//!   contiguously and byte-aligned, so line starts never split a byte.
+//! * FP4 formats store two codes per byte — element `e` of a line
+//!   lives in byte `e / 2`, low nibble first (`e & 1 == 0` → bits 0–3).
+//!   A code is `sign << 3 | grid_index`, grid = [`FP4_GRID`].  FP8
+//!   stores one E4M3 byte per element (sign, 4-bit exponent bias 7,
+//!   3-bit mantissa).
+//! * Per-block scales live in a separate f32 array, line-major:
+//!   `scales[line * blocks_per_line + block]`.
+//!
+//! Decoding an element reproduces the fused quantizer's arithmetic
+//! *bit for bit*: `f64::from(code_value_f32 * scale_f32)` is exactly
+//! the `fmt.elem(x / s) * s` product that `quantize_slice_into` wrote,
+//! so `pack(A).unpack()` equals `quantize_matrix_along(fmt, A, axis)`
+//! down to the sign of every zero.  That identity is what lets the
+//! packed GEMM path match the expand-then-matmul oracle exactly.
+
+use std::sync::OnceLock;
+
+use crate::formats::Format;
+use crate::tensor::Matrix;
+
+/// Non-negative FP4 E2M1 grid in code order: `value(code) = ±FP4_GRID[code & 7]`.
+pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Encode an on-grid E2M1 value (an output of `fp4_e2m1`) into its
+/// 4-bit code.  Panics on NaN or off-grid inputs — packing only ever
+/// sees values the element codec itself produced.
+pub fn fp4_code(e: f32) -> u8 {
+    let sign = if e.is_sign_negative() { 8u8 } else { 0u8 };
+    let ax = e.abs();
+    for (i, &g) in FP4_GRID.iter().enumerate() {
+        if ax == g {
+            return sign | (i as u8);
+        }
+    }
+    panic!("fp4_code: {e} is not on the E2M1 grid");
+}
+
+/// Decode a 4-bit E2M1 code.  Preserves the sign of zero (code 0x8 is
+/// −0.0), matching what `fp4_e2m1` returns for negative underflow.
+#[inline]
+pub fn fp4_value(code: u8) -> f32 {
+    let mag = FP4_GRID[usize::from(code & 7)];
+    if code & 8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Encode an on-grid E4M3 value (an output of `fp8_e4m3`) into its
+/// 8-bit code: sign | exp(bias 7) << 3 | top-3 mantissa bits.
+pub fn e4m3_code(e: f32) -> u8 {
+    assert!(e.is_finite(), "e4m3_code: {e} is not a finite E4M3 value");
+    let sign = if e.is_sign_negative() { 0x80u8 } else { 0u8 };
+    let ax = e.abs();
+    if ax == 0.0 {
+        return sign;
+    }
+    let bits = ax.to_bits();
+    let exp = i64::from((bits >> 23) & 0xFF) - 127; // unbiased f32 exponent
+    if exp >= -6 {
+        // Normal E4M3 range: exponent field 1..=15, top 3 mantissa bits.
+        let ef = exp + 7;
+        assert!(
+            (1..=15).contains(&ef) && bits & 0x000F_FFFF == 0,
+            "e4m3_code: {e} is not on the E4M3 grid"
+        );
+        let m3 = ((bits >> 20) & 0x7) as u8;
+        sign | ((ef as u8) << 3) | m3
+    } else {
+        // Subnormal: value = m · 2⁻⁹ with m ∈ 1..=7 (exp field 0).
+        let m = ax * 512.0;
+        assert!(
+            m.fract() == 0.0 && (1.0..=7.0).contains(&m),
+            "e4m3_code: {e} is not on the E4M3 grid"
+        );
+        sign | (m as u8)
+    }
+}
+
+/// Decode an 8-bit E4M3 code.  Exact in f32 (power-of-two exponent
+/// scaling of a 3-bit mantissa); preserves −0.0 via negation.
+#[inline]
+pub fn e4m3_value(code: u8) -> f32 {
+    let ef = (code >> 3) & 0xF;
+    let m = f32::from(code & 7);
+    let mag = if ef == 0 {
+        m * (-9.0f32).exp2()
+    } else {
+        (1.0 + m / 8.0) * (f32::from(ef) - 7.0).exp2()
+    };
+    if code & 0x80 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// All 256 E4M3 code values, decoded once: `e4m3_lut()[c]` is exactly
+/// `e4m3_value(c as u8)`, so the table-driven FP8 decode in
+/// `decode_block_run` is bit-identical to calling the codec per
+/// element — the per-call `exp2` is what dominated FP8 panel decode.
+fn e4m3_lut() -> &'static [f32; 256] {
+    static LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (c, v) in t.iter_mut().enumerate() {
+            *v = e4m3_value(c as u8);
+        }
+        t
+    })
+}
+
+/// A block-quantized matrix in packed storage: codes two-per-byte for
+/// FP4 formats (one byte per code for FP8) plus a separate per-block
+/// f32 scale array.  Produced by `blockq::pack_matrix_along`; consumed
+/// natively by `linalg::qgemm` without materialising the dense form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedQMatrix {
+    pub fmt: Format,
+    pub rows: usize,
+    pub cols: usize,
+    /// Block axis: 0 = scale blocks run down columns (weight-style),
+    /// 1 = along rows (activation-style).
+    pub axis: usize,
+    pub(crate) codes: Vec<u8>,
+    pub(crate) scales: Vec<f32>,
+}
+
+impl PackedQMatrix {
+    /// Number of lines (rows when axis 1, columns when axis 0).
+    pub fn line_count(&self) -> usize {
+        if self.axis == 1 {
+            self.rows
+        } else {
+            self.cols
+        }
+    }
+
+    /// Elements per line (cols when axis 1, rows when axis 0).
+    pub fn line_len(&self) -> usize {
+        if self.axis == 1 {
+            self.cols
+        } else {
+            self.rows
+        }
+    }
+
+    /// Scale blocks per line.
+    pub fn blocks_per_line(&self) -> usize {
+        self.line_len().div_ceil(self.fmt.block())
+    }
+
+    /// Code bytes per line (lines are byte-aligned).
+    pub fn code_stride(&self) -> usize {
+        code_stride(self.fmt, self.line_len())
+    }
+
+    /// True packed footprint in bytes: nibble/byte codes + f32 scales.
+    /// This is what the `packed_bytes` metric now reports for factors.
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len()
+    }
+
+    /// Decode elements `start .. start + out.len()` of one line into
+    /// f64, applying per-block scales.  This is the panel-decode the
+    /// qgemm packing routines call; the AVX2 bulk path and the scalar
+    /// path produce bit-identical output (table lookup + one f32
+    /// multiply + exact widening in both).
+    pub fn decode_line_into(&self, line: usize, start: usize, out: &mut [f64]) {
+        let llen = self.line_len();
+        assert!(line < self.line_count() && start + out.len() <= llen);
+        let block = self.fmt.block();
+        let ls = line * self.code_stride();
+        let sb = line * self.blocks_per_line();
+        let mut e = start;
+        let mut w = 0;
+        while w < out.len() {
+            let b = e / block;
+            let seg_end = ((b + 1) * block).min(start + out.len());
+            let s = self.scales[sb + b];
+            self.decode_block_run(ls, e, s, &mut out[w..w + (seg_end - e)]);
+            w += seg_end - e;
+            e = seg_end;
+        }
+    }
+
+    /// Decode a run of elements that all share one scale.  `e` is the
+    /// element index within the line; `ls` the line's first code byte.
+    fn decode_block_run(&self, ls: usize, e: usize, s: f32, out: &mut [f64]) {
+        if self.fmt == Format::Fp8 {
+            let lut = e4m3_lut();
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f64::from(lut[usize::from(self.codes[ls + e + i])] * s);
+            }
+            return;
+        }
+        let mut e = e;
+        let mut out = out;
+        // Leading odd element: high nibble of a shared byte.
+        if e & 1 == 1 && !out.is_empty() {
+            out[0] = f64::from(fp4_value(self.codes[ls + e / 2] >> 4) * s);
+            e += 1;
+            out = &mut out[1..];
+        }
+        #[cfg(target_arch = "x86_64")]
+        if crate::linalg::kernels::simd_active() {
+            while out.len() >= 8 {
+                let byte = ls + e / 2;
+                // SAFETY: simd_active() implies AVX2 was detected at
+                // runtime; the slice bounds were checked by the caller
+                // (8 elements = 4 code bytes, 8 output f64s).
+                unsafe {
+                    decode8_fp4_avx2(&self.codes[byte..byte + 4], s, out.as_mut_ptr());
+                }
+                e += 8;
+                out = &mut out[8..];
+            }
+        }
+        // Portable tail / fallback: byte pairs then a trailing nibble.
+        let mut i = 0;
+        while i + 2 <= out.len() {
+            let byte = self.codes[ls + e / 2];
+            out[i] = f64::from(fp4_value(byte & 0xF) * s);
+            out[i + 1] = f64::from(fp4_value(byte >> 4) * s);
+            e += 2;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = f64::from(fp4_value(self.codes[ls + e / 2] & 0xF) * s);
+        }
+    }
+
+    /// Decode one element (row `r`, col `c`) — strided scalar access.
+    pub fn decode_at(&self, r: usize, c: usize) -> f64 {
+        let (line, e) = if self.axis == 1 { (r, c) } else { (c, r) };
+        let s = self.scales[line * self.blocks_per_line() + e / self.fmt.block()];
+        let v = if self.fmt == Format::Fp8 {
+            e4m3_value(self.codes[line * self.code_stride() + e])
+        } else {
+            let byte = self.codes[line * self.code_stride() + e / 2];
+            fp4_value((byte >> (4 * (e & 1))) & 0xF)
+        };
+        f64::from(v * s)
+    }
+
+    /// Decode row `r` into `out` (length `cols`), whatever the axis.
+    /// Axis-1 rows are one contiguous line; axis-0 rows gather one
+    /// element from every column line.
+    pub fn row_into(&self, r: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cols);
+        if self.axis == 1 {
+            self.decode_line_into(r, 0, out);
+        } else {
+            for (c, o) in out.iter_mut().enumerate() {
+                *o = self.decode_at(r, c);
+            }
+        }
+    }
+
+    /// Expand to a dense matrix — bit-identical to what
+    /// `quantize_matrix_along(fmt, a, axis)` produced for the packed
+    /// source.  This is the `qgemm_ref` oracle's first half.
+    pub fn unpack(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        if self.axis == 1 {
+            for r in 0..self.rows {
+                self.decode_line_into(r, 0, &mut out.data[r * self.cols..(r + 1) * self.cols]);
+            }
+        } else {
+            let mut col = vec![0.0f64; self.rows];
+            for c in 0..self.cols {
+                self.decode_line_into(c, 0, &mut col);
+                for (r, &v) in col.iter().enumerate() {
+                    out.data[r * self.cols + c] = v;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Code bytes for one line of `line_len` elements in `fmt`.
+pub(crate) fn code_stride(fmt: Format, line_len: usize) -> usize {
+    if fmt == Format::Fp8 {
+        line_len
+    } else {
+        line_len.div_ceil(2)
+    }
+}
+
+/// Encode one already-quantized element value into its code byte slot.
+#[inline]
+pub(crate) fn encode_into(fmt: Format, codes: &mut [u8], e_idx: usize, val: f32) {
+    if fmt == Format::Fp8 {
+        codes[e_idx] = e4m3_code(val);
+    } else {
+        let c = fp4_code(val);
+        codes[e_idx / 2] |= c << (4 * (e_idx & 1));
+    }
+}
+
+/// Decode 8 FP4 codes (4 bytes, low nibble first) sharing one scale
+/// into 8 f64s.  Bit-identical to the scalar path: the grid lookup,
+/// the sign flip (XOR on bit 31, so −0.0 survives), the single f32
+/// multiply by the scale, and the exact f32→f64 widening are the same
+/// operations the scalar decoder performs.
+// SAFETY: caller must guarantee AVX2 is available
+// (`simd_active()`), `codes` holds at least 4 bytes, and `out` points
+// at at least 8 writable f64 slots.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode8_fp4_avx2(codes: &[u8], s: f32, out: *mut f64) {
+    use std::arch::x86_64::*;
+    let w = i32::from_le_bytes([codes[0], codes[1], codes[2], codes[3]]);
+    let v = _mm256_set1_epi32(w);
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let nib = _mm256_srlv_epi32(v, shifts);
+    let idx = _mm256_and_si256(nib, _mm256_set1_epi32(7));
+    // bit 3 of the nibble → bit 31: an IEEE sign mask to XOR in.
+    let sign = _mm256_slli_epi32::<28>(_mm256_and_si256(nib, _mm256_set1_epi32(8)));
+    let grid = _mm256_loadu_ps(FP4_GRID.as_ptr());
+    let mag = _mm256_permutevar8x32_ps(grid, idx);
+    let vals = _mm256_xor_ps(mag, _mm256_castsi256_ps(sign));
+    let scaled = _mm256_mul_ps(vals, _mm256_set1_ps(s));
+    let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(scaled));
+    let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(scaled));
+    _mm256_storeu_pd(out, lo);
+    _mm256_storeu_pd(out.add(4), hi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::codecs::{fp4_e2m1, fp8_e4m3};
+
+    #[test]
+    fn fp4_codec_roundtrips_all_codes() {
+        for code in 0u8..16 {
+            let v = fp4_value(code);
+            assert_eq!(fp4_code(v), code, "code {code} → {v}");
+            // −0.0 must keep its sign bit through the round trip.
+            if code == 8 {
+                assert!(v == 0.0 && v.is_sign_negative());
+            }
+        }
+    }
+
+    #[test]
+    fn fp4_code_matches_element_codec_bitwise() {
+        let mut x = -8.0f32;
+        while x < 8.0 {
+            let e = fp4_e2m1(x);
+            let rt = fp4_value(fp4_code(e));
+            assert_eq!(e.to_bits(), rt.to_bits(), "x={x} e={e} rt={rt}");
+            x += 0.0137;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not on the E2M1 grid")]
+    fn fp4_code_rejects_off_grid() {
+        fp4_code(0.7);
+    }
+
+    #[test]
+    fn e4m3_codec_roundtrips_all_finite_codes() {
+        for code in 0u8..=255 {
+            if (code >> 3) & 0xF == 0xF && code & 7 == 7 {
+                continue; // S.1111.111 = NaN in OCP E4M3; codec never emits it
+            }
+            let v = e4m3_value(code);
+            assert_eq!(e4m3_code(v), code, "code {code} → {v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_code_matches_element_codec_bitwise() {
+        // Sweep normals, subnormals, saturation, and negative zero.
+        let mut x = 1e-4f32;
+        while x < 600.0 {
+            for e in [fp8_e4m3(x), fp8_e4m3(-x)] {
+                let rt = e4m3_value(e4m3_code(e));
+                assert_eq!(e.to_bits(), rt.to_bits(), "x={x} e={e}");
+            }
+            x *= 1.177;
+        }
+        let nz = fp8_e4m3(-1e-10);
+        assert!(nz.is_sign_negative() && nz == 0.0);
+        assert_eq!(e4m3_value(e4m3_code(nz)).to_bits(), nz.to_bits());
+    }
+
+    #[test]
+    fn e4m3_lut_matches_codec_bitwise() {
+        // The FP8 decode hot path reads the table instead of calling
+        // the codec; every slot must hold the codec's exact bits
+        // (including -0.0 at 0x80).
+        for (c, &v) in e4m3_lut().iter().enumerate() {
+            assert_eq!(v.to_bits(), e4m3_value(c as u8).to_bits(), "code {c}");
+        }
+    }
+
+    #[test]
+    fn packed_bytes_counts_quarter_precision() {
+        use crate::formats::blockq::pack_matrix_along;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(11);
+        let a = Matrix::gaussian(&mut rng, 64, 64, 1.0);
+        let p = pack_matrix_along(Format::Mxfp4, &a, 0);
+        // 64×64 fp4 codes = 2048 bytes + 64·2 block scales · 4 bytes.
+        assert_eq!(p.packed_bytes(), 64 * 64 / 2 + 64 * 2 * 4);
+        let dense_bytes = 8 * a.data.len();
+        assert!(p.packed_bytes() * 4 < dense_bytes);
+    }
+
+    #[test]
+    fn decode_line_handles_unaligned_starts() {
+        use crate::formats::blockq::pack_matrix_along;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(12);
+        for fmt in Format::ALL {
+            let a = Matrix::gaussian(&mut rng, 3, 77, 1.5);
+            let p = pack_matrix_along(fmt, &a, 1);
+            let full = p.unpack();
+            for start in [0usize, 1, 2, 15, 16, 17, 33, 76] {
+                for len in [0usize, 1, 2, 7, 8, 9, 31, 77 - start] {
+                    if start + len > 77 {
+                        continue;
+                    }
+                    let mut out = vec![0.0f64; len];
+                    p.decode_line_into(1, start, &mut out);
+                    for (i, &v) in out.iter().enumerate() {
+                        assert_eq!(
+                            v.to_bits(),
+                            full.data[77 + start + i].to_bits(),
+                            "{} start {start} len {len} i {i}",
+                            fmt.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -32,6 +32,7 @@
 //! property tests pin the tiled kernels against.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 
 use crate::tensor::Matrix;
 use crate::util::workpool::WorkPool;
@@ -41,12 +42,64 @@ pub const MR: usize = 4;
 /// Microkernel columns — two 4-wide vector lanes per row on AVX2.
 pub const NR: usize = 8;
 /// Contraction panel depth: `KC`·`MR` packed A floats ≈ 8 KB, L1-sized.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 /// 2·m·n·k threshold above which a product fans its output rows across
 /// the persistent pool (256³ and up qualify; 64³ stays serial).
-const PAR_FLOPS: usize = 4_000_000;
+pub(crate) const PAR_FLOPS: usize = 4_000_000;
+/// Output width at which [`gemm_rows`] switches to the BLIS jc→pc→ic
+/// nest with an explicitly packed B panel.  Below this, the kc×n B
+/// window still fits cache and the extra copy only costs.
+pub(crate) const PACKB_MIN_N: usize = 512;
+/// BLIS jc block: columns of B packed per panel (KC·NC f64 = 2 MB,
+/// L2/L3-resident while the ic loop sweeps every row over it).
+pub(crate) const NC: usize = 1024;
 
 static REFERENCE: AtomicBool = AtomicBool::new(false);
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+/// Force the portable autovectorized microkernel (and the scalar
+/// packed-nibble decoder) even when AVX2/NEON was detected — the
+/// bench/test hook behind `--simd portable`.  Both variants are
+/// bit-identical, so flipping this never changes results, only speed.
+pub fn set_force_portable(on: bool) {
+    FORCE_PORTABLE.store(on, Ordering::SeqCst);
+}
+
+fn detected_simd() -> &'static str {
+    static DETECTED: OnceLock<&'static str> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return "avx2";
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return "neon";
+            }
+        }
+        "portable"
+    })
+}
+
+/// The microkernel variant this process dispatches to: `"avx2"`,
+/// `"neon"`, or `"portable"`.  Detected once at first use; recorded in
+/// the `run.json` manifest and the metrics snapshot so bench artifacts
+/// from different machines are distinguishable.
+pub fn simd_feature() -> &'static str {
+    if FORCE_PORTABLE.load(Ordering::SeqCst) {
+        "portable"
+    } else {
+        detected_simd()
+    }
+}
+
+/// Whether the explicit-SIMD kernel paths are live right now.
+pub(crate) fn simd_active() -> bool {
+    !FORCE_PORTABLE.load(Ordering::SeqCst) && detected_simd() != "portable"
+}
 
 /// Route [`matmul`]/[`matmul_at_b`]/[`matmul_a_bt`] (and the fused
 /// block quantizer, which checks the same flag) through the preserved
@@ -93,11 +146,46 @@ pub fn matmul_ref(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// acc += Apanel · Bpanel over one `kc`-deep contraction window.
 /// `apack` is `kc`×`MR` (row-padded with zeros), `b` holds `NR`-wide
-/// row strips at stride `ldb`.  Constant-bound inner loops over
-/// fixed-size array views: LLVM keeps `acc` in registers and emits
-/// `MR`·`NR`-lane FMA chains.
+/// row strips at stride `ldb`.  Dispatches to the explicit-SIMD
+/// variant selected at startup ([`simd_feature`]); all variants apply
+/// the identical mul-then-add sequence per lane in the identical
+/// order, so the choice never changes a bit of output.
 #[inline(always)]
-fn microkernel(kc: usize, apack: &[f64], b: &[f64], ldb: usize, acc: &mut [[f64; NR]; MR]) {
+pub(crate) fn microkernel(
+    kc: usize,
+    apack: &[f64],
+    b: &[f64],
+    ldb: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected on this CPU
+        // at runtime; the variant asserts its own slice bounds.
+        unsafe { microkernel_avx2(kc, apack, b, ldb, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_active() {
+        // SAFETY: simd_active() implies NEON was detected at runtime;
+        // the variant asserts its own slice bounds.
+        unsafe { microkernel_neon(kc, apack, b, ldb, acc) };
+        return;
+    }
+    microkernel_portable(kc, apack, b, ldb, acc);
+}
+
+/// Portable autovectorized microkernel body: constant-bound inner
+/// loops over fixed-size array views — LLVM keeps `acc` in registers
+/// and emits `MR`·`NR`-lane mul/add chains.
+#[inline(always)]
+fn microkernel_portable(
+    kc: usize,
+    apack: &[f64],
+    b: &[f64],
+    ldb: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
     for (p, ap) in apack.chunks_exact(MR).take(kc).enumerate() {
         let bp: &[f64; NR] = b[p * ldb..p * ldb + NR].try_into().unwrap();
         for (accr, &arp) in acc.iter_mut().zip(ap) {
@@ -108,9 +196,112 @@ fn microkernel(kc: usize, apack: &[f64], b: &[f64], ldb: usize, acc: &mut [[f64;
     }
 }
 
+/// AVX2 microkernel: 8 ymm accumulators (MR rows × two 4-lane halves),
+/// broadcast-A × load-B per k step.  Uses separate `_mm256_mul_pd` +
+/// `_mm256_add_pd` — *not* FMA — because the portable kernel's `a*b`
+/// then `+=` rounds twice, and bit-identity across variants is the
+/// contract the oracle tests pin.
+// SAFETY: caller must guarantee AVX2 is available
+// (`simd_active()`); the slice-length asserts below make the raw
+// pointer arithmetic in-bounds for any caller that passes them.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_avx2(
+    kc: usize,
+    apack: &[f64],
+    b: &[f64],
+    ldb: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    assert!(apack.len() >= kc * MR);
+    assert!(kc == 0 || b.len() >= (kc - 1) * ldb + NR);
+    let mut r0a = _mm256_loadu_pd(acc[0].as_ptr());
+    let mut r0b = _mm256_loadu_pd(acc[0].as_ptr().add(4));
+    let mut r1a = _mm256_loadu_pd(acc[1].as_ptr());
+    let mut r1b = _mm256_loadu_pd(acc[1].as_ptr().add(4));
+    let mut r2a = _mm256_loadu_pd(acc[2].as_ptr());
+    let mut r2b = _mm256_loadu_pd(acc[2].as_ptr().add(4));
+    let mut r3a = _mm256_loadu_pd(acc[3].as_ptr());
+    let mut r3b = _mm256_loadu_pd(acc[3].as_ptr().add(4));
+    for p in 0..kc {
+        let bp = b.as_ptr().add(p * ldb);
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        let ap = apack.as_ptr().add(p * MR);
+        let a0 = _mm256_set1_pd(*ap);
+        r0a = _mm256_add_pd(r0a, _mm256_mul_pd(a0, b0));
+        r0b = _mm256_add_pd(r0b, _mm256_mul_pd(a0, b1));
+        let a1 = _mm256_set1_pd(*ap.add(1));
+        r1a = _mm256_add_pd(r1a, _mm256_mul_pd(a1, b0));
+        r1b = _mm256_add_pd(r1b, _mm256_mul_pd(a1, b1));
+        let a2 = _mm256_set1_pd(*ap.add(2));
+        r2a = _mm256_add_pd(r2a, _mm256_mul_pd(a2, b0));
+        r2b = _mm256_add_pd(r2b, _mm256_mul_pd(a2, b1));
+        let a3 = _mm256_set1_pd(*ap.add(3));
+        r3a = _mm256_add_pd(r3a, _mm256_mul_pd(a3, b0));
+        r3b = _mm256_add_pd(r3b, _mm256_mul_pd(a3, b1));
+    }
+    _mm256_storeu_pd(acc[0].as_mut_ptr(), r0a);
+    _mm256_storeu_pd(acc[0].as_mut_ptr().add(4), r0b);
+    _mm256_storeu_pd(acc[1].as_mut_ptr(), r1a);
+    _mm256_storeu_pd(acc[1].as_mut_ptr().add(4), r1b);
+    _mm256_storeu_pd(acc[2].as_mut_ptr(), r2a);
+    _mm256_storeu_pd(acc[2].as_mut_ptr().add(4), r2b);
+    _mm256_storeu_pd(acc[3].as_mut_ptr(), r3a);
+    _mm256_storeu_pd(acc[3].as_mut_ptr().add(4), r3b);
+}
+
+/// NEON microkernel: 16 two-lane accumulators, `vmulq_f64` +
+/// `vaddq_f64` (no fused multiply-add, for the same bit-identity
+/// contract as the AVX2 variant).
+// SAFETY: caller must guarantee NEON is available
+// (`simd_active()`); the slice-length asserts below make the raw
+// pointer arithmetic in-bounds for any caller that passes them.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(
+    kc: usize,
+    apack: &[f64],
+    b: &[f64],
+    ldb: usize,
+    acc: &mut [[f64; NR]; MR],
+) {
+    use std::arch::aarch64::*;
+    assert!(apack.len() >= kc * MR);
+    assert!(kc == 0 || b.len() >= (kc - 1) * ldb + NR);
+    let mut regs = [[vdupq_n_f64(0.0); 4]; MR];
+    for (r, row) in regs.iter_mut().enumerate() {
+        for (h, reg) in row.iter_mut().enumerate() {
+            *reg = vld1q_f64(acc[r].as_ptr().add(2 * h));
+        }
+    }
+    for p in 0..kc {
+        let bp = b.as_ptr().add(p * ldb);
+        let bv = [
+            vld1q_f64(bp),
+            vld1q_f64(bp.add(2)),
+            vld1q_f64(bp.add(4)),
+            vld1q_f64(bp.add(6)),
+        ];
+        let ap = apack.as_ptr().add(p * MR);
+        for (r, row) in regs.iter_mut().enumerate() {
+            let ar = vdupq_n_f64(*ap.add(r));
+            for (reg, &bq) in row.iter_mut().zip(bv.iter()) {
+                *reg = vaddq_f64(*reg, vmulq_f64(ar, bq));
+            }
+        }
+    }
+    for (r, row) in regs.iter().enumerate() {
+        for (h, &reg) in row.iter().enumerate() {
+            vst1q_f64(acc[r].as_mut_ptr().add(2 * h), reg);
+        }
+    }
+}
+
 /// Accumulate a finished register tile into `mr`×`nr` of C.
 #[inline(always)]
-fn flush_acc(
+pub(crate) fn flush_acc(
     acc: &[[f64; NR]; MR],
     c: &mut [f64],
     ldc: usize,
@@ -213,6 +404,9 @@ fn gemm_rows(
     rows: std::ops::Range<usize>,
     c: &mut [f64],
 ) {
+    if n >= PACKB_MIN_N {
+        return gemm_rows_packed(a, k, b, n, rows, c);
+    }
     let mut p0 = 0;
     while p0 < k {
         let kc = KC.min(k - p0);
@@ -226,6 +420,63 @@ fn gemm_rows(
             c,
         );
         p0 += KC;
+    }
+}
+
+/// BLIS-style jc→pc→ic nest with an explicitly packed B panel, used
+/// for wide outputs (n ≥ [`PACKB_MIN_N`]).  The kc×nc panel of B is
+/// copied once into NR-wide strips (strip `js` = columns jc+js·NR…,
+/// row stride NR, zero-padded tail), then every A row block streams it
+/// sequentially — closing the 1024²-class gap where streaming B at
+/// stride n missed in cache on every strip.  Per-(i,j) summation order
+/// (panels ascending p0, ascending p within a panel, one flush per
+/// panel) is exactly the kc_pass order, so output bits are unchanged.
+fn gemm_rows_packed(
+    a: &[f64],
+    k: usize,
+    b: &[f64],
+    n: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f64],
+) {
+    let mut apack = [0.0f64; KC * MR];
+    let mut bpack = vec![0.0f64; KC * NC];
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let nstrips = nc.div_ceil(NR);
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            for js in 0..nstrips {
+                let j0 = jc + js * NR;
+                let nr = NR.min(n - j0);
+                let dst0 = js * KC * NR;
+                for p in 0..kc {
+                    let src = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + nr];
+                    let dst = &mut bpack[dst0 + p * NR..dst0 + p * NR + NR];
+                    dst[..nr].copy_from_slice(src);
+                    for d in dst[nr..].iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let mut i0 = rows.start;
+            while i0 < rows.end {
+                let mr = MR.min(rows.end - i0);
+                APack::Rows { a, lda: k }.pack(i0, mr, p0, kc, &mut apack);
+                for js in 0..nstrips {
+                    let j0 = jc + js * NR;
+                    let nr = NR.min(n - j0);
+                    let mut acc = [[0.0f64; NR]; MR];
+                    microkernel(kc, &apack, &bpack[js * KC * NR..], NR, &mut acc);
+                    flush_acc(&acc, c, n, i0, j0, mr, nr);
+                }
+                i0 += MR;
+            }
+            p0 += KC;
+        }
+        jc += NC;
     }
 }
 
@@ -299,7 +550,7 @@ fn gemm_bt_rows(
 /// over each on the persistent pool (serial when `parts == 1`).  Each
 /// chunk is the identical serial computation on a disjoint C slice, so
 /// the output is bit-identical for any pool size.
-fn run_row_partitioned<F>(m: usize, n: usize, flops: usize, c: &mut [f64], f: F)
+pub(crate) fn run_row_partitioned<F>(m: usize, n: usize, flops: usize, c: &mut [f64], f: F)
 where
     F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
 {
@@ -339,7 +590,7 @@ where
 /// (a taint-exempt module): the elapsed time feeds only telemetry
 /// histograms, never a numeric result, and metis-lint's taint pass
 /// enforces that kernels touch clocks solely through sanctioned paths.
-struct GemmProbe {
+pub(crate) struct GemmProbe {
     flops: usize,
     t0: crate::util::timer::Stopwatch,
     _span: Option<crate::obs::span::Span>,
@@ -348,13 +599,22 @@ struct GemmProbe {
 impl GemmProbe {
     #[inline]
     fn start(flops: usize) -> Option<GemmProbe> {
+        Self::start_named(flops, "gemm")
+    }
+
+    /// Probe under an explicit span name — `linalg::qgemm` opens
+    /// `"qgemm"` spans through this so packed contractions are
+    /// distinguishable in traces while sharing the GFLOP/s histograms.
+    #[inline]
+    pub(crate) fn start_named(flops: usize, name: &'static str) -> Option<GemmProbe> {
         if !crate::obs::enabled() {
             return None;
         }
+        crate::obs::metrics::record_kernel_dispatch(simd_active());
         Some(GemmProbe {
             flops,
             t0: crate::util::timer::Stopwatch::start(),
-            _span: (flops >= PAR_FLOPS).then(|| crate::obs::span::span("gemm")),
+            _span: (flops >= PAR_FLOPS).then(|| crate::obs::span::span(name)),
         })
     }
 }
@@ -561,6 +821,66 @@ mod tests {
     // flag is process-global and `cargo test` runs tests concurrently,
     // so toggling it here would race the equality assertions of other
     // tests.  The perf bench exercises the dispatch single-threaded.
+    // The same applies to `set_force_portable`; the SIMD variant is
+    // instead pinned against the portable body directly below, with no
+    // global flag involved.
+
+    #[test]
+    fn simd_microkernel_matches_portable_bitwise() {
+        // When a SIMD variant is live, `microkernel` dispatches to it;
+        // its mul-then-add lanes must reproduce the portable body bit
+        // for bit (trivially true on machines with no SIMD detected).
+        let mut rng = Rng::new(5);
+        for kc in [1usize, 2, 3, 7, 64, 255, 256] {
+            let apack: Vec<f64> = (0..KC * MR).map(|_| rng.gauss()).collect();
+            let b: Vec<f64> = (0..kc * NR).map(|_| rng.gauss()).collect();
+            let mut acc_d = [[0.0f64; NR]; MR];
+            for (r, row) in acc_d.iter_mut().enumerate() {
+                for (q, v) in row.iter_mut().enumerate() {
+                    *v = (r * NR + q) as f64 * 0.25 - 3.0;
+                }
+            }
+            let mut acc_p = acc_d;
+            microkernel(kc, &apack, &b, NR, &mut acc_d);
+            microkernel_portable(kc, &apack, &b, NR, &mut acc_p);
+            for (rd, rp) in acc_d.iter().zip(&acc_p) {
+                for (x, y) in rd.iter().zip(rp) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "kc {kc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_b_panel_is_bit_identical_to_streamed_b() {
+        // gemm_rows switches to the BLIS packed-B nest at
+        // PACKB_MIN_N; the reorder must not change a single bit (same
+        // per-element summation order).  Compare a wide product
+        // against the streamed kc_pass path invoked directly.
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (12, 300, PACKB_MIN_N + 13);
+        let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+        let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+        let mut want = Matrix::zeros(m, n);
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            kc_pass(
+                APack::Rows { a: &a.data, lda: k },
+                0..m,
+                p0,
+                kc,
+                &b.data[p0 * n..],
+                n,
+                &mut want.data,
+            );
+            p0 += KC;
+        }
+        let got = matmul_serial(&a, &b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
 
     #[test]
     fn dot_and_axpy_match_naive() {

@@ -4,11 +4,13 @@
 //! Rust-side mirror of the decomposition the training graph performs.
 
 pub mod kernels;
+pub mod qgemm;
 pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
 pub use kernels::{dot, matmul_at_b, matmul_a_bt};
+pub use qgemm::{qgemm, qgemm_ad, qgemm_at_b, qgemm_scaled};
 pub use qr::{householder_qr, QrResult};
 pub use rsvd::randomized_svd;
 pub use svd::{jacobi_svd, SvdResult};

@@ -1,0 +1,479 @@
+//! Dequant-free quantized GEMM: contract [`PackedQMatrix`] operands
+//! natively, without materializing dense f64 copies (ISSUE 9; the
+//! W4A4 compute claim of the paper, and the approach of "Pretraining
+//! LLMs with MXFP4 on Native FP4 Hardware" in PAPERS.md).
+//!
+//! The expand-then-matmul path streams 8 bytes per element of each
+//! quantized operand through the GEMM; here the hot loop reads nibble
+//! codes (half a byte) plus one f32 scale per block — ~¼ the operand
+//! bytes end to end — and decodes them straight into the register-
+//! blocked panels of `kernels`.  The per-block scale is fused at
+//! panel-decode time: `f64::from(code_value * scale)` is *exactly* the
+//! f32 product the quantizer stored, so the microkernel then runs the
+//! identical FMA sequence over identical f64 values and every entry
+//! point is **bit-identical** to its `_ref` oracle (unpack → dense
+//! tiled matmul).  Fusing the scale any later (inside the f64
+//! accumulator) would double-round PaperFp4/Fp8 products and break
+//! that contract.
+//!
+//! The loop nest is the BLIS jc→pc→ic order: per (jc, p0) the B panel
+//! is decoded once into NR-wide strips, then every MR-row A panel
+//! sweeps it.  Per-(i,j) summation order (panels ascending p0, fresh
+//! accumulator per panel, ascending p within a panel) matches
+//! `kernels::kc_pass` exactly, which is why the reorder — and the
+//! pool-parallel MR-aligned row split — never changes output bits.
+//!
+//! Dispatch mirrors PR 4's discipline: [`kernels::set_reference_mode`]
+//! (or [`set_qgemm_expand`], the `--qgemm expand` CLI hook) routes
+//! every call through the expand-then-matmul oracle.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::formats::pack::PackedQMatrix;
+use crate::linalg::kernels::{self, KC, MR, NC, NR};
+use crate::tensor::Matrix;
+
+static QGEMM_EXPAND: AtomicBool = AtomicBool::new(false);
+
+/// Route all qgemm entry points through their expand-then-matmul
+/// oracles (`--qgemm expand`).  Global and process-wide, like
+/// [`kernels::set_reference_mode`] — bench/CLI use only.
+pub fn set_qgemm_expand(on: bool) {
+    QGEMM_EXPAND.store(on, Ordering::SeqCst);
+}
+
+/// Whether the expand-then-matmul dispatch is active.
+pub fn qgemm_expand() -> bool {
+    QGEMM_EXPAND.load(Ordering::SeqCst)
+}
+
+fn dispatch_expand() -> bool {
+    kernels::reference_mode() || qgemm_expand()
+}
+
+// -- operand descriptors --------------------------------------------------
+
+/// How the logical m×k left operand is stored.
+enum AOp<'a> {
+    /// The packed matrix itself (m×k, either block axis).  `cscale`
+    /// multiplies column p of the decoded operand by `cscale[p]` — the
+    /// diag(S) factor of `Q(U)·S·Q(Vᵀ)` fused into panel packing.
+    Packed {
+        a: &'a PackedQMatrix,
+        cscale: Option<&'a [f64]>,
+    },
+    /// The transpose of a packed k×m matrix (the AᵀB variant).
+    PackedT { a: &'a PackedQMatrix },
+}
+
+/// How the logical k×n right operand is stored.
+enum BOp<'a> {
+    /// Dense row-major k×`ldb`.
+    Dense { b: &'a [f64], ldb: usize },
+    /// Packed k×n, either block axis.
+    Packed { b: &'a PackedQMatrix },
+}
+
+/// Decode rows [i0, i0+mr) × contraction window [p0, p0+kc) of the
+/// logical left operand into the `kc`×`MR` packed panel (zero-padding
+/// rows ≥ mr), fusing `cscale` where present.  Lines that run along
+/// the contraction axis decode contiguously per output row (then
+/// scatter); lines along the row axis decode straight into the panel.
+fn pack_a(aop: &AOp<'_>, i0: usize, mr: usize, p0: usize, kc: usize, apack: &mut [f64], tmp: &mut [f64]) {
+    match *aop {
+        AOp::Packed { a, cscale } => {
+            if a.axis == 1 {
+                pack_a_lines_along_k(a, i0, mr, p0, kc, cscale, apack, tmp);
+            } else {
+                pack_a_lines_along_m(a, i0, mr, p0, kc, cscale, apack);
+            }
+        }
+        AOp::PackedT { a } => {
+            // a is k×m; logical A[i][p] = a[p][i].  Axis-0 lines are
+            // columns of a = logical rows; axis-1 lines are logical
+            // column runs.
+            if a.axis == 0 {
+                pack_a_lines_along_k(a, i0, mr, p0, kc, None, apack, tmp);
+            } else {
+                pack_a_lines_along_m(a, i0, mr, p0, kc, None, apack);
+            }
+        }
+    }
+}
+
+fn pack_a_lines_along_k(
+    a: &PackedQMatrix,
+    i0: usize,
+    mr: usize,
+    p0: usize,
+    kc: usize,
+    cscale: Option<&[f64]>,
+    apack: &mut [f64],
+    tmp: &mut [f64],
+) {
+    for rr in 0..MR {
+        if rr < mr {
+            a.decode_line_into(i0 + rr, p0, &mut tmp[..kc]);
+            if let Some(s) = cscale {
+                for (t, &sv) in tmp[..kc].iter_mut().zip(&s[p0..p0 + kc]) {
+                    *t *= sv;
+                }
+            }
+            for (p, &v) in tmp[..kc].iter().enumerate() {
+                apack[p * MR + rr] = v;
+            }
+        } else {
+            for p in 0..kc {
+                apack[p * MR + rr] = 0.0;
+            }
+        }
+    }
+}
+
+fn pack_a_lines_along_m(
+    a: &PackedQMatrix,
+    i0: usize,
+    mr: usize,
+    p0: usize,
+    kc: usize,
+    cscale: Option<&[f64]>,
+    apack: &mut [f64],
+) {
+    for p in 0..kc {
+        let dst = &mut apack[p * MR..p * MR + MR];
+        a.decode_line_into(p0 + p, i0, &mut dst[..mr]);
+        if let Some(s) = cscale {
+            let sv = s[p0 + p];
+            for d in dst[..mr].iter_mut() {
+                *d *= sv;
+            }
+        }
+        for d in dst[mr..].iter_mut() {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Decode the contraction window [p0, p0+kc) × columns [j0, j0+nr) of
+/// the logical right operand into one NR-wide strip (row stride NR,
+/// zero-padded columns ≥ nr).
+fn pack_b(bop: &BOp<'_>, p0: usize, kc: usize, j0: usize, nr: usize, strip: &mut [f64], tmp: &mut [f64]) {
+    match *bop {
+        BOp::Dense { b, ldb } => {
+            for p in 0..kc {
+                let src = &b[(p0 + p) * ldb + j0..(p0 + p) * ldb + j0 + nr];
+                let dst = &mut strip[p * NR..p * NR + NR];
+                dst[..nr].copy_from_slice(src);
+                for d in dst[nr..].iter_mut() {
+                    *d = 0.0;
+                }
+            }
+        }
+        BOp::Packed { b } => {
+            if b.axis == 0 {
+                // Lines are columns (length k): decode column j's
+                // window contiguously, scatter at stride NR.
+                for jj in 0..NR {
+                    if jj < nr {
+                        b.decode_line_into(j0 + jj, p0, &mut tmp[..kc]);
+                        for (p, &v) in tmp[..kc].iter().enumerate() {
+                            strip[p * NR + jj] = v;
+                        }
+                    } else {
+                        for p in 0..kc {
+                            strip[p * NR + jj] = 0.0;
+                        }
+                    }
+                }
+            } else {
+                // Lines are rows (length n): each k step decodes its
+                // nr-wide run straight into the strip.
+                for p in 0..kc {
+                    let dst = &mut strip[p * NR..p * NR + NR];
+                    b.decode_line_into(p0 + p, j0, &mut dst[..nr]);
+                    for d in dst[nr..].iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serial BLIS-ordered qgemm over an output row range: C[rows] +=
+/// A'[rows]·B'.  `c` is the local slice covering exactly `rows` (the
+/// pool partitioner hands out disjoint row-range slices).
+fn qgemm_rows(
+    aop: &AOp<'_>,
+    k: usize,
+    bop: &BOp<'_>,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f64],
+) {
+    let mut apack = [0.0f64; KC * MR];
+    let mut tmp = [0.0f64; KC];
+    let strips_cap = (NC / NR).min(n.div_ceil(NR).max(1));
+    let mut bpack = vec![0.0f64; KC * NR * strips_cap];
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let nstrips = nc.div_ceil(NR);
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            for js in 0..nstrips {
+                let j0 = jc + js * NR;
+                let nr = NR.min(n - j0);
+                pack_b(
+                    bop,
+                    p0,
+                    kc,
+                    j0,
+                    nr,
+                    &mut bpack[js * KC * NR..(js + 1) * KC * NR],
+                    &mut tmp,
+                );
+            }
+            let mut i0 = rows.start;
+            while i0 < rows.end {
+                let mr = MR.min(rows.end - i0);
+                pack_a(aop, i0, mr, p0, kc, &mut apack, &mut tmp);
+                for js in 0..nstrips {
+                    let j0 = jc + js * NR;
+                    let nr = NR.min(n - j0);
+                    let mut acc = [[0.0f64; NR]; MR];
+                    kernels::microkernel(kc, &apack, &bpack[js * KC * NR..], NR, &mut acc);
+                    kernels::flush_acc(&acc, c, n, i0 - rows.start, j0, mr, nr);
+                }
+                i0 += MR;
+            }
+            p0 += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Shared driver: probe, pool partition, panel dispatch.
+fn drive(m: usize, k: usize, n: usize, aop: &AOp<'_>, bop: &BOp<'_>) -> Matrix {
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let flops = 2 * m * n * k;
+    crate::obs::metrics::record_qgemm_call();
+    let _probe = kernels::GemmProbe::start_named(flops, "qgemm");
+    kernels::run_row_partitioned(m, n, flops, &mut c.data, |rows, cslice| {
+        qgemm_rows(aop, k, bop, n, rows, cslice);
+    });
+    c
+}
+
+// -- public entry points + oracles ----------------------------------------
+
+/// C = A·B over two packed operands.
+pub fn qgemm(a: &PackedQMatrix, b: &PackedQMatrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "qgemm dim mismatch");
+    if dispatch_expand() {
+        return qgemm_ref(a, b);
+    }
+    drive(
+        a.rows,
+        a.cols,
+        b.cols,
+        &AOp::Packed { a, cscale: None },
+        &BOp::Packed { b },
+    )
+}
+
+/// Expand-then-matmul oracle for [`qgemm`] — unpack both operands and
+/// run the dense tiled kernel.  The fast path must match this bit for
+/// bit (enforced by the property tests below and the bench).
+pub fn qgemm_ref(a: &PackedQMatrix, b: &PackedQMatrix) -> Matrix {
+    a.unpack().matmul(&b.unpack())
+}
+
+/// C = A·diag(s)·B — the `Q(U) S Q(Vᵀ)` contraction with the singular
+/// values fused into panel packing instead of a `scale_cols` copy.
+pub fn qgemm_scaled(a: &PackedQMatrix, s: &[f64], b: &PackedQMatrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "qgemm_scaled dim mismatch");
+    assert_eq!(a.cols, s.len(), "qgemm_scaled scale length mismatch");
+    if dispatch_expand() {
+        return qgemm_scaled_ref(a, s, b);
+    }
+    drive(
+        a.rows,
+        a.cols,
+        b.cols,
+        &AOp::Packed { a, cscale: Some(s) },
+        &BOp::Packed { b },
+    )
+}
+
+/// Oracle for [`qgemm_scaled`]: unpack → `scale_cols` → dense matmul.
+pub fn qgemm_scaled_ref(a: &PackedQMatrix, s: &[f64], b: &PackedQMatrix) -> Matrix {
+    a.unpack().scale_cols(s).matmul(&b.unpack())
+}
+
+/// C = A·B with packed A (quantized activations) and dense B.
+pub fn qgemm_ad(a: &PackedQMatrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "qgemm_ad dim mismatch");
+    if dispatch_expand() {
+        return qgemm_ad_ref(a, b);
+    }
+    drive(
+        a.rows,
+        a.cols,
+        b.cols,
+        &AOp::Packed { a, cscale: None },
+        &BOp::Dense {
+            b: &b.data,
+            ldb: b.cols,
+        },
+    )
+}
+
+/// Oracle for [`qgemm_ad`].
+pub fn qgemm_ad_ref(a: &PackedQMatrix, b: &Matrix) -> Matrix {
+    a.unpack().matmul(b)
+}
+
+/// C = Aᵀ·B with packed k×m A and dense k×n B — the `Q(U)ᵀ·W` step of
+/// `PackedWeight::refresh`, without materializing dense Q(U).
+pub fn qgemm_at_b(a: &PackedQMatrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "qgemm_at_b dim mismatch");
+    if dispatch_expand() {
+        return qgemm_at_b_ref(a, b);
+    }
+    drive(
+        a.cols,
+        a.rows,
+        b.cols,
+        &AOp::PackedT { a },
+        &BOp::Dense {
+            b: &b.data,
+            ldb: b.cols,
+        },
+    )
+}
+
+/// Oracle for [`qgemm_at_b`]: unpack → fused-transpose dense kernel.
+pub fn qgemm_at_b_ref(a: &PackedQMatrix, b: &Matrix) -> Matrix {
+    kernels::matmul_at_b(&a.unpack(), b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{pack_matrix_along, Format};
+    use crate::util::prng::Rng;
+
+    fn assert_bits_eq(got: &Matrix, want: &Matrix, ctx: &str) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{ctx}");
+        for (i, (&g, &w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{ctx} elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn packed_qgemm_matches_oracle_all_formats_axes_shapes() {
+        // The tentpole contract: native packed contraction ==
+        // expand-then-matmul, bit for bit, for every format, both
+        // block axes on both operands, tail blocks, and empty shapes.
+        let mut rng = Rng::new(31);
+        for fmt in Format::ALL {
+            for (m, k, n) in [
+                (1usize, 1usize, 1usize),
+                (3, 17, 5),
+                (8, 32, 8),
+                (13, 33, 29),
+                (32, 130, 48),
+                (0, 5, 4),
+                (4, 0, 5),
+                (5, 7, 0),
+            ] {
+                let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+                let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+                for aaxis in [0, 1] {
+                    for baxis in [0, 1] {
+                        let ap = pack_matrix_along(fmt, &a, aaxis);
+                        let bp = pack_matrix_along(fmt, &b, baxis);
+                        assert_bits_eq(
+                            &qgemm(&ap, &bp),
+                            &qgemm_ref(&ap, &bp),
+                            &format!("{} {m}x{k}x{n} axes {aaxis}/{baxis}", fmt.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_variant_matches_oracle() {
+        let mut rng = Rng::new(32);
+        for fmt in [Format::Mxfp4, Format::PaperFp4, Format::Fp8] {
+            let (m, k, n) = (24, 12, 40);
+            let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+            let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+            let s: Vec<f64> = (0..k).map(|_| rng.gauss().abs() + 0.1).collect();
+            // The factor layout trainstate uses: both along axis 0.
+            let ap = pack_matrix_along(fmt, &a, 0);
+            let bp = pack_matrix_along(fmt, &b, 0);
+            assert_bits_eq(
+                &qgemm_scaled(&ap, &s, &bp),
+                &qgemm_scaled_ref(&ap, &s, &bp),
+                fmt.name(),
+            );
+        }
+    }
+
+    #[test]
+    fn dense_rhs_variants_match_oracles() {
+        let mut rng = Rng::new(33);
+        for fmt in Format::ALL {
+            for axis in [0, 1] {
+                let (m, k, n) = (19, 37, 23);
+                let a = Matrix::gaussian(&mut rng, m, k, 1.0);
+                let b = Matrix::gaussian(&mut rng, k, n, 1.0);
+                let ap = pack_matrix_along(fmt, &a, axis);
+                assert_bits_eq(
+                    &qgemm_ad(&ap, &b),
+                    &qgemm_ad_ref(&ap, &b),
+                    &format!("ad {} axis {axis}", fmt.name()),
+                );
+                let at = Matrix::gaussian(&mut rng, k, m, 1.0);
+                let bt = Matrix::gaussian(&mut rng, k, n, 1.0);
+                let atp = pack_matrix_along(fmt, &at, axis);
+                assert_bits_eq(
+                    &qgemm_at_b(&atp, &bt),
+                    &qgemm_at_b_ref(&atp, &bt),
+                    &format!("at_b {} axis {axis}", fmt.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_parallel_qgemm_is_bit_identical_to_serial() {
+        // 2·160³ ≈ 8.2 Mflop ≥ PAR_FLOPS, so qgemm fans rows across
+        // the pool; the MR-aligned split must reproduce the serial
+        // driver exactly, whatever the worker count.
+        let mut rng = Rng::new(34);
+        let d = 160;
+        let a = Matrix::gaussian(&mut rng, d, d, 1.0);
+        let b = Matrix::gaussian(&mut rng, d, d, 1.0);
+        let ap = pack_matrix_along(Format::Nvfp4, &a, 1);
+        let bp = pack_matrix_along(Format::Nvfp4, &b, 0);
+        let par = qgemm(&ap, &bp);
+        let mut ser = Matrix::zeros(d, d);
+        let aop = AOp::Packed {
+            a: &ap,
+            cscale: None,
+        };
+        let bop = BOp::Packed { b: &bp };
+        qgemm_rows(&aop, d, &bop, d, 0..d, &mut ser.data);
+        assert_bits_eq(&par, &ser, "pool vs serial");
+        assert_bits_eq(&par, &qgemm_ref(&ap, &bp), "pool vs oracle");
+    }
+}

@@ -32,6 +32,7 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    apply_kernel_flags(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
@@ -47,6 +48,25 @@ fn run(argv: &[String]) -> Result<()> {
         }
         Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
+}
+
+/// Global kernel toggles, honored by every subcommand: `--qgemm
+/// expand` routes packed-operand GEMMs through the unpack+matmul
+/// oracle (bit-identical, for A/B timing and audits), and `--simd
+/// portable` pins the scalar microkernel even where AVX2/NEON was
+/// detected.  The defaults (`packed` / `native`) are the fast paths.
+fn apply_kernel_flags(args: &Args) -> Result<()> {
+    match args.flags.get("qgemm").map(String::as_str) {
+        None | Some("packed") => {}
+        Some("expand") => metis::linalg::qgemm::set_qgemm_expand(true),
+        Some(other) => bail!("unknown --qgemm {other:?} (packed|expand)"),
+    }
+    match args.flags.get("simd").map(String::as_str) {
+        None | Some("native") => {}
+        Some("portable") => metis::linalg::kernels::set_force_portable(true),
+        Some(other) => bail!("unknown --simd {other:?} (native|portable)"),
+    }
+    Ok(())
 }
 
 /// `metis trace summarize <run-dir>` — offline join of a run's
@@ -123,6 +143,13 @@ impl ObsSink {
                     Json::Arr(std::env::args().skip(1).map(|a| Json::str(&a)).collect()),
                 ),
                 ("seed", Json::num(seed as f64)),
+                // Runtime-detected microkernel lane ("avx2" | "neon" |
+                // "portable") — records which SIMD path this run's
+                // GEMMs actually dispatched to (schema v2).
+                (
+                    "simd",
+                    Json::str(metis::linalg::kernels::simd_feature()),
+                ),
                 ("config", config),
                 (
                     "build",

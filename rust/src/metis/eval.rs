@@ -39,11 +39,11 @@ use std::sync::{mpsc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::evalsplit::EvalBatchSpec;
-use crate::formats::{quantize_matrix_along, Format};
+use crate::formats::{pack_matrix_along, Format};
 use crate::linalg::jacobi_svd;
 use crate::metis::pipeline::{column_blocks, LayerSpec, SIGMA_SAMPLE_MIN_K};
 use crate::metis::quantizer::{
-    quantize_split, sigma_distortion, sigma_distortion_vs, MetisQuantConfig,
+    quantize_split_packed, sigma_distortion, sigma_distortion_vs, MetisQuantConfig,
 };
 use crate::metis::sampler::sampled_spectrum;
 use crate::metis::split::weight_split;
@@ -281,7 +281,7 @@ impl Source<'_> {
                 let mut rng = pack_stream(*pack_seed, u.layer, u.block, u.single);
                 let k = quant.rank(wb.min_dim());
                 let split = weight_split(&wb, k, quant.strategy, &mut rng);
-                let eff = quantize_split(&split, quant.fmt);
+                let eff = quantize_split_packed(&split, quant.fmt);
                 Ok((Cow::Owned(wb), Cow::Owned(eff), None))
             }
         }
@@ -605,16 +605,19 @@ impl EvalState {
                     wb.rows
                 );
             }
-            let xq = quantize_matrix_along(self.cfg.fmt, &x, 1); // A4 along contraction
-            let y = xq.matmul(&wb);
-            let yh = xq.matmul(&effb);
+            // A4 along the contraction axis, held in packed form: the
+            // three GEMMs below contract the FP4 codes natively (¼ the
+            // activation bytes), bit-identical to expand-then-matmul.
+            let xp = pack_matrix_along(self.cfg.fmt, &x, 1);
+            let y = crate::linalg::qgemm_ad(&xp, &wb);
+            let yh = crate::linalg::qgemm_ad(&xp, &effb);
             let d = yh.sub(&y);
             err2 += d.frob_norm().powi(2);
             ref2 += y.frob_norm().powi(2);
             // Teacher defaults to the master (d is then the residual) —
             // the same quadratic objective as the training step.
             let resid = match &tb {
-                Some(t) => yh.sub(&xq.matmul(t)),
+                Some(t) => yh.sub(&crate::linalg::qgemm_ad(&xp, t)),
                 None => d,
             };
             loss_sum += 0.5 * resid.frob_norm().powi(2) / x.rows as f64;

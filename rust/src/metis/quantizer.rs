@@ -23,7 +23,7 @@
 //! `QuantCompare` reports both so the trade is visible.
 
 use crate::formats::blockq::quant_stats;
-use crate::formats::{self, Format, QuantStats};
+use crate::formats::{self, Format, PackedQMatrix, QuantStats};
 use crate::linalg::jacobi_svd;
 use crate::metis::sampler::DecompStrategy;
 use crate::metis::split::{rank_for, weight_split, GradSplit, WeightSplit};
@@ -77,6 +77,28 @@ pub fn quantize_split_parts(split: &WeightSplit, fmt: Format) -> (Matrix, Matrix
 pub fn quantize_split(split: &WeightSplit, fmt: Format) -> Matrix {
     let (uq, vtq, rq) = quantize_split_parts(split, fmt);
     uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq)
+}
+
+/// [`quantize_split_parts`] in packed (true 4-bit) storage — the same
+/// per-element quantization in the same block layout, keeping codes
+/// instead of dense f64, so the factors feed `linalg::qgemm` directly.
+pub fn pack_split_parts(
+    split: &WeightSplit,
+    fmt: Format,
+) -> (PackedQMatrix, PackedQMatrix, PackedQMatrix) {
+    (
+        formats::pack_matrix_along(fmt, &split.svd.u, 0),
+        formats::pack_matrix_along(fmt, &split.svd.v.transpose(), 0),
+        formats::pack_matrix_along(fmt, &split.residual, 0),
+    )
+}
+
+/// [`quantize_split`] through the packed qgemm path: contract
+/// Q(U)·S·Q(Vᵀ) natively from nibbles, add the unpacked residual.
+/// Bit-identical to [`quantize_split`] (the qgemm oracle contract).
+pub fn quantize_split_packed(split: &WeightSplit, fmt: Format) -> Matrix {
+    let (uq, vtq, rq) = pack_split_parts(split, fmt);
+    crate::linalg::qgemm_scaled(&uq, &split.svd.s, &vtq).add(&rq.unpack())
 }
 
 /// Direct baseline: Q(W) along the contraction axis.
@@ -185,6 +207,24 @@ mod tests {
             let rq = formats::quantize_matrix_along(fmt, &split.residual, 0);
             let want = uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq);
             assert_eq!(got, want, "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn packed_split_is_bit_identical_to_dense_split() {
+        // The packed-factor contraction must reproduce the dense Eq. 5
+        // composition exactly — this is the identity that lets
+        // trainstate/eval swap in qgemm without changing any reported
+        // number.
+        let mut rng = Rng::new(6);
+        let w = planted(&mut rng, 48, 40, 1.5);
+        let split = weight_split(&w, 6, DecompStrategy::Full, &mut rng);
+        for fmt in Format::ALL {
+            let dense = quantize_split(&split, fmt);
+            let packed = quantize_split_packed(&split, fmt);
+            for (x, y) in packed.data.iter().zip(&dense.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", fmt.name());
+            }
         }
     }
 

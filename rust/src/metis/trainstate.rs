@@ -37,7 +37,7 @@ use std::sync::{mpsc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::schedule::Schedule;
-use crate::formats::{quantize_matrix_along, Format};
+use crate::formats::{quantize_matrix_along, Format, PackedQMatrix};
 use crate::metis::eval::{EvalReport, EvalState};
 use crate::metis::lr::rescale_stats;
 use crate::metis::pipeline::{column_blocks, synthetic_model, Layer, LayerSource, LayerSpec};
@@ -81,16 +81,19 @@ pub(crate) fn pack_stream(seed: u64, layer: usize, block: usize, single: bool) -
 
 /// One column block of a packed weight: W_b ≈ Q(U_b) S_b Q(V_bᵀ) with
 /// the block residual folded into the cached effective weight.  S stays
-/// high-precision (Eq. 5 exempts it).
+/// high-precision (Eq. 5 exempts it).  The factors are held in *packed*
+/// nibble form ([`PackedQMatrix`], ISSUE 9) — a quarter the resident
+/// bytes of the former dense f64 copies — and refresh/repack contract
+/// them through `linalg::qgemm` without ever re-materializing them.
 pub struct PackedBlock {
     /// First column of this block within the layer.
     pub c0: usize,
-    /// Quantized left factor Q(U), m×k.
-    pub uq: Matrix,
+    /// Quantized left factor Q(U), m×k, packed along axis 0.
+    pub uq: PackedQMatrix,
     /// High-precision spectrum of the block split.
     pub s: Vec<f64>,
-    /// Quantized right factor Q(Vᵀ), k×width.
-    pub vtq: Matrix,
+    /// Quantized right factor Q(Vᵀ), k×width, packed along axis 0.
+    pub vtq: PackedQMatrix,
 }
 
 impl PackedBlock {
@@ -112,13 +115,15 @@ fn pack_block(
 ) -> (PackedBlock, Matrix) {
     let k = quant.rank(wb.min_dim());
     let split = weight_split(wb, k, quant.strategy, rng);
-    let (uq, vtq, rq) = crate::metis::quantizer::quantize_split_parts(&split, quant.fmt);
-    // Factor payload actually produced by this packing (f64 elements of
-    // Q(U), S, Q(Vᵀ)) — the residual lives only in the effective cache.
-    crate::obs::metrics::metrics()
-        .packed_bytes
-        .add(8 * (uq.data.len() + split.svd.s.len() + vtq.data.len()) as u64);
-    let eff = uq.scale_cols(&split.svd.s).matmul(&vtq).add(&rq);
+    let (uq, vtq, rq) = crate::metis::quantizer::pack_split_parts(&split, quant.fmt);
+    // Factor payload actually produced by this packing: nibble codes +
+    // block scales of Q(U)/Q(Vᵀ) plus the f64 spectrum — the true 4-bit
+    // resident footprint (the residual lives only in the effective
+    // cache).
+    crate::obs::metrics::metrics().packed_bytes.add(
+        (uq.packed_bytes() + 8 * split.svd.s.len() + vtq.packed_bytes()) as u64,
+    );
+    let eff = crate::linalg::qgemm_scaled(&uq, &split.svd.s, &vtq).add(&rq.unpack());
     (
         PackedBlock {
             c0,
@@ -196,11 +201,14 @@ impl PackedWeight {
                 mb_store = master.col_block(blk.c0, blk.width());
                 &mb_store
             };
-            let a = blk.uq.matmul_at_b(mb); // Q(U)ᵀ·W_b fused, k×width
+            // Q(U)ᵀ·W_b contracted straight from nibbles, k×width.
+            let a = crate::linalg::qgemm_at_b(&blk.uq, mb);
+            let mut vrow = vec![0.0f64; blk.vtq.cols];
             for (i, s) in blk.s.iter_mut().enumerate() {
-                *s = crate::linalg::kernels::dot(a.row(i), blk.vtq.row(i));
+                blk.vtq.row_into(i, &mut vrow);
+                *s = crate::linalg::kernels::dot(a.row(i), &vrow);
             }
-            let low = blk.uq.scale_cols(&blk.s).matmul(&blk.vtq);
+            let low = crate::linalg::qgemm_scaled(&blk.uq, &blk.s, &blk.vtq);
             let rq = quantize_matrix_along(fmt, &mb.sub(&low), 0);
             let eff_b = low.add(&rq);
             if single {
@@ -981,12 +989,14 @@ pub fn train_native_evented(
     let targets = &targets;
     let grad_fn = move |idx: usize, pw: &PackedWeight, rng: &mut Rng| {
         let x = Matrix::gaussian(rng, batch, pw.master.rows, 1.0);
-        let xq = quantize_matrix_along(act_fmt, &x, 1); // A4 along contraction
+        // A4 along contraction, kept in nibble form: the forward and
+        // backward GEMMs contract the packed activations natively.
+        let xp = crate::formats::pack_matrix_along(act_fmt, &x, 1);
         // One forward GEMM: Q(X)·(Ŵ − W*) ≡ Q(X)·Ŵ − Q(X)·W* since the
         // teacher shares the quantized activations.
-        let diff = xq.matmul(&pw.effective().sub(&targets[idx]));
+        let diff = crate::linalg::qgemm_ad(&xp, &pw.effective().sub(&targets[idx]));
         let loss = 0.5 * diff.frob_norm().powi(2) / batch as f64;
-        let d = xq.matmul_at_b(&diff).scale(1.0 / batch as f64);
+        let d = crate::linalg::qgemm_at_b(&xp, &diff).scale(1.0 / batch as f64);
         (loss, d)
     };
 

@@ -224,6 +224,13 @@ pub struct Metrics {
     pub sigma_err_max: MaxGauge,
     /// Bytes resident in Eq. 3 packed factors (Q(U), S, Q(Vᵀ)).
     pub packed_bytes: Counter,
+    /// Dequant-free packed-operand GEMM dispatches (fast path only —
+    /// reference/expand dispatches land in `gemm_calls` via `matmul`).
+    pub qgemm_calls: Counter,
+    /// Microkernel dispatch tallies by lane: explicit-SIMD vs the
+    /// portable scalar fallback, one tick per probed GEMM.
+    pub kernel_dispatch_simd: Counter,
+    pub kernel_dispatch_portable: Counter,
     /// Bytes written through `NpyWriter`.
     pub npy_bytes_written: Counter,
 }
@@ -246,6 +253,9 @@ static METRICS: Metrics = Metrics {
     reader_cache_misses: Counter::new(),
     sigma_err_max: MaxGauge::new(),
     packed_bytes: Counter::new(),
+    qgemm_calls: Counter::new(),
+    kernel_dispatch_simd: Counter::new(),
+    kernel_dispatch_portable: Counter::new(),
     npy_bytes_written: Counter::new(),
 };
 
@@ -300,6 +310,27 @@ impl MetricsRegistry {
                     ("misses", Json::num(m.reader_cache_misses.get() as f64)),
                 ]),
             ),
+            (
+                "qgemm",
+                Json::obj(vec![("calls", Json::num(m.qgemm_calls.get() as f64))]),
+            ),
+            (
+                "kernel",
+                Json::obj(vec![
+                    (
+                        "simd_feature",
+                        Json::str(crate::linalg::kernels::simd_feature()),
+                    ),
+                    (
+                        "dispatch_simd",
+                        Json::num(m.kernel_dispatch_simd.get() as f64),
+                    ),
+                    (
+                        "dispatch_portable",
+                        Json::num(m.kernel_dispatch_portable.get() as f64),
+                    ),
+                ]),
+            ),
             ("sigma_err_max", Json::num_or_null(m.sigma_err_max.get())),
             ("packed_bytes", Json::num(m.packed_bytes.get() as f64)),
             (
@@ -326,6 +357,9 @@ impl MetricsRegistry {
         m.reader_cache_misses.reset();
         m.sigma_err_max.reset();
         m.packed_bytes.reset();
+        m.qgemm_calls.reset();
+        m.kernel_dispatch_simd.reset();
+        m.kernel_dispatch_portable.reset();
         m.npy_bytes_written.reset();
     }
 }
@@ -333,6 +367,23 @@ impl MetricsRegistry {
 /// Snapshot shorthand ([`MetricsRegistry::snapshot`]).
 pub fn metrics_snapshot() -> Json {
     MetricsRegistry::snapshot()
+}
+
+/// One packed-operand (dequant-free) GEMM dispatch on the fast path.
+#[inline]
+pub fn record_qgemm_call() {
+    metrics().qgemm_calls.incr();
+}
+
+/// Tally which microkernel lane a probed GEMM dispatched to.
+#[inline]
+pub fn record_kernel_dispatch(simd: bool) {
+    let m = metrics();
+    if simd {
+        m.kernel_dispatch_simd.incr();
+    } else {
+        m.kernel_dispatch_portable.incr();
+    }
 }
 
 /// Route one GEMM's achieved throughput into its shape-class histogram.
@@ -413,9 +464,35 @@ mod tests {
     fn snapshot_parses_and_has_sections() {
         let snap = MetricsRegistry::snapshot();
         let parsed = Json::parse(&snap.to_string()).unwrap();
-        for key in ["quantizer", "gemm", "workpool", "reader_cache", "packed_bytes"] {
+        for key in [
+            "quantizer",
+            "gemm",
+            "qgemm",
+            "kernel",
+            "workpool",
+            "reader_cache",
+            "packed_bytes",
+        ] {
             assert!(parsed.get(key).is_some(), "missing {key}");
         }
+        let kernel = parsed.get("kernel").unwrap();
+        assert!(kernel.get("simd_feature").is_some());
+    }
+
+    #[test]
+    fn qgemm_and_kernel_dispatch_counters_tick() {
+        let m = metrics();
+        let (q0, s0, p0) = (
+            m.qgemm_calls.get(),
+            m.kernel_dispatch_simd.get(),
+            m.kernel_dispatch_portable.get(),
+        );
+        record_qgemm_call();
+        record_kernel_dispatch(true);
+        record_kernel_dispatch(false);
+        assert_eq!(m.qgemm_calls.get(), q0 + 1);
+        assert_eq!(m.kernel_dispatch_simd.get(), s0 + 1);
+        assert_eq!(m.kernel_dispatch_portable.get(), p0 + 1);
     }
 
     #[test]

@@ -22,9 +22,12 @@ pub mod schema {
     pub const STEP: u32 = 2;
     pub const EVAL: u32 = 2;
     pub const ERROR: u32 = 1;
-    pub const METRICS: u32 = 1;
+    /// v2: adds `qgemm` and `kernel` sections (packed-GEMM dispatch
+    /// counts and runtime SIMD lane selection).
+    pub const METRICS: u32 = 2;
     pub const DONE: u32 = 1;
-    pub const RUN_MANIFEST: u32 = 1;
+    /// v2: adds the `simd` field (runtime-detected microkernel lane).
+    pub const RUN_MANIFEST: u32 = 2;
     pub const TRACE: u32 = 1;
 }
 

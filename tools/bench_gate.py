@@ -41,7 +41,9 @@ import sys
 
 # (human label, path) of every gated ratio metric.  Paths step through
 # dicts by key; a ("gemm", dim) pair selects the gemm row whose "dim"
-# field matches.
+# field matches, and a ("qgemm", {...fields}) pair selects the row in
+# which every given field matches (multi-field selector for row arrays
+# keyed by more than one column).
 GATED_METRICS = [
     ("gemm 64² tiled speedup", (("gemm", 64), "speedup_tiled")),
     ("gemm 64² kernel speedup", (("gemm", 64), "speedup_kernel")),
@@ -54,6 +56,13 @@ GATED_METRICS = [
     ("quantize axis-0 speedup", ("quantize", "axis0_speedup")),
     ("train-native step speedup", ("train_native_step", "speedup")),
     ("tracing overhead speedup", ("obs_overhead", "speedup")),
+] + [
+    (
+        f"qgemm {fmt} {dim}² speedup",
+        (("qgemm", {"fmt": fmt, "dim": dim}), "speedup"),
+    )
+    for fmt in ("mxfp4", "nvfp4", "fp8", "paper_fp4")
+    for dim in (256, 1024)
 ]
 
 # Absolute floors on top of the relative gate.  The tracing-overhead
@@ -61,20 +70,30 @@ GATED_METRICS = [
 # construction — so a value below the floor means enabled observability
 # costs more than the budget, regardless of what the committed baseline
 # happened to record.  (Floor 0.95 = 5% budget: the contract is <= 1%
-# overhead; the margin absorbs CI-runner timing noise.)
+# overhead; the margin absorbs CI-runner timing noise.)  The 1024²-class
+# qgemm rows carry the dequant-free acceptance bar: packed contraction
+# must stay >= 2x over expand+matmul at weight-matrix scale, regardless
+# of what the committed baseline recorded.
 ABS_FLOORS = {"tracing overhead speedup": 0.95}
+ABS_FLOORS.update(
+    {f"qgemm {fmt} 1024² speedup": 2.0 for fmt in ("mxfp4", "nvfp4", "fp8", "paper_fp4")}
+)
 
 
 def lookup(doc, path):
     """Resolve a metric path; None when absent/null/non-numeric."""
     node = doc
     for part in path:
-        if isinstance(part, tuple):  # ("gemm", dim) row selector
-            key, dim = part
+        if isinstance(part, tuple):  # ("gemm", dim) / ("qgemm", {...}) row selector
+            key, sel = part
             rows = node.get(key)
             if not isinstance(rows, list):
                 return None
-            node = next((r for r in rows if r.get("dim") == dim), None)
+            want = sel if isinstance(sel, dict) else {"dim": sel}
+            node = next(
+                (r for r in rows if all(r.get(k) == v for k, v in want.items())),
+                None,
+            )
         elif isinstance(node, dict):
             node = node.get(part)
         else:
@@ -159,6 +178,11 @@ def fixture():
             {"dim": 256, "speedup_tiled": 2.5, "speedup_kernel": 3.5},
             {"dim": 1024, "speedup_tiled": 1.8, "speedup_kernel": 2.7},
         ],
+        "qgemm": [
+            {"fmt": fmt, "dim": dim, "batch": 32, "speedup": speedup}
+            for fmt in ("mxfp4", "nvfp4", "fp8", "paper_fp4")
+            for dim, speedup in ((256, 2.4), (1024, 2.8))
+        ],
         "jacobi_256": {"speedup": 1.9},
         "quantize": {"flat_speedup": 1.2, "axis0_speedup": None},
         "train_native_step": {"speedup": 3.7},
@@ -240,6 +264,25 @@ def self_test():
     slow["obs_overhead"]["speedup"] = 0.90
     regs, _ = gate(slow, copy.deepcopy(slow), 0.85)
     check("tracing-overhead absolute floor trips", regs == ["tracing overhead speedup"])
+
+    # 8. The multi-field qgemm selector resolves exactly one row, and a
+    # regression on it is reported under the right (fmt, dim) label.
+    qreg = copy.deepcopy(base)
+    for row in qreg["qgemm"]:
+        if row["fmt"] == "nvfp4" and row["dim"] == 256:
+            row["speedup"] *= 0.5
+    regs, _ = gate(base, qreg, 0.85)
+    check("qgemm multi-field selector catches regression", regs == ["qgemm nvfp4 256² speedup"])
+
+    # 9. The 1024²-class qgemm rows hold the dequant-free >= 2x
+    # acceptance bar absolutely — a baseline that itself dipped below
+    # still fails the fresh run.
+    qslow = copy.deepcopy(base)
+    for row in qslow["qgemm"]:
+        if row["fmt"] == "fp8" and row["dim"] == 1024:
+            row["speedup"] = 1.8
+    regs, _ = gate(qslow, copy.deepcopy(qslow), 0.85)
+    check("qgemm 1024² absolute floor trips", regs == ["qgemm fp8 1024² speedup"])
 
     if failures:
         print(f"self-test FAILED: {failures}")

@@ -79,10 +79,14 @@ SCHEMAS = {
         },
     },
     "metrics": {
-        "version": 1,
+        # v2: adds the qgemm (packed-GEMM dispatch counts) and kernel
+        # (runtime SIMD lane + per-lane dispatch tallies) sections.
+        "version": 2,
         "fields": {
             "quantizer": "dict",
             "gemm": "dict",
+            "qgemm": "dict",
+            "kernel": "dict",
             "workpool": "dict",
             "reader_cache": "dict",
             "sigma_err_max": "num?",
@@ -119,11 +123,14 @@ SCHEMAS = {
         },
     },
     "run_manifest": {
-        "version": 1,
+        # v2: adds the runtime-detected microkernel lane
+        # ("avx2" | "neon" | "portable").
+        "version": 2,
         "fields": {
             "cmd": "str",
             "argv": "list",
             "seed": "num",
+            "simd": "str",
             "config": "dict",
             "build": "dict",
             "streams": "list",
@@ -265,9 +272,12 @@ def _valid_stream():
          "layers": []},
         {**env("eval", 9), "step": 0, "heldout_loss": 2.4, "perplexity": 11.0,
          "logit_div": 0.02, "batches": 4, "ms": 8.0, "layers": []},
-        {**env("metrics", 11), "quantizer": {}, "gemm": {}, "workpool": {},
-         "reader_cache": {}, "sigma_err_max": 0.01, "packed_bytes": 4096,
-         "npy_bytes_written": 0},
+        {**env("metrics", 11), "quantizer": {}, "gemm": {},
+         "qgemm": {"calls": 12},
+         "kernel": {"simd_feature": "avx2", "dispatch_simd": 12,
+                    "dispatch_portable": 0},
+         "workpool": {}, "reader_cache": {}, "sigma_err_max": 0.01,
+         "packed_bytes": 4096, "npy_bytes_written": 0},
         {**env("error", 12), "layer": "blk1.mlp", "layer_index": 1, "block": 2,
          "c0": 16, "width": 8, "phase": "validate",
          "message": "non-finite weight values"},
@@ -277,7 +287,8 @@ def _valid_stream():
          "diverged": False},
         {**env("run_manifest", 16), "cmd": "train-native",
          "argv": ["train-native", "--steps", "4"], "seed": 7,
-         "config": {"steps": 4}, "build": {"pkg_version": "0.1.0"},
+         "simd": "avx2", "config": {"steps": 4},
+         "build": {"pkg_version": "0.1.0"},
          "streams": ["steps.jsonl"]},
     ]
     return [json.dumps(r) for r in rows]
@@ -329,6 +340,16 @@ def self_test():
         "schema_version drift fails",
         lambda r: r[4].__setitem__("schema_version", 99),
         "!= expected",
+    )
+    corrupt(
+        "metrics v2 kernel section required",
+        lambda r: r[3].pop("kernel"),
+        "missing field 'kernel'",
+    )
+    corrupt(
+        "manifest v2 simd field required",
+        lambda r: r[6].pop("simd"),
+        "missing field 'simd'",
     )
     errs = validate_lines(good[:3] + ["{not json"] + good[3:], "syntax")
     check("malformed JSON line fails", any("malformed JSON" in e for e in errs))
