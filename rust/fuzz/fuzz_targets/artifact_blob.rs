@@ -1,0 +1,15 @@
+//! Fuzz the sealed-artifact blob parser: arbitrary bytes must be
+//! rejected (or parsed) without panicking and with bounded allocation
+//! — every section length is validated against the remaining input
+//! before any buffer is sized from it.  This target legitimately
+//! drives the raw parser — everything outside rust/src/artifact/ and
+//! the fuzz harnesses must go through ArtifactReader instead
+//! (metis-lint rule `artifact-unverified-parse`).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = metis::artifact::parse_blob(data);
+});

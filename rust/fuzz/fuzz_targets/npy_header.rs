@@ -1,0 +1,12 @@
+//! Fuzz the `.npy` header parser: arbitrary bytes must produce a
+//! parsed header or a named error — never a panic, never an
+//! overflowing shape product (checkpoint ingestion is a trust
+//! boundary; see rust/src/util/npy.rs).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = metis::util::npy::parse_npy_header(data);
+});

@@ -1,0 +1,10 @@
+//! Fixture: raw artifact parsing outside rust/src/artifact/ must go
+//! through the checksum-verifying ArtifactReader instead — a bare
+//! `parse_blob(` / `parse_manifest(` call site skips sha256
+//! verification entirely.
+
+fn sideload(bytes: &[u8]) -> usize {
+    let blk = parse_blob(bytes).unwrap();
+    let man = parse_manifest(bytes).unwrap();
+    blk.len() + man.len()
+}

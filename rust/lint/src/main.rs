@@ -160,6 +160,7 @@ fn self_test(
         ("read_dir_unsorted.rs", &["read-dir-unsorted"][..]),
         ("ref_without_test.rs", &["ref-without-test"][..]),
         ("unknown_event.rs", &["unknown-event"][..]),
+        ("artifact_unverified_parse.rs", &["artifact-unverified-parse"][..]),
         ("taint_hash_iter.rs", &["hash-iter", "taint-hash-iter"][..]),
         ("taint_timer.rs", &["taint-wall-clock"][..]),
     ]);

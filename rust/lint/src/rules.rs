@@ -575,6 +575,44 @@ pub fn relaxed_outside_obs(f: &SourceFile, out: &mut Vec<Finding>) {
     }
 }
 
+/// Raw artifact parsing (`parse_blob(` / `parse_manifest(`) is
+/// permitted only under rust/src/artifact/ (and the fuzz harnesses,
+/// whose whole point is driving the raw parsers): every other caller
+/// must load sealed data through the checksum-verifying
+/// `ArtifactReader` (DESIGN.md §12).
+pub fn artifact_unverified_parse(f: &SourceFile, out: &mut Vec<Finding>) {
+    let norm = f.path.replace('\\', "/");
+    if norm.contains("/artifact/")
+        || norm.starts_with("artifact/")
+        || norm.contains("/fuzz/")
+        || norm.starts_with("fuzz/")
+    {
+        return;
+    }
+    let code = &f.scrubbed.code;
+    let b = code.as_bytes();
+    for name in ["parse_blob", "parse_manifest"] {
+        for at in token_positions(code, name) {
+            let open = skip_ws(b, at + name.len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            if ident_ending_at(code, rskip_ws(b, at)) == "fn" {
+                continue; // the definitions inside rust/src/artifact/
+            }
+            out.push(f.finding(
+                "artifact-unverified-parse",
+                at,
+                format!(
+                    "`{name}(` outside rust/src/artifact/ bypasses checksum \
+                     verification — go through ArtifactReader (or justify in \
+                     the allowlist)"
+                ),
+            ));
+        }
+    }
+}
+
 /// Count call sites `name(` excluding definitions `fn name(`.
 fn call_count(code: &str, name: &str) -> usize {
     let b = code.as_bytes();
@@ -721,6 +759,7 @@ pub fn lint_all(
         relaxed_outside_obs(f, &mut out);
         read_dir_unsorted(f, &g.defs, &mut out);
         event_schema(f, events, &mut out);
+        artifact_unverified_parse(f, &mut out);
     }
     ref_pairs(files, &mut out);
     crate::taint::taint(files, &graphs, entrypoints, &mut out);

@@ -18,6 +18,7 @@ pub const RULE_META: &[(&str, &str)] = &[
     ("ref-without-test", "_ref oracle without a dual-name test"),
     ("unknown-event", "stamp() event missing from the schema table"),
     ("event-schema-const", "stamp() without its schema::UPPER constant"),
+    ("artifact-unverified-parse", "raw artifact parse bypassing ArtifactReader"),
     ("taint-hash-iter", "entry point reaches HashMap/HashSet iteration"),
     ("taint-wall-clock", "entry point reaches a wall-clock read"),
     ("taint-env-read", "entry point reaches a std::env read"),

@@ -1,0 +1,427 @@
+//! Binary blob codec for one packed (layer, column-block) unit.
+//!
+//! A blob is the sealed, self-contained payload of one Eq. 3 packing:
+//! the high-precision master block W_b (f64), the high-precision
+//! spectrum S_b, and the three packed factors Q(U_b), Q(V_bᵀ),
+//! Q(W_{R,b}) in their true nibble/byte storage form
+//! ([`PackedQMatrix`] codes + f32 scales).  Everything the eval
+//! harness needs to reproduce `quantize_split_packed` — bit for bit,
+//! SVD-free — and everything σ-distortion needs to compare against the
+//! master.
+//!
+//! Layout (all integers little-endian, fixed field order):
+//!
+//! ```text
+//! magic    8 B   "METISQB" + version byte (0x01)
+//! layer    u64   owning layer index   ─┐ cross-checked against the
+//! block    u64   block index          ─┘ manifest slot at load (drift)
+//! c0       u64   first column of the block within the layer
+//! rows     u64   block rows (= layer rows)
+//! width    u64   block columns
+//! master   u64 count, then count × f64   (count must equal rows·width)
+//! s        u64 k,     then k × f64       (descending spectrum)
+//! uq/vtq/rq, each:
+//!   fmt    u8    Format code (0 mxfp4, 1 nvfp4, 2 fp8, 3 paper_fp4)
+//!   axis   u8    block axis (0 or 1)
+//!   rows   u64 · cols u64
+//!   codes  u64 count, then count bytes
+//!   scales u64 count, then count × f32
+//! ```
+//!
+//! [`parse_blob`] is a total function over arbitrary bytes (it is a
+//! fuzz target): every length is bounds-checked before the slice, all
+//! arithmetic is checked, dimension cross-constraints (factor shapes
+//! vs rows/width/k, code/scale counts vs the format's line geometry)
+//! are validated, and trailing bytes are rejected.  It never verifies
+//! a checksum — that is [`super::reader::ArtifactReader`]'s job, which
+//! is why the invariant lint flags `parse_blob` calls outside this
+//! module tree.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::{Format, PackedQMatrix};
+use crate::tensor::Matrix;
+
+/// Blob magic: 7 identifying bytes + 1 version byte.
+pub const BLOB_MAGIC: &[u8; 7] = b"METISQB";
+pub const BLOB_VERSION: u8 = 1;
+
+/// One decoded (layer, column-block) artifact unit.
+pub struct ArtifactBlock {
+    pub layer: usize,
+    pub block: usize,
+    pub c0: usize,
+    /// High-precision master block W_b, rows × width.
+    pub master: Matrix,
+    /// High-precision spectrum S_b of the block split.
+    pub s: Vec<f64>,
+    /// Q(U_b): rows × k, packed along axis 0.
+    pub uq: PackedQMatrix,
+    /// Q(V_bᵀ): k × width, packed along axis 0.
+    pub vtq: PackedQMatrix,
+    /// Q(W_{R,b}): rows × width, packed along axis 0.
+    pub rq: PackedQMatrix,
+}
+
+impl ArtifactBlock {
+    /// Recompose the Eq. 5 effective block Q(U) S Q(Vᵀ) + Q(W_R) from
+    /// the stored factors — the exact `quantize_split_packed`
+    /// composition, so an artifact-backed eval is bit-identical to
+    /// pack-on-the-fly without rerunning any SVD.
+    pub fn effective(&self) -> Matrix {
+        crate::linalg::qgemm_scaled(&self.uq, &self.s, &self.vtq).add(&self.rq.unpack())
+    }
+}
+
+fn fmt_code(fmt: Format) -> u8 {
+    match fmt {
+        Format::Mxfp4 => 0,
+        Format::Nvfp4 => 1,
+        Format::Fp8 => 2,
+        Format::PaperFp4 => 3,
+    }
+}
+
+fn fmt_from_code(code: u8) -> Option<Format> {
+    match code {
+        0 => Some(Format::Mxfp4),
+        1 => Some(Format::Nvfp4),
+        2 => Some(Format::Fp8),
+        3 => Some(Format::PaperFp4),
+        _ => None,
+    }
+}
+
+/// Serialize one packed unit to blob bytes (the writer half of
+/// [`parse_blob`]; `encode_block(..)` then `parse_blob(..)` is
+/// lossless, test-pinned below).
+pub fn encode_block(blk: &ArtifactBlock) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(BLOB_MAGIC);
+    out.push(BLOB_VERSION);
+    for v in [
+        blk.layer as u64,
+        blk.block as u64,
+        blk.c0 as u64,
+        blk.master.rows as u64,
+        blk.master.cols as u64,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(blk.master.data.len() as u64).to_le_bytes());
+    for x in &blk.master.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out.extend_from_slice(&(blk.s.len() as u64).to_le_bytes());
+    for x in &blk.s {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for p in [&blk.uq, &blk.vtq, &blk.rq] {
+        out.push(fmt_code(p.fmt));
+        out.push(u8::try_from(p.axis).expect("block axis is 0 or 1"));
+        out.extend_from_slice(&(p.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(p.cols as u64).to_le_bytes());
+        out.extend_from_slice(&(p.codes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&p.codes);
+        out.extend_from_slice(&(p.scales.len() as u64).to_le_bytes());
+        for s in &p.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Bounds-checked cursor over untrusted blob bytes.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact blob truncated: {what} needs {n} bytes at offset {} of {}",
+                    self.at,
+                    self.bytes.len()
+                )
+            })?;
+        let s = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    /// A u64 length/index field that must fit in usize.
+    fn len(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| anyhow!("artifact blob field {what} = {v} overflows usize"))
+    }
+
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let bytes = n
+            .checked_mul(8)
+            .ok_or_else(|| anyhow!("artifact blob field {what} count {n} overflows"))?;
+        let b = self.take(bytes, what)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect())
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("artifact blob field {what} count {n} overflows"))?;
+        let b = self.take(bytes, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+}
+
+/// Parse one packed factor section and validate its internal geometry
+/// (code/scale counts must match the format's line layout exactly).
+fn parse_packed(cur: &mut Cursor<'_>, name: &str) -> Result<PackedQMatrix> {
+    let code = cur.u8(name)?;
+    let fmt = fmt_from_code(code)
+        .ok_or_else(|| anyhow!("artifact blob {name}: unknown format code {code}"))?;
+    let axis = cur.u8(name)?;
+    if axis > 1 {
+        bail!("artifact blob {name}: block axis {axis} is not 0 or 1");
+    }
+    let rows = cur.len(name)?;
+    let cols = cur.len(name)?;
+    let n_codes = cur.len(name)?;
+    let codes = cur.take(n_codes, name)?.to_vec();
+    let n_scales = cur.len(name)?;
+    let scales = cur.f32s(n_scales, name)?;
+    let p = PackedQMatrix {
+        fmt,
+        rows,
+        cols,
+        axis: usize::from(axis),
+        codes,
+        scales,
+    };
+    let want_codes = p
+        .line_count()
+        .checked_mul(p.code_stride())
+        .ok_or_else(|| anyhow!("artifact blob {name}: {rows}x{cols} overflows code count"))?;
+    if p.codes.len() != want_codes {
+        bail!(
+            "artifact blob {name}: {} code bytes for a {}x{} {} matrix (want {want_codes})",
+            p.codes.len(),
+            rows,
+            cols,
+            fmt.name()
+        );
+    }
+    let want_scales = p
+        .line_count()
+        .checked_mul(p.blocks_per_line())
+        .ok_or_else(|| anyhow!("artifact blob {name}: {rows}x{cols} overflows scale count"))?;
+    if p.scales.len() != want_scales {
+        bail!(
+            "artifact blob {name}: {} scales for a {}x{} {} matrix (want {want_scales})",
+            p.scales.len(),
+            rows,
+            cols,
+            fmt.name()
+        );
+    }
+    Ok(p)
+}
+
+/// Decode and structurally validate one artifact blob.  Total over
+/// arbitrary input: named errors, never a panic, never a partial
+/// block.  Checksum verification happens *before* this in
+/// `ArtifactReader::load_block` — raw `parse_blob` on untrusted files
+/// is exactly what the `artifact-unverified-parse` lint rejects.
+pub fn parse_blob(bytes: &[u8]) -> Result<ArtifactBlock> {
+    let mut cur = Cursor { bytes, at: 0 };
+    let magic = cur.take(8, "magic")?;
+    if &magic[..7] != BLOB_MAGIC {
+        bail!("not a metis artifact blob (bad magic)");
+    }
+    if magic[7] != BLOB_VERSION {
+        bail!(
+            "unsupported artifact blob version {} (this build reads {BLOB_VERSION})",
+            magic[7]
+        );
+    }
+    let layer = cur.len("layer")?;
+    let block = cur.len("block")?;
+    let c0 = cur.len("c0")?;
+    let rows = cur.len("rows")?;
+    let width = cur.len("width")?;
+    if rows == 0 || width == 0 {
+        bail!("artifact blob declares an empty {rows}x{width} block");
+    }
+    let n_master = cur.len("master")?;
+    let want = rows
+        .checked_mul(width)
+        .ok_or_else(|| anyhow!("artifact blob {rows}x{width} overflows element count"))?;
+    if n_master != want {
+        bail!("artifact blob master has {n_master} elements for a {rows}x{width} block");
+    }
+    let master = Matrix::from_vec(rows, width, cur.f64s(n_master, "master")?);
+    let k = cur.len("s")?;
+    if k == 0 || k > rows.min(width) {
+        bail!("artifact blob spectrum rank {k} out of range for a {rows}x{width} block");
+    }
+    let s = cur.f64s(k, "s")?;
+    let uq = parse_packed(&mut cur, "uq")?;
+    let vtq = parse_packed(&mut cur, "vtq")?;
+    let rq = parse_packed(&mut cur, "rq")?;
+    // Eq. 5 shape contract: Q(U) rows×k, Q(Vᵀ) k×width, Q(W_R)
+    // rows×width, all packed along axis 0 (weight-style).
+    for (name, p, (wr, wc)) in [
+        ("uq", &uq, (rows, k)),
+        ("vtq", &vtq, (k, width)),
+        ("rq", &rq, (rows, width)),
+    ] {
+        if p.rows != wr || p.cols != wc {
+            bail!(
+                "artifact blob {name} is {}x{}, want {wr}x{wc} for a {rows}x{width} rank-{k} block",
+                p.rows,
+                p.cols
+            );
+        }
+        if p.axis != 0 {
+            bail!("artifact blob {name} packed along axis {}, want axis 0", p.axis);
+        }
+    }
+    if cur.at != bytes.len() {
+        bail!(
+            "artifact blob has {} trailing bytes beyond the declared sections",
+            bytes.len() - cur.at
+        );
+    }
+    Ok(ArtifactBlock {
+        layer,
+        block,
+        c0,
+        master,
+        s,
+        uq,
+        vtq,
+        rq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metis::quantizer::pack_split_parts;
+    use crate::metis::sampler::DecompStrategy;
+    use crate::metis::split::weight_split;
+    use crate::util::prng::Rng;
+
+    fn sample_block(fmt: Format) -> ArtifactBlock {
+        let mut rng = Rng::new(11);
+        let w = Matrix::gaussian(&mut rng, 24, 20, 1.0);
+        let split = weight_split(&w, 4, DecompStrategy::Full, &mut rng);
+        let (uq, vtq, rq) = pack_split_parts(&split, fmt);
+        ArtifactBlock {
+            layer: 2,
+            block: 1,
+            c0: 20,
+            master: w,
+            s: split.svd.s,
+            uq,
+            vtq,
+            rq,
+        }
+    }
+
+    #[test]
+    fn encode_parse_roundtrip_is_lossless() {
+        for fmt in Format::ALL {
+            let blk = sample_block(fmt);
+            let bytes = encode_block(&blk);
+            let back = parse_blob(&bytes).unwrap();
+            assert_eq!(back.layer, blk.layer);
+            assert_eq!(back.block, blk.block);
+            assert_eq!(back.c0, blk.c0);
+            assert_eq!(back.master, blk.master);
+            assert_eq!(back.s, blk.s);
+            assert_eq!(back.uq, blk.uq);
+            assert_eq!(back.vtq, blk.vtq);
+            assert_eq!(back.rq, blk.rq);
+            // The recomposed effective block is the quantize_split_packed
+            // composition, bit for bit.
+            let want = crate::metis::quantizer::quantize_split_packed(
+                &weight_split(
+                    &blk.master,
+                    4,
+                    DecompStrategy::Full,
+                    &mut Rng::new(11).fold_in(1),
+                ),
+                fmt,
+            );
+            // (Different RNG stream ⇒ different split; just shape-check
+            // the recomposition here — bit-identity of the full path is
+            // asserted by the roundtrip integration test.)
+            let eff = back.effective();
+            assert_eq!((eff.rows, eff.cols), (want.rows, want.cols));
+            assert!(eff.data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_a_named_error() {
+        let bytes = encode_block(&sample_block(Format::Nvfp4));
+        // Every strict prefix must fail with an error, never panic.
+        for cut in [0, 4, 7, 8, 9, 47, 48, 100, bytes.len() - 1] {
+            let err = parse_blob(&bytes[..cut]).unwrap_err();
+            assert!(
+                !format!("{err:#}").is_empty(),
+                "prefix of {cut} bytes must error"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_named_errors() {
+        let mut bytes = encode_block(&sample_block(Format::Mxfp4));
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        let err = format!("{:#}", parse_blob(&wrong).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+        bytes[7] = 9;
+        let err = format!("{:#}", parse_blob(&bytes).unwrap_err());
+        assert!(err.contains("unsupported artifact blob version 9"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_block(&sample_block(Format::Fp8));
+        bytes.push(0);
+        let err = format!("{:#}", parse_blob(&bytes).unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn geometry_lies_are_rejected() {
+        // Declare a master count that disagrees with rows×width: the
+        // count field sits right after the 5 u64 header fields.
+        let blk = sample_block(Format::Nvfp4);
+        let mut bytes = encode_block(&blk);
+        let at = 8 + 5 * 8;
+        bytes[at..at + 8].copy_from_slice(&(blk.master.data.len() as u64 + 1).to_le_bytes());
+        let err = format!("{:#}", parse_blob(&bytes).unwrap_err());
+        assert!(err.contains("master"), "{err}");
+    }
+}

@@ -1,0 +1,465 @@
+//! The sealed-artifact manifest: versioned JSON describing the pack
+//! configuration, per-layer geometry, and the sha256 + byte length of
+//! every blob — plus its own canonical-JSON self-checksum.
+//!
+//! The checksum rule follows the process_triage E2E artifact-manifest
+//! pattern (SNIPPETS.md): `manifest_sha256` is the SHA-256 of the
+//! manifest serialized in **canonical JSON** — the `manifest_sha256`
+//! field removed, object keys sorted, compact separators, UTF-8 —
+//! which is byte-identical to Python's
+//! `json.dumps(obj, sort_keys=True, separators=(",", ":"))` for the
+//! ASCII content a manifest holds (`tools/validate_artifact.py`
+//! recomputes it with exactly that call).  Numeric fields stay within
+//! the shared shortest-representation range (integers < 2⁵³, short
+//! decimals like `0.1`), so the two serializers agree byte for byte.
+//!
+//! Compatibility policy: `schema_version` bumps on any layout change
+//! (manifest or blob); readers reject unknown versions with a named
+//! error rather than guessing — a sealed artifact either loads exactly
+//! or not at all.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::sha256::sha256_hex;
+use crate::formats::Format;
+use crate::metis::quantizer::MetisQuantConfig;
+use crate::metis::sampler::DecompStrategy;
+use crate::util::json::Json;
+
+/// On-disk layout version of the whole artifact (manifest + blobs).
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+/// Manifest file name inside the artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// Blob subdirectory (every manifest blob path must live under it).
+pub const BLOBS_DIR: &str = "blobs";
+
+/// Pack-time configuration recorded in the manifest — everything the
+/// reader needs to reproduce eval-side decisions (rank rule, σ
+/// sampling) and everything provenance needs to audit the pack.
+#[derive(Clone, Debug)]
+pub struct PackMeta {
+    pub fmt: Format,
+    pub strategy: DecompStrategy,
+    pub rho: f64,
+    pub max_rank: usize,
+    /// Seed of the pack streams (and the default eval seed).
+    pub seed: u64,
+    /// Column-block size the pack partitioned layers with.
+    pub block_cols: usize,
+    /// SIMD lane detected at pack time (provenance only — packing is
+    /// bit-identical across lanes by the kernel contract).
+    pub simd: String,
+}
+
+impl PackMeta {
+    pub fn quant(&self) -> MetisQuantConfig {
+        MetisQuantConfig {
+            fmt: self.fmt,
+            strategy: self.strategy,
+            rho: self.rho,
+            max_rank: self.max_rank,
+        }
+    }
+}
+
+/// One blob entry: where it is, how big it is, what it must hash to.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub c0: usize,
+    pub width: usize,
+    /// Split rank of the block (spectrum length).
+    pub k: usize,
+    /// Path relative to the artifact dir, always under `blobs/`.
+    pub blob: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+/// Per-layer geometry + ordered block list.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub blocks: Vec<BlockMeta>,
+}
+
+/// The parsed, verified manifest of one sealed artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub run_id: String,
+    pub tool: String,
+    pub git_sha: Option<String>,
+    pub pack: PackMeta,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl Manifest {
+    /// Manifest JSON *without* the self-checksum field.
+    fn body_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(ARTIFACT_SCHEMA_VERSION as f64)),
+            ("run_id", Json::str(&self.run_id)),
+            ("tool", Json::str(&self.tool)),
+            (
+                "git_sha",
+                match &self.git_sha {
+                    Some(s) => Json::str(s),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "pack",
+                Json::obj(vec![
+                    ("fmt", Json::str(self.pack.fmt.name())),
+                    ("strategy", Json::str(self.pack.strategy.name())),
+                    ("rho", Json::num(self.pack.rho)),
+                    ("max_rank", Json::num(self.pack.max_rank as f64)),
+                    ("seed", Json::num(self.pack.seed as f64)),
+                    ("block_cols", Json::num(self.pack.block_cols as f64)),
+                    ("simd", Json::str(&self.pack.simd)),
+                ]),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("name", Json::str(&l.name)),
+                                ("rows", Json::num(l.rows as f64)),
+                                ("cols", Json::num(l.cols as f64)),
+                                (
+                                    "blocks",
+                                    Json::Arr(
+                                        l.blocks
+                                            .iter()
+                                            .map(|b| {
+                                                Json::obj(vec![
+                                                    ("c0", Json::num(b.c0 as f64)),
+                                                    ("width", Json::num(b.width as f64)),
+                                                    ("k", Json::num(b.k as f64)),
+                                                    ("blob", Json::str(&b.blob)),
+                                                    ("sha256", Json::str(&b.sha256)),
+                                                    ("bytes", Json::num(b.bytes as f64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Full manifest JSON including the computed `manifest_sha256`.
+    pub fn to_json(&self) -> Json {
+        let body = self.body_json();
+        let sum = sha256_hex(canonical_json(&body).as_bytes());
+        match body {
+            Json::Obj(mut kvs) => {
+                kvs.push(("manifest_sha256".to_string(), Json::Str(sum)));
+                Json::Obj(kvs)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Canonical-JSON serialization: object keys sorted (code-point order,
+/// = byte order for UTF-8), compact separators.  Byte-matches Python's
+/// `json.dumps(sort_keys=True, separators=(",", ":"))` for the ASCII
+/// content a manifest carries.
+pub fn canonical_json(j: &Json) -> String {
+    fn sorted(j: &Json) -> Json {
+        match j {
+            Json::Obj(kvs) => {
+                let mut out: Vec<(String, Json)> =
+                    kvs.iter().map(|(k, v)| (k.clone(), sorted(v))).collect();
+                out.sort_by(|a, b| a.0.cmp(&b.0));
+                Json::Obj(out)
+            }
+            Json::Arr(items) => Json::Arr(items.iter().map(sorted).collect()),
+            other => other.clone(),
+        }
+    }
+    sorted(j).to_string()
+}
+
+/// Exact non-negative integer out of a JSON number (manifest counts
+/// and indices must be integral and < 2⁵³ — the range both JSON
+/// serializers represent exactly).
+fn req_uint(j: &Json, key: &str) -> Result<u64> {
+    let n = j.req(key)?.as_f64()?;
+    if n.fract() != 0.0 || !(0.0..9.007_199_254_740_992e15).contains(&n) {
+        bail!("manifest field {key:?} = {n} is not an exact non-negative integer");
+    }
+    // Exactness was just checked, so the cast is value-preserving.
+    Ok(n as u64)
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    usize::try_from(req_uint(j, key)?)
+        .map_err(|_| anyhow!("manifest field {key:?} overflows usize"))
+}
+
+fn is_hex_sha256(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+/// Reject blob paths that could escape the artifact directory: only
+/// simple `blobs/<name>` entries are legal.
+fn check_blob_path(p: &str) -> Result<()> {
+    let rest = p
+        .strip_prefix("blobs/")
+        .ok_or_else(|| anyhow!("manifest blob path {p:?} is not under {BLOBS_DIR}/"))?;
+    if rest.is_empty()
+        || rest.contains('/')
+        || rest.contains('\\')
+        || rest == "."
+        || rest == ".."
+    {
+        bail!("manifest blob path {p:?} is not a plain file under {BLOBS_DIR}/");
+    }
+    Ok(())
+}
+
+/// Parse and verify a manifest from raw file bytes: schema version
+/// gate, canonical-JSON self-checksum, then full structural validation
+/// (names, geometry, contiguous block partitions, blob paths, digest
+/// shapes).  A total function over arbitrary bytes — it is a fuzz
+/// target — returning named errors, never panicking.
+pub fn parse_manifest(bytes: &[u8]) -> Result<Manifest> {
+    let text = std::str::from_utf8(bytes).map_err(|e| anyhow!("manifest is not UTF-8: {e}"))?;
+    let j = Json::parse(text).map_err(|e| anyhow!("manifest is not valid JSON: {e}"))?;
+    let version = req_uint(&j, "schema_version")?;
+    if version != ARTIFACT_SCHEMA_VERSION {
+        bail!(
+            "unsupported artifact schema_version {version} (this build reads \
+             {ARTIFACT_SCHEMA_VERSION})"
+        );
+    }
+
+    // Self-checksum before anything else is trusted: strip the field,
+    // canonicalize, compare.
+    let declared = j.req("manifest_sha256")?.as_str()?.to_string();
+    if !is_hex_sha256(&declared) {
+        bail!("manifest_sha256 {declared:?} is not a lowercase hex sha256");
+    }
+    let body = match &j {
+        Json::Obj(kvs) => Json::Obj(
+            kvs.iter()
+                .filter(|(k, _)| k != "manifest_sha256")
+                .cloned()
+                .collect(),
+        ),
+        other => other.clone(),
+    };
+    let actual = sha256_hex(canonical_json(&body).as_bytes());
+    if actual != declared {
+        bail!(
+            "manifest checksum mismatch: manifest_sha256 declares {declared} but the canonical \
+             body hashes to {actual} — the manifest was edited or corrupted"
+        );
+    }
+
+    let pack_j = j.req("pack")?;
+    let fmt_name = pack_j.req("fmt")?.as_str()?;
+    let fmt = Format::from_name(fmt_name)
+        .ok_or_else(|| anyhow!("manifest pack.fmt {fmt_name:?} is not a known format"))?;
+    let strat_name = pack_j.req("strategy")?.as_str()?;
+    let strategy = DecompStrategy::from_name(strat_name)
+        .ok_or_else(|| anyhow!("manifest pack.strategy {strat_name:?} is not a known strategy"))?;
+    let rho = pack_j.req("rho")?.as_f64()?;
+    if !rho.is_finite() || rho <= 0.0 || rho > 1.0 {
+        bail!("manifest pack.rho {rho} out of (0, 1]");
+    }
+    let pack = PackMeta {
+        fmt,
+        strategy,
+        rho,
+        max_rank: req_usize(pack_j, "max_rank")?,
+        seed: req_uint(pack_j, "seed")?,
+        block_cols: req_usize(pack_j, "block_cols")?,
+        simd: pack_j.req("simd")?.as_str()?.to_string(),
+    };
+
+    let mut layers = Vec::new();
+    for (i, lj) in j.req("layers")?.as_arr()?.iter().enumerate() {
+        let name = lj.req("name")?.as_str()?.to_string();
+        let rows = req_usize(lj, "rows")?;
+        let cols = req_usize(lj, "cols")?;
+        if rows == 0 || cols == 0 {
+            bail!("manifest layer {name:?} is empty ({rows}x{cols})");
+        }
+        let mut blocks = Vec::new();
+        let mut next_c0 = 0usize;
+        for bj in lj.req("blocks")?.as_arr()? {
+            let b = BlockMeta {
+                c0: req_usize(bj, "c0")?,
+                width: req_usize(bj, "width")?,
+                k: req_usize(bj, "k")?,
+                blob: bj.req("blob")?.as_str()?.to_string(),
+                sha256: bj.req("sha256")?.as_str()?.to_string(),
+                bytes: req_uint(bj, "bytes")?,
+            };
+            if b.c0 != next_c0 || b.width == 0 {
+                bail!(
+                    "manifest layer {name:?} blocks are not a contiguous column partition \
+                     (block at c0 {} width {}, expected c0 {next_c0})",
+                    b.c0,
+                    b.width
+                );
+            }
+            next_c0 = next_c0
+                .checked_add(b.width)
+                .ok_or_else(|| anyhow!("manifest layer {name:?} block widths overflow"))?;
+            if b.k == 0 || b.k > rows.min(b.width) {
+                bail!(
+                    "manifest layer {name:?} block at c0 {} has rank {} out of range for \
+                     {rows}x{} geometry",
+                    b.c0,
+                    b.k,
+                    b.width
+                );
+            }
+            check_blob_path(&b.blob)?;
+            if !is_hex_sha256(&b.sha256) {
+                bail!(
+                    "manifest layer {name:?} blob {} sha256 {:?} is not a lowercase hex sha256",
+                    b.blob,
+                    b.sha256
+                );
+            }
+            blocks.push(b);
+        }
+        if blocks.is_empty() {
+            bail!("manifest layer {name:?} has no blocks");
+        }
+        if next_c0 != cols {
+            bail!(
+                "manifest layer {name:?} blocks cover {next_c0} of {cols} columns (layer {i})"
+            );
+        }
+        layers.push(LayerMeta {
+            name,
+            rows,
+            cols,
+            blocks,
+        });
+    }
+    if layers.is_empty() {
+        bail!("manifest has no layers");
+    }
+    Ok(Manifest {
+        run_id: j.req("run_id")?.as_str()?.to_string(),
+        tool: j.req("tool")?.as_str()?.to_string(),
+        git_sha: match j.req("git_sha")? {
+            Json::Null => None,
+            other => Some(other.as_str()?.to_string()),
+        },
+        pack,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(super) fn sample_manifest() -> Manifest {
+        Manifest {
+            run_id: "test-run".to_string(),
+            tool: "metis-pack test".to_string(),
+            git_sha: None,
+            pack: PackMeta {
+                fmt: Format::Nvfp4,
+                strategy: DecompStrategy::SparseSample,
+                rho: 0.1,
+                max_rank: 64,
+                seed: 7,
+                block_cols: 1024,
+                simd: "portable".to_string(),
+            },
+            layers: vec![LayerMeta {
+                name: "layer00".to_string(),
+                rows: 48,
+                cols: 64,
+                blocks: vec![BlockMeta {
+                    c0: 0,
+                    width: 64,
+                    k: 5,
+                    blob: "blobs/L0000_B0000.bin".to_string(),
+                    sha256: "a".repeat(64),
+                    bytes: 123,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_verifies_checksum() {
+        let m = sample_manifest();
+        let text = m.to_json().to_string();
+        let back = parse_manifest(text.as_bytes()).unwrap();
+        assert_eq!(back.run_id, m.run_id);
+        assert_eq!(back.pack.fmt, m.pack.fmt);
+        assert_eq!(back.pack.seed, 7);
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].blocks[0].width, 64);
+    }
+
+    #[test]
+    fn edited_manifest_fails_the_self_checksum() {
+        let text = sample_manifest().to_json().to_string();
+        let tampered = text.replace("\"seed\":7", "\"seed\":8");
+        assert_ne!(text, tampered);
+        let err = format!("{:#}", parse_manifest(tampered.as_bytes()).unwrap_err());
+        assert!(err.contains("manifest checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_schema_version_is_a_named_error() {
+        let text = sample_manifest()
+            .to_json()
+            .to_string()
+            .replace("\"schema_version\":1", "\"schema_version\":99");
+        let err = format!("{:#}", parse_manifest(text.as_bytes()).unwrap_err());
+        assert!(err.contains("unsupported artifact schema_version 99"), "{err}");
+    }
+
+    #[test]
+    fn canonical_json_sorts_keys_compactly() {
+        let j = Json::parse(r#"{"b": 2, "a": {"z": 1, "y": [3, 1.5]}}"#).unwrap();
+        assert_eq!(canonical_json(&j), r#"{"a":{"y":[3,1.5],"z":1},"b":2}"#);
+    }
+
+    #[test]
+    fn garbage_and_structural_lies_are_named_errors() {
+        assert!(parse_manifest(b"\xff\xfe").is_err());
+        assert!(parse_manifest(b"not json").is_err());
+        assert!(parse_manifest(b"{}").is_err());
+
+        // Escaping blob path: rejected even with a valid checksum.
+        let mut m = sample_manifest();
+        m.layers[0].blocks[0].blob = "../evil.bin".to_string();
+        let err = format!(
+            "{:#}",
+            parse_manifest(m.to_json().to_string().as_bytes()).unwrap_err()
+        );
+        assert!(err.contains("not under blobs/"), "{err}");
+
+        // Non-contiguous partition.
+        let mut m = sample_manifest();
+        m.layers[0].blocks[0].c0 = 8;
+        let err = format!(
+            "{:#}",
+            parse_manifest(m.to_json().to_string().as_bytes()).unwrap_err()
+        );
+        assert!(err.contains("contiguous column partition"), "{err}");
+    }
+}

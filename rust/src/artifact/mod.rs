@@ -1,0 +1,41 @@
+//! Sealed quantized-model artifacts: the deployable on-disk form of a
+//! Metis-packed model (`metis pack` writes it, `metis eval --artifact`
+//! serves from it without rerunning any SVD).
+//!
+//! ## Layout (`ARTIFACT_SCHEMA_VERSION` 1)
+//!
+//! ```text
+//! DIR/
+//!   manifest.json          versioned manifest: provenance (run_id,
+//!                          tool), pack config (fmt/strategy/rho/
+//!                          max_rank/seed/block_cols/simd), per-layer
+//!                          geometry, and per-blob sha256 + length,
+//!                          sealed by a canonical-JSON self-checksum
+//!   blobs/
+//!     L0000_B0000.bin      one blob per (layer, column-block):
+//!     L0000_B0001.bin      master W_b (f64) + spectrum S_b (f64) +
+//!     ...                  packed Q(U_b), Q(V_bᵀ), Q(W_{R,b})
+//! ```
+//!
+//! Trust boundary: everything under `DIR` is untrusted input.  The
+//! only way bytes become an [`ArtifactBlock`] is through
+//! [`ArtifactReader`], which verifies the manifest self-checksum at
+//! open and each blob's SHA-256 **before** parsing — the DESIGN.md §12
+//! invariant enforced by the `artifact-unverified-parse` lint.  The
+//! raw [`blob::parse_blob`] / [`manifest::parse_manifest`] parsers are
+//! exported for the fuzz targets and are total over arbitrary bytes.
+
+pub mod blob;
+pub mod manifest;
+pub mod reader;
+pub mod sha256;
+pub mod writer;
+
+pub use blob::{encode_block, parse_blob, ArtifactBlock, BLOB_MAGIC, BLOB_VERSION};
+pub use manifest::{
+    canonical_json, parse_manifest, BlockMeta, LayerMeta, Manifest, PackMeta,
+    ARTIFACT_SCHEMA_VERSION, BLOBS_DIR, MANIFEST_FILE,
+};
+pub use reader::ArtifactReader;
+pub use sha256::{sha256_hex, Sha256};
+pub use writer::{blob_name, write_artifact, PackLayerReport, PackOptions, PackSummary};

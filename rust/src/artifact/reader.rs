@@ -1,0 +1,345 @@
+//! `ArtifactReader`: the verifying loader for sealed artifacts.
+//!
+//! `open` parses + self-checksums the manifest (see
+//! [`super::manifest`]) and stats every declared blob, so truncation
+//! and missing payloads fail at open time; `load_block` then maps (or
+//! buffered-reads) one blob, verifies its SHA-256 against the
+//! manifest **before** any byte is interpreted, parses it, and
+//! cross-checks the blob's self-describing header against its
+//! manifest slot (stale-manifest / swapped-blob drift).  There is no
+//! unverified access path: this constructor chain is the only way the
+//! crate turns artifact bytes into an [`ArtifactBlock`], which is the
+//! DESIGN.md §12 invariant the `artifact-unverified-parse` lint pins.
+//!
+//! Loading prefers `mmap(2)` on Unix (the blob is page-cache-backed
+//! and never copied until decode) and silently falls back to
+//! `fs::read` anywhere mmap is unavailable or fails — both paths feed
+//! the same verification, so behaviour is identical byte for byte.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::blob::{parse_blob, ArtifactBlock};
+use super::manifest::{parse_manifest, Manifest, MANIFEST_FILE};
+use super::sha256::sha256_hex;
+use crate::obs::metrics::metrics;
+
+/// A blob's bytes, either mmap-backed or owned (fallback).
+enum MappedBytes {
+    Owned(Vec<u8>),
+    #[cfg(unix)]
+    Mapped(MmapRegion),
+}
+
+impl std::ops::Deref for MappedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            MappedBytes::Owned(v) => v,
+            #[cfg(unix)]
+            MappedBytes::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+#[cfg(unix)]
+mod mm {
+    use std::os::raw::{c_int, c_void};
+
+    // Values from the Linux/POSIX ABI; the crate vendors no libc
+    // crate, so the two constants the read-only mapping needs are
+    // declared here.
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// An owned read-only `mmap` region, unmapped on drop.
+#[cfg(unix)]
+struct MmapRegion {
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+#[cfg(unix)]
+impl MmapRegion {
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` came from a successful PROT_READ/MAP_PRIVATE
+        // mmap of exactly `len` bytes and stays mapped until Drop;
+        // the region is never written through, so a shared byte slice
+        // borrowed from `self` is valid for its lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` are the exact values returned by the
+        // successful mmap in `try_mmap`, unmapped exactly once here.
+        unsafe {
+            mm::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// Map a file read-only; `None` means "fall back to buffered read"
+/// (open failure, zero length, or mmap refusal — never an error).
+#[cfg(unix)]
+fn try_mmap(path: &Path) -> Option<MappedBytes> {
+    use std::os::unix::io::AsRawFd;
+
+    let file = fs::File::open(path).ok()?;
+    let len = usize::try_from(file.metadata().ok()?.len()).ok()?;
+    if len == 0 {
+        // mmap(len = 0) is EINVAL; an empty file is representable as
+        // an owned empty buffer.
+        return Some(MappedBytes::Owned(Vec::new()));
+    }
+    // SAFETY: fd is a live, owned file descriptor; a PROT_READ
+    // MAP_PRIVATE mapping of `len` bytes at offset 0 has no aliasing
+    // requirements on our side, and the mapping outlives the fd by
+    // POSIX (the file stays referenced by the map itself).
+    let ptr = unsafe {
+        mm::mmap(
+            std::ptr::null_mut(),
+            len,
+            mm::PROT_READ,
+            mm::MAP_PRIVATE,
+            file.as_raw_fd(),
+            0,
+        )
+    };
+    if ptr as isize == -1 {
+        return None;
+    }
+    Some(MappedBytes::Mapped(MmapRegion { ptr, len }))
+}
+
+fn map_or_read(path: &Path) -> Result<MappedBytes> {
+    #[cfg(unix)]
+    if let Some(m) = try_mmap(path) {
+        return Ok(m);
+    }
+    Ok(MappedBytes::Owned(fs::read(path).with_context(|| {
+        format!("reading artifact blob {}", path.display())
+    })?))
+}
+
+/// Handle to one opened sealed artifact: verified manifest + lazily
+/// loaded, always-verified blocks.
+pub struct ArtifactReader {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactReader {
+    /// Open an artifact directory: parse + self-checksum the manifest,
+    /// then stat every declared blob so missing or wrong-length
+    /// payloads fail here instead of mid-eval.
+    pub fn open(dir: &Path) -> Result<ArtifactReader> {
+        let mpath = dir.join(MANIFEST_FILE);
+        let bytes = fs::read(&mpath)
+            .with_context(|| format!("reading artifact manifest {}", mpath.display()))?;
+        let manifest = parse_manifest(&bytes)
+            .with_context(|| format!("parsing artifact manifest {}", mpath.display()))?;
+        for layer in &manifest.layers {
+            for b in &layer.blocks {
+                let bpath = dir.join(&b.blob);
+                let meta = fs::metadata(&bpath).with_context(|| {
+                    format!("artifact blob {} declared by the manifest is missing", bpath.display())
+                })?;
+                if meta.len() != b.bytes {
+                    bail!(
+                        "artifact blob {} is {} bytes on disk but the manifest declares {} — \
+                         truncated or stale",
+                        bpath.display(),
+                        meta.len(),
+                        b.bytes
+                    );
+                }
+            }
+        }
+        Ok(ArtifactReader {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load and verify one (layer, block) unit: length check, SHA-256
+    /// against the manifest, blob parse, then blob-vs-manifest drift
+    /// check.  Every error is named; nothing unverified escapes.
+    pub fn load_block(&self, layer_idx: usize, block_idx: usize) -> Result<ArtifactBlock> {
+        let layer = self
+            .manifest
+            .layers
+            .get(layer_idx)
+            .ok_or_else(|| anyhow!("artifact has no layer index {layer_idx}"))?;
+        let meta = layer.blocks.get(block_idx).ok_or_else(|| {
+            anyhow!(
+                "artifact layer {:?} has no block index {block_idx}",
+                layer.name
+            )
+        })?;
+        let path = self.dir.join(&meta.blob);
+        let data = map_or_read(&path)?;
+        if data.len() as u64 != meta.bytes {
+            bail!(
+                "artifact blob {} is {} bytes but the manifest declares {} — truncated or stale",
+                path.display(),
+                data.len(),
+                meta.bytes
+            );
+        }
+        let actual = sha256_hex(&data);
+        if actual != meta.sha256 {
+            bail!(
+                "artifact blob {} checksum mismatch: manifest declares sha256 {} but the payload \
+                 hashes to {actual} — the blob was modified after sealing",
+                path.display(),
+                meta.sha256
+            );
+        }
+        let blk = parse_blob(&data)
+            .with_context(|| format!("parsing artifact blob {}", path.display()))?;
+        if blk.layer != layer_idx
+            || blk.block != block_idx
+            || blk.c0 != meta.c0
+            || blk.master.rows != layer.rows
+            || blk.master.cols != meta.width
+            || blk.s.len() != meta.k
+        {
+            bail!(
+                "artifact blob {} does not match its manifest slot: blob header says layer {} \
+                 block {} c0 {} geometry {}x{} k {}, manifest says layer {layer_idx} block \
+                 {block_idx} c0 {} geometry {}x{} k {} — stale manifest or swapped blob",
+                path.display(),
+                blk.layer,
+                blk.block,
+                blk.c0,
+                blk.master.rows,
+                blk.master.cols,
+                blk.s.len(),
+                meta.c0,
+                layer.rows,
+                meta.width,
+                meta.k
+            );
+        }
+        let m = metrics();
+        m.artifact_bytes_read.add(meta.bytes);
+        m.artifact_blocks_verified.incr();
+        Ok(blk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::blob::encode_block;
+    use super::super::writer::tests::tiny_artifact;
+    use super::*;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("metis-artifact-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("blobs")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_load_roundtrip_verifies_and_ticks_metrics() {
+        let dir = fresh_dir("roundtrip");
+        let (manifest, blocks) = tiny_artifact();
+        for (meta_path, blk) in &blocks {
+            fs::write(dir.join(meta_path), encode_block(blk)).unwrap();
+        }
+        fs::write(
+            dir.join(MANIFEST_FILE),
+            manifest.to_json().to_string().as_bytes(),
+        )
+        .unwrap();
+
+        let verified0 = metrics().artifact_blocks_verified.get();
+        let reader = ArtifactReader::open(&dir).unwrap();
+        let blk = reader.load_block(0, 0).unwrap();
+        assert_eq!(blk.master.rows, manifest.layers[0].rows);
+        assert_eq!(blk.master.cols, manifest.layers[0].blocks[0].width);
+        assert_eq!(blk.s.len(), manifest.layers[0].blocks[0].k);
+        // The recomposed effective block has master geometry.
+        let eff = blk.effective();
+        assert_eq!((eff.rows, eff.cols), (blk.master.rows, blk.master.cols));
+        assert!(metrics().artifact_blocks_verified.get() > verified0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_a_checksum_error() {
+        let dir = fresh_dir("flip");
+        let (manifest, blocks) = tiny_artifact();
+        for (meta_path, blk) in &blocks {
+            let mut bytes = encode_block(blk);
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            fs::write(dir.join(meta_path), bytes).unwrap();
+        }
+        fs::write(
+            dir.join(MANIFEST_FILE),
+            manifest.to_json().to_string().as_bytes(),
+        )
+        .unwrap();
+        let reader = ArtifactReader::open(&dir).unwrap();
+        let err = format!("{:#}", reader.load_block(0, 0).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_blob_fails_at_open() {
+        let dir = fresh_dir("trunc");
+        let (manifest, blocks) = tiny_artifact();
+        for (meta_path, blk) in &blocks {
+            let bytes = encode_block(blk);
+            fs::write(dir.join(meta_path), &bytes[..bytes.len() - 7]).unwrap();
+        }
+        fs::write(
+            dir.join(MANIFEST_FILE),
+            manifest.to_json().to_string().as_bytes(),
+        )
+        .unwrap();
+        let err = format!("{:#}", ArtifactReader::open(&dir).unwrap_err());
+        assert!(err.contains("truncated or stale"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_blob_fails_at_open() {
+        let dir = fresh_dir("missing");
+        let (manifest, _blocks) = tiny_artifact();
+        fs::write(
+            dir.join(MANIFEST_FILE),
+            manifest.to_json().to_string().as_bytes(),
+        )
+        .unwrap();
+        let err = format!("{:#}", ArtifactReader::open(&dir).unwrap_err());
+        assert!(err.contains("missing"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,500 @@
+//! `metis pack`: seal checkpoint specs into an on-disk artifact.
+//!
+//! The writer streams the exact per-(layer, block) pack path the
+//! on-the-fly eval uses (`Source::Specs` in [`crate::metis::eval`]):
+//! `read_cols` → finite check → `pack_stream(seed, layer, block,
+//! single)` → `weight_split` → `pack_split_parts` — then persists the
+//! master block, the high-precision spectrum S, and the three packed
+//! factors per blob, with a manifest recording the pack config and
+//! every blob's SHA-256 + byte length.  Because the stored factors are
+//! the pack path's own outputs and [`ArtifactBlock::effective`] is the
+//! same composition as `quantize_split_packed`, an artifact-backed
+//! eval is bit-identical to packing the checkpoint on the fly at the
+//! same seed — the acceptance contract `rust/tests/artifact.rs` pins.
+//!
+//! Blocks pack in parallel on the global [`WorkPool`] (largest first);
+//! blob bytes are deterministic per unit and the manifest is assembled
+//! in (layer, block) order, so the sealed artifact is byte-identical
+//! for any thread count.
+
+use std::fs;
+use std::path::Path;
+use std::sync::{mpsc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::blob::{encode_block, ArtifactBlock};
+use super::manifest::{
+    BlockMeta, LayerMeta, Manifest, PackMeta, BLOBS_DIR, MANIFEST_FILE,
+};
+use super::sha256::sha256_hex;
+use crate::metis::pipeline::{column_blocks, LayerSpec};
+use crate::metis::quantizer::{pack_split_parts, MetisQuantConfig};
+use crate::metis::split::weight_split;
+use crate::metis::trainstate::pack_stream;
+use crate::obs::metrics::metrics;
+use crate::util::json::Json;
+use crate::util::npy::ReaderCache;
+use crate::util::timer::Stopwatch;
+use crate::util::workpool::WorkPool;
+
+/// Pack-side knobs of one `metis pack` invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOptions {
+    pub quant: MetisQuantConfig,
+    /// Seed of the per-(layer, block) pack streams.
+    pub seed: u64,
+    pub block_cols: usize,
+    pub threads: usize,
+}
+
+/// Per-layer progress row (`event: "pack_layer"`).
+#[derive(Clone, Debug)]
+pub struct PackLayerReport {
+    pub name: String,
+    pub layer: usize,
+    pub blocks: usize,
+    /// Largest split rank across the layer's blocks.
+    pub rank_max: usize,
+    /// Sealed blob bytes of the layer.
+    pub bytes: u64,
+}
+
+impl PackLayerReport {
+    pub fn to_json(&self) -> Json {
+        crate::obs::stamp(
+            "pack_layer",
+            crate::obs::schema::PACK_LAYER,
+            vec![
+                ("name", Json::str(&self.name)),
+                ("layer", Json::num(self.layer as f64)),
+                ("blocks", Json::num(self.blocks as f64)),
+                ("rank_max", Json::num(self.rank_max as f64)),
+                ("bytes", Json::num(self.bytes as f64)),
+            ],
+        )
+    }
+}
+
+/// End-of-pack summary (`event: "pack_done"`).
+#[derive(Debug)]
+pub struct PackSummary {
+    pub manifest: Manifest,
+    pub layer_reports: Vec<PackLayerReport>,
+    /// Blob bytes + manifest bytes.
+    pub total_bytes: u64,
+    pub pack_ms: f64,
+}
+
+impl PackSummary {
+    pub fn to_json(&self) -> Json {
+        crate::obs::stamp(
+            "pack_done",
+            crate::obs::schema::PACK_DONE,
+            vec![
+                ("layers", Json::num(self.manifest.layers.len() as f64)),
+                (
+                    "blocks",
+                    Json::num(
+                        self.manifest
+                            .layers
+                            .iter()
+                            .map(|l| l.blocks.len())
+                            .sum::<usize>() as f64,
+                    ),
+                ),
+                ("bytes", Json::num(self.total_bytes as f64)),
+                ("ms", Json::num_or_null(self.pack_ms)),
+            ],
+        )
+    }
+}
+
+/// Canonical blob path of one (layer, block) unit.
+pub fn blob_name(layer: usize, block: usize) -> String {
+    format!("{BLOBS_DIR}/L{layer:04}_B{block:04}.bin")
+}
+
+struct PackedUnit {
+    meta: BlockMeta,
+    rank: usize,
+}
+
+/// Pack one unit through the shared on-the-fly path and seal it.
+fn pack_unit(
+    spec: &LayerSpec,
+    layer: usize,
+    block: usize,
+    c0: usize,
+    width: usize,
+    single: bool,
+    opts: &PackOptions,
+    outdir: &Path,
+    cache: &mut ReaderCache,
+) -> Result<PackedUnit> {
+    let _span = crate::obs::span_ab("pack.unit", layer as i64, block as i64);
+    let wb = spec.read_cols(c0, width, cache)?;
+    if !wb.data.iter().all(|x| x.is_finite()) {
+        bail!(
+            "non-finite weight values in columns [{}, {}) — pack requires finite inputs",
+            c0,
+            c0 + width
+        );
+    }
+    let mut rng = pack_stream(opts.seed, layer, block, single);
+    let k = opts.quant.rank(wb.min_dim());
+    let split = weight_split(&wb, k, opts.quant.strategy, &mut rng);
+    let (uq, vtq, rq) = pack_split_parts(&split, opts.quant.fmt);
+    let blk = ArtifactBlock {
+        layer,
+        block,
+        c0,
+        master: wb,
+        s: split.svd.s.clone(),
+        uq,
+        vtq,
+        rq,
+    };
+    let bytes = encode_block(&blk);
+    let name = blob_name(layer, block);
+    let path = outdir.join(&name);
+    fs::write(&path, &bytes)
+        .with_context(|| format!("writing artifact blob {}", path.display()))?;
+    metrics().artifact_bytes_written.add(bytes.len() as u64);
+    Ok(PackedUnit {
+        meta: BlockMeta {
+            c0,
+            width,
+            k,
+            blob: name,
+            sha256: sha256_hex(&bytes),
+            bytes: bytes.len() as u64,
+        },
+        rank: k,
+    })
+}
+
+/// Seal `specs` into `outdir`: blobs under `blobs/`, then the
+/// self-checksummed manifest.  Deterministic byte-for-byte at a given
+/// seed/config for any thread count.
+pub fn write_artifact(
+    specs: &[LayerSpec],
+    opts: &PackOptions,
+    outdir: &Path,
+) -> Result<PackSummary> {
+    if specs.is_empty() {
+        bail!("pack: no layers to seal");
+    }
+    let watch = Stopwatch::start();
+    fs::create_dir_all(outdir.join(BLOBS_DIR))
+        .with_context(|| format!("creating artifact dir {}", outdir.display()))?;
+
+    // (layer, block, c0, width, single) units, largest first like eval.
+    let mut units: Vec<(usize, usize, usize, usize, bool)> = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        if spec.rows == 0 || spec.cols == 0 {
+            bail!("pack: layer {} is empty", spec.name);
+        }
+        let blocks = column_blocks(spec.cols, opts.block_cols);
+        let single = blocks.len() == 1;
+        for (b, (c0, width)) in blocks.into_iter().enumerate() {
+            units.push((i, b, c0, width, single));
+        }
+    }
+    let n_units = units.len();
+    units.sort_by_key(|&(layer, block, _, width, _)| (specs[layer].rows * width, layer, block));
+    let threads = opts.threads.max(1).min(n_units);
+    let queue = Mutex::new(units);
+    let (tx, rx) = mpsc::channel::<(usize, usize, Result<PackedUnit>)>();
+    WorkPool::global().scoped(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let queue = &queue;
+            scope.execute(move || {
+                let mut cache = ReaderCache::new();
+                loop {
+                    let unit = queue.lock().unwrap().pop();
+                    let Some((layer, block, c0, width, single)) = unit else {
+                        break;
+                    };
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        pack_unit(
+                            &specs[layer],
+                            layer,
+                            block,
+                            c0,
+                            width,
+                            single,
+                            opts,
+                            outdir,
+                            &mut cache,
+                        )
+                    }))
+                    .unwrap_or_else(|_| Err(anyhow!("pack worker panicked")));
+                    if tx.send((layer, block, out)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut per_layer: Vec<Vec<(usize, PackedUnit)>> =
+        (0..specs.len()).map(|_| Vec::new()).collect();
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut n_got = 0usize;
+    for (layer, block, out) in rx.iter() {
+        n_got += 1;
+        match out {
+            Ok(u) => per_layer[layer].push((block, u)),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(e.context(format!("layer {} (block {block})", specs[layer].name)));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if n_got != n_units {
+        bail!("pack: {n_got} of {n_units} work units reported");
+    }
+
+    // Manifest + reports in (layer, block) order — deterministic.
+    let mut layers = Vec::with_capacity(specs.len());
+    let mut layer_reports = Vec::with_capacity(specs.len());
+    let mut blob_bytes = 0u64;
+    for (i, mut blocks) in per_layer.into_iter().enumerate() {
+        blocks.sort_by_key(|(b, _)| *b);
+        let rank_max = blocks.iter().map(|(_, u)| u.rank).max().unwrap_or(0);
+        let bytes: u64 = blocks.iter().map(|(_, u)| u.meta.bytes).sum();
+        blob_bytes += bytes;
+        layer_reports.push(PackLayerReport {
+            name: specs[i].name.clone(),
+            layer: i,
+            blocks: blocks.len(),
+            rank_max,
+            bytes,
+        });
+        layers.push(LayerMeta {
+            name: specs[i].name.clone(),
+            rows: specs[i].rows,
+            cols: specs[i].cols,
+            blocks: blocks.into_iter().map(|(_, u)| u.meta).collect(),
+        });
+    }
+    let manifest = Manifest {
+        run_id: crate::obs::run().run_id.clone(),
+        tool: format!("metis-pack {}", crate::version()),
+        git_sha: None,
+        pack: PackMeta {
+            fmt: opts.quant.fmt,
+            strategy: opts.quant.strategy,
+            rho: opts.quant.rho,
+            max_rank: opts.quant.max_rank,
+            seed: opts.seed,
+            block_cols: opts.block_cols,
+            simd: crate::linalg::kernels::simd_feature().to_string(),
+        },
+        layers,
+    };
+    let mpath = outdir.join(MANIFEST_FILE);
+    let mtext = manifest.to_json().to_string();
+    fs::write(&mpath, mtext.as_bytes())
+        .with_context(|| format!("writing artifact manifest {}", mpath.display()))?;
+    metrics().artifact_bytes_written.add(mtext.len() as u64);
+    Ok(PackSummary {
+        manifest,
+        layer_reports,
+        total_bytes: blob_bytes + mtext.len() as u64,
+        pack_ms: watch.ms(),
+    })
+}
+
+#[cfg(test)]
+pub(super) mod tests {
+    use super::super::reader::ArtifactReader;
+    use super::*;
+    use crate::formats::Format;
+    use crate::metis::quantizer::quantize_split_packed;
+    use crate::metis::sampler::DecompStrategy;
+    use crate::tensor::Matrix;
+    use crate::util::prng::Rng;
+
+    fn test_quant() -> MetisQuantConfig {
+        MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::Full,
+            rho: 0.3,
+            max_rank: 8,
+        }
+    }
+
+    /// One hand-built single-block artifact (manifest + blobs), used
+    /// by the reader unit tests: blob paths relative to the artifact
+    /// dir, checksums already correct.
+    pub(in super::super) fn tiny_artifact() -> (Manifest, Vec<(String, ArtifactBlock)>) {
+        let quant = test_quant();
+        let mut wrng = Rng::new(3);
+        let w = Matrix::gaussian(&mut wrng, 12, 10, 1.0);
+        let k = quant.rank(w.min_dim());
+        let mut rng = pack_stream(7, 0, 0, true);
+        let split = weight_split(&w, k, quant.strategy, &mut rng);
+        let (uq, vtq, rq) = pack_split_parts(&split, quant.fmt);
+        let blk = ArtifactBlock {
+            layer: 0,
+            block: 0,
+            c0: 0,
+            master: w.clone(),
+            s: split.svd.s.clone(),
+            uq,
+            vtq,
+            rq,
+        };
+        let bytes = encode_block(&blk);
+        let name = blob_name(0, 0);
+        let manifest = Manifest {
+            run_id: "test-run".to_string(),
+            tool: "metis-pack test".to_string(),
+            git_sha: None,
+            pack: PackMeta {
+                fmt: quant.fmt,
+                strategy: quant.strategy,
+                rho: quant.rho,
+                max_rank: quant.max_rank,
+                seed: 7,
+                block_cols: 1024,
+                simd: "portable".to_string(),
+            },
+            layers: vec![LayerMeta {
+                name: "layer00".to_string(),
+                rows: w.rows,
+                cols: w.cols,
+                blocks: vec![BlockMeta {
+                    c0: 0,
+                    width: w.cols,
+                    k,
+                    blob: name.clone(),
+                    sha256: sha256_hex(&bytes),
+                    bytes: bytes.len() as u64,
+                }],
+            }],
+        };
+        (manifest, vec![(name, blk)])
+    }
+
+    fn mem_specs() -> Vec<LayerSpec> {
+        let mut rng = Rng::new(11);
+        vec![
+            LayerSpec::mem("layer_a", Matrix::gaussian(&mut rng.fold_in(0), 20, 40, 1.0)),
+            LayerSpec::mem("layer_b", Matrix::gaussian(&mut rng.fold_in(1), 16, 16, 0.5)),
+        ]
+    }
+
+    #[test]
+    fn sealed_blocks_recompose_bit_identically_to_on_the_fly_packing() {
+        let dir = std::env::temp_dir()
+            .join(format!("metis-artifact-writer-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let specs = mem_specs();
+        let opts = PackOptions {
+            quant: test_quant(),
+            seed: 42,
+            block_cols: 16,
+            threads: 2,
+        };
+        let summary = write_artifact(&specs, &opts, &dir).unwrap();
+        assert_eq!(summary.manifest.layers.len(), 2);
+        // layer_a (40 cols @ block_cols 16) partitions into 3 blocks.
+        assert_eq!(summary.manifest.layers[0].blocks.len(), 3);
+        assert_eq!(summary.manifest.pack.seed, 42);
+
+        let reader = ArtifactReader::open(&dir).unwrap();
+        let mut cache = ReaderCache::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let blocks = column_blocks(spec.cols, opts.block_cols);
+            let single = blocks.len() == 1;
+            for (b, (c0, width)) in blocks.into_iter().enumerate() {
+                let loaded = reader.load_block(i, b).unwrap();
+                // Same master, same effective weight, to the bit: the
+                // artifact path must be indistinguishable from packing
+                // on the fly at the same seed.
+                let wb = spec.read_cols(c0, width, &mut cache).unwrap();
+                let mut rng = pack_stream(opts.seed, i, b, single);
+                let k = opts.quant.rank(wb.min_dim());
+                let split = weight_split(&wb, k, opts.quant.strategy, &mut rng);
+                assert_eq!(loaded.master, wb);
+                assert_eq!(loaded.effective(), quantize_split_packed(&split, opts.quant.fmt));
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sealed_artifact_bytes_are_thread_count_invariant() {
+        let base = std::env::temp_dir()
+            .join(format!("metis-artifact-threads-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&base);
+        let specs = mem_specs();
+        let mut manifests = Vec::new();
+        for threads in [1usize, 4] {
+            let dir = base.join(format!("t{threads}"));
+            let opts = PackOptions {
+                quant: test_quant(),
+                seed: 9,
+                block_cols: 16,
+                threads,
+            };
+            write_artifact(&specs, &opts, &dir).unwrap();
+            // The manifest embeds per-blob checksums, so equal
+            // manifest bodies (run_id aside) ⇒ equal blob bytes.
+            let m = ArtifactReader::open(&dir).unwrap();
+            let mut fingerprint = String::new();
+            for l in &m.manifest().layers {
+                for b in &l.blocks {
+                    fingerprint.push_str(&format!("{}:{}:{};", b.blob, b.sha256, b.bytes));
+                }
+            }
+            manifests.push(fingerprint);
+        }
+        assert_eq!(manifests[0], manifests[1]);
+        let _ = fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn swapped_blobs_are_rejected_as_manifest_drift() {
+        let dir = std::env::temp_dir()
+            .join(format!("metis-artifact-swap-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let specs = mem_specs();
+        let opts = PackOptions {
+            quant: test_quant(),
+            seed: 5,
+            block_cols: 16,
+            threads: 1,
+        };
+        write_artifact(&specs, &opts, &dir).unwrap();
+        // Swap two equally-sized blobs of layer_a (16-wide column
+        // blocks of the same 20-row layer): lengths still match the
+        // manifest, so only checksum verification can catch it.
+        let a = dir.join(blob_name(0, 0));
+        let b = dir.join(blob_name(0, 1));
+        let (ab, bb) = (fs::read(&a).unwrap(), fs::read(&b).unwrap());
+        fs::write(&a, &bb).unwrap();
+        fs::write(&b, &ab).unwrap();
+        let reader = match ArtifactReader::open(&dir) {
+            // Equal sizes pass the open-time stat; the load must fail.
+            Ok(r) => r,
+            Err(_) => {
+                let _ = fs::remove_dir_all(&dir);
+                return;
+            }
+        };
+        let err = format!("{:#}", reader.load_block(0, 0).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -99,6 +99,17 @@ USAGE:
       --threads.  Held-out activations come from --eval-split (a dir of
       (b, d) / stacked (N, b, d) .npy batches, matched to layers by
       width d) or from deterministic eval-only probe streams.
+  metis eval      --artifact DIR [--seed N] [--threads N] [--batch N]
+                  [--batches N] [--sigma-cap N] [--eval-split DIR]
+                  [--out report.jsonl] [--trace-out trace.json]
+                  [--metrics-out metrics.json]
+      Serve the held-out eval from a sealed `metis pack` artifact: the
+      packed factors mmap-load with mandatory checksum verification and
+      no SVD reruns, so the row lands in milliseconds and is
+      bit-identical to `metis eval CKPT` at the manifest's pack seed
+      and config.  Format/strategy/rho/max-rank/block-cols come from
+      the manifest and cannot be overridden; --seed defaults to the
+      pack seed.
   metis eval      --model NAME --mode MODE --ckpt DIR [--downstream]
       Legacy artifact path: held-out loss (+ optional GLUE-like probes)
       for a checkpoint via the AOT eval_step artifact.
@@ -133,6 +144,20 @@ USAGE:
       sparse_sample = §3.1 row-sampling sketch + subspace lift
       (< 1e-2 top-k σ error at a fraction of full-SVD cost);
       random_project = zero-iteration sketch, cheapest and loosest.
+  metis pack      CKPT_DIR -o DIR [--fmt mxfp4|nvfp4|fp8|paper_fp4]
+                  [--strategy full|rsvd|sparse_sample|random_project]
+                  [--rho F] [--max-rank N] [--seed N] [--block-cols N]
+                  [--threads N] [--trace-out trace.json]
+                  [--metrics-out metrics.json]
+      Seal a checkpoint dir of .npy weights into a versioned artifact:
+      each (layer, column-block) streams through the Eq. 3 split +
+      Eq. 5 sub-distribution quantization once (same per-unit pack
+      streams as eval/train-native at the same --seed), and the packed
+      factors + high-precision masters/spectra land as checksummed
+      blobs under DIR/blobs with a canonical-JSON self-checksummed
+      manifest.json.  Deterministic byte-for-byte for any --threads.
+      Verify offline with tools/validate_artifact.py; serve with
+      `metis eval --artifact DIR`.
   metis train-native [--layers N] [--d-model N] [--steps N] [--batch N]
                   [--fmt mxfp4|nvfp4|fp8|paper_fp4]
                   [--strategy full|rsvd|sparse_sample|random_project]
@@ -165,7 +190,7 @@ USAGE:
       breakdowns, the top slowest (layer, block) units, and per-stream
       event counts + seq ranges.
 
-Observability: eval / quantize-model / train-native accept
+Observability: eval / quantize-model / pack / train-native accept
 --trace-out FILE and --metrics-out FILE.  Either flag turns on
 process-wide span + metric recording (off by default, <= 1% overhead
 when on, bit-identical outputs either way).  --trace-out writes a

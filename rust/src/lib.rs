@@ -18,6 +18,7 @@
 //!   (Eqs. 5/8–11), the §3.2 adaptive spectral LR, and the
 //!   layer-sharded `quantize-model` pipeline.
 
+pub mod artifact;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -6,6 +6,7 @@
 
 use anyhow::{bail, Result};
 
+use metis::artifact::{write_artifact, ArtifactReader, PackOptions};
 use metis::cli::{artifacts_flag, Args, USAGE};
 use metis::coordinator::{eval_downstream, ExperimentConfig, Trainer};
 use metis::data::evalsplit::scan_eval_split;
@@ -40,6 +41,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("analyze") => cmd_analyze(&args),
         Some("quant") => cmd_quant(&args),
         Some("quantize-model") => cmd_quantize_model(&args),
+        Some("pack") => cmd_pack(&args),
         Some("train-native") => cmd_train_native(&args),
         Some("trace") => cmd_trace(&args),
         Some("help") | None => {
@@ -289,11 +291,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    // Two eval paths share the subcommand: `metis eval <ckpt-dir>` (or
-    // plain `metis eval` for the synthetic model) runs the native
-    // held-out harness — no artifacts or PJRT needed; the legacy
-    // `--model/--mode/--ckpt` flag form keeps driving the artifact
-    // path.
+    // Three eval paths share the subcommand: `metis eval --artifact
+    // DIR` serves from a sealed artifact (no SVD), `metis eval
+    // <ckpt-dir>` (or plain `metis eval` for the synthetic model) runs
+    // the native held-out harness — no artifacts or PJRT needed; the
+    // legacy `--model/--mode/--ckpt` flag form keeps driving the
+    // artifact path.
+    if let Some(dir) = args.flags.get("artifact") {
+        let dir = dir.clone();
+        return cmd_eval_artifact(args, &dir);
+    }
     if args.positional.len() > 1 {
         return cmd_eval_native(args, Some(args.positional[1].as_str()));
     }
@@ -399,6 +406,34 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         None => EvalState::synthetic(cfg)?,
     };
     let rep = harness.eval_specs(&specs, &quant, seed, None)?;
+    let streams = print_eval_report(args, &rep, cfg.threads)?;
+    sink.finish(
+        "eval",
+        seed,
+        Json::obj(vec![
+            ("fmt", Json::str(fmt.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("rho", Json::num(quant.rho)),
+            ("max_rank", Json::num(quant.max_rank as f64)),
+            ("threads", Json::num(cfg.threads as f64)),
+            ("batch", Json::num(cfg.batch as f64)),
+            ("batches", Json::num(cfg.batches as f64)),
+            ("block_cols", Json::num(cfg.block_cols as f64)),
+            ("sigma_cap", Json::num(cfg.sigma_dim_cap as f64)),
+        ]),
+        &streams,
+    )?;
+    Ok(())
+}
+
+/// Shared eval output: JSONL row to stdout, the per-layer fidelity
+/// table, the closing summary line, and the optional `--out` report
+/// file.  Returns the stream files written (for the run manifest).
+fn print_eval_report(
+    args: &Args,
+    rep: &metis::metis::EvalReport,
+    threads: usize,
+) -> Result<Vec<String>> {
     println!("{}", rep.to_json());
 
     let mut table = metis::bench::Table::new(
@@ -429,7 +464,7 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         rep.logit_div,
         rep.batches,
         rep.eval_ms,
-        cfg.threads.max(1)
+        threads.max(1)
     );
     let mut streams = Vec::new();
     if let Some(out) = args.flags.get("out") {
@@ -442,14 +477,65 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
         eprintln!("report: {out}");
         streams.push(out.clone());
     }
+    Ok(streams)
+}
+
+/// `metis eval --artifact DIR`: serve the held-out eval from a sealed
+/// artifact.  Pack configuration (format, strategy, ρ, max rank,
+/// column blocking) and the default seed come from the verified
+/// manifest — passing those flags here is an error, because a value
+/// that disagreed with the manifest could not reproduce the sealed
+/// packing.  Millisecond-class: no SVD runs; blocks mmap-load with
+/// checksum verification.
+fn cmd_eval_artifact(args: &Args, dir: &str) -> Result<()> {
+    if args.positional.len() > 1 {
+        bail!(
+            "eval --artifact takes no checkpoint argument — the artifact {dir:?} already \
+             contains the packed model"
+        );
+    }
+    for locked in ["fmt", "strategy", "rho", "max-rank", "block-cols"] {
+        if args.flags.contains_key(locked) {
+            bail!(
+                "--{locked} cannot be overridden with --artifact: the sealed manifest fixes the \
+                 pack configuration"
+            );
+        }
+    }
+    let reader = ArtifactReader::open(std::path::Path::new(dir))?;
+    let pack = reader.manifest().pack.clone();
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Defaulting to the pack seed keeps the row bit-identical to
+    // `metis eval CKPT --seed <pack seed>`; an explicit --seed just
+    // probes with different held-out batches.
+    let seed = args.usize("seed", usize::try_from(pack.seed).unwrap_or(0))? as u64;
+    let cfg = EvalConfig {
+        threads: args.usize("threads", default_threads)?,
+        batch: args.usize("batch", 32)?,
+        batches: args.usize("batches", 4)?,
+        seed,
+        sigma_dim_cap: args.usize("sigma-cap", 256)?,
+        block_cols: pack.block_cols,
+        fmt: pack.fmt,
+    };
+    let sink = obs_sink(args);
+    let harness = match args.flags.get("eval-split") {
+        Some(split) => EvalState::with_split(cfg, scan_eval_split(split)?)?,
+        None => EvalState::synthetic(cfg)?,
+    };
+    let rep = harness.eval_artifact(&reader, None)?;
+    let streams = print_eval_report(args, &rep, cfg.threads)?;
     sink.finish(
         "eval",
         seed,
         Json::obj(vec![
-            ("fmt", Json::str(fmt.name())),
-            ("strategy", Json::str(strategy.name())),
-            ("rho", Json::num(quant.rho)),
-            ("max_rank", Json::num(quant.max_rank as f64)),
+            ("artifact", Json::str(dir)),
+            ("fmt", Json::str(pack.fmt.name())),
+            ("strategy", Json::str(pack.strategy.name())),
+            ("rho", Json::num(pack.rho)),
+            ("max_rank", Json::num(pack.max_rank as f64)),
             ("threads", Json::num(cfg.threads as f64)),
             ("batch", Json::num(cfg.batch as f64)),
             ("batches", Json::num(cfg.batches as f64)),
@@ -457,6 +543,96 @@ fn cmd_eval_native(args: &Args, ckpt: Option<&str>) -> Result<()> {
             ("sigma_cap", Json::num(cfg.sigma_dim_cap as f64)),
         ]),
         &streams,
+    )?;
+    Ok(())
+}
+
+/// `metis pack CKPT -o DIR`: seal a checkpoint into a versioned
+/// artifact — the expensive Eq. 3 split + sub-distribution
+/// quantization runs once here, and every later `eval --artifact`
+/// answers from the sealed blobs.  `-o`/`--out` name the output dir.
+fn cmd_pack(args: &Args) -> Result<()> {
+    // `Args::parse` only recognizes `--flag` forms, so the
+    // conventional `-o DIR` arrives as two positionals.
+    let mut out: Option<String> = args.flags.get("out").cloned();
+    let mut pos: Vec<&String> = Vec::new();
+    let mut it = args.positional.iter().skip(1);
+    while let Some(p) = it.next() {
+        if p == "-o" {
+            match it.next() {
+                Some(v) => out = Some(v.clone()),
+                None => bail!("pack: -o requires an output directory"),
+            }
+        } else {
+            pos.push(p);
+        }
+    }
+    let ckpt = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: metis pack <ckpt-dir> -o <artifact-dir>"))?;
+    if pos.len() > 1 {
+        bail!("pack: unexpected argument {:?}", pos[1]);
+    }
+    let out = out
+        .ok_or_else(|| anyhow::anyhow!("pack: output directory required (-o DIR or --out DIR)"))?;
+
+    let fmt = Format::from_name(&args.str("fmt", "nvfp4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fmt (mxfp4|nvfp4|fp8|paper_fp4)"))?;
+    let strategy = DecompStrategy::from_name(&args.str("strategy", "sparse_sample"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --strategy (full|rsvd|sparse_sample|random_project)")
+        })?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let seed = args.usize("seed", 0)? as u64;
+    let opts = PackOptions {
+        quant: MetisQuantConfig {
+            fmt,
+            strategy,
+            rho: args.f64("rho", 0.1)?,
+            max_rank: args.usize("max-rank", 64)?,
+        },
+        seed,
+        block_cols: args.usize("block-cols", 1024)?,
+        threads: args.usize("threads", default_threads)?,
+    };
+    let sink = obs_sink(args);
+    eprintln!("scanning checkpoint {ckpt} (streaming) ...");
+    let specs: Vec<LayerSpec> = pipeline::scan_checkpoint_dir(ckpt)?;
+    let summary = write_artifact(&specs, &opts, std::path::Path::new(&out))?;
+    for r in &summary.layer_reports {
+        println!("{}", r.to_json());
+    }
+    println!("{}", summary.to_json());
+    eprintln!(
+        "sealed {} layers / {} blocks into {} ({} bytes) in {:.0} ms on {} threads",
+        summary.manifest.layers.len(),
+        summary
+            .manifest
+            .layers
+            .iter()
+            .map(|l| l.blocks.len())
+            .sum::<usize>(),
+        out,
+        summary.total_bytes,
+        summary.pack_ms,
+        opts.threads.max(1)
+    );
+    sink.finish(
+        "pack",
+        seed,
+        Json::obj(vec![
+            ("ckpt", Json::str(ckpt.as_str())),
+            ("out", Json::str(&out)),
+            ("fmt", Json::str(fmt.name())),
+            ("strategy", Json::str(strategy.name())),
+            ("rho", Json::num(opts.quant.rho)),
+            ("max_rank", Json::num(opts.quant.max_rank as f64)),
+            ("block_cols", Json::num(opts.block_cols as f64)),
+            ("threads", Json::num(opts.threads as f64)),
+        ]),
+        &[],
     )?;
     Ok(())
 }

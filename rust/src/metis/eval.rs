@@ -38,6 +38,7 @@ use std::sync::{mpsc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::artifact::ArtifactReader;
 use crate::data::evalsplit::EvalBatchSpec;
 use crate::formats::{pack_matrix_along, Format};
 use crate::linalg::jacobi_svd;
@@ -196,6 +197,9 @@ enum Source<'a> {
         pack_seed: u64,
         block_cols: usize,
     },
+    /// A sealed artifact: masters + packed factors load pre-split from
+    /// disk (checksum-verified), so no SVD runs at eval time.
+    Artifact { reader: &'a ArtifactReader },
 }
 
 impl Source<'_> {
@@ -203,6 +207,7 @@ impl Source<'_> {
         match self {
             Source::Packed { state, .. } => state.quant,
             Source::Specs { quant, .. } => *quant,
+            Source::Artifact { reader } => reader.manifest().pack.quant(),
         }
     }
 
@@ -217,6 +222,12 @@ impl Source<'_> {
             Source::Specs { specs, .. } => specs
                 .iter()
                 .map(|s| (s.name.clone(), s.rows, s.cols))
+                .collect(),
+            Source::Artifact { reader } => reader
+                .manifest()
+                .layers
+                .iter()
+                .map(|l| (l.name.clone(), l.rows, l.cols))
                 .collect(),
         }
     }
@@ -234,6 +245,11 @@ impl Source<'_> {
             Source::Specs {
                 specs, block_cols, ..
             } => column_blocks(specs[layer].cols, *block_cols),
+            Source::Artifact { reader } => reader.manifest().layers[layer]
+                .blocks
+                .iter()
+                .map(|b| (b.c0, b.width))
+                .collect(),
         }
     }
 
@@ -283,6 +299,16 @@ impl Source<'_> {
                 let split = weight_split(&wb, k, quant.strategy, &mut rng);
                 let eff = quantize_split_packed(&split, quant.fmt);
                 Ok((Cow::Owned(wb), Cow::Owned(eff), None))
+            }
+            Source::Artifact { reader } => {
+                // Verified load (length + sha256 + header-vs-manifest
+                // drift checks inside), then the exact
+                // `quantize_split_packed` recomposition from the
+                // stored factors — bit-identical to the Specs arm at
+                // the manifest's seed/config, with no SVD.
+                let blk = reader.load_block(u.layer, u.block)?;
+                let eff = blk.effective();
+                Ok((Cow::Owned(blk.master), Cow::Owned(eff), None))
             }
         }
     }
@@ -434,6 +460,20 @@ impl EvalState {
             },
             step,
         )
+    }
+
+    /// Serve an eval from a sealed artifact (the `metis eval
+    /// --artifact DIR` path): pack config, geometry and column
+    /// partition all come from the verified manifest, each block loads
+    /// checksum-verified, and the row is bit-identical to
+    /// [`EvalState::eval_specs`] on the source checkpoint at the
+    /// manifest's seed — without rerunning any SVD.
+    pub fn eval_artifact(
+        &self,
+        reader: &ArtifactReader,
+        step: Option<usize>,
+    ) -> Result<EvalReport> {
+        self.run(&Source::Artifact { reader }, step)
     }
 
     fn run(&self, source: &Source<'_>, step: Option<usize>) -> Result<EvalReport> {

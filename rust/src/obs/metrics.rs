@@ -233,6 +233,12 @@ pub struct Metrics {
     pub kernel_dispatch_portable: Counter,
     /// Bytes written through `NpyWriter`.
     pub npy_bytes_written: Counter,
+    /// Sealed-artifact traffic: bytes written by `metis pack`, bytes
+    /// read back by `ArtifactReader`, and blocks that passed checksum
+    /// verification (every loaded block — verification is mandatory).
+    pub artifact_bytes_written: Counter,
+    pub artifact_bytes_read: Counter,
+    pub artifact_blocks_verified: Counter,
 }
 
 static GFLOPS_BOUNDS: [f64; 8] = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
@@ -257,6 +263,9 @@ static METRICS: Metrics = Metrics {
     kernel_dispatch_simd: Counter::new(),
     kernel_dispatch_portable: Counter::new(),
     npy_bytes_written: Counter::new(),
+    artifact_bytes_written: Counter::new(),
+    artifact_bytes_read: Counter::new(),
+    artifact_blocks_verified: Counter::new(),
 };
 
 /// The process-wide metric set.
@@ -337,6 +346,20 @@ impl MetricsRegistry {
                 "npy_bytes_written",
                 Json::num(m.npy_bytes_written.get() as f64),
             ),
+            (
+                "artifact",
+                Json::obj(vec![
+                    (
+                        "bytes_written",
+                        Json::num(m.artifact_bytes_written.get() as f64),
+                    ),
+                    ("bytes_read", Json::num(m.artifact_bytes_read.get() as f64)),
+                    (
+                        "blocks_verified",
+                        Json::num(m.artifact_blocks_verified.get() as f64),
+                    ),
+                ]),
+            ),
         ])
     }
 
@@ -361,6 +384,9 @@ impl MetricsRegistry {
         m.kernel_dispatch_simd.reset();
         m.kernel_dispatch_portable.reset();
         m.npy_bytes_written.reset();
+        m.artifact_bytes_written.reset();
+        m.artifact_bytes_read.reset();
+        m.artifact_blocks_verified.reset();
     }
 }
 
@@ -472,6 +498,7 @@ mod tests {
             "workpool",
             "reader_cache",
             "packed_bytes",
+            "artifact",
         ] {
             assert!(parsed.get(key).is_some(), "missing {key}");
         }

@@ -23,9 +23,15 @@ pub mod schema {
     pub const EVAL: u32 = 2;
     pub const ERROR: u32 = 1;
     /// v2: adds `qgemm` and `kernel` sections (packed-GEMM dispatch
-    /// counts and runtime SIMD lane selection).
-    pub const METRICS: u32 = 2;
+    /// counts and runtime SIMD lane selection).  v3: adds the
+    /// `artifact` section (sealed-artifact bytes written/read and
+    /// checksum-verified block count).
+    pub const METRICS: u32 = 3;
     pub const DONE: u32 = 1;
+    /// Per-layer `metis pack` progress (blocks sealed, rank, bytes).
+    pub const PACK_LAYER: u32 = 1;
+    /// `metis pack` completion summary (layers, blocks, total bytes).
+    pub const PACK_DONE: u32 = 1;
     /// v2: adds the `simd` field (runtime-detected microkernel lane).
     pub const RUN_MANIFEST: u32 = 2;
     pub const TRACE: u32 = 1;

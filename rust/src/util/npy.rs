@@ -113,6 +113,81 @@ impl NpyDtype {
     }
 }
 
+/// Parsed `.npy` header: everything `open` needs before touching the
+/// payload.  Produced by [`parse_npy_header`] from raw bytes so the
+/// parser is drivable without a file (the fuzz harness feeds it
+/// arbitrary byte strings; it must return errors, never panic).
+#[derive(Clone, Debug)]
+pub struct NpyHeader {
+    pub shape: Vec<usize>,
+    pub dtype: NpyDtype,
+    pub big_endian: bool,
+    /// Byte offset where the payload begins.
+    pub data_start: u64,
+    /// Element count declared by the shape (checked arithmetic).
+    pub count: usize,
+    /// Payload size in bytes declared by shape × dtype width.
+    pub payload_bytes: u64,
+}
+
+/// Parse a v1.0/v2.0 `.npy` header from the leading bytes of a blob.
+/// Total over arbitrary input: malformed magic, truncated length
+/// fields, non-UTF-8 or structurally broken header dicts, unsupported
+/// dtypes, and shapes whose element count or byte size would overflow
+/// `usize` are all named errors.  Errors carry no path — callers with
+/// one append it.
+pub fn parse_npy_header(bytes: &[u8]) -> Result<NpyHeader> {
+    let magic = bytes.get(..8).ok_or_else(|| anyhow!("not an npy file"))?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = magic[6];
+    let (len_field, header_len) = if major == 1 {
+        let b = bytes
+            .get(8..10)
+            .ok_or_else(|| anyhow!("npy header length field truncated"))?;
+        (2u64, u16::from_le_bytes([b[0], b[1]]) as usize)
+    } else {
+        let b = bytes
+            .get(8..12)
+            .ok_or_else(|| anyhow!("npy header length field truncated"))?;
+        (4u64, u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+    };
+    let header_at = 8 + len_field as usize;
+    let header = bytes
+        .get(header_at..header_at + header_len)
+        .ok_or_else(|| anyhow!("npy header truncated ({header_len} declared bytes)"))?;
+    let header = std::str::from_utf8(header).map_err(|_| anyhow!("npy header is not UTF-8"))?;
+
+    let descr = extract_quoted(header, "descr")
+        .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran-order npy unsupported");
+    }
+    let (dtype, big_endian) =
+        parse_descr(&descr).ok_or_else(|| anyhow!("unsupported npy dtype {descr:?}"))?;
+    let shape = extract_shape(header)?;
+
+    // Checked header arithmetic: a corrupt shape must error, not
+    // wrap in release builds and mis-slice the payload.
+    let count = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("npy shape {shape:?} overflows element count"))?;
+    let payload_bytes = count
+        .checked_mul(dtype.size())
+        .ok_or_else(|| anyhow!("npy shape {shape:?} overflows payload size"))?
+        as u64;
+    Ok(NpyHeader {
+        shape,
+        dtype,
+        big_endian,
+        data_start: 8 + len_field + header_len as u64,
+        count,
+        payload_bytes,
+    })
+}
+
 /// Streaming `.npy` reader: header parsed and payload length validated
 /// at `open`, elements decoded on demand.
 pub struct NpyReader {
@@ -133,62 +208,41 @@ impl NpyReader {
     pub fn open(path: impl AsRef<Path>) -> Result<NpyReader> {
         let path = path.as_ref().to_path_buf();
         let mut f = File::open(&path).map_err(|e| anyhow!("open {}: {e}", path.display()))?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic[..6] != b"\x93NUMPY" {
-            bail!("not an npy file: {}", path.display());
-        }
-        let major = magic[6];
-        let (len_field, header_len) = if major == 1 {
-            let mut b = [0u8; 2];
-            f.read_exact(&mut b)?;
-            (2u64, u16::from_le_bytes(b) as usize)
+        // Read exactly the header region (magic + length field + dict)
+        // and hand it to the byte parser the fuzz harness also drives.
+        let mut prefix = vec![0u8; 8];
+        f.read_exact(&mut prefix)?;
+        let len_bytes = if prefix[6] == 1 { 2 } else { 4 };
+        prefix.resize(8 + len_bytes, 0);
+        f.read_exact(&mut prefix[8..])?;
+        let header_len = if len_bytes == 2 {
+            u16::from_le_bytes([prefix[8], prefix[9]]) as usize
         } else {
-            let mut b = [0u8; 4];
-            f.read_exact(&mut b)?;
-            (4u64, u32::from_le_bytes(b) as usize)
+            u32::from_le_bytes([prefix[8], prefix[9], prefix[10], prefix[11]]) as usize
         };
-        let mut header = vec![0u8; header_len];
-        f.read_exact(&mut header)?;
-        let header = String::from_utf8(header)?;
-
-        let descr = extract_quoted(&header, "descr")
-            .ok_or_else(|| anyhow!("npy header missing descr: {header}"))?;
-        if header.contains("'fortran_order': True") {
-            bail!("fortran-order npy unsupported: {}", path.display());
-        }
-        let (dtype, big_endian) = parse_descr(&descr)
-            .ok_or_else(|| anyhow!("unsupported npy dtype {descr:?}: {}", path.display()))?;
-        let shape = extract_shape(&header)?;
-
-        // Checked header arithmetic: a corrupt shape must error, not
-        // wrap in release builds and mis-slice the payload.
-        let count = shape
-            .iter()
-            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-            .ok_or_else(|| {
-                anyhow!("npy shape {shape:?} overflows element count: {}", path.display())
-            })?;
-        let need = count.checked_mul(dtype.size()).ok_or_else(|| {
-            anyhow!("npy shape {shape:?} overflows payload size: {}", path.display())
-        })? as u64;
+        let dict_at = prefix.len();
+        prefix.resize(dict_at + header_len, 0);
+        f.read_exact(&mut prefix[dict_at..])?;
+        let h = parse_npy_header(&prefix).map_err(|e| anyhow!("{e}: {}", path.display()))?;
 
         // The payload must match the header exactly: short blobs are
         // truncated, longer ones misdeclared — both are corruption.
-        let data_start = 8 + len_field + header_len as u64;
         let file_len = f.metadata()?.len();
-        let payload = file_len.saturating_sub(data_start);
-        if payload < need {
+        let payload = file_len.saturating_sub(h.data_start);
+        if payload < h.payload_bytes {
             bail!(
-                "npy payload too short: {payload} bytes < {need} declared by shape {shape:?}: {}",
+                "npy payload too short: {payload} bytes < {} declared by shape {:?}: {}",
+                h.payload_bytes,
+                h.shape,
                 path.display()
             );
         }
-        if payload > need {
+        if payload > h.payload_bytes {
             bail!(
-                "npy payload has {} trailing bytes beyond shape {shape:?} (corrupt or \
+                "npy payload has {} trailing bytes beyond shape {:?} (corrupt or \
                  misdeclared): {}",
-                payload - need,
+                payload - h.payload_bytes,
+                h.shape,
                 path.display()
             );
         }
@@ -196,11 +250,11 @@ impl NpyReader {
         Ok(NpyReader {
             path,
             file: f,
-            shape,
-            dtype,
-            big_endian,
-            data_start,
-            count,
+            shape: h.shape,
+            dtype: h.dtype,
+            big_endian: h.big_endian,
+            data_start: h.data_start,
+            count: h.count,
         })
     }
 
@@ -554,9 +608,12 @@ fn extract_shape(header: &str) -> Result<Vec<usize>> {
     let open = rest
         .find('(')
         .ok_or_else(|| anyhow!("bad shape in npy header"))?;
-    let close = rest
+    // Search for the close only after the open — a stray `)` earlier in
+    // the header must not produce a backwards slice.
+    let close = rest[open..]
         .find(')')
-        .ok_or_else(|| anyhow!("bad shape in npy header"))?;
+        .ok_or_else(|| anyhow!("bad shape in npy header"))?
+        + open;
     let inner = &rest[open + 1..close];
     let mut shape = Vec::new();
     for part in inner.split(',') {
@@ -591,6 +648,34 @@ mod tests {
         bytes.extend_from_slice(full.as_bytes());
         bytes.extend_from_slice(payload);
         bytes
+    }
+
+    #[test]
+    fn header_parser_is_total_over_garbage() {
+        // The same entry point the fuzz harness drives: every malformed
+        // prefix is a named error, never a panic.
+        for bytes in [
+            &b""[..],
+            b"\x93NUMPY",
+            b"\x93NUMPY\x01\x00",
+            b"\x93NUMPY\x01\x00\xff\xff",
+            b"garbage!",
+            b"\x93NUMPY\x02\x00\x04\x00\x00\x00abcd",
+            b"\x93NUMPY\x01\x00\x04\x00\xff\xfe\xfd\xfc",
+        ] {
+            assert!(parse_npy_header(bytes).is_err(), "{bytes:?}");
+        }
+        // Regression: a stray `)` before the `(` in the shape tuple used
+        // to produce a backwards slice (panic); now a named error.
+        let evil = raw_npy("<f4", ")(", &[]);
+        let err = parse_npy_header(&evil).unwrap_err().to_string();
+        assert!(err.contains("bad shape"), "got: {err}");
+
+        let good = raw_npy("<f4", "(2, 3)", &[0u8; 24]);
+        let h = parse_npy_header(&good).unwrap();
+        assert_eq!(h.shape, vec![2, 3]);
+        assert_eq!((h.count, h.payload_bytes), (6, 24));
+        assert_eq!(h.data_start as usize, good.len() - 24);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! End-to-end contract of the sealed-artifact subsystem (ISSUE 10):
+//! `metis pack` → `metis eval --artifact` must be **bit-identical** to
+//! pack-on-the-fly eval of the same checkpoint, and every tamper path
+//! (truncation, flipped bytes, length drift, unknown versions, stale
+//! manifests) must be rejected with a named error — never a panic,
+//! never a silent load.  Exercised through the public library API the
+//! CLI subcommands call.
+
+use std::fs;
+use std::path::PathBuf;
+
+use metis::artifact::{
+    blob_name, write_artifact, ArtifactReader, PackOptions, MANIFEST_FILE,
+};
+use metis::formats::Format;
+use metis::metis::{
+    pipeline, DecompStrategy, EvalConfig, EvalState, MetisQuantConfig,
+};
+use metis::tensor::Matrix;
+use metis::util::json::Json;
+use metis::util::prng::Rng;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("metis-it-artifact-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a small on-disk .npy checkpoint (two layers, one wide enough
+/// to partition into multiple column blocks at block_cols 24).
+fn write_ckpt(dir: &PathBuf) {
+    let mut rng = Rng::new(1234);
+    Matrix::gaussian(&mut rng.fold_in(0), 32, 56, 1.0)
+        .save_npy(dir.join("layer_a.npy"))
+        .unwrap();
+    Matrix::gaussian(&mut rng.fold_in(1), 24, 24, 0.7)
+        .save_npy(dir.join("layer_b.npy"))
+        .unwrap();
+}
+
+fn pack_opts() -> PackOptions {
+    PackOptions {
+        quant: MetisQuantConfig {
+            fmt: Format::Nvfp4,
+            strategy: DecompStrategy::SparseSample,
+            rho: 0.25,
+            max_rank: 16,
+        },
+        seed: 77,
+        block_cols: 24,
+        threads: 2,
+    }
+}
+
+fn eval_cfg(threads: usize) -> EvalConfig {
+    EvalConfig {
+        threads,
+        batch: 8,
+        batches: 2,
+        seed: 77,
+        sigma_dim_cap: 256,
+        block_cols: 24,
+        fmt: Format::Nvfp4,
+    }
+}
+
+/// Strip the per-process / per-wall-clock fields (`run_id`, `seq`,
+/// `ms`) from a stamped eval row, leaving exactly the deterministic
+/// payload two runs must agree on byte for byte.
+fn normalized_row(j: &Json) -> Json {
+    match j {
+        Json::Obj(kvs) => Json::Obj(
+            kvs.iter()
+                .filter(|(k, _)| k != "run_id" && k != "seq" && k != "ms")
+                .map(|(k, v)| (k.clone(), normalized_row(v)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(normalized_row).collect()),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn artifact_eval_row_is_bit_identical_to_pack_on_the_fly() {
+    let ckpt = fresh_dir("ckpt");
+    let art = fresh_dir("sealed");
+    write_ckpt(&ckpt);
+    let specs = pipeline::scan_checkpoint_dir(ckpt.to_str().unwrap()).unwrap();
+    let opts = pack_opts();
+    let summary = write_artifact(&specs, &opts, &art).unwrap();
+    assert_eq!(summary.manifest.layers.len(), 2);
+    // 56 cols at block_cols 24 → 3 blocks for layer_a.
+    assert_eq!(summary.manifest.layers[0].blocks.len(), 3);
+
+    // Pack-on-the-fly row at the pack seed/config...
+    let fly = EvalState::synthetic(eval_cfg(2))
+        .unwrap()
+        .eval_specs(&specs, &opts.quant, opts.seed, None)
+        .unwrap();
+    // ...vs the sealed-artifact row.
+    let reader = ArtifactReader::open(&art).unwrap();
+    let sealed = EvalState::synthetic(eval_cfg(2))
+        .unwrap()
+        .eval_artifact(&reader, None)
+        .unwrap();
+
+    // Exact f64 equality on every deterministic report field: the
+    // artifact path recomposes the identical effective weights, so no
+    // tolerance is needed or allowed.
+    assert_eq!(fly.heldout_loss.to_bits(), sealed.heldout_loss.to_bits());
+    assert_eq!(fly.perplexity.to_bits(), sealed.perplexity.to_bits());
+    assert_eq!(fly.logit_div.to_bits(), sealed.logit_div.to_bits());
+    assert_eq!(fly.batches, sealed.batches);
+    assert_eq!(fly.layers.len(), sealed.layers.len());
+    for (a, b) in fly.layers.iter().zip(&sealed.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{}", a.name);
+        assert_eq!(a.logit_div.to_bits(), b.logit_div.to_bits(), "{}", a.name);
+        assert_eq!(a.sigma_err.to_bits(), b.sigma_err.to_bits(), "{}", a.name);
+        assert_eq!(a.sigma_tail.to_bits(), b.sigma_tail.to_bits(), "{}", a.name);
+    }
+    // And the JSONL rows themselves agree once the per-process
+    // identity fields (run_id / seq) and wall-clock ms are stripped.
+    assert_eq!(
+        normalized_row(&fly.to_json()).to_string(),
+        normalized_row(&sealed.to_json()).to_string()
+    );
+
+    // The sealed row is also thread-count invariant, like every other
+    // eval path.
+    let sealed_1t = EvalState::synthetic(eval_cfg(1))
+        .unwrap()
+        .eval_artifact(&reader, None)
+        .unwrap();
+    assert_eq!(
+        normalized_row(&sealed.to_json()).to_string(),
+        normalized_row(&sealed_1t.to_json()).to_string()
+    );
+
+    let _ = fs::remove_dir_all(&ckpt);
+    let _ = fs::remove_dir_all(&art);
+}
+
+/// Pack once into a temp dir and hand back (artifact dir, ckpt dir).
+fn sealed_fixture(tag: &str) -> (PathBuf, PathBuf) {
+    let ckpt = fresh_dir(&format!("{tag}-ckpt"));
+    let art = fresh_dir(&format!("{tag}-art"));
+    write_ckpt(&ckpt);
+    let specs = pipeline::scan_checkpoint_dir(ckpt.to_str().unwrap()).unwrap();
+    write_artifact(&specs, &pack_opts(), &art).unwrap();
+    (art, ckpt)
+}
+
+fn cleanup(dirs: &[&PathBuf]) {
+    for d in dirs {
+        let _ = fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn truncated_blob_is_a_named_error() {
+    let (art, ckpt) = sealed_fixture("trunc");
+    let path = art.join(blob_name(0, 1));
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = format!("{:#}", ArtifactReader::open(&art).unwrap_err());
+    assert!(err.contains("truncated or stale"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}
+
+#[test]
+fn flipped_payload_byte_is_a_named_error() {
+    let (art, ckpt) = sealed_fixture("flip");
+    let path = art.join(blob_name(1, 0));
+    let mut bytes = fs::read(&path).unwrap();
+    let at = bytes.len() - 9;
+    bytes[at] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+    // Same length ⇒ the open-time stat passes; the verified load must
+    // catch the flip.
+    let reader = ArtifactReader::open(&art).unwrap();
+    let err = format!("{:#}", reader.load_block(1, 0).unwrap_err());
+    assert!(err.contains("checksum mismatch"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}
+
+#[test]
+fn manifest_blob_length_mismatch_is_a_named_error() {
+    let (art, ckpt) = sealed_fixture("len");
+    // Appending bytes keeps the prefix parseable — only the manifest
+    // length / checksum contract can reject it.
+    let path = art.join(blob_name(0, 0));
+    let mut bytes = fs::read(&path).unwrap();
+    bytes.push(0);
+    fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", ArtifactReader::open(&art).unwrap_err());
+    assert!(err.contains("truncated or stale"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}
+
+#[test]
+fn edited_manifest_and_unknown_schema_version_are_named_errors() {
+    let (art, ckpt) = sealed_fixture("manifest");
+    let mpath = art.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath).unwrap();
+
+    // Any hand edit breaks the canonical-JSON self-checksum.
+    fs::write(&mpath, text.replace("\"seed\":77", "\"seed\":78")).unwrap();
+    let err = format!("{:#}", ArtifactReader::open(&art).unwrap_err());
+    assert!(err.contains("manifest checksum mismatch"), "{err}");
+
+    // A future schema_version is refused by name before anything else
+    // is trusted.
+    fs::write(
+        &mpath,
+        text.replace("\"schema_version\":1", "\"schema_version\":99"),
+    )
+    .unwrap();
+    let err = format!("{:#}", ArtifactReader::open(&art).unwrap_err());
+    assert!(err.contains("unsupported artifact schema_version 99"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}
+
+#[test]
+fn stale_manifest_vs_blob_drift_is_a_named_error() {
+    let (art, ckpt) = sealed_fixture("drift");
+    // Re-seal the manifest with a lied-about rank for one block: the
+    // self-checksum is then valid again (to_json recomputes it), the
+    // blob still hashes correctly — only the blob-header-vs-manifest
+    // drift check can catch that the manifest no longer describes the
+    // sealed payload.
+    let reader = ArtifactReader::open(&art).unwrap();
+    let mut manifest = reader.manifest().clone();
+    let k = manifest.layers[1].blocks[0].k;
+    assert!(k > 1, "fixture rank too small to perturb");
+    manifest.layers[1].blocks[0].k = k - 1;
+    fs::write(
+        art.join(MANIFEST_FILE),
+        manifest.to_json().to_string().as_bytes(),
+    )
+    .unwrap();
+    let reopened = ArtifactReader::open(&art).unwrap();
+    let err = format!("{:#}", reopened.load_block(1, 0).unwrap_err());
+    assert!(err.contains("does not match its manifest slot"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}
+
+#[test]
+fn missing_blob_is_a_named_error() {
+    let (art, ckpt) = sealed_fixture("gone");
+    fs::remove_file(art.join(blob_name(0, 2))).unwrap();
+    let err = format!("{:#}", ArtifactReader::open(&art).unwrap_err());
+    assert!(err.contains("missing"), "{err}");
+    cleanup(&[&art, &ckpt]);
+}

@@ -56,6 +56,7 @@ GATED_METRICS = [
     ("quantize axis-0 speedup", ("quantize", "axis0_speedup")),
     ("train-native step speedup", ("train_native_step", "speedup")),
     ("tracing overhead speedup", ("obs_overhead", "speedup")),
+    ("artifact load speedup", ("artifact_load", "speedup")),
 ] + [
     (
         f"qgemm {fmt} {dim}² speedup",
@@ -78,6 +79,11 @@ ABS_FLOORS = {"tracing overhead speedup": 0.95}
 ABS_FLOORS.update(
     {f"qgemm {fmt} 1024² speedup": 2.0 for fmt in ("mxfp4", "nvfp4", "fp8", "paper_fp4")}
 )
+# Sealed-artifact acceptance bar: serving an eval from verified blobs
+# (mmap + sha256 + Eq.5 recompose) must beat re-deriving the pack (an
+# SVD per block) by at least 1.5x cold-start, regardless of what the
+# committed baseline recorded.
+ABS_FLOORS["artifact load speedup"] = 1.5
 
 
 def lookup(doc, path):
@@ -187,6 +193,7 @@ def fixture():
         "quantize": {"flat_speedup": 1.2, "axis0_speedup": None},
         "train_native_step": {"speedup": 3.7},
         "obs_overhead": {"speedup": 0.998},
+        "artifact_load": {"speedup": 8.0},
     }
 
 
@@ -283,6 +290,13 @@ def self_test():
             row["speedup"] = 1.8
     regs, _ = gate(qslow, copy.deepcopy(qslow), 0.85)
     check("qgemm 1024² absolute floor trips", regs == ["qgemm fp8 1024² speedup"])
+
+    # 10. The sealed-artifact row holds its >= 1.5x cold-start bar
+    # absolutely — a baseline that itself dipped below still fails.
+    aslow = copy.deepcopy(base)
+    aslow["artifact_load"]["speedup"] = 1.2
+    regs, _ = gate(aslow, copy.deepcopy(aslow), 0.85)
+    check("artifact-load absolute floor trips", regs == ["artifact load speedup"])
 
     if failures:
         print(f"self-test FAILED: {failures}")

@@ -34,6 +34,12 @@ Rule families (shared allowlist: rust/lint/allowlist.txt):
   event-schema-const  exist in validate_events.py's SCHEMAS table, and
                       the matching `schema::UPPER` constant must appear
                       at the call site.
+  artifact-unverified-parse
+                      raw `parse_blob(` / `parse_manifest(` calls are
+                      permitted only under rust/src/artifact/ (and the
+                      fuzz harnesses) — everything else must load
+                      sealed data through the checksum-verifying
+                      ArtifactReader.
   taint-*             interprocedural determinism taint: a best-effort
                       call graph over the scrubbed token stream, with
                       nondeterminism sources (HashMap iteration, wall
@@ -384,6 +390,33 @@ def rule_relaxed_outside_obs(path, text, code, comments, out):
                 _line_text(text, ln),
                 "`Ordering::Relaxed` outside rust/src/obs/ — use an "
                 "acquire/release or SeqCst ordering (or justify in the allowlist)",
+            )
+        )
+
+
+def rule_artifact_unverified_parse(path, text, code, comments, out):
+    norm = path.replace(os.sep, "/")
+    if (
+        "/artifact/" in norm
+        or norm.startswith("artifact/")
+        or "/fuzz/" in norm
+        or norm.startswith("fuzz/")
+    ):
+        return
+    for m in re.finditer(r"\b(parse_blob|parse_manifest)\s*\(", code):
+        if re.search(r"\bfn\s*$", code[: m.start(1)]):
+            continue  # the definitions inside rust/src/artifact/
+        name = m.group(1)
+        ln = _line_index(text)(m.start())
+        out.append(
+            Finding(
+                "artifact-unverified-parse",
+                path,
+                ln,
+                _line_text(text, ln),
+                f"`{name}(` outside rust/src/artifact/ bypasses checksum "
+                "verification — go through ArtifactReader (or justify in "
+                "the allowlist)",
             )
         )
 
@@ -1047,6 +1080,7 @@ RULE_META = [
     ("ref-without-test", "_ref oracle without a dual-name test"),
     ("unknown-event", "stamp() event missing from the schema table"),
     ("event-schema-const", "stamp() without its schema::UPPER constant"),
+    ("artifact-unverified-parse", "raw artifact parse bypassing ArtifactReader"),
     ("taint-hash-iter", "entry point reaches HashMap/HashSet iteration"),
     ("taint-wall-clock", "entry point reaches a wall-clock read"),
     ("taint-env-read", "entry point reaches a std::env read"),
@@ -1176,6 +1210,7 @@ def lint_files(paths, events, repo=REPO, entrypoints=None, check_entrypoints=Fal
         rule_relaxed_outside_obs(path, text, code, comments, findings)
         rule_read_dir(path, text, code, comments, gf.defs, findings)
         rule_event_schema(path, text, code, comments, events, findings)
+        rule_artifact_unverified_parse(path, text, code, comments, findings)
     rule_ref_pairs([(p, t, c) for p, t, c, _ in loaded], findings)
     eps = entrypoints or []
     rule_taint(gfiles, [name for name, _ in eps], findings)
@@ -1209,6 +1244,7 @@ def self_test(events, entrypoints):
         "read_dir_unsorted.rs": {"read-dir-unsorted"},
         "ref_without_test.rs": {"ref-without-test"},
         "unknown_event.rs": {"unknown-event"},
+        "artifact_unverified_parse.rs": {"artifact-unverified-parse"},
         "taint_hash_iter.rs": {"hash-iter", "taint-hash-iter"},
         "taint_timer.rs": {"taint-wall-clock"},
     }

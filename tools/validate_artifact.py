@@ -1,0 +1,475 @@
+#!/usr/bin/env python3
+"""Offline verifier for sealed metis artifacts (`metis pack` output).
+
+An artifact is a directory:
+
+    DIR/manifest.json       versioned manifest with a canonical-JSON
+                            self-checksum (manifest_sha256)
+    DIR/blobs/L####_B####.bin   one blob per (layer, column-block)
+
+This tool independently re-checks everything the Rust ArtifactReader
+verifies, from a second implementation with nothing shared but the
+spec:
+
+  * manifest schema: schema_version == 1, required fields and types,
+    blob paths confined to blobs/, contiguous column partitions,
+    lowercase-hex digests, sane pack config;
+  * manifest_sha256: SHA-256 of the manifest serialized canonically —
+    the manifest_sha256 field removed, keys sorted, compact
+    separators, UTF-8 (json.dumps(obj, sort_keys=True,
+    separators=(",", ":"), ensure_ascii=False) — byte-identical to the
+    Rust writer for the manifest's value domain);
+  * every blob: exists, byte length and SHA-256 match the manifest,
+    the binary layout walks exactly to EOF (magic, version, section
+    counts), and the blob's self-describing header (layer, block, c0,
+    rows, width, spectrum length) agrees with its manifest slot —
+    the stale-manifest-vs-blob drift check.
+
+Usage:
+    validate_artifact.py DIR [DIR ...]
+    validate_artifact.py --self-test
+
+Exit 0 when every artifact validates, 1 otherwise (each violation
+printed as `dir: message`).  --self-test builds a known-good fixture
+artifact in a temp dir and confirms corrupt variants each fail.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import struct
+import sys
+import tempfile
+
+SCHEMA_VERSION = 1
+BLOB_MAGIC = b"METISQB"
+BLOB_VERSION = 1
+FORMATS = {"mxfp4", "nvfp4", "fp8", "paper_fp4"}
+STRATEGIES = {"full", "rsvd", "sparse_sample", "random_project"}
+
+
+def canonical_sha256(manifest):
+    """SHA-256 of the manifest's canonical JSON, self-checksum field
+    removed.
+
+    Byte-matches the Rust serializer for manifest content: integers
+    print without a fraction, floats as their shortest round-trip
+    decimal.  The one divergence is floats below ~1e-4 (Python switches
+    to exponent notation, Rust never does) — pack rho is the only float
+    a manifest carries and lives in (0, 1] at CLI-typical magnitudes,
+    so such a value indicates a hand-edited manifest anyway."""
+    body = {k: v for k, v in manifest.items() if k != "manifest_sha256"}
+    text = json.dumps(body, sort_keys=True, separators=(",", ":"), ensure_ascii=False)
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+def is_uint(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def is_hex_sha(v):
+    return (
+        isinstance(v, str)
+        and len(v) == 64
+        and all(c in "0123456789abcdef" for c in v)
+    )
+
+
+def check_manifest(manifest, errors):
+    """Structural + self-checksum validation; returns True if the blob
+    list is trustworthy enough to verify payloads against."""
+    if not isinstance(manifest, dict):
+        errors.append("manifest is not a JSON object")
+        return False
+    sv = manifest.get("schema_version")
+    if sv != SCHEMA_VERSION:
+        errors.append(
+            f"unsupported artifact schema_version {sv!r} (this tool reads {SCHEMA_VERSION})"
+        )
+        return False
+    declared = manifest.get("manifest_sha256")
+    if not is_hex_sha(declared):
+        errors.append(f"manifest_sha256 {declared!r} is not a lowercase hex sha256")
+        return False
+    actual = canonical_sha256(manifest)
+    if actual != declared:
+        errors.append(
+            f"manifest checksum mismatch: declares {declared}, canonical body hashes to {actual}"
+        )
+        return False
+
+    ok = True
+    for key, want in [("run_id", str), ("tool", str), ("pack", dict), ("layers", list)]:
+        if not isinstance(manifest.get(key), want):
+            errors.append(f"manifest field {key!r} missing or not {want.__name__}")
+            ok = False
+    if not ok:
+        return False
+
+    pack = manifest["pack"]
+    if pack.get("fmt") not in FORMATS:
+        errors.append(f"pack.fmt {pack.get('fmt')!r} is not a known format")
+        ok = False
+    if pack.get("strategy") not in STRATEGIES:
+        errors.append(f"pack.strategy {pack.get('strategy')!r} is not a known strategy")
+        ok = False
+    rho = pack.get("rho")
+    if not isinstance(rho, (int, float)) or isinstance(rho, bool) or not 0 < rho <= 1:
+        errors.append(f"pack.rho {rho!r} out of (0, 1]")
+        ok = False
+    for key in ("max_rank", "seed", "block_cols"):
+        if not is_uint(pack.get(key)):
+            errors.append(f"pack.{key} {pack.get(key)!r} is not a non-negative integer")
+            ok = False
+    if not isinstance(pack.get("simd"), str):
+        errors.append(f"pack.simd {pack.get('simd')!r} is not a string")
+        ok = False
+
+    if not manifest["layers"]:
+        errors.append("manifest has no layers")
+        ok = False
+    for layer in manifest["layers"]:
+        name = layer.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"layer name {name!r} missing or empty")
+            ok = False
+            continue
+        if not (is_uint(layer.get("rows")) and layer["rows"] > 0):
+            errors.append(f"layer {name!r}: rows {layer.get('rows')!r} invalid")
+            ok = False
+        blocks = layer.get("blocks")
+        if not isinstance(blocks, list) or not blocks:
+            errors.append(f"layer {name!r}: blocks missing or empty")
+            ok = False
+            continue
+        next_c0 = 0
+        for b in blocks:
+            for key in ("c0", "width", "k", "bytes"):
+                if not is_uint(b.get(key)):
+                    errors.append(f"layer {name!r}: block field {key!r} invalid")
+                    ok = False
+            blob = b.get("blob")
+            if (
+                not isinstance(blob, str)
+                or not blob.startswith("blobs/")
+                or "/" in blob[len("blobs/"):]
+                or "\\" in blob
+                or ".." in blob
+                or blob == "blobs/"
+            ):
+                errors.append(
+                    f"layer {name!r}: blob path {blob!r} is not a plain file under blobs/"
+                )
+                ok = False
+            if not is_hex_sha(b.get("sha256")):
+                errors.append(
+                    f"layer {name!r}: blob sha256 {b.get('sha256')!r} is not lowercase hex"
+                )
+                ok = False
+            if is_uint(b.get("c0")) and is_uint(b.get("width")):
+                if b["c0"] != next_c0 or b["width"] == 0:
+                    errors.append(
+                        f"layer {name!r}: blocks are not a contiguous column partition "
+                        f"(c0 {b['c0']}, expected {next_c0})"
+                    )
+                    ok = False
+                next_c0 = b["c0"] + b["width"]
+        if is_uint(layer.get("cols")) and next_c0 != layer["cols"]:
+            errors.append(
+                f"layer {name!r}: blocks cover {next_c0} of {layer['cols']} columns"
+            )
+            ok = False
+    return ok
+
+
+class BlobWalk:
+    """Bounds-checked cursor over one blob's binary layout."""
+
+    def __init__(self, data):
+        self.data = data
+        self.at = 0
+
+    def take(self, n, what):
+        if self.at + n > len(self.data):
+            raise ValueError(f"truncated reading {what} at offset {self.at}")
+        out = self.data[self.at:self.at + n]
+        self.at += n
+        return out
+
+    def u64(self, what):
+        return struct.unpack("<Q", self.take(8, what))[0]
+
+
+def walk_blob(data):
+    """Parse the blob layout; returns the self-describing header fields
+    (layer, block, c0, rows, width, k).  Raises ValueError on any
+    structural violation, including trailing bytes."""
+    w = BlobWalk(data)
+    magic = w.take(8, "magic")
+    if magic[:7] != BLOB_MAGIC:
+        raise ValueError("bad magic (not a metis artifact blob)")
+    if magic[7] != BLOB_VERSION:
+        raise ValueError(f"unsupported blob version {magic[7]}")
+    layer = w.u64("layer")
+    block = w.u64("block")
+    c0 = w.u64("c0")
+    rows = w.u64("rows")
+    width = w.u64("width")
+    master_count = w.u64("master count")
+    if master_count != rows * width:
+        raise ValueError(
+            f"master count {master_count} != rows*width {rows * width}"
+        )
+    w.take(8 * master_count, "master data")
+    k = w.u64("spectrum length")
+    if not 0 < k <= min(rows, width):
+        raise ValueError(f"spectrum length {k} out of range for {rows}x{width}")
+    w.take(8 * k, "spectrum data")
+    for part in ("uq", "vtq", "rq"):
+        fmt_code = w.take(1, f"{part} fmt")[0]
+        if fmt_code > 3:
+            raise ValueError(f"{part}: unknown format code {fmt_code}")
+        axis = w.take(1, f"{part} axis")[0]
+        if axis > 1:
+            raise ValueError(f"{part}: axis {axis} out of range")
+        w.u64(f"{part} rows")
+        w.u64(f"{part} cols")
+        codes = w.u64(f"{part} code count")
+        w.take(codes, f"{part} codes")
+        scales = w.u64(f"{part} scale count")
+        w.take(4 * scales, f"{part} scales")
+    if w.at != len(data):
+        raise ValueError(f"{len(data) - w.at} trailing bytes after the last section")
+    return {"layer": layer, "block": block, "c0": c0, "rows": rows, "width": width, "k": k}
+
+
+def validate_artifact(dirpath):
+    """Full verification of one artifact directory; returns the list of
+    violation strings (empty = valid)."""
+    errors = []
+    mpath = os.path.join(dirpath, "manifest.json")
+    try:
+        with open(mpath, encoding="utf-8") as f:
+            manifest = json.load(f)
+    except OSError as e:
+        return [f"cannot read manifest.json: {e}"]
+    except json.JSONDecodeError as e:
+        return [f"manifest.json is not valid JSON: {e.msg}"]
+    if not check_manifest(manifest, errors):
+        return errors
+
+    for li, layer in enumerate(manifest["layers"]):
+        for bi, b in enumerate(layer["blocks"]):
+            where = f"layer {layer['name']!r} blob {b['blob']}"
+            bpath = os.path.join(dirpath, b["blob"])
+            try:
+                with open(bpath, "rb") as f:
+                    data = f.read()
+            except OSError as e:
+                errors.append(f"{where}: cannot read ({e})")
+                continue
+            if len(data) != b["bytes"]:
+                errors.append(
+                    f"{where}: {len(data)} bytes on disk, manifest declares {b['bytes']}"
+                )
+                continue
+            actual = hashlib.sha256(data).hexdigest()
+            if actual != b["sha256"]:
+                errors.append(
+                    f"{where}: checksum mismatch (manifest {b['sha256']}, payload {actual})"
+                )
+                continue
+            try:
+                head = walk_blob(data)
+            except ValueError as e:
+                errors.append(f"{where}: malformed blob ({e})")
+                continue
+            expect = {
+                "layer": li,
+                "block": bi,
+                "c0": b["c0"],
+                "rows": layer["rows"],
+                "width": b["width"],
+                "k": b["k"],
+            }
+            if head != expect:
+                errors.append(
+                    f"{where}: blob header {head} does not match its manifest slot "
+                    f"{expect} — stale manifest or swapped blob"
+                )
+    return errors
+
+
+# --- self-test fixtures --------------------------------------------------
+
+def _fixture_blob(layer, block, c0, rows, width, k):
+    """A structurally valid blob with arbitrary payload values."""
+    out = bytearray()
+    out += BLOB_MAGIC + bytes([BLOB_VERSION])
+    out += struct.pack("<5Q", layer, block, c0, rows, width)
+    out += struct.pack("<Q", rows * width) + b"\x00" * (8 * rows * width)
+    out += struct.pack("<Q", k) + b"\x00" * (8 * k)
+    for _ in range(3):  # uq / vtq / rq
+        out += bytes([1, 0])  # nvfp4, axis 0
+        out += struct.pack("<2Q", rows, k)
+        out += struct.pack("<Q", 6) + b"\x11" * 6
+        out += struct.pack("<Q", 2) + b"\x00" * 8
+    return bytes(out)
+
+
+def _fixture_artifact(dirpath):
+    """Write a minimal two-block valid artifact into dirpath."""
+    os.makedirs(os.path.join(dirpath, "blobs"), exist_ok=True)
+    layers = []
+    blocks = []
+    for block, (c0, width) in enumerate([(0, 16), (16, 8)]):
+        data = _fixture_blob(0, block, c0, 12, width, 3)
+        name = f"blobs/L0000_B{block:04}.bin"
+        with open(os.path.join(dirpath, name), "wb") as f:
+            f.write(data)
+        blocks.append({
+            "c0": c0, "width": width, "k": 3, "blob": name,
+            "sha256": hashlib.sha256(data).hexdigest(), "bytes": len(data),
+        })
+    layers.append({"name": "layer00", "rows": 12, "cols": 24, "blocks": blocks})
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "run_id": "fixture-run",
+        "tool": "validate_artifact fixture",
+        "git_sha": None,
+        "pack": {"fmt": "nvfp4", "strategy": "sparse_sample", "rho": 0.25,
+                 "max_rank": 16, "seed": 7, "block_cols": 16, "simd": "portable"},
+        "layers": layers,
+    }
+    manifest["manifest_sha256"] = canonical_sha256(manifest)
+    with open(os.path.join(dirpath, "manifest.json"), "w", encoding="utf-8") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def self_test():
+    failures = []
+
+    def check(name, cond):
+        print(f"  self-test {name}: {'ok' if cond else 'FAILED'}")
+        if not cond:
+            failures.append(name)
+
+    root = tempfile.mkdtemp(prefix="metis-validate-artifact-")
+    try:
+        good = os.path.join(root, "good")
+        _fixture_artifact(good)
+        check("valid artifact passes", validate_artifact(good) == [])
+
+        def corrupt(name, mutate, expect):
+            d = os.path.join(root, name.replace(" ", "-"))
+            shutil.rmtree(d, ignore_errors=True)
+            shutil.copytree(good, d)
+            mutate(d)
+            errs = validate_artifact(d)
+            check(name, any(expect in e for e in errs))
+
+        def rewrite_manifest(d, fn, reseal=True):
+            p = os.path.join(d, "manifest.json")
+            with open(p, encoding="utf-8") as f:
+                m = json.load(f)
+            fn(m)
+            if reseal:
+                m.pop("manifest_sha256", None)
+                m["manifest_sha256"] = canonical_sha256(m)
+            with open(p, "w", encoding="utf-8") as f:
+                json.dump(m, f)
+
+        def flip_blob(d):
+            p = os.path.join(d, "blobs", "L0000_B0000.bin")
+            data = bytearray(open(p, "rb").read())
+            data[len(data) // 2] ^= 0x40
+            open(p, "wb").write(bytes(data))
+
+        def truncate_blob(d):
+            p = os.path.join(d, "blobs", "L0000_B0001.bin")
+            data = open(p, "rb").read()
+            open(p, "wb").write(data[:-5])
+
+        corrupt("flipped blob byte fails", flip_blob, "checksum mismatch")
+        corrupt("truncated blob fails", truncate_blob, "manifest declares")
+        corrupt(
+            "edited manifest fails the self-checksum",
+            lambda d: rewrite_manifest(
+                d, lambda m: m["pack"].__setitem__("seed", 8), reseal=False
+            ),
+            "manifest checksum mismatch",
+        )
+        corrupt(
+            "unknown schema_version fails",
+            lambda d: rewrite_manifest(
+                d, lambda m: m.__setitem__("schema_version", 99), reseal=False
+            ),
+            "unsupported artifact schema_version",
+        )
+        corrupt(
+            "stale manifest vs blob drift fails",
+            lambda d: rewrite_manifest(
+                d, lambda m: m["layers"][0]["blocks"][0].__setitem__("k", 2)
+            ),
+            "does not match its manifest slot",
+        )
+        corrupt(
+            "blob path traversal fails",
+            lambda d: rewrite_manifest(
+                d,
+                lambda m: m["layers"][0]["blocks"][0].__setitem__(
+                    "blob", "blobs/../evil.bin"
+                ),
+            ),
+            "not a plain file under blobs/",
+        )
+        corrupt(
+            "non-contiguous partition fails",
+            lambda d: rewrite_manifest(
+                d, lambda m: m["layers"][0]["blocks"][1].__setitem__("c0", 17)
+            ),
+            "contiguous column partition",
+        )
+        corrupt(
+            "missing blob fails",
+            lambda d: os.remove(os.path.join(d, "blobs", "L0000_B0001.bin")),
+            "cannot read",
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    if failures:
+        print(f"self-test FAILED: {failures}")
+        return 1
+    print("self-test passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dirs", nargs="*", help="artifact directories to validate")
+    ap.add_argument(
+        "--self-test", action="store_true", help="run the validator's own fixtures"
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.dirs:
+        ap.error("pass at least one artifact DIR (or use --self-test)")
+    bad = 0
+    for d in args.dirs:
+        errors = validate_artifact(d)
+        if errors:
+            bad += 1
+            for e in errors:
+                print(f"{d}: {e}")
+        else:
+            print(f"{d}: ok")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,8 @@
 """Schema validator for metis run-correlated JSONL telemetry streams.
 
 Every JSONL row metis emits (layer_report / step / eval / metrics /
-error / done, plus the run.json manifest) is stamped with the same
+pack_layer / pack_done / error / done, plus the run.json manifest) is
+stamped with the same
 four-field envelope — event, schema_version, run_id, seq — followed by
 the event's own payload.  This tool checks, per file:
 
@@ -28,7 +29,7 @@ Usage:
 
 Exit 0 when every file validates, 1 otherwise (each violation printed
 as `file:line: message`).  --self-test validates a known-good mixed
-stream and then confirms six corrupted variants each fail.
+stream and then confirms each corrupted variant fails.
 """
 
 import argparse
@@ -81,7 +82,9 @@ SCHEMAS = {
     "metrics": {
         # v2: adds the qgemm (packed-GEMM dispatch counts) and kernel
         # (runtime SIMD lane + per-lane dispatch tallies) sections.
-        "version": 2,
+        # v3: adds the artifact section (sealed-artifact bytes
+        # written/read + checksum-verified block count).
+        "version": 3,
         "fields": {
             "quantizer": "dict",
             "gemm": "dict",
@@ -92,6 +95,26 @@ SCHEMAS = {
             "sigma_err_max": "num?",
             "packed_bytes": "num",
             "npy_bytes_written": "num",
+            "artifact": "dict",
+        },
+    },
+    "pack_layer": {
+        "version": 1,
+        "fields": {
+            "name": "str",
+            "layer": "int",
+            "blocks": "int",
+            "rank_max": "int",
+            "bytes": "num",
+        },
+    },
+    "pack_done": {
+        "version": 1,
+        "fields": {
+            "layers": "int",
+            "blocks": "int",
+            "bytes": "num",
+            "ms": "num?",
         },
     },
     "error": {
@@ -277,8 +300,14 @@ def _valid_stream():
          "kernel": {"simd_feature": "avx2", "dispatch_simd": 12,
                     "dispatch_portable": 0},
          "workpool": {}, "reader_cache": {}, "sigma_err_max": 0.01,
-         "packed_bytes": 4096, "npy_bytes_written": 0},
-        {**env("error", 12), "layer": "blk1.mlp", "layer_index": 1, "block": 2,
+         "packed_bytes": 4096, "npy_bytes_written": 0,
+         "artifact": {"bytes_written": 0, "bytes_read": 0,
+                      "blocks_verified": 0}},
+        {**env("pack_layer", 12), "name": "blk0.attn", "layer": 0,
+         "blocks": 2, "rank_max": 8, "bytes": 16384},
+        {**env("pack_done", 13), "layers": 1, "blocks": 2, "bytes": 16900,
+         "ms": 42.0},
+        {**env("error", 14), "layer": "blk1.mlp", "layer_index": 1, "block": 2,
          "c0": 16, "width": 8, "phase": "validate",
          "message": "non-finite weight values"},
         {**env("done", 15), "steps": 4, "evals": 1, "first_loss": 2.31,
@@ -318,7 +347,7 @@ def self_test():
     )
     corrupt(
         "wrong field type fails",
-        lambda r: r[5].__setitem__("diverged", "no"),
+        lambda r: r[7].__setitem__("diverged", "no"),
         "wrong type",
     )
     corrupt(
@@ -348,8 +377,23 @@ def self_test():
     )
     corrupt(
         "manifest v2 simd field required",
-        lambda r: r[6].pop("simd"),
+        lambda r: r[8].pop("simd"),
         "missing field 'simd'",
+    )
+    corrupt(
+        "metrics v3 artifact section required",
+        lambda r: r[3].pop("artifact"),
+        "missing field 'artifact'",
+    )
+    corrupt(
+        "pack_layer rank_max required",
+        lambda r: r[4].pop("rank_max"),
+        "missing field 'rank_max'",
+    )
+    corrupt(
+        "pack_done bytes required",
+        lambda r: r[5].pop("bytes"),
+        "missing field 'bytes'",
     )
     errs = validate_lines(good[:3] + ["{not json"] + good[3:], "syntax")
     check("malformed JSON line fails", any("malformed JSON" in e for e in errs))
